@@ -1,0 +1,86 @@
+"""Micro benchmarking (paper §V-C): per-kernel timings. On this CPU-only
+container we time the jnp oracle (jit'd) at reduced shapes and the Pallas
+kernel in interpret mode (correctness-path cost); real-TPU wall numbers come
+from deploying the same entry points on hardware."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *args, iters=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run():
+    rng = np.random.default_rng(0)
+    rows = []
+
+    # flash attention oracle (jit)
+    from repro.kernels.api import flash_attention
+    B, S, H, KV, D = 1, 1024, 8, 2, 64
+    q = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(B, S, KV, D)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(B, S, KV, D)), jnp.bfloat16)
+    f = jax.jit(lambda q, k, v: flash_attention(q, k, v, causal=True,
+                                                impl="ref"))
+    us = _time(f, q, k, v)
+    flops = 4 * B * S * S * H * D / 2  # causal
+    rows.append((f"kernels/flash_attention/{S}x{H}x{D}", us,
+                 f"gflops_s={flops / us / 1e3:.1f}"))
+
+    # decode attention oracle
+    from repro.kernels.api import decode_attention
+    S2 = 32_768
+    q1 = jnp.asarray(rng.normal(size=(B, 1, H, D)), jnp.bfloat16)
+    kc = jnp.asarray(rng.normal(size=(B, S2, KV, D)), jnp.bfloat16)
+    vc = jnp.asarray(rng.normal(size=(B, S2, KV, D)), jnp.bfloat16)
+    f = jax.jit(lambda q, k, v: decode_attention(q, k, v, kv_valid_len=S2,
+                                                 impl="ref"))
+    us = _time(f, q1, kc, vc)
+    rows.append((f"kernels/decode_attention/kv{S2}", us,
+                 f"gb_s={(kc.nbytes + vc.nbytes) / us / 1e3:.1f}"))
+
+    # ssd scan oracle
+    from repro.kernels.api import ssd_scan
+    B3, S3, H3, P3, N3 = 1, 2048, 16, 64, 64
+    x = jnp.asarray(rng.normal(size=(B3, S3, H3, P3)), jnp.bfloat16)
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, (B3, S3, H3)), jnp.float32)
+    A = -jnp.asarray(rng.uniform(0.5, 2, (H3,)), jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(B3, S3, N3)), jnp.bfloat16)
+    Cm = jnp.asarray(rng.normal(size=(B3, S3, N3)), jnp.bfloat16)
+    f = jax.jit(lambda *a: ssd_scan(*a, chunk=256, impl="ref")[0])
+    us = _time(f, x, dt, A, Bm, Cm)
+    rows.append((f"kernels/ssd_scan/{S3}x{H3}", us,
+                 f"mtok_s={B3 * S3 / us:.2f}"))
+
+    # weakhash route oracle
+    from repro.kernels.api import weakhash_route
+    T, E = 8192, 128
+    logits = jnp.asarray(rng.normal(size=(T, E)), jnp.float32)
+    keys = jnp.asarray(rng.integers(0, 1 << 20, T), jnp.int32)
+    f = jax.jit(lambda l, kk: weakhash_route(
+        l, top_k=2, capacity=2 * T // E, n_groups=16, mode="weakhash",
+        token_keys=kk, impl="ref").expert_idx)
+    us = _time(f, logits, keys)
+    rows.append((f"kernels/weakhash_route/{T}x{E}", us,
+                 f"mtok_s={T / us:.2f}"))
+
+    # pallas interpret-mode validation cost (small shape)
+    from repro.kernels.flash_attention import kernel as FK
+    qs = jnp.asarray(rng.normal(size=(1, 128, 4, 64)), jnp.float32)
+    ks = jnp.asarray(rng.normal(size=(1, 128, 2, 64)), jnp.float32)
+    vs = jnp.asarray(rng.normal(size=(1, 128, 2, 64)), jnp.float32)
+    t0 = time.perf_counter()
+    FK.flash_attention(qs, ks, vs, interpret=True, block_q=64, block_k=64)
+    us = (time.perf_counter() - t0) * 1e6
+    rows.append(("kernels/flash_attention/interpret128", us, "validation"))
+    return rows

@@ -1,0 +1,27 @@
+"""Fig 8: checkpoint success rate w/ and w/o region checkpointing on the DS
+job — 5% slow-upload injection, 30 s interval, 12 h run (paper: 53.9% vs
+93.5%)."""
+from __future__ import annotations
+
+import time
+
+from repro.core.chaos import ChaosEngine, ChaosSpec
+from repro.streams import nexmark
+from repro.streams.engine import CheckpointConfig, StreamEngine
+
+
+def run():
+    rows = []
+    for mode in ("global", "region"):
+        chaos = ChaosEngine(ChaosSpec(seed=2, storage_slow_prob=0.05,
+                                      storage_slow_factor=10))
+        eng = StreamEngine(nexmark.ds(parallelism=6), n_hosts=6, chaos=chaos,
+                           ckpt=CheckpointConfig(interval_s=30, mode=mode))
+        t0 = time.perf_counter()
+        m = eng.run(43_200)
+        us = (time.perf_counter() - t0) * 1e6
+        rate = m.ckpt_success / max(m.ckpt_attempts, 1)
+        rows.append((f"region_ckpt/{mode}", us,
+                     f"success={m.ckpt_success}/{m.ckpt_attempts}"
+                     f"={rate:.1%}"))
+    return rows

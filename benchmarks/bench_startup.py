@@ -1,0 +1,33 @@
+"""Table II + Fig 5: job startup overhead (parse / alloc / deploy) across
+cluster scales, baseline vs StreamShield."""
+from __future__ import annotations
+
+import time
+
+from repro.cluster.simulator import ClusterSim, nexmark_edges
+from repro.core.startup import StartupConfig
+
+SCALES = (512, 1024, 2048)
+
+
+def run():
+    rows = []
+    for n in SCALES:
+        edges = nexmark_edges(64, n_ops=3)
+        for label, cfg in (("baseline", StartupConfig.baseline()),
+                           ("streamshield", StartupConfig())):
+            t0 = time.perf_counter()
+            ph = ClusterSim(n, seed=1).startup(edges, cfg)
+            us = (time.perf_counter() - t0) * 1e6
+            rows.append((f"startup/{label}/{n}tm", us,
+                         f"parse_ms={ph.parse_ms:.0f};"
+                         f"alloc_ms={ph.alloc_ms:.0f};"
+                         f"deploy_ms={ph.deploy_ms:.0f};"
+                         f"total_ms={ph.total_ms:.0f}"))
+        # HotUpdate variant (paper: restart latency → ~20 s)
+        t0 = time.perf_counter()
+        ph = ClusterSim(n, seed=1).startup(edges, StartupConfig(hotupdate=True))
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((f"startup/hotupdate/{n}tm", us,
+                     f"total_ms={ph.total_ms:.0f}"))
+    return rows

@@ -1,0 +1,43 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (derived = the reproduced headline
+metric of that table/figure).
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+MODULES = [
+    "benchmarks.bench_startup",             # Table II + Fig 5
+    "benchmarks.bench_adaptive_shuffle",    # Fig 6
+    "benchmarks.bench_autoscaling",         # Fig 7
+    "benchmarks.bench_region_ckpt",         # Fig 8
+    "benchmarks.bench_single_task_recovery",  # Fig 9
+    "benchmarks.bench_weakhash",            # §III-A WeakHash
+    "benchmarks.bench_hotupdate",           # §III-C HotUpdate
+    "benchmarks.bench_lazyload",            # §III-B State LazyLoad
+    "benchmarks.bench_kernels",             # §V-C micro benchmarking
+]
+
+
+def main() -> None:
+    import importlib
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod_name in MODULES:
+        try:
+            mod = importlib.import_module(mod_name)
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.1f},{derived}", flush=True)
+        except Exception:
+            failures += 1
+            print(f"{mod_name},ERROR,{traceback.format_exc(limit=2)!r}",
+                  flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

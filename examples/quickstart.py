@@ -1,0 +1,13 @@
+"""Quickstart: build an assigned architecture, train a few steps with the
+full StreamShield resiliency stack, kill a 'worker', recover, and keep going.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import subprocess
+import sys
+
+subprocess.run(
+    [sys.executable, "-m", "repro.launch.train",
+     "--arch", "stablelm-1.6b", "--smoke", "--steps", "25",
+     "--inject-failure-at", "12", "--gamma", "full"],
+    check=True)

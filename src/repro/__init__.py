@@ -1,0 +1,5 @@
+"""StreamShield-JAX: production resiliency framework for multi-pod JAX
+training/serving, reproducing "StreamShield: A Production-Proven Resiliency
+Solution for Apache Flink at ByteDance" (CS.DB 2026) on TPU-native substrate.
+"""
+__version__ = "0.1.0"

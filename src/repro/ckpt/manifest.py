@@ -1,0 +1,113 @@
+"""Checkpoint manifests: content-addressed, idempotent, region-merged.
+
+A *region snapshot* records one region's state at one step (file keys are
+content hashes — duplicated replica weights dedup automatically). The
+manifest keeps per-region snapshot histories; `merge_view` implements the
+paper's region-checkpoint semantics:
+
+* γ=full  → newest step at which EVERY region has a successful snapshot
+            (a region-upload failure keeps the previous snapshot alive, so
+            the checkpoint attempt degrades instead of aborting);
+* γ=partial → latest snapshot per region (bounded staleness — the paper's
+            loss-tolerant completeness relaxation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any
+
+from repro.ckpt.storage import content_key
+
+
+@dataclasses.dataclass(frozen=True)
+class RegionSnapshot:
+    region_id: int
+    step: int
+    keys: dict[str, str]      # leaf-path → content key
+    nbytes: int
+    wall_s: float = 0.0
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_json(d: dict) -> "RegionSnapshot":
+        return RegionSnapshot(**d)
+
+
+class Manifest:
+    def __init__(self, job_id: str, n_regions: int):
+        self.job_id = job_id
+        self.n_regions = n_regions
+        self.history: dict[int, list[RegionSnapshot]] = {
+            r: [] for r in range(n_regions)}
+        self.meta: dict[str, Any] = {}
+
+    # -- record -----------------------------------------------------------
+    def add(self, snap: RegionSnapshot) -> None:
+        self.history.setdefault(snap.region_id, []).append(snap)
+
+    def latest(self, region_id: int) -> RegionSnapshot | None:
+        h = self.history.get(region_id) or []
+        return max(h, key=lambda s: s.step) if h else None
+
+    def steps_with_all_regions(self) -> list[int]:
+        if not all(self.history.get(r) for r in range(self.n_regions)):
+            return []
+        sets = [set(s.step for s in self.history[r])
+                for r in range(self.n_regions)]
+        return sorted(set.intersection(*sets))
+
+    # -- merge view (the paper's mechanism) --------------------------------
+    def merge_view(self, gamma: str, step: int | None = None
+                   ) -> dict[int, RegionSnapshot]:
+        if gamma == "full":
+            steps = self.steps_with_all_regions()
+            if not steps:
+                raise LookupError("no globally consistent checkpoint")
+            target = step if step is not None else steps[-1]
+            if target not in steps:
+                raise LookupError(f"step {target} not consistent; have {steps}")
+            return {r: next(s for s in self.history[r] if s.step == target)
+                    for r in range(self.n_regions)}
+        view = {}
+        for r in range(self.n_regions):
+            snap = self.latest(r)
+            if snap is None:
+                raise LookupError(f"region {r} has no snapshot at all")
+            view[r] = snap
+        return view
+
+    def staleness(self, view: dict[int, RegionSnapshot]) -> dict[int, int]:
+        newest = max(s.step for s in view.values())
+        return {r: newest - s.step for r, s in view.items()}
+
+    # -- persistence (idempotent: content-addressed body + LATEST pointer) --
+    def to_bytes(self) -> bytes:
+        body = {
+            "job_id": self.job_id,
+            "n_regions": self.n_regions,
+            "meta": self.meta,
+            "history": {str(r): [s.to_json() for s in hs]
+                        for r, hs in self.history.items()},
+        }
+        return json.dumps(body, sort_keys=True).encode()
+
+    def save(self, storage) -> str:
+        data = self.to_bytes()
+        key = f"manifests/{self.job_id}/{content_key(data)}.json"
+        storage.put(key, data)
+        storage.put(f"manifests/{self.job_id}/LATEST",
+                    key.encode())  # atomic pointer swap
+        return key
+
+    @staticmethod
+    def load(storage, job_id: str) -> "Manifest":
+        key = storage.get(f"manifests/{job_id}/LATEST").decode()
+        body = json.loads(storage.get(key))
+        m = Manifest(body["job_id"], body["n_regions"])
+        m.meta = body.get("meta", {})
+        for r, hs in body["history"].items():
+            m.history[int(r)] = [RegionSnapshot.from_json(s) for s in hs]
+        return m

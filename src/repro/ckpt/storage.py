@@ -1,0 +1,190 @@
+"""Storage backends for checkpoints & metadata.
+
+Production mapping (paper §IV-B, HDFS fault tolerance): a primary store with
+HA semantics (SimHDFS — latency model + chaos-injected slow uploads /
+failures / namenode outages) and a durable fallback (object store), combined
+by FallbackStorage with exponential backoff + idempotent (atomic, content-
+addressed) writes.
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+import pathlib
+import tempfile
+import threading
+
+from repro.core.backoff import PermanentError, RetryPolicy, TransientError, retry
+from repro.core.chaos import ChaosEngine
+from repro.core.clock import WallClock
+
+
+class StorageUnavailable(TransientError):
+    pass
+
+
+class LocalFS:
+    """Atomic-rename local filesystem store (the durability primitive)."""
+
+    def __init__(self, root: str | os.PathLike):
+        self.root = pathlib.Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self._lock = threading.Lock()
+
+    def _path(self, key: str) -> pathlib.Path:
+        p = self.root / key
+        p.parent.mkdir(parents=True, exist_ok=True)
+        return p
+
+    def put(self, key: str, data: bytes) -> str:
+        path = self._path(key)
+        fd, tmp = tempfile.mkstemp(dir=path.parent, prefix=".tmp-")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                f.write(data)
+            os.replace(tmp, path)  # atomic → idempotent retries are safe
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+        return content_key(data)
+
+    def get(self, key: str) -> bytes:
+        try:
+            return self._path(key).read_bytes()
+        except FileNotFoundError:
+            raise KeyError(key) from None
+
+    def exists(self, key: str) -> bool:
+        return self._path(key).exists()
+
+    def delete(self, key: str) -> None:
+        try:
+            self._path(key).unlink()
+        except FileNotFoundError:
+            pass
+
+    def list(self, prefix: str = "") -> list[str]:
+        base = self.root
+        return sorted(str(p.relative_to(base)) for p in base.rglob("*")
+                      if p.is_file() and str(p.relative_to(base)).startswith(prefix)
+                      and not p.name.startswith(".tmp-"))
+
+
+def content_key(data: bytes) -> str:
+    return hashlib.sha256(data).hexdigest()[:32]
+
+
+class SimHDFS:
+    """HDFS stand-in: bandwidth/latency model + chaos injection.
+
+    Time is charged to `clock` (virtual in simulations) so checkpoint-duration
+    experiments (Fig 8) are deterministic.
+    """
+
+    def __init__(self, root, *, clock=None, chaos: ChaosEngine | None = None,
+                 bandwidth_bps: float = 1e9, base_latency_s: float = 0.02):
+        self.fs = LocalFS(root)
+        self.clock = clock or WallClock()
+        self.chaos = chaos or ChaosEngine()
+        self.bandwidth_bps = bandwidth_bps
+        self.base_latency_s = base_latency_s
+        self.available = True  # namenode availability (HA drills)
+        self.put_count = 0
+        self.slow_puts = 0
+
+    def _charge(self, nbytes: int) -> float:
+        factor = self.chaos.storage_latency_factor()
+        dur = (self.base_latency_s + nbytes / self.bandwidth_bps) * factor
+        if factor > 1.0:
+            self.slow_puts += 1
+        self.clock.sleep(dur)
+        return dur
+
+    def put(self, key: str, data: bytes) -> str:
+        if not self.available:
+            raise StorageUnavailable("namenode down")
+        self.put_count += 1
+        self._charge(len(data))
+        if self.chaos.storage_fails():
+            raise StorageUnavailable("datanode write failed")
+        return self.fs.put(key, data)
+
+    def get(self, key: str) -> bytes:
+        if not self.available:
+            raise StorageUnavailable("namenode down")
+        data = self.fs.get(key)
+        self._charge(len(data))
+        return data
+
+    def exists(self, key: str) -> bool:
+        if not self.available:
+            raise StorageUnavailable("namenode down")
+        return self.fs.exists(key)
+
+    def delete(self, key: str) -> None:
+        self.fs.delete(key)
+
+    def list(self, prefix: str = "") -> list[str]:
+        if not self.available:
+            raise StorageUnavailable("namenode down")
+        return self.fs.list(prefix)
+
+
+class ObjectStoreSim(SimHDFS):
+    """Fallback durable store: higher latency, no chaos (always available)."""
+
+    def __init__(self, root, *, clock=None, bandwidth_bps: float = 2e8,
+                 base_latency_s: float = 0.1):
+        super().__init__(root, clock=clock, chaos=ChaosEngine(),
+                         bandwidth_bps=bandwidth_bps,
+                         base_latency_s=base_latency_s)
+
+
+class FallbackStorage:
+    """Primary-with-fallback store (paper: 'augmenting HDFS with alternative
+    durable storage backends provides resilience against prolonged outages').
+
+    put: retry primary with backoff; on give-up, write to fallback.
+    get: primary first, fallback second.
+    """
+
+    def __init__(self, primary, fallback, *, policy: RetryPolicy | None = None,
+                 clock=None, seed: int = 0):
+        self.primary = primary
+        self.fallback = fallback
+        self.policy = policy or RetryPolicy(base_delay_s=0.05, max_attempts=4)
+        self.clock = clock or WallClock()
+        self.seed = seed
+        self.fallback_puts = 0
+
+    def put(self, key: str, data: bytes) -> str:
+        try:
+            out, _ = retry(lambda: self.primary.put(key, data), self.policy,
+                           self.clock, seed=self.seed)
+            return out
+        except PermanentError:
+            self.fallback_puts += 1
+            return self.fallback.put(key, data)
+
+    def get(self, key: str) -> bytes:
+        try:
+            return self.primary.get(key)
+        except (KeyError, TransientError):
+            return self.fallback.get(key)
+
+    def exists(self, key: str) -> bool:
+        try:
+            if self.primary.exists(key):
+                return True
+        except TransientError:
+            pass
+        return self.fallback.exists(key)
+
+    def list(self, prefix: str = "") -> list[str]:
+        keys = set()
+        try:
+            keys.update(self.primary.list(prefix))
+        except TransientError:
+            pass
+        keys.update(self.fallback.list(prefix))
+        return sorted(keys)

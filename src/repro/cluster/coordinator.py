@@ -1,0 +1,61 @@
+"""JobManager-analogue coordinator: leader election with the HA fallback
+chain (ZK → HDFS copy → terminate), job lifecycle, and startup orchestration
+gluing the scheduler + cluster sim + startup policies together."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from repro.cluster.scheduler import GodelSim, ResilientSubmitter
+from repro.cluster.simulator import ClusterSim, StartupPhases
+from repro.core.backoff import PermanentError
+from repro.core.chaos import ChaosEngine
+from repro.core.clock import VirtualClock
+from repro.core.ha import JobTerminated, LeaderService, ZooKeeperSim
+from repro.core.startup import StartupConfig
+
+
+@dataclasses.dataclass
+class JobRecord:
+    job_id: str
+    phases: StartupPhases
+    submission_info: dict
+    leader: str
+
+
+class Coordinator:
+    def __init__(self, *, clock: VirtualClock | None = None,
+                 chaos: ChaosEngine | None = None, hdfs_store=None,
+                 godel: GodelSim | None = None):
+        self.clock = clock or VirtualClock()
+        self.chaos = chaos or ChaosEngine()
+        self.zk = ZooKeeperSim(clock=self.clock, chaos=self.chaos)
+        self.hdfs = hdfs_store
+        self.leader_svc = (LeaderService(self.zk, hdfs_store,
+                                         clock=self.clock)
+                           if hdfs_store is not None else None)
+        self.godel = godel or GodelSim(clock=self.clock, chaos=self.chaos)
+        self.submitter = ResilientSubmitter(self.godel)
+        self.jobs: dict[str, JobRecord] = {}
+
+    def become_leader(self, candidate: str = "jm-0"):
+        if self.leader_svc is None:
+            return None
+        return self.leader_svc.elect(candidate)
+
+    def current_leader(self) -> str:
+        if self.leader_svc is None:
+            return "jm-0"
+        return self.leader_svc.get_leader().leader_id  # may raise JobTerminated
+
+    def launch(self, job_id: str, *, n_tms: int, edges, cfg: StartupConfig,
+               sim: ClusterSim | None = None,
+               n_tasks: int | None = None) -> JobRecord:
+        sub, info = self.submitter.submit({"job_id": job_id, "n_tms": n_tms})
+        sim = sim or ClusterSim(n_tms, chaos=self.chaos)
+        phases = sim.startup(edges, cfg, n_tasks=n_tasks)
+        leader = self.current_leader() if self.leader_svc else "jm-0"
+        rec = JobRecord(job_id, phases, info, leader)
+        self.jobs[job_id] = rec
+        self.clock.sleep(phases.total_ms / 1000.0)
+        return rec

@@ -1,0 +1,81 @@
+"""Gödel-analogue scheduler front-end: rate-limited grants, chaos-driven
+unavailability windows, idempotent submission with exponential backoff
+(paper §IV-B: "when job submission fails due to temporary Gödel
+unavailability, StreamShield automatically retries with exponential backoff
+and performs job uniqueness validation")."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from repro.core.backoff import (IdempotencyRegistry, RetryPolicy,
+                                TransientError, retry)
+from repro.core.chaos import ChaosEngine
+from repro.core.clock import VirtualClock
+
+
+class SchedulerUnavailable(TransientError):
+    pass
+
+
+@dataclasses.dataclass
+class Submission:
+    job_id: str
+    n_tms: int
+    accepted_at: float
+
+
+class GodelSim:
+    """Control-plane endpoint with outage windows (chaos.zk_down reused as a
+    generic unavailability schedule via `down_windows`)."""
+
+    def __init__(self, *, clock: VirtualClock | None = None,
+                 down_windows: tuple[tuple[float, float], ...] = (),
+                 chaos: ChaosEngine | None = None):
+        self.clock = clock or VirtualClock()
+        self.down = down_windows
+        self.chaos = chaos or ChaosEngine()
+        self.submissions: dict[str, Submission] = {}
+        self.received = 0
+
+    def _available(self) -> bool:
+        t = self.clock.now()
+        return not any(a <= t < b for a, b in self.down)
+
+    def submit(self, job_id: str, n_tms: int) -> Submission:
+        self.received += 1
+        if not self._available():
+            raise SchedulerUnavailable(f"godel down at t={self.clock.now()}")
+        if job_id in self.submissions:
+            # duplicate execution would double-allocate; the scheduler is
+            # idempotent on job_id
+            return self.submissions[job_id]
+        sub = Submission(job_id, n_tms, self.clock.now())
+        self.submissions[job_id] = sub
+        return sub
+
+
+class ResilientSubmitter:
+    """Client-side: backoff retries + uniqueness validation."""
+
+    def __init__(self, godel: GodelSim, *,
+                 policy: RetryPolicy | None = None):
+        self.godel = godel
+        self.policy = policy or RetryPolicy(base_delay_s=1.0, max_delay_s=60.0,
+                                            max_attempts=8)
+        self.registry = IdempotencyRegistry()
+
+    def submit(self, job_spec: dict[str, Any]) -> tuple[Submission, dict]:
+        token = IdempotencyRegistry.token(job_spec["job_id"],
+                                          job_spec.get("version", 0))
+
+        def attempt():
+            out, stats = retry(
+                lambda: self.godel.submit(job_spec["job_id"],
+                                          job_spec["n_tms"]),
+                self.policy, self.godel.clock)
+            return out, stats
+
+        (sub, stats), dup = self.registry.run(token, attempt)
+        return sub, {"attempts": stats.attempts, "duplicate": dup,
+                     "backoff_s": stats.total_delay_s}

@@ -1,0 +1,23 @@
+from repro.configs.base import (  # noqa: F401
+    Completeness,
+    Family,
+    ModelConfig,
+    MoEConfig,
+    OptimizerConfig,
+    RunConfig,
+    SHAPES,
+    SLOConfig,
+    ShapeConfig,
+    ShardingOverrides,
+    SSMConfig,
+    reduced,
+)
+from repro.configs.registry import (  # noqa: F401
+    ARCHS,
+    all_cells,
+    cell_applicable,
+    get_arch,
+    get_shape,
+    get_smoke_arch,
+    make_run,
+)

@@ -1,0 +1,27 @@
+"""Aggregates the ten assigned architecture configs (one module each)."""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from repro.configs.mixtral_8x22b import CONFIG as MIXTRAL_8X22B
+from repro.configs.arctic_480b import CONFIG as ARCTIC_480B
+from repro.configs.stablelm_1_6b import CONFIG as STABLELM_1_6B
+from repro.configs.minitron_8b import CONFIG as MINITRON_8B
+from repro.configs.stablelm_12b import CONFIG as STABLELM_12B
+from repro.configs.granite_34b import CONFIG as GRANITE_34B
+from repro.configs.mamba2_1_3b import CONFIG as MAMBA2_1_3B
+from repro.configs.zamba2_2_7b import CONFIG as ZAMBA2_2_7B
+from repro.configs.whisper_medium import CONFIG as WHISPER_MEDIUM
+from repro.configs.phi_3_vision_4_2b import CONFIG as PHI3_VISION_4_2B
+
+ALL_ARCHS: tuple[ModelConfig, ...] = (
+    MIXTRAL_8X22B,
+    ARCTIC_480B,
+    STABLELM_1_6B,
+    MINITRON_8B,
+    STABLELM_12B,
+    GRANITE_34B,
+    MAMBA2_1_3B,
+    ZAMBA2_2_7B,
+    WHISPER_MEDIUM,
+    PHI3_VISION_4_2B,
+)

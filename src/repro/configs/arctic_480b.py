@@ -1,0 +1,23 @@
+"""arctic-480b — assigned architecture config (public literature).
+
+Selectable via ``--arch arctic-480b``.
+"""
+from __future__ import annotations
+
+from repro.configs.base import Family, ModelConfig, MoEConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b",
+    family=Family.MOE,
+    n_layers=35,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=4864,             # dense residual MLP hidden
+    vocab=32000,
+    moe=MoEConfig(n_experts=128, top_k=2, d_ff_expert=4864,
+                  dense_residual=True, n_groups=16),
+    rope_theta=10_000.0,
+    source="[hf:Snowflake/snowflake-arctic-base; hf]",
+)

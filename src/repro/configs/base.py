@@ -1,0 +1,325 @@
+"""Configuration dataclasses for StreamShield-JAX.
+
+Every assigned architecture is described by a :class:`ModelConfig`; the four
+assigned input shapes by :class:`ShapeConfig`; resiliency policy by
+:class:`SLOConfig` (the paper's Table I encoded as data); and a full run by
+:class:`RunConfig`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import hashlib
+import json
+from typing import Any
+
+
+class Family(str, enum.Enum):
+    DENSE = "dense"
+    MOE = "moe"
+    SSM = "ssm"
+    HYBRID = "hybrid"
+    ENCDEC = "encdec"   # audio backbone (whisper): encoder-decoder
+    VLM = "vlm"         # vision-language: decoder LM + patch-embedding stub
+
+
+class Completeness(str, enum.Enum):
+    """γ in the paper's SLO triple: data-completeness requirement."""
+    FULL = "full"
+    PARTIAL = "partial"
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 0
+    top_k: int = 2
+    d_ff_expert: int = 0
+    # Arctic-style dense residual MLP running in parallel with the experts.
+    dense_residual: bool = False
+    # --- StreamShield WeakHash / Group-Rescale routing parameters ---
+    # Number of disjoint expert groups. Routing (WeakHash) restricts each
+    # token's candidate experts to one group; dispatch (Group-Rescale) keeps
+    # the all-to-all confined to the device group owning that expert group.
+    n_groups: int = 1
+    # Capacity factor for expert buffers (tokens per expert relative to even).
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+
+    @property
+    def enabled(self) -> bool:
+        return self.n_experts > 0
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 0
+    expand: int = 2
+    head_dim: int = 64
+    conv_kernel: int = 4
+    chunk_size: int = 256
+
+    @property
+    def enabled(self) -> bool:
+        return self.d_state > 0
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: Family
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 128
+    moe: MoEConfig = dataclasses.field(default_factory=MoEConfig)
+    ssm: SSMConfig = dataclasses.field(default_factory=SSMConfig)
+    # Sliding-window attention width (0 = full attention).
+    swa_window: int = 0
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+    # MLP variant: "swiglu" (3 mats), "gelu2"/"relu2" (2 mats, GELU / squared-ReLU).
+    mlp_variant: str = "swiglu"
+    # Hybrid (zamba2): a single shared attention block applied every
+    # `shared_attn_every` SSM layers on concat(h, h0).
+    shared_attn_every: int = 0
+    # Encoder-decoder (whisper): encoder depth/seq; decoder uses n_layers.
+    n_encoder_layers: int = 0
+    encoder_seq: int = 0
+    # VLM (phi-3-vision): patch-embedding stub dims.
+    n_patches: int = 0
+    d_patch: int = 0
+    tie_embeddings: bool = False
+    source: str = ""  # provenance string: [source; verified-tier]
+
+    # ------------------------------------------------------------------
+    @property
+    def attention_free(self) -> bool:
+        return self.family == Family.SSM
+
+    @property
+    def subquadratic(self) -> bool:
+        """True if long-context decode (long_500k) is feasible."""
+        if self.family in (Family.SSM, Family.HYBRID):
+            return True
+        return self.swa_window > 0  # sliding-window attention bounds the cache
+
+    @property
+    def has_decoder(self) -> bool:
+        return True  # all assigned archs have a decode path (enc-dec: decoder)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for MODEL_FLOPS and memory napkins)."""
+        d, L = self.d_model, self.n_layers
+        total = self.vocab * d  # input embedding
+        if not self.tie_embeddings:
+            total += self.vocab * d
+        for _ in range(1):  # per-layer cost, multiplied below
+            pass
+        per_layer = 0
+        if self.family in (Family.DENSE, Family.MOE, Family.VLM):
+            per_layer += self._attn_params(d)
+            per_layer += self._mlp_params(d)
+            per_layer += 2 * d  # norms
+            total += L * per_layer
+        elif self.family == Family.SSM:
+            total += L * (self._ssm_params(d) + d)
+        elif self.family == Family.HYBRID:
+            total += L * (self._ssm_params(d) + d)
+            # shared attention block on 2d input (applied k times, one copy)
+            d2 = 2 * d
+            shared = (d2 * self.n_heads * self.head_dim  # q
+                      + 2 * d2 * self.n_kv_heads * self.head_dim  # kv
+                      + self.n_heads * self.head_dim * d  # o -> d
+                      + 3 * d * self.d_ff + 2 * d2 + d)
+            total += shared
+        elif self.family == Family.ENCDEC:
+            enc_layer = self._attn_params(d) + self._mlp_params(d) + 2 * d
+            dec_layer = 2 * self._attn_params(d) + self._mlp_params(d) + 3 * d
+            total += self.n_encoder_layers * enc_layer + L * dec_layer
+        if self.family == Family.VLM:
+            total += self.d_patch * d  # patch projector
+        return total
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: only top_k experts active)."""
+        if not self.moe.enabled:
+            return self.param_count()
+        d, L = self.d_model, self.n_layers
+        expert = 3 * d * self.moe.d_ff_expert
+        inactive = L * (self.moe.n_experts - self.moe.top_k) * expert
+        return self.param_count() - inactive
+
+    def _attn_params(self, d: int) -> int:
+        return (d * self.n_heads * self.head_dim
+                + 2 * d * self.n_kv_heads * self.head_dim
+                + self.n_heads * self.head_dim * d)
+
+    @property
+    def mlp_mats(self) -> int:
+        return 3 if self.mlp_variant == "swiglu" else 2
+
+    def _mlp_params(self, d: int) -> int:
+        if self.moe.enabled:
+            p = self.moe.n_experts * self.mlp_mats * d * self.moe.d_ff_expert
+            p += d * self.moe.n_experts  # router
+            if self.moe.dense_residual:
+                p += self.mlp_mats * d * self.d_ff
+            return p
+        return self.mlp_mats * d * self.d_ff
+
+    def _ssm_params(self, d: int) -> int:
+        s = self.ssm
+        d_in = s.d_inner(d)
+        nh = s.n_heads(d)
+        return (d * (2 * d_in + 2 * s.d_state + nh)   # in_proj -> z,x,B,C,dt
+                + s.conv_kernel * (d_in + 2 * s.d_state)  # conv over x,B,C
+                + 2 * nh                                # A_log, D
+                + d_in                                  # gated norm
+                + d_in * d)                             # out_proj
+
+    def fingerprint(self) -> str:
+        payload = json.dumps(dataclasses.asdict(self), sort_keys=True, default=str)
+        return hashlib.sha256(payload.encode()).hexdigest()[:16]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+    @property
+    def tokens_per_step(self) -> int:
+        if self.kind == "decode":
+            return self.global_batch  # one new token per sequence
+        return self.seq_len * self.global_batch
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4_096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32_768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524_288, 1, "decode")
+
+SHAPES: dict[str, ShapeConfig] = {
+    s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOConfig:
+    """The paper's SLO triple S = (γ, λ_max, τ_max)."""
+    gamma: Completeness = Completeness.FULL
+    lambda_max_s: float = 60.0    # max end-to-end latency
+    tau_max_s: float = 60.0       # max recovery time after an abnormal event
+
+    @property
+    def recovery_tier(self) -> str:
+        if self.tau_max_s < 1.0:
+            return "sub_second"
+        if self.tau_max_s <= 60.0:
+            return "sub_minute"
+        return "hour_level"
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"          # "adamw" | "adafactor" | "sgdm"
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingOverrides:
+    """Beyond-baseline sharding knobs, used by the §Perf hillclimb."""
+    sequence_parallel: bool = True
+    # Remat policy: "none" | "block" | "minimal" (nothing saveable)
+    remat: str = "block"
+    # Expert placement: "auto" | "ep" | "tp"
+    expert_mode: str = "auto"
+    # Confine MoE all-to-all to the model axis (Group-Rescale) vs global.
+    grouped_a2a: bool = True
+    # Microbatch count for gradient accumulation (1 = off).
+    microbatches: int = 1
+    # Cast parameters gathered for compute to bf16 (fp32 master kept by opt).
+    compute_dtype: str = "bfloat16"
+    # --- §Perf hillclimb knobs (defaults = paper-faithful baseline) ---
+    # Minimum per-slot dispatch capacity (decode cells: floor 4 wastes ~50×
+    # compute at batch≈1 token/device; hillclimb drops it to 1).
+    moe_capacity_floor: int = 4
+    # Cast gradients to bf16 before the cross-replica reduction (halves the
+    # dominant all-reduce bytes; error feedback not needed at step scale).
+    grad_reduce_bf16: bool = False
+    # Exact causal attention blocks (skip fully-masked kv chunks) instead of
+    # masked full-width chunks — removes the 2× causal flops waste.
+    exact_attn_blocks: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    model: ModelConfig
+    shape: ShapeConfig
+    slo: SLOConfig = dataclasses.field(default_factory=SLOConfig)
+    optimizer: OptimizerConfig = dataclasses.field(default_factory=OptimizerConfig)
+    sharding: ShardingOverrides = dataclasses.field(default_factory=ShardingOverrides)
+    multi_pod: bool = False
+    seed: int = 0
+
+    def fingerprint(self) -> str:
+        payload = json.dumps(
+            {
+                "model": self.model.fingerprint(),
+                "shape": dataclasses.asdict(self.shape),
+                "sharding": dataclasses.asdict(self.sharding),
+                "optimizer": dataclasses.asdict(self.optimizer),
+                "multi_pod": self.multi_pod,
+            },
+            sort_keys=True,
+        )
+        return hashlib.sha256(payload.encode()).hexdigest()[:16]
+
+
+def reduced(model: ModelConfig, **overrides: Any) -> ModelConfig:
+    """A small same-family config for CPU smoke tests / probe jobs."""
+    small: dict[str, Any] = dict(
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=max(1, min(model.n_kv_heads, 4) if model.n_kv_heads else 4),
+        head_dim=16,
+        d_ff=128,
+        vocab=256,
+    )
+    if model.moe.enabled:
+        small["moe"] = MoEConfig(
+            n_experts=4, top_k=2, d_ff_expert=64,
+            dense_residual=model.moe.dense_residual,
+            n_groups=2, capacity_factor=model.moe.capacity_factor)
+    if model.ssm.enabled:
+        small["ssm"] = SSMConfig(d_state=16, expand=2, head_dim=16,
+                                 conv_kernel=4, chunk_size=32)
+    if model.family == Family.HYBRID:
+        small["shared_attn_every"] = 1
+    if model.family == Family.ENCDEC:
+        small["n_encoder_layers"] = 2
+        small["encoder_seq"] = 32
+    if model.family == Family.VLM:
+        small["n_patches"] = 8
+        small["d_patch"] = 32
+    if model.swa_window:
+        small["swa_window"] = 32
+    small.update(overrides)
+    return dataclasses.replace(model, name=model.name + "-smoke", **small)

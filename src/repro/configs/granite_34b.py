@@ -1,0 +1,23 @@
+"""granite-34b — assigned architecture config (public literature).
+
+Selectable via ``--arch granite-34b``.
+"""
+from __future__ import annotations
+
+from repro.configs.base import Family, ModelConfig, MoEConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="granite-34b",
+    family=Family.DENSE,
+    n_layers=88,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=1,          # MQA
+    head_dim=128,
+    d_ff=24576,
+    vocab=49152,
+    mlp_variant="gelu2",
+    tie_embeddings=True,
+    rope_theta=10_000.0,
+    source="[arXiv:2405.04324; hf] llama-arch, code",
+)

@@ -1,0 +1,22 @@
+"""mamba2-1.3b — assigned architecture config (public literature).
+
+Selectable via ``--arch mamba2-1.3b``.
+"""
+from __future__ import annotations
+
+from repro.configs.base import Family, ModelConfig, MoEConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-1.3b",
+    family=Family.SSM,
+    n_layers=48,
+    d_model=2048,
+    n_heads=0,
+    n_kv_heads=0,
+    head_dim=0,
+    d_ff=0,
+    vocab=50280,
+    ssm=SSMConfig(d_state=128, expand=2, head_dim=64,
+                  conv_kernel=4, chunk_size=256),
+    source="[arXiv:2405.21060; unverified] SSD",
+)

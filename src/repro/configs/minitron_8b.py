@@ -1,0 +1,22 @@
+"""minitron-8b — assigned architecture config (public literature).
+
+Selectable via ``--arch minitron-8b``.
+"""
+from __future__ import annotations
+
+from repro.configs.base import Family, ModelConfig, MoEConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="minitron-8b",
+    family=Family.DENSE,
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=16384,
+    vocab=256000,
+    mlp_variant="relu2",
+    rope_theta=10_000.0,
+    source="[arXiv:2407.14679; hf] pruned nemotron",
+)

@@ -1,0 +1,23 @@
+"""mixtral-8x22b — assigned architecture config (public literature).
+
+Selectable via ``--arch mixtral-8x22b``.
+"""
+from __future__ import annotations
+
+from repro.configs.base import Family, ModelConfig, MoEConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x22b",
+    family=Family.MOE,
+    n_layers=56,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=16384,            # expert hidden size
+    vocab=32768,
+    moe=MoEConfig(n_experts=8, top_k=2, d_ff_expert=16384, n_groups=4),
+    swa_window=4096,       # assigned: SWA
+    rope_theta=1_000_000.0,
+    source="[arXiv:2401.04088; hf]",
+)

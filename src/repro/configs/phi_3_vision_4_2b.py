@@ -1,0 +1,23 @@
+"""phi-3-vision-4.2b — assigned architecture config (public literature).
+
+Selectable via ``--arch phi-3-vision-4.2b``.
+"""
+from __future__ import annotations
+
+from repro.configs.base import Family, ModelConfig, MoEConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="phi-3-vision-4.2b",
+    family=Family.VLM,
+    n_layers=32,
+    d_model=3072,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=96,
+    d_ff=8192,
+    vocab=32064,
+    n_patches=576,
+    d_patch=1024,          # CLIP ViT-L/14 stub embedding width
+    rope_theta=10_000.0,
+    source="[hf:microsoft/Phi-3-vision-128k-instruct; hf] phi3-mini + CLIP",
+)

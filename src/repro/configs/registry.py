@@ -1,0 +1,70 @@
+"""Architecture / shape registry — the ``--arch <id>`` / ``--shape <id>`` lookup."""
+from __future__ import annotations
+
+from repro.configs import base
+from repro.configs.archs import ALL_ARCHS
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig, SHAPES
+
+ARCHS: dict[str, ModelConfig] = {m.name: m for m in ALL_ARCHS}
+
+
+class UnknownArchError(KeyError):
+    pass
+
+
+def get_arch(name: str) -> ModelConfig:
+    try:
+        return ARCHS[name]
+    except KeyError:
+        raise UnknownArchError(
+            f"unknown arch {name!r}; available: {sorted(ARCHS)}") from None
+
+
+def get_shape(name: str) -> ShapeConfig:
+    try:
+        return SHAPES[name]
+    except KeyError:
+        raise UnknownArchError(
+            f"unknown shape {name!r}; available: {sorted(SHAPES)}") from None
+
+
+def get_smoke_arch(name: str) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests / probe jobs."""
+    return base.reduced(get_arch(name))
+
+
+def cell_applicable(model: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Whether an (arch × shape) dry-run cell runs, and why not if skipped.
+
+    Policy from the assignment: ``long_500k`` needs sub-quadratic attention —
+    run for SSM/hybrid/SWA archs, skip (with a recorded note) for pure
+    full-attention archs.
+    """
+    if shape.name == "long_500k" and not model.subquadratic:
+        return False, (f"{model.name} uses full attention; 512k-token decode "
+                       "cache is quadratic-prefill territory — skipped per "
+                       "assignment (see DESIGN.md §Arch-applicability)")
+    return True, ""
+
+
+def make_run(arch: str, shape: str, *, multi_pod: bool = False,
+             **overrides) -> RunConfig:
+    model = get_arch(arch)
+    optimizer = overrides.pop("optimizer", None)
+    if optimizer is None:
+        # Adam fp32 moments for arctic-480b exceed one pod's HBM; Adafactor
+        # is the production choice there (DESIGN.md §3).
+        name = "adafactor" if model.param_count() > 200e9 else "adamw"
+        optimizer = base.OptimizerConfig(name=name)
+    return RunConfig(model=model, shape=get_shape(shape), optimizer=optimizer,
+                     multi_pod=multi_pod, **overrides)
+
+
+def all_cells() -> list[tuple[str, str, bool, str]]:
+    """All 40 (arch × shape) cells: (arch, shape, runs, skip_reason)."""
+    cells = []
+    for m in ALL_ARCHS:
+        for s in SHAPES.values():
+            ok, why = cell_applicable(m, s)
+            cells.append((m.name, s.name, ok, why))
+    return cells

@@ -1,0 +1,21 @@
+"""stablelm-12b — assigned architecture config (public literature).
+
+Selectable via ``--arch stablelm-12b``.
+"""
+from __future__ import annotations
+
+from repro.configs.base import Family, ModelConfig, MoEConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="stablelm-12b",
+    family=Family.DENSE,
+    n_layers=40,
+    d_model=5120,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=160,
+    d_ff=13824,
+    vocab=100352,
+    rope_theta=10_000.0,
+    source="[hf:stabilityai/stablelm-2-12b; hf]",
+)

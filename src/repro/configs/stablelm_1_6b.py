@@ -1,0 +1,21 @@
+"""stablelm-1.6b — assigned architecture config (public literature).
+
+Selectable via ``--arch stablelm-1.6b``.
+"""
+from __future__ import annotations
+
+from repro.configs.base import Family, ModelConfig, MoEConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="stablelm-1.6b",
+    family=Family.DENSE,
+    n_layers=24,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=64,
+    d_ff=5632,
+    vocab=100352,
+    rope_theta=10_000.0,
+    source="[hf:stabilityai/stablelm-2-1_6b; unverified]",
+)

@@ -1,0 +1,24 @@
+"""whisper-medium — assigned architecture config (public literature).
+
+Selectable via ``--arch whisper-medium``.
+"""
+from __future__ import annotations
+
+from repro.configs.base import Family, ModelConfig, MoEConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium",
+    family=Family.ENCDEC,
+    n_layers=24,           # decoder layers
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=64,
+    d_ff=4096,
+    vocab=51865,
+    mlp_variant="gelu2",
+    tie_embeddings=True,
+    n_encoder_layers=24,
+    encoder_seq=1500,      # conv frontend stub emits 1500 frame embeddings
+    source="[arXiv:2212.04356; unverified] enc-dec, conv frontend (stub)",
+)

@@ -1,0 +1,23 @@
+"""zamba2-2.7b — assigned architecture config (public literature).
+
+Selectable via ``--arch zamba2-2.7b``.
+"""
+from __future__ import annotations
+
+from repro.configs.base import Family, ModelConfig, MoEConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-2.7b",
+    family=Family.HYBRID,
+    n_layers=54,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=160,          # shared block attends over concat(h, h0) = 5120
+    d_ff=10240,
+    vocab=32000,
+    ssm=SSMConfig(d_state=64, expand=2, head_dim=64,
+                  conv_kernel=4, chunk_size=256),
+    shared_attn_every=6,
+    source="[arXiv:2411.15242; hf] Mamba2 + shared attn blocks",
+)

@@ -1,0 +1,2 @@
+"""StreamShield core: the paper's resiliency mechanisms as first-class
+features of the JAX runtime (engine / cluster / release perspectives)."""

@@ -1,0 +1,127 @@
+"""Shuffle / partitioning strategies (paper §III-A, Fig 2).
+
+Credit-based flow control: every channel (up-task → down-task) has a bounded
+credit budget = free buffer slots at the receiver. Backlog-based shuffle
+diverts records away from channels whose backlog exceeds a threshold;
+Group-Rescale confines rebalancing to disjoint task groups so co-located
+stragglers can be bypassed without global all-to-all wiring.
+
+All strategies are vectorized numpy: `assign(keys, state) → down-task idx`.
+The same strategies drive the stream engine, the host data pipeline, and the
+Fig 6 reproduction.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import weakhash as wh
+
+
+@dataclasses.dataclass
+class ChannelState:
+    """Per (this up-task → all down-tasks) channel view."""
+    n_down: int
+    credits: np.ndarray          # free buffer slots per channel
+    backlog: np.ndarray          # queued records per down-task
+    rr_cursor: int = 0
+
+    @staticmethod
+    def fresh(n_down: int, credit_budget: int = 64) -> "ChannelState":
+        return ChannelState(n_down, np.full(n_down, credit_budget, np.int64),
+                            np.zeros(n_down, np.int64))
+
+
+class Rebalance:
+    """Round-robin over ALL downstream tasks (Fig 2a)."""
+    name = "rebalance"
+
+    def assign(self, n: int, st: ChannelState, keys=None) -> np.ndarray:
+        idx = (st.rr_cursor + np.arange(n)) % st.n_down
+        st.rr_cursor = int((st.rr_cursor + n) % st.n_down)
+        return idx
+
+
+class Rescale:
+    """Round-robin over a FIXED local subset (Fig 2b)."""
+    name = "rescale"
+
+    def __init__(self, subset: np.ndarray):
+        self.subset = np.asarray(subset)
+
+    def assign(self, n: int, st: ChannelState, keys=None) -> np.ndarray:
+        idx = self.subset[(st.rr_cursor + np.arange(n)) % len(self.subset)]
+        st.rr_cursor = int((st.rr_cursor + n) % len(self.subset))
+        return idx
+
+
+class GroupRescale:
+    """Round-robin within the task's GROUP (Fig 2c) — wider than Rescale's
+    fixed pair, narrower than Rebalance; lets healthy upstreams bypass a
+    straggling co-located downstream."""
+    name = "group_rescale"
+
+    def __init__(self, group_members: np.ndarray):
+        self.members = np.asarray(group_members)
+
+    def assign(self, n: int, st: ChannelState, keys=None) -> np.ndarray:
+        idx = self.members[(st.rr_cursor + np.arange(n)) % len(self.members)]
+        st.rr_cursor = int((st.rr_cursor + n) % len(self.members))
+        return idx
+
+
+class BacklogShuffle:
+    """Backlog-based shuffle: round-robin, but channels whose backlog exceeds
+    `threshold` (credits exhausted) are excluded; records divert to the
+    least-backlogged candidates. Scope can be the full fan-out or a group."""
+    name = "backlog"
+
+    def __init__(self, threshold: int = 48,
+                 members: np.ndarray | None = None):
+        self.threshold = threshold
+        self.members = members  # None → all
+
+    def assign(self, n: int, st: ChannelState, keys=None) -> np.ndarray:
+        cand = (np.arange(st.n_down) if self.members is None
+                else np.asarray(self.members))
+        backlog = st.backlog[cand]
+        open_mask = backlog < self.threshold
+        if not open_mask.any():
+            # every channel congested: fall back to least-backlogged
+            order = cand[np.argsort(backlog, kind="stable")]
+            return order[np.arange(n) % len(order)]
+        open_cand = cand[open_mask]
+        # weight inversely by backlog: emptier channels take more records
+        free = (self.threshold - st.backlog[open_cand]).astype(np.float64)
+        quota = np.maximum(np.round(free / free.sum() * n), 0).astype(int)
+        # distribute remainder round-robin
+        out = np.repeat(open_cand, quota)[:n]
+        if len(out) < n:
+            extra = open_cand[(st.rr_cursor + np.arange(n - len(out)))
+                              % len(open_cand)]
+            st.rr_cursor = int((st.rr_cursor + n - len(out)) % len(open_cand))
+            out = np.concatenate([out, extra])
+        return out
+
+
+class KeyHash:
+    """Strict keyBy (baseline for WeakHash comparisons)."""
+    name = "hash"
+
+    def assign(self, n: int, st: ChannelState, keys=None) -> np.ndarray:
+        assert keys is not None
+        return wh.strong_hash(np.asarray(keys), st.n_down)
+
+
+class WeakHash:
+    """Key → bounded candidate group → least-loaded member (paper §III-A)."""
+    name = "weakhash"
+
+    def __init__(self, n_groups: int):
+        self.n_groups = n_groups
+
+    def assign(self, n: int, st: ChannelState, keys=None) -> np.ndarray:
+        assert keys is not None
+        return wh.weakhash_assign(np.asarray(keys), st.n_down, self.n_groups,
+                                  loads=st.backlog.astype(np.float64))

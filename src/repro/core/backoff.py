@@ -1,0 +1,92 @@
+"""Exponential backoff + idempotent retries (paper §IV-B, Gödel fault
+tolerance): spaced retries avoid hammering a degraded dependency; idempotency
+tokens guarantee repeated requests cause no duplicate effects (job-uniqueness
+validation on resubmission)."""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Callable
+
+import numpy as np
+
+
+class TransientError(Exception):
+    """Retryable failure (dependency briefly unavailable / throttled)."""
+
+
+class PermanentError(Exception):
+    """Non-retryable failure."""
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    base_delay_s: float = 0.1
+    multiplier: float = 2.0
+    max_delay_s: float = 30.0
+    max_attempts: int = 6
+    jitter: float = 0.25  # fraction of the delay, deterministic per-seed
+
+    def delay(self, attempt: int, rng: np.random.Generator) -> float:
+        d = min(self.base_delay_s * self.multiplier ** attempt,
+                self.max_delay_s)
+        if self.jitter:
+            d *= 1.0 + self.jitter * float(rng.uniform(-1.0, 1.0))
+        return d
+
+
+@dataclasses.dataclass
+class RetryStats:
+    attempts: int = 0
+    total_delay_s: float = 0.0
+    succeeded: bool = False
+
+
+def retry(fn: Callable[[], Any], policy: RetryPolicy, clock,
+          seed: int = 0) -> tuple[Any, RetryStats]:
+    """Run fn with exponential backoff on TransientError. Raises the last
+    TransientError (wrapped as PermanentError) after max_attempts."""
+    rng = np.random.default_rng(seed)
+    stats = RetryStats()
+    last: Exception | None = None
+    for attempt in range(policy.max_attempts):
+        stats.attempts = attempt + 1
+        try:
+            out = fn()
+            stats.succeeded = True
+            return out, stats
+        except TransientError as e:
+            last = e
+            if attempt == policy.max_attempts - 1:
+                break
+            d = policy.delay(attempt, rng)
+            stats.total_delay_s += d
+            clock.sleep(d)
+    raise PermanentError(f"gave up after {stats.attempts} attempts: {last}")
+
+
+class IdempotencyRegistry:
+    """De-duplicates retried submissions: the same token always maps to the
+    first completed result (paper: "job uniqueness validation to prevent
+    duplicate executions arising from repeated submissions")."""
+
+    def __init__(self):
+        self._done: dict[str, Any] = {}
+        self._inflight: set[str] = set()
+
+    @staticmethod
+    def token(*parts: Any) -> str:
+        h = hashlib.sha256("|".join(str(p) for p in parts).encode())
+        return h.hexdigest()[:24]
+
+    def run(self, token: str, fn: Callable[[], Any]) -> tuple[Any, bool]:
+        """Returns (result, was_duplicate)."""
+        if token in self._done:
+            return self._done[token], True
+        self._inflight.add(token)
+        try:
+            out = fn()
+        finally:
+            self._inflight.discard(token)
+        self._done[token] = out
+        return out, False

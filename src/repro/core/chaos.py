@@ -1,0 +1,85 @@
+"""Chaos engine (paper §V-B): deterministic fault injection at the hardware
+level (storage latency/failures, stragglers, network degradation) and the
+process level (host/TaskManager kills). All draws come from a seeded
+generator, so every drill is reproducible bit-for-bit."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosSpec:
+    seed: int = 0
+    # storage (HDFS-sim): slow uploads + hard failures
+    storage_slow_prob: float = 0.0
+    storage_slow_factor: float = 10.0
+    storage_fail_prob: float = 0.0
+    # process level
+    host_kill_prob_per_s: float = 0.0
+    host_kill_at: tuple[tuple[float, int], ...] = ()   # (time, host_id)
+    # stragglers: fraction of hosts that are slow by `straggler_factor`
+    straggler_frac: float = 0.0
+    straggler_factor: float = 4.0
+    # network
+    net_delay_factor: float = 1.0
+    # coordination (ZK-sim) outage windows
+    zk_down: tuple[tuple[float, float], ...] = ()
+    hdfs_down: tuple[tuple[float, float], ...] = ()
+
+
+class ChaosEngine:
+    def __init__(self, spec: ChaosSpec | None = None):
+        self.spec = spec or ChaosSpec()
+        self._rng = np.random.default_rng(self.spec.seed)
+        self._killed: set[int] = set()
+        self._stragglers: dict[int, bool] = {}
+
+    # -- storage -------------------------------------------------------
+    def storage_latency_factor(self) -> float:
+        if self.spec.storage_slow_prob and \
+                self._rng.random() < self.spec.storage_slow_prob:
+            return self.spec.storage_slow_factor
+        return 1.0
+
+    def storage_fails(self) -> bool:
+        return bool(self.spec.storage_fail_prob
+                    and self._rng.random() < self.spec.storage_fail_prob)
+
+    # -- hosts -----------------------------------------------------------
+    def is_straggler(self, host_id: int) -> bool:
+        if host_id not in self._stragglers:
+            self._stragglers[host_id] = bool(
+                self.spec.straggler_frac
+                and self._rng.random() < self.spec.straggler_frac)
+        return self._stragglers[host_id]
+
+    def host_speed(self, host_id: int) -> float:
+        return (1.0 / self.spec.straggler_factor
+                if self.is_straggler(host_id) else 1.0)
+
+    def step_kills(self, t0: float, t1: float, n_hosts: int) -> list[int]:
+        """Hosts killed in (t0, t1]: scheduled kills + Poisson random kills."""
+        kills = [h for (t, h) in self.spec.host_kill_at
+                 if t0 < t <= t1 and h not in self._killed]
+        if self.spec.host_kill_prob_per_s:
+            p = 1.0 - np.exp(-self.spec.host_kill_prob_per_s * (t1 - t0))
+            for h in range(n_hosts):
+                if h not in self._killed and self._rng.random() < p:
+                    kills.append(h)
+        self._killed.update(kills)
+        return sorted(set(kills))
+
+    def revive(self, host_id: int) -> None:
+        self._killed.discard(host_id)
+
+    def alive(self, host_id: int) -> bool:
+        return host_id not in self._killed
+
+    # -- coordination services -------------------------------------------
+    def zk_available(self, t: float) -> bool:
+        return not any(a <= t < b for a, b in self.spec.zk_down)
+
+    def hdfs_available(self, t: float) -> bool:
+        return not any(a <= t < b for a, b in self.spec.hdfs_down)

@@ -1,0 +1,57 @@
+"""Clock abstraction: wall clock for production, virtual clock for the
+deterministic simulators (cluster, streams, chaos drills)."""
+from __future__ import annotations
+
+import heapq
+import itertools
+import time as _time
+
+
+class WallClock:
+    def now(self) -> float:
+        return _time.time()
+
+    def sleep(self, s: float) -> None:
+        _time.sleep(s)
+
+
+class VirtualClock:
+    """Deterministic simulated time; sleep() advances instantly."""
+
+    def __init__(self, start: float = 0.0):
+        self._t = start
+
+    def now(self) -> float:
+        return self._t
+
+    def sleep(self, s: float) -> None:
+        self._t += max(0.0, s)
+
+    def advance_to(self, t: float) -> None:
+        self._t = max(self._t, t)
+
+
+class EventLoop:
+    """Minimal discrete-event loop over a VirtualClock."""
+
+    def __init__(self, clock: VirtualClock | None = None):
+        self.clock = clock or VirtualClock()
+        self._q: list = []
+        self._counter = itertools.count()
+
+    def schedule(self, delay: float, fn, *args) -> None:
+        heapq.heappush(self._q, (self.clock.now() + delay,
+                                 next(self._counter), fn, args))
+
+    def run_until(self, t_end: float) -> None:
+        while self._q and self._q[0][0] <= t_end:
+            t, _, fn, args = heapq.heappop(self._q)
+            self.clock.advance_to(t)
+            fn(*args)
+        self.clock.advance_to(t_end)
+
+    def run_all(self) -> None:
+        while self._q:
+            t, _, fn, args = heapq.heappop(self._q)
+            self.clock.advance_to(t)
+            fn(*args)

@@ -1,0 +1,110 @@
+"""High availability under external dependencies (paper §IV-B).
+
+ZooKeeper-sim: leader metadata + session semantics with chaos-driven outage
+windows. StreamShield's mechanism: a redundant copy of the leader metadata in
+HDFS; on ZK failure the coordinator falls back to the HDFS copy and keeps
+running jobs alive. Only when BOTH are unavailable — or the HDFS copy
+disagrees with in-memory state — are jobs terminated to preserve correctness.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any
+
+from repro.core.backoff import TransientError
+from repro.core.chaos import ChaosEngine
+from repro.core.clock import WallClock
+
+
+class ZKUnavailable(TransientError):
+    pass
+
+
+@dataclasses.dataclass
+class LeaderRecord:
+    leader_id: str
+    epoch: int
+
+    def to_bytes(self) -> bytes:
+        return json.dumps(dataclasses.asdict(self), sort_keys=True).encode()
+
+    @staticmethod
+    def from_bytes(b: bytes) -> "LeaderRecord":
+        return LeaderRecord(**json.loads(b))
+
+
+class ZooKeeperSim:
+    """Tiny KV + leader-election service with chaos availability windows."""
+
+    def __init__(self, *, clock=None, chaos: ChaosEngine | None = None):
+        self.clock = clock or WallClock()
+        self.chaos = chaos or ChaosEngine()
+        self._kv: dict[str, bytes] = {}
+        self._epoch = 0
+
+    def _check(self):
+        if not self.chaos.zk_available(self.clock.now()):
+            raise ZKUnavailable("zk quorum lost")
+
+    def set(self, key: str, value: bytes) -> None:
+        self._check()
+        self._kv[key] = value
+
+    def get(self, key: str) -> bytes:
+        self._check()
+        if key not in self._kv:
+            raise KeyError(key)
+        return self._kv[key]
+
+    def elect(self, candidate: str) -> LeaderRecord:
+        self._check()
+        self._epoch += 1
+        rec = LeaderRecord(candidate, self._epoch)
+        self._kv["leader"] = rec.to_bytes()
+        return rec
+
+
+class JobTerminated(RuntimeError):
+    pass
+
+
+class LeaderService:
+    """Leader metadata with the HDFS redundant copy + fallback semantics."""
+
+    def __init__(self, zk: ZooKeeperSim, hdfs_store, *, clock=None):
+        self.zk = zk
+        self.hdfs = hdfs_store
+        self.clock = clock or zk.clock
+        self.in_memory: LeaderRecord | None = None
+        self.fallback_reads = 0
+        self.terminations = 0
+
+    def elect(self, candidate: str) -> LeaderRecord:
+        rec = self.zk.elect(candidate)
+        self.in_memory = rec
+        # redundant copy (paper: "maintains a redundant copy of the leader
+        # metadata in HDFS in addition to ZooKeeper")
+        self.hdfs.put("ha/leader", rec.to_bytes())
+        return rec
+
+    def get_leader(self) -> LeaderRecord:
+        try:
+            return LeaderRecord.from_bytes(self.zk.get("leader"))
+        except (ZKUnavailable, KeyError):
+            pass
+        # ZK down → fall back to the HDFS copy
+        try:
+            rec = LeaderRecord.from_bytes(self.hdfs.get("ha/leader"))
+            self.fallback_reads += 1
+        except Exception:
+            self.terminations += 1
+            raise JobTerminated("both ZooKeeper and HDFS leader metadata "
+                                "unavailable") from None
+        if self.in_memory is not None and (
+                rec.leader_id != self.in_memory.leader_id
+                or rec.epoch != self.in_memory.epoch):
+            self.terminations += 1
+            raise JobTerminated("HDFS leader metadata inconsistent with "
+                                "in-memory state")
+        return rec

@@ -1,0 +1,62 @@
+"""State LazyLoad (paper §III-B): decouple job resumption from full state
+materialization. Regions restore asynchronously in priority order (execution
+order: embeddings → early layers → …); compute blocks only on the region it
+is about to touch, overlapping restore with processing. Time-to-first-token
+improves by ~the tail of the restore, measured by bench/lazyload tests.
+"""
+from __future__ import annotations
+
+import threading
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+
+from repro.core import regions as R
+from repro.core.region_checkpoint import _deep_mutable, _unpack
+
+
+class LazyRestorer:
+    def __init__(self, checkpointer, template_tree, *, gamma: str = "full",
+                 priority: list[int] | None = None, max_workers: int = 2):
+        self.ckpt = checkpointer
+        self.view = checkpointer.manifest.merge_view(gamma)
+        self.tree = _deep_mutable(template_tree)
+        self.regions = {r.region_id: r for r in checkpointer.regions}
+        order = priority if priority is not None else sorted(self.regions)
+        self._ready: dict[int, threading.Event] = {
+            rid: threading.Event() for rid in self.regions}
+        self._pool = ThreadPoolExecutor(max_workers=max_workers)
+        self._lock = threading.Lock()
+        self.timeline: dict[int, float] = {}
+        self._t0 = checkpointer.clock.now()
+        for rid in order:
+            self._pool.submit(self._fetch, rid)
+
+    def _fetch(self, rid: int) -> None:
+        region = self.regions[rid]
+        snap = self.view[rid]
+        data = {p: _unpack(self.ckpt.storage.get(k))
+                for p, k in snap.keys.items()}
+        with self._lock:
+            R.insert_region(self.tree, region, data)
+            self.timeline[rid] = self.ckpt.clock.now() - self._t0
+        self._ready[rid].set()
+
+    # ------------------------------------------------------------------
+    def wait_region(self, rid: int, timeout: float | None = 60.0):
+        """Block until region rid is materialized (demand-driven access)."""
+        if not self._ready[rid].wait(timeout):
+            raise TimeoutError(f"region {rid} not restored in {timeout}s")
+
+    def wait_all(self, timeout: float | None = 120.0):
+        for rid in self.regions:
+            self.wait_region(rid, timeout)
+        return self.tree
+
+    def ready_regions(self) -> list[int]:
+        return [rid for rid, ev in self._ready.items() if ev.is_set()]
+
+    def run_when_ready(self, rid: int, fn, *args):
+        """Execute fn once region rid is present (pipelined serve path)."""
+        self.wait_region(rid)
+        return fn(*args)

@@ -1,0 +1,176 @@
+"""Region checkpointing (paper §III-B, Fig 3) + the baseline global scheme.
+
+Global (baseline, Flink-original): one failed upload aborts the entire
+checkpoint attempt — nothing is recorded for that step.
+
+Region (StreamShield): every region uploads independently; failed regions
+simply keep their previous snapshot and the manifest merge still yields a
+usable global checkpoint (γ=full restores the newest step all regions share;
+γ=partial takes latest-per-region with bounded staleness). Uploads are
+content-addressed + atomic ⇒ retried uploads are idempotent.
+"""
+from __future__ import annotations
+
+import dataclasses
+import io
+import time
+import zlib
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any
+
+import numpy as np
+
+from repro.ckpt.manifest import Manifest, RegionSnapshot
+from repro.ckpt.storage import content_key
+from repro.core import regions as R
+from repro.core.backoff import PermanentError, RetryPolicy, retry
+from repro.core.clock import WallClock
+
+
+def _pack(arr: np.ndarray) -> bytes:
+    """Self-describing array blob (handles ml_dtypes like bfloat16, which
+    np.lib.format cannot round-trip)."""
+    import json
+    arr = np.ascontiguousarray(arr)
+    meta = json.dumps({"dtype": str(arr.dtype),
+                       "shape": list(arr.shape)}).encode()
+    return zlib.compress(
+        len(meta).to_bytes(4, "little") + meta + arr.tobytes(), level=1)
+
+
+def _unpack(data: bytes) -> np.ndarray:
+    import json
+    import ml_dtypes  # noqa: F401  (registers bfloat16 et al. with numpy)
+    b = zlib.decompress(data)
+    n = int.from_bytes(b[:4], "little")
+    meta = json.loads(b[4:4 + n])
+    dt = np.dtype(meta["dtype"])
+    return np.frombuffer(b[4 + n:], dtype=dt).reshape(meta["shape"]).copy()
+
+
+@dataclasses.dataclass
+class CheckpointReport:
+    step: int
+    ok_regions: list[int]
+    failed_regions: list[int]
+    nbytes: int
+    wall_s: float
+    mode: str
+
+    @property
+    def success(self) -> bool:
+        return not self.failed_regions
+
+    @property
+    def usable(self) -> bool:  # region mode: merged view still valid
+        return self.mode == "region" or self.success
+
+
+class RegionCheckpointer:
+    """mode="region" (StreamShield) or "global" (baseline for Fig 8)."""
+
+    def __init__(self, storage, job_id: str, regions: list[R.Region], *,
+                 mode: str = "region", policy: RetryPolicy | None = None,
+                 clock=None, max_workers: int = 4, dedup: bool = True):
+        assert mode in ("region", "global")
+        self.storage = storage
+        self.job_id = job_id
+        self.regions = regions
+        self.mode = mode
+        self.policy = policy or RetryPolicy(base_delay_s=0.05, max_attempts=3)
+        self.clock = clock or WallClock()
+        self.manifest = Manifest(job_id, len(regions))
+        self.reports: list[CheckpointReport] = []
+        self._pool = ThreadPoolExecutor(max_workers=max_workers)
+        self._dedup = dedup
+        self._seen_keys: set[str] = set()
+
+    # ------------------------------------------------------------------
+    def _upload_region(self, region: R.Region, step: int,
+                       tree) -> RegionSnapshot:
+        t0 = self.clock.now()
+        data = R.extract_region(tree, region)
+        keys: dict[str, str] = {}
+        nbytes = 0
+        for path, arr in data.items():
+            blob = _pack(arr)
+            key = f"ckpt/{self.job_id}/{content_key(blob)}"
+            if not (self._dedup and key in self._seen_keys):
+                def put(key=key, blob=blob):
+                    return self.storage.put(key, blob)
+                retry(put, self.policy, self.clock)
+                self._seen_keys.add(key)
+            keys[path] = key
+            nbytes += len(blob)
+        return RegionSnapshot(region.region_id, step, keys, nbytes,
+                              wall_s=self.clock.now() - t0)
+
+    def save(self, step: int, tree, *, async_: bool = False):
+        if async_:
+            return self._pool.submit(self._save_sync, step, tree)
+        return self._save_sync(step, tree)
+
+    def _save_sync(self, step: int, tree) -> CheckpointReport:
+        t0 = self.clock.now()
+        ok, failed, snaps, total = [], [], [], 0
+        for region in self.regions:
+            try:
+                snap = self._upload_region(region, step, tree)
+                snaps.append(snap)
+                ok.append(region.region_id)
+                total += snap.nbytes
+            except PermanentError:
+                failed.append(region.region_id)
+        if self.mode == "global" and failed:
+            # baseline semantics: the whole attempt aborts — record nothing
+            rep = CheckpointReport(step, ok, failed, total,
+                                   self.clock.now() - t0, self.mode)
+        else:
+            for snap in snaps:
+                self.manifest.add(snap)
+            rep = CheckpointReport(step, ok, failed, total,
+                                   self.clock.now() - t0, self.mode)
+            try:
+                retry(lambda: self.manifest.save(self.storage), self.policy,
+                      self.clock)
+            except PermanentError:
+                # in-memory manifest stays authoritative; persisted pointer
+                # is stale until the next successful save
+                rep.failed_regions = sorted(set(rep.failed_regions)
+                                            | {-1})  # -1 = manifest write
+        self.reports.append(rep)
+        return rep
+
+    # ------------------------------------------------------------------
+    def restore(self, template_tree, *, gamma: str = "full",
+                step: int | None = None):
+        """Rebuild a full tree (numpy leaves) from the merged manifest view.
+        Returns (tree, info) where info records per-region steps/staleness."""
+        view = self.manifest.merge_view(gamma, step)
+        tree = _deep_mutable(template_tree)
+        for region in self.regions:
+            snap = view[region.region_id]
+            data = {p: _unpack(self.storage.get(k))
+                    for p, k in snap.keys.items()}
+            R.insert_region(tree, region, data)
+        info = {"steps": {r: s.step for r, s in view.items()},
+                "staleness": self.manifest.staleness(view)}
+        return tree, info
+
+    def success_rate(self) -> dict[str, Any]:
+        usable = sum(1 for r in self.reports
+                     if (r.success if self.mode == "global" else True))
+        attempted = len(self.reports)
+        fully = sum(1 for r in self.reports if r.success)
+        return {"attempted": attempted, "usable": usable,
+                "fully_successful": fully,
+                "usable_rate": usable / max(attempted, 1),
+                "full_rate": fully / max(attempted, 1)}
+
+
+def _deep_mutable(tree):
+    if isinstance(tree, dict):
+        return {k: _deep_mutable(v) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        return [_deep_mutable(v) for v in tree]
+    return np.asarray(tree)

@@ -1,0 +1,92 @@
+"""Hybrid replication (paper §IV-A): passive replication (periodic region
+checkpoints, restore-on-failure) is the default; latency-critical jobs switch
+to active replication (a live standby replica assuming execution immediately).
+
+The manager is policy-driven (core/slo.py) and exposes a uniform
+``on_failure`` that returns a RecoveryOutcome with the recovery-time
+decomposition — used by tests and the Fig 9-style drills.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import numpy as np
+
+from repro.core.slo import ResiliencyPolicy
+
+
+@dataclasses.dataclass
+class RecoveryOutcome:
+    mode: str
+    detect_s: float
+    restore_s: float
+    replay_s: float
+    lost_steps: int
+
+    @property
+    def downtime_s(self) -> float:
+        return self.detect_s + self.restore_s + self.replay_s
+
+
+@dataclasses.dataclass(frozen=True)
+class TimingModel:
+    detect_s: float = 0.5
+    restore_bps: float = 2e9          # checkpoint read bandwidth
+    step_time_s: float = 0.5
+    standby_switch_s: float = 0.05    # active failover latency
+
+
+class ReplicationManager:
+    def __init__(self, policy: ResiliencyPolicy, checkpointer, *,
+                 timing: TimingModel | None = None, clock=None):
+        self.policy = policy
+        self.ckpt = checkpointer
+        self.timing = timing or TimingModel()
+        self.clock = clock or checkpointer.clock
+        self._standby: Any = None
+        self._standby_step: int = -1
+        self._last_ckpt_t = -1e18
+        self._last_ckpt_step = -1
+        self.events: list[RecoveryOutcome] = []
+
+    # -- steady-state duties ------------------------------------------------
+    def on_step(self, step: int, state, *, copy_fn: Callable = None) -> dict:
+        """Call after every training/serving step. Maintains the standby
+        (active) or the checkpoint cadence (passive)."""
+        out = {"checkpointed": False, "standby_synced": False}
+        if self.policy.replication == "active":
+            copy = copy_fn or (lambda tree: tree)
+            self._standby = copy(state)
+            self._standby_step = step
+            out["standby_synced"] = True
+        t = self.clock.now()
+        if t - self._last_ckpt_t >= self.policy.ckpt_interval_s:
+            rep = self.ckpt.save(step, state)
+            self._last_ckpt_t = t
+            if rep.usable:
+                self._last_ckpt_step = step
+            out["checkpointed"] = rep.usable
+        return out
+
+    # -- failure path ---------------------------------------------------
+    def on_failure(self, step: int, template_state) -> tuple[Any, RecoveryOutcome]:
+        tm = self.timing
+        if self.policy.replication == "active" and self._standby is not None:
+            oc = RecoveryOutcome("active", tm.detect_s, tm.standby_switch_s,
+                                 replay_s=max(0, step - self._standby_step)
+                                 * tm.step_time_s,
+                                 lost_steps=0)
+            self.events.append(oc)
+            return self._standby, oc
+        gamma = "full" if self.policy.rescue_overflow else "partial"
+        state, info = self.ckpt.restore(template_state, gamma=gamma)
+        ckpt_step = min(info["steps"].values()) if info["steps"] else -1
+        nbytes = sum(r.nbytes for r in self.ckpt.regions)
+        lost = max(0, step - ckpt_step)
+        oc = RecoveryOutcome(
+            "passive", tm.detect_s, nbytes / tm.restore_bps,
+            replay_s=0.0 if gamma == "partial" else lost * tm.step_time_s,
+            lost_steps=lost if gamma == "partial" else 0)
+        self.events.append(oc)
+        return state, oc

@@ -1,0 +1,72 @@
+"""SLO → resiliency policy (the paper's Table I as a decision table).
+
+S = (γ, λ_max, τ_max). The policy selects the replication mode, the recovery
+strategy, the MoE routing strictness (WeakHash is only legal when minor loss
+is tolerable OR the lookup is idempotent), and the checkpoint cadence.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import Completeness, SLOConfig
+
+
+class InfeasibleSLO(ValueError):
+    """Hour-level recovery with loss tolerance: 'Not applicable; prone to
+    system malfunctions' (paper Table I)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ResiliencyPolicy:
+    replication: str            # "active" | "passive"
+    recovery: str               # "single_task" | "region" | "global"
+    moe_mode: str               # "weakhash" | "strict"
+    rescue_overflow: bool       # γ=full keeps every token
+    ckpt_interval_s: float
+    ckpt_mode: str              # "region" | "global"
+    description: str = ""
+
+
+def policy_for(slo: SLOConfig) -> ResiliencyPolicy:
+    tier = slo.recovery_tier
+    partial = slo.gamma == Completeness.PARTIAL
+
+    if tier == "sub_second":
+        if partial:
+            # latency-critical services (targeted ads / realtime reco)
+            return ResiliencyPolicy(
+                replication="active", recovery="single_task",
+                moe_mode="weakhash", rescue_overflow=False,
+                ckpt_interval_s=30.0, ckpt_mode="region",
+                description="active replicas + single-task recovery; "
+                            "WeakHash may drop overflow")
+        # the 'ideally preferred' cell: active replicas, no loss
+        return ResiliencyPolicy(
+            replication="active", recovery="region",
+            moe_mode="weakhash", rescue_overflow=True,
+            ckpt_interval_s=30.0, ckpt_mode="region",
+            description="active replicas, lossless failover")
+    if tier == "sub_minute":
+        if partial:
+            # log-driven analytical pipelines
+            return ResiliencyPolicy(
+                replication="passive", recovery="single_task",
+                moe_mode="weakhash", rescue_overflow=False,
+                ckpt_interval_s=60.0, ckpt_mode="region",
+                description="passive + single-task recovery (minor loss ok)")
+        # revenue-critical / data synchronization
+        return ResiliencyPolicy(
+            replication="passive", recovery="region",
+            moe_mode="weakhash", rescue_overflow=True,
+            ckpt_interval_s=60.0, ckpt_mode="region",
+            description="passive + region failover, strict completeness")
+    # hour-level
+    if partial:
+        raise InfeasibleSLO(
+            "hour-level recovery with loss tolerance is not a viable "
+            "operating point (paper Table I)")
+    return ResiliencyPolicy(
+        replication="passive", recovery="global",
+        moe_mode="strict", rescue_overflow=True,
+        ckpt_interval_s=600.0, ckpt_mode="global",
+        description="offline warehousing: low-cadence global checkpoints")

@@ -1,0 +1,51 @@
+"""WeakHash (paper §III-A): relax the strict key→task binding to a bounded
+candidate set + dynamic (load-aware) selection. Host-side numpy version used
+by the stream engine, the data pipeline and the cluster sim; the token-path
+twin lives in kernels/weakhash_route (jnp/Pallas).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+KNUTH = np.uint32(2654435761)
+
+
+def strong_hash(keys: np.ndarray, n_tasks: int) -> np.ndarray:
+    """Flink-style keyBy: key → exactly one task."""
+    return ((keys.astype(np.uint64) * 2654435761) % n_tasks).astype(np.int64)
+
+
+def candidate_group(keys: np.ndarray, n_groups: int) -> np.ndarray:
+    return ((keys.astype(np.uint64) * 2654435761) % n_groups).astype(np.int64)
+
+
+def weakhash_assign(keys: np.ndarray, n_tasks: int, n_groups: int,
+                    loads: np.ndarray | None = None,
+                    rng: np.random.Generator | None = None) -> np.ndarray:
+    """Assign each key to a task within its candidate group, least-loaded
+    first (records within a batch update the load estimate greedily, mirroring
+    credit consumption)."""
+    assert n_tasks % n_groups == 0, (n_tasks, n_groups)
+    gsz = n_tasks // n_groups
+    group = candidate_group(keys, n_groups)
+    loads = np.zeros(n_tasks, np.float64) if loads is None else loads.astype(
+        np.float64).copy()
+    out = np.empty(len(keys), np.int64)
+    # greedy sequential least-loaded pick (vectorized per unique group batch
+    # would reorder ties; sequential matches the streaming arrival semantics)
+    for i, g in enumerate(group):
+        base = g * gsz
+        cand = loads[base:base + gsz]
+        j = int(np.argmin(cand))
+        out[i] = base + j
+        loads[base + j] += 1.0
+    return out
+
+
+def load_cv(assignments: np.ndarray, n_tasks: int,
+            weights: np.ndarray | None = None) -> float:
+    """Coefficient of variation of per-task load (skew metric)."""
+    w = np.ones(len(assignments)) if weights is None else weights
+    loads = np.bincount(assignments, weights=w, minlength=n_tasks)
+    mu = loads.mean()
+    return float(loads.std() / mu) if mu > 0 else 0.0

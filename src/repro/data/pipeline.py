@@ -1,0 +1,99 @@
+"""Host-side data pipeline with backlog-aware routing (paper §III-A applied
+to the training input path).
+
+N producer shards feed M host ingest queues (bounded = credits). The router
+is pluggable with the same strategies as the stream engine: static
+round-robin (baseline) vs backlog-based shuffle (divert batches away from
+congested hosts — e.g. hosts sharing a slow NIC or doing checkpoint uploads).
+`next_global_batch` assembles a deterministic global batch every step
+regardless of routing, so training math is unchanged; only the *wait time*
+(straggler stall) differs — which is what the benchmark measures.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import numpy as np
+
+from repro.core.backlog_shuffle import BacklogShuffle, ChannelState, Rebalance
+from repro.core.chaos import ChaosEngine
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineConfig:
+    n_hosts: int = 8
+    queue_cap: int = 16            # batches per host queue (credits)
+    batch_tokens: int = 4096
+    strategy: str = "backlog"      # "rebalance" | "backlog"
+    backlog_threshold: int = 12
+    seed: int = 0
+
+
+class TokenSource:
+    """Deterministic synthetic token shards (stable across restarts given the
+    same cursor — the data-cursor is part of the checkpoint region state)."""
+
+    def __init__(self, vocab: int, batch: int, seq: int, seed: int = 0):
+        self.vocab, self.batch, self.seq = vocab, batch, seq
+        self.seed = seed
+        self.cursor = 0
+
+    def batch_at(self, cursor: int) -> dict[str, np.ndarray]:
+        rng = np.random.default_rng((self.seed, cursor))
+        tokens = rng.integers(0, self.vocab, (self.batch, self.seq + 1),
+                              dtype=np.int32)
+        return {"tokens": tokens[:, :-1], "targets": tokens[:, 1:],
+                "cursor": cursor}
+
+    def next(self) -> dict[str, np.ndarray]:
+        out = self.batch_at(self.cursor)
+        self.cursor += 1
+        return out
+
+
+class BackpressurePipeline:
+    def __init__(self, source: TokenSource, cfg: PipelineConfig,
+                 chaos: ChaosEngine | None = None):
+        self.source = source
+        self.cfg = cfg
+        self.chaos = chaos or ChaosEngine()
+        self.queues = [deque() for _ in range(cfg.n_hosts)]
+        self.state = ChannelState.fresh(cfg.n_hosts, cfg.queue_cap)
+        self.router = (BacklogShuffle(cfg.backlog_threshold)
+                       if cfg.strategy == "backlog" else Rebalance())
+        self.stalls = 0
+        self.produced = 0
+        # per-host drain rate (batches per pump) — stragglers drain slower
+        self.drain = np.array([1.0 if not self.chaos.is_straggler(h)
+                               else 1.0 / self.chaos.spec.straggler_factor
+                               for h in range(cfg.n_hosts)])
+        self._drain_credit = np.zeros(cfg.n_hosts)
+
+    def pump(self, n_batches: int = 1) -> None:
+        """Produce n batches and route them to host queues."""
+        for _ in range(n_batches):
+            self.state.backlog = np.array([len(q) for q in self.queues])
+            host = int(self.router.assign(1, self.state)[0])
+            if len(self.queues[host]) >= self.cfg.queue_cap:
+                # credit exhausted → stall (backpressure to the producer)
+                self.stalls += 1
+                order = np.argsort([len(q) for q in self.queues])
+                host = int(order[0])
+            self.queues[host].append(self.source.next())
+            self.produced += 1
+
+    def drain_step(self) -> list[dict]:
+        """Each host consumes according to its drain rate (stragglers lag)."""
+        out = []
+        self._drain_credit += self.drain
+        for h, q in enumerate(self.queues):
+            while self._drain_credit[h] >= 1.0 and q:
+                out.append(q.popleft())
+                self._drain_credit[h] -= 1.0
+        return out
+
+    def backlog_cv(self) -> float:
+        lens = np.array([len(q) for q in self.queues], float)
+        mu = lens.mean()
+        return float(lens.std() / mu) if mu > 0 else 0.0

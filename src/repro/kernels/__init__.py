@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel package has:
+  kernel.py — ``pl.pallas_call`` + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit-friendly wrapper that dispatches pallas / interpret / ref
+  ref.py    — pure-jnp oracle (also the non-TPU lowering path)
+"""

@@ -1,0 +1,18 @@
+"""Model-facing kernel API (single import point for models/)."""
+from repro.kernels.decode_attention.ops import (  # noqa: F401
+    decode_attention,
+    decode_attention_partial,
+    merge_partials,
+)
+from repro.kernels.flash_attention.ops import flash_attention  # noqa: F401
+from repro.kernels.ssd_scan.ops import (  # noqa: F401
+    ssd_decode_step,
+    ssd_scan,
+    ssd_scan_naive,
+)
+from repro.kernels.weakhash_route.ops import (  # noqa: F401
+    RouteResult,
+    combine,
+    dispatch,
+    weakhash_route,
+)

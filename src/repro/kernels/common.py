@@ -1,0 +1,24 @@
+"""Shared kernel-dispatch policy.
+
+``impl`` resolution order:
+  explicit arg > REPRO_KERNEL_IMPL env > backend default
+Backend default: "pallas" on TPU, "ref" elsewhere (the jnp oracle lowers on
+any backend, keeping the CPU dry-run compilable). "interpret" runs the Pallas
+kernel body in Python — the CPU validation mode used by the kernel tests.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+VALID = ("pallas", "interpret", "ref")
+
+
+def resolve_impl(impl: str | None = None) -> str:
+    if impl is None:
+        impl = os.environ.get("REPRO_KERNEL_IMPL")
+    if impl is None:
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    assert impl in VALID, impl
+    return impl

@@ -1,0 +1,132 @@
+"""Pallas TPU decode attention (flash-decode): one query token against a long
+KV cache, split over KV blocks with running (m, l, acc) merge in VMEM scratch.
+
+Grid (B, KV, nk) — nk sequential. Also exposes the locally-normalized partial
+form (o, m, l) consumed by the cross-chip distributed-LSE merge
+(dist: KV-sequence-sharded caches for kv_heads ∈ {1, 8} archs).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.flash_attention.kernel import pltpu_scratch
+
+NEG_INF = -1e30
+DEFAULT_BLOCK_K = 512
+
+
+def _decode_kernel(valid_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                   m_scr, l_scr, acc_scr, *, scale, block_k, nk,
+                   window, k_offset_static):
+    kb = pl.program_id(2)
+    k0 = kb * block_k
+
+    @pl.when(kb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    valid = valid_ref[0]
+    off = valid_ref[2]  # shard offset (traced: rank * S_local)
+
+    @pl.when(k0 + off < valid)
+    def _compute():
+        q = q_ref[0, 0]                                  # (G, D)
+        k = k_ref[0, 0]                                  # (bk, D)
+        v = v_ref[0, 0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        pos = (off + k0
+               + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1))
+        mask = pos < valid
+        if window:
+            lo = valid_ref[1]                            # query abs position
+            mask = jnp.logical_and(mask, pos > lo - window)
+        s = jnp.where(mask, s, NEG_INF)                  # (G, bk)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+        m_scr[...] = m_new
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(kb == nk - 1)
+    def _fin():
+        l = l_scr[...]
+        safe = jnp.where(l > 0, l, 1.0)
+        o_ref[0, 0] = (acc_scr[...] / safe[:, None]).astype(o_ref.dtype)
+        m_ref[0, 0] = m_scr[...]
+        l_ref[0, 0] = l
+
+
+def _run(q, k, v, valid_len, *, window, pos, k_offset, block_k, interpret):
+    B, Sq, H, D = q.shape
+    assert Sq == 1
+    _, S, KV, _ = k.shape
+    G = H // KV
+    block_k = min(block_k, S)
+    nk = pl.cdiv(S, block_k)
+    scale = D ** -0.5
+
+    qg = q.reshape(B, KV, G, D)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    if valid_len is None:
+        valid_len = S + (k_offset if isinstance(k_offset, int) else 0)
+    scalars = jnp.stack([jnp.asarray(valid_len, jnp.int32),
+                         jnp.asarray(pos if pos is not None else 0,
+                                     jnp.int32),
+                         jnp.asarray(k_offset, jnp.int32)])
+
+    kernel = functools.partial(
+        _decode_kernel, scale=scale, block_k=block_k, nk=nk, window=window,
+        k_offset_static=0)
+    o, m, l = pl.pallas_call(
+        kernel,
+        grid=(B, KV, nk),
+        in_specs=[
+            pl.BlockSpec((3,), lambda b, h, j: (0,)),
+            pl.BlockSpec((1, 1, G, D), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, j: (b, h, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, G), lambda b, h, j: (b, h, 0)),
+            pl.BlockSpec((1, 1, G), lambda b, h, j: (b, h, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, KV, G, D), q.dtype),
+            jax.ShapeDtypeStruct((B, KV, G), jnp.float32),
+            jax.ShapeDtypeStruct((B, KV, G), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu_scratch((G,), jnp.float32),
+            pltpu_scratch((G,), jnp.float32),
+            pltpu_scratch((G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(scalars, qg, kt, vt)
+    return (o.reshape(B, H, D), m.reshape(B, H), l.reshape(B, H))
+
+
+def decode_attention(q, k, v, *, kv_valid_len=None, window=0, pos=None,
+                     block_k=DEFAULT_BLOCK_K, interpret=False):
+    o, _, _ = _run(q, k, v, kv_valid_len, window=window, pos=pos,
+                   k_offset=0, block_k=block_k, interpret=interpret)
+    return o  # (B,H,D)
+
+
+def decode_attention_partial(q, k, v, *, kv_valid_len=None, window=0,
+                             pos=None, k_offset=0,
+                             block_k=DEFAULT_BLOCK_K, interpret=False):
+    return _run(q, k, v, kv_valid_len, window=window, pos=pos,
+                k_offset=k_offset, block_k=block_k, interpret=interpret)

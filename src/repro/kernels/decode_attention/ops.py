@@ -1,0 +1,32 @@
+"""jit-level wrapper for decode attention with impl dispatch."""
+from __future__ import annotations
+
+from repro.kernels.common import resolve_impl
+from repro.kernels.decode_attention import ref
+
+merge_partials = ref.merge_partials
+
+
+def decode_attention(q, k, v, *, kv_valid_len=None, window: int = 0,
+                     pos=None, impl: str | None = None):
+    impl = resolve_impl(impl)
+    if impl == "ref":
+        return ref.decode_attention(q, k, v, kv_valid_len=kv_valid_len,
+                                    window=window, pos=pos)
+    from repro.kernels.decode_attention import kernel
+    return kernel.decode_attention(q, k, v, kv_valid_len=kv_valid_len,
+                                   window=window, pos=pos,
+                                   interpret=(impl == "interpret"))
+
+
+def decode_attention_partial(q, k, v, *, kv_valid_len=None, window: int = 0,
+                             pos=None, k_offset=0, impl: str | None = None):
+    impl = resolve_impl(impl)
+    if impl == "ref":
+        return ref.decode_attention_partial(
+            q, k, v, kv_valid_len=kv_valid_len, window=window, pos=pos,
+            k_offset=k_offset)
+    from repro.kernels.decode_attention import kernel
+    return kernel.decode_attention_partial(
+        q, k, v, kv_valid_len=kv_valid_len, window=window, pos=pos,
+        k_offset=k_offset, interpret=(impl == "interpret"))

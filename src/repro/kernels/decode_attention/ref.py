@@ -1,0 +1,65 @@
+"""Pure-jnp oracle for single-token decode attention (flash-decode style).
+
+Also provides the partial-softmax (m, l, o) form used by the distributed-LSE
+merge across a KV-sequence-sharded cache (dist/collectives.py) — the TPU-native
+adaptation for archs whose kv_heads do not divide the model axis (kv ∈ {1, 8}).
+
+Layouts: q (B, 1, H, D); cache k/v (B, S, KV, D).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention(q, k, v, *, kv_valid_len=None, window: int = 0,
+                     pos=None, scale: float | None = None):
+    """Direct decode attention. pos: absolute position of the query token
+    (required when window > 0 with a ring cache it is not needed — the ring
+    already bounds the cache — pass None)."""
+    out, _, _ = decode_attention_partial(
+        q, k, v, kv_valid_len=kv_valid_len, window=window, pos=pos, scale=scale)
+    return out
+
+
+def decode_attention_partial(q, k, v, *, kv_valid_len=None, window: int = 0,
+                             pos=None, k_offset: jax.Array | int = 0,
+                             scale: float | None = None):
+    """Returns (o, m, l): un-normalized-by-global output with local max m and
+    local sum l, suitable for cross-shard merge. o (B,H,D), m/l (B,H)."""
+    B, Sq, H, D = q.shape
+    assert Sq == 1, "decode step takes exactly one new token"
+    _, S, KV, _ = k.shape
+    G = H // KV
+    scale = scale if scale is not None else D ** -0.5
+    qg = q.reshape(B, KV, G, D)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    k_pos = k_offset + jnp.arange(S)
+    mask = jnp.ones((S,), bool)
+    if kv_valid_len is not None:
+        mask = k_pos < jnp.asarray(kv_valid_len)
+    if window and pos is not None:
+        mask &= k_pos > jnp.asarray(pos) - window
+    scores = jnp.where(mask[None, None, None, :], scores, -jnp.inf)
+    m = jnp.max(scores, axis=-1)                      # (B,KV,G)
+    e = jnp.exp(scores - m[..., None])
+    e = jnp.where(jnp.isfinite(m)[..., None], e, 0.0)  # all-masked shard
+    l = jnp.sum(e, axis=-1)                           # (B,KV,G)
+    o = jnp.einsum("bkgs,bskd->bkgd", e.astype(v.dtype), v)
+    safe_l = jnp.where(l > 0, l, 1.0)
+    o = (o / safe_l[..., None].astype(o.dtype)).reshape(B, H, D)
+    m = jnp.where(jnp.isfinite(m), m, -jnp.inf)
+    return o, m.reshape(B, H), l.reshape(B, H)
+
+
+def merge_partials(os, ms, ls):
+    """Merge per-shard partials along a leading shard axis.
+
+    os (N,B,H,D) locally-normalized outputs; ms/ls (N,B,H)."""
+    m_star = jnp.max(ms, axis=0)                       # (B,H)
+    w = jnp.exp(ms - m_star[None]) * ls                # un-normalize weights
+    denom = jnp.sum(w, axis=0)
+    denom = jnp.where(denom > 0, denom, 1.0)
+    w = (w / denom[None]).astype(os.dtype)
+    return jnp.sum(os * w[..., None], axis=0)          # (B,H,D)

@@ -1,0 +1,32 @@
+"""jit-level wrapper for flash attention with impl dispatch."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.common import resolve_impl
+from repro.kernels.flash_attention import ref
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    q_offset=0, kv_valid_len=None, chunk: int = 512,
+                    exact_blocks: bool = False, unroll: bool = False,
+                    impl: str | None = None):
+    """q (B,Sq,H,D); k/v (B,Skv,KV,D) → (B,Sq,H,D).
+
+    exact_blocks: statically slice kv per q-chunk (no flops on fully-masked
+    blocks) — the §Perf "causal_blocks" optimization; only valid when
+    q_offset == 0 and kv_valid_len is None (train/prefill full-sequence case).
+    """
+    impl = resolve_impl(impl)
+    if impl == "ref" or q.shape[1] == 1:
+        if exact_blocks and isinstance(q_offset, int) and q_offset == 0 \
+                and kv_valid_len is None and q.shape[1] > chunk:
+            return ref.attention_exact_blocks(
+                q, k, v, causal=causal, window=window, chunk=chunk)
+        return ref.attention(q, k, v, causal=causal, window=window,
+                             q_offset=q_offset, kv_valid_len=kv_valid_len,
+                             chunk=chunk, unroll=unroll)
+    from repro.kernels.flash_attention import kernel
+    return kernel.flash_attention(
+        q, k, v, causal=causal, window=window, q_offset=q_offset,
+        kv_valid_len=kv_valid_len, interpret=(impl == "interpret"))

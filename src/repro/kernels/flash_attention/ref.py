@@ -1,0 +1,127 @@
+"""Pure-jnp oracle for blockwise (flash) attention.
+
+This is simultaneously (a) the correctness reference for the Pallas kernel and
+(b) the implementation used when lowering on non-TPU backends (dry-run): it is
+*blockwise* — scores never materialize beyond one (q_chunk × kv) tile — so the
+32k-prefill cells compile with bounded temp memory.
+
+Layouts: q (B, Sq, H, D); k/v (B, Skv, KV, D) with H = KV * G (GQA).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def _chunk_attend(q, k, v, mask, scale):
+    """One q-chunk against full kv. q (B,c,KV,G,D); k/v (B,S,KV,D);
+    mask (B_or_1, c, 1_or_KV, S) boolean (True = attend)."""
+    scores = jnp.einsum("bckgd,bskd->bckgs", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = jnp.where(mask[:, :, :, None, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    # Fully-masked rows (e.g. padded cache) produce NaN from softmax(-inf).
+    probs = jnp.where(jnp.any(mask[:, :, :, None, :], axis=-1, keepdims=True),
+                      probs, 0.0)
+    out = jnp.einsum("bckgs,bskd->bckgd", probs.astype(v.dtype), v)
+    return out
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True,
+              window: int = 0,
+              q_offset: jax.Array | int = 0,
+              kv_valid_len: jax.Array | None = None,
+              chunk: int = 512,
+              unroll: bool = False,
+              scale: float | None = None) -> jax.Array:
+    """Blockwise attention with causal / sliding-window / cache-length masks.
+
+    q_offset: absolute position of q[0] (decode/chunked prefill).
+    kv_valid_len: number of valid cache entries (decode); None = all.
+    """
+    B, Sq, H, D = q.shape
+    _, Skv, KV, _ = k.shape
+    assert H % KV == 0, (H, KV)
+    G = H // KV
+    scale = scale if scale is not None else D ** -0.5
+    qg = q.reshape(B, Sq, KV, G, D)
+
+    k_pos = jnp.arange(Skv)
+
+    def mask_for(q_pos):  # q_pos (c,) absolute positions
+        m = jnp.ones((q_pos.shape[0], Skv), bool)
+        if causal:
+            m &= k_pos[None, :] <= q_pos[:, None]
+        if window:
+            m &= k_pos[None, :] > q_pos[:, None] - window
+        m = m[None]  # (1, c, S)
+        if kv_valid_len is not None:
+            m &= (k_pos[None, None, :] < jnp.asarray(kv_valid_len).reshape(-1, 1, 1))
+        return m[:, :, None, :]  # (B|1, c, 1, S)
+
+    if Sq <= chunk:
+        q_pos = q_offset + jnp.arange(Sq)
+        out = _chunk_attend(qg, k, v, mask_for(q_pos), scale)
+        return out.reshape(B, Sq, H, D)
+
+    if Sq % chunk:  # e.g. whisper's 1500-frame encoder: pad q, slice out
+        pad = chunk - Sq % chunk
+        qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        out = attention(qp, k, v, causal=causal, window=window,
+                        q_offset=q_offset, kv_valid_len=kv_valid_len,
+                        chunk=chunk, unroll=unroll, scale=scale)
+        return out[:, :Sq]
+    nq = Sq // chunk
+    qs = qg.reshape(B, nq, chunk, KV, G, D).transpose(1, 0, 2, 3, 4, 5)
+
+    if unroll:
+        # python loop — every chunk appears in HLO (accurate cost_analysis)
+        outs = []
+        for i in range(nq):
+            q_pos = q_offset + i * chunk + jnp.arange(chunk)
+            outs.append(_chunk_attend(qs[i], k, v, mask_for(q_pos), scale))
+        out = jnp.stack(outs)
+    else:
+        def body(_, xs):
+            qc, idx = xs
+            q_pos = q_offset + idx * chunk + jnp.arange(chunk)
+            oc = _chunk_attend(qc, k, v, mask_for(q_pos), scale)
+            return None, oc
+
+        _, out = jax.lax.scan(body, None, (qs, jnp.arange(nq)))
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, H, D)
+    return out
+
+
+def attention_exact_blocks(q, k, v, *, causal: bool = True, window: int = 0,
+                           chunk: int = 512, scale: float | None = None):
+    """Exact-causal variant: python loop with static kv slices so no FLOPs are
+    spent on fully-masked kv blocks (the §Perf 'causal_blocks' optimization).
+    """
+    B, Sq, H, D = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+    scale = scale if scale is not None else D ** -0.5
+    qg = q.reshape(B, Sq, KV, G, D)
+    k_pos_full = jnp.arange(Skv)
+    outs = []
+    nq = max(1, Sq // chunk)
+    chunk = Sq // nq
+    for i in range(nq):
+        lo = i * chunk
+        hi = lo + chunk
+        kv_lo = max(0, hi - window) if window else 0
+        kv_lo = (kv_lo // 128) * 128  # keep lane-aligned slices
+        kv_hi = min(Skv, hi) if causal else Skv
+        ks, vs = k[:, kv_lo:kv_hi], v[:, kv_lo:kv_hi]
+        q_pos = lo + jnp.arange(chunk)
+        m = jnp.ones((chunk, kv_hi - kv_lo), bool)
+        if causal:
+            m &= k_pos_full[kv_lo:kv_hi][None, :] <= q_pos[:, None]
+        if window:
+            m &= k_pos_full[kv_lo:kv_hi][None, :] > q_pos[:, None] - window
+        outs.append(_chunk_attend(qg[:, lo:hi], ks, vs, m[None, :, None, :], scale))
+    return jnp.concatenate(outs, axis=1).reshape(B, Sq, H, D)

@@ -1,0 +1,115 @@
+"""Pallas TPU Mamba-2 SSD chunked scan.
+
+Grid (B, n_head_blocks, nc) — the chunk axis is last (sequential), so the
+inter-chunk SSM state lives in a (hb, P, N) fp32 VMEM scratch that carries
+across chunks; intra-chunk work is decay-masked batched matmuls on the MXU.
+Forward only: the backward pass recomputes through the jnp oracle
+(ops.ssd_scan wraps this kernel in a custom_vjp whose bwd is the ref vjp).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.flash_attention.kernel import pltpu_scratch
+
+DEFAULT_HEAD_BLOCK = 8
+
+
+def _ssd_kernel(x_ref, dt_ref, A_ref, B_ref, C_ref, D_ref, y_ref, st_ref,
+                state_scr, *, Q, nc, use_D):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0].astype(jnp.float32)          # (hb, Q, P)
+    dt = dt_ref[0].astype(jnp.float32)        # (hb, Q)
+    A = A_ref[...].astype(jnp.float32)        # (hb,)
+    Bm = B_ref[0].astype(jnp.float32)         # (Q, N)
+    Cm = C_ref[0].astype(jnp.float32)         # (Q, N)
+
+    dA = dt * A[:, None]                       # (hb, Q) ≤ 0
+    s = jnp.cumsum(dA, axis=1)
+    total = s[:, -1]                           # (hb,)
+
+    rel = s[:, :, None] - s[:, None, :]        # (hb, Q, Q)
+    mask = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where(mask[None], jnp.exp(rel), 0.0)
+    cb = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q, Q)
+    w = cb[None] * L * dt[:, None, :]          # (hb, Q, Q)
+    y = jax.lax.dot_general(w, x, (((2,), (1,)), ((0,), (0,))),
+                            preferred_element_type=jnp.float32)   # (hb,Q,P)
+
+    state = state_scr[...]                     # (hb, P, N)
+    # inter-chunk: y += exp(s) * C · state
+    y_in = jax.lax.dot_general(state, Cm, (((2,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+    # y_in: (hb, P, Q) → (hb, Q, P)
+    y = y + jnp.transpose(y_in, (0, 2, 1)) * jnp.exp(s)[:, :, None]
+
+    if use_D:
+        y = y + x * D_ref[...].astype(jnp.float32)[:, None, None]
+
+    # state update
+    decay_out = jnp.exp(total[:, None] - s)    # (hb, Q)
+    xw = x * (dt * decay_out)[:, :, None]      # (hb, Q, P)
+    upd = jax.lax.dot_general(xw, Bm, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    # upd: (hb, P, N)
+    state_scr[...] = state * jnp.exp(total)[:, None, None] + upd
+
+    y_ref[0] = y.astype(y_ref.dtype)
+    st_ref[0] = state_scr[...]
+
+
+def ssd_scan(x, dt, A, Bm, Cm, D=None, *, chunk: int = 256,
+             initial_state=None, head_block: int = DEFAULT_HEAD_BLOCK,
+             interpret: bool = False):
+    assert initial_state is None, \
+        "kernel path starts from zero state (prefill); decode uses " \
+        "ssd_decode_step"
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0
+    nc = S // Q
+    hb = min(head_block, H)
+    assert H % hb == 0
+    nh = H // hb
+
+    xt = x.transpose(0, 2, 1, 3)              # (B, H, S, P)
+    dtt = dt.transpose(0, 2, 1)               # (B, H, S)
+
+    kernel = functools.partial(_ssd_kernel, Q=Q, nc=nc, use_D=D is not None)
+    if D is None:
+        D = jnp.zeros((H,), jnp.float32)
+    y, st = pl.pallas_call(
+        kernel,
+        grid=(B, nh, nc),
+        in_specs=[
+            pl.BlockSpec((1, hb, Q, P), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, hb, Q), lambda b, h, c: (b, h, c)),
+            pl.BlockSpec((hb,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, Q, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, Q, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((hb,), lambda b, h, c: (h,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, hb, Q, P), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, hb, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, S, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu_scratch((hb, P, N), jnp.float32)],
+        interpret=interpret,
+    )(xt, dtt, A.astype(jnp.float32), Bm, Cm, jnp.asarray(D, jnp.float32))
+    return y.transpose(0, 2, 1, 3), st

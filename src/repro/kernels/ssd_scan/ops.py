@@ -1,0 +1,45 @@
+"""jit-level wrapper for the Mamba-2 SSD scan with impl dispatch."""
+from __future__ import annotations
+
+from repro.kernels.common import resolve_impl
+from repro.kernels.ssd_scan import ref
+
+ssd_decode_step = ref.ssd_decode_step
+ssd_scan_naive = ref.ssd_scan_naive
+
+
+def ssd_scan(x, dt, A, Bm, Cm, D=None, *, chunk: int = 256,
+             initial_state=None, impl: str | None = None):
+    impl = resolve_impl(impl)
+    if impl == "ref" or initial_state is not None:
+        return ref.ssd_scan(x, dt, A, Bm, Cm, D, chunk=chunk,
+                            initial_state=initial_state)
+    return _ssd_kernel_vjp(x, dt, A, Bm, Cm, D, chunk, impl == "interpret")
+
+
+import functools as _ft  # noqa: E402
+import jax as _jax  # noqa: E402
+
+
+@_ft.partial(_jax.custom_vjp, nondiff_argnums=(6, 7))
+def _ssd_kernel_vjp(x, dt, A, Bm, Cm, D, chunk, interpret):
+    """Kernel forward; backward recomputes through the jnp oracle (the
+    chunked SSD fwd is cheap relative to the surrounding projections)."""
+    from repro.kernels.ssd_scan import kernel
+    return kernel.ssd_scan(x, dt, A, Bm, Cm, D, chunk=chunk,
+                           interpret=interpret)
+
+
+def _ssd_fwd(x, dt, A, Bm, Cm, D, chunk, interpret):
+    out = _ssd_kernel_vjp(x, dt, A, Bm, Cm, D, chunk, interpret)
+    return out, (x, dt, A, Bm, Cm, D)
+
+
+def _ssd_bwd(chunk, interpret, res, g):
+    x, dt, A, Bm, Cm, D = res
+    _, vjp = _jax.vjp(
+        lambda *a: ref.ssd_scan(*a, chunk=chunk), x, dt, A, Bm, Cm, D)
+    return vjp(g)
+
+
+_ssd_kernel_vjp.defvjp(_ssd_fwd, _ssd_bwd)

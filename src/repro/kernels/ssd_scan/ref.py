@@ -1,0 +1,103 @@
+"""Pure-jnp oracle for the Mamba-2 SSD (state-space duality) chunked scan.
+
+Follows Dao & Gu, arXiv:2405.21060 §6: the sequence is split into chunks; the
+intra-chunk recurrence is computed as decay-masked matmuls (MXU friendly); a
+sequential ``lax.scan`` over chunks carries the SSM state, so the largest
+intermediate is one (Q × Q × H) tile per chunk — memory-bounded at 32k/500k.
+
+Layouts (single B/C group, broadcast over heads — the Mamba-2 default):
+  x  (B, S, H, P)   inputs per head (P = head_dim)
+  dt (B, S, H)      positive step sizes (already softplus'ed + bias)
+  A  (H,)           negative scalars (per head)
+  Bm (B, S, N)      input projection  (N = d_state)
+  Cm (B, S, N)      output projection
+  D  (H,)           skip
+Returns y (B, S, H, P), final_state (B, H, P, N).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan(x, dt, A, Bm, Cm, D=None, *, chunk: int = 256,
+             initial_state=None):
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, chunk)
+    nc = S // Q
+
+    f32 = jnp.float32
+    # chunk-major so scan can slice per chunk: (nc, B, Q, ...)
+    xc = x.reshape(B, nc, Q, H, P).transpose(1, 0, 2, 3, 4)
+    dtc = dt.reshape(B, nc, Q, H).transpose(1, 0, 2, 3).astype(f32)
+    Bc = Bm.reshape(B, nc, Q, N).transpose(1, 0, 2, 3).astype(f32)
+    Cc = Cm.reshape(B, nc, Q, N).transpose(1, 0, 2, 3).astype(f32)
+
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    init = (jnp.zeros((B, H, P, N), f32) if initial_state is None
+            else initial_state.astype(f32))
+
+    def chunk_step(state, inp):
+        xq, dtq, Bq, Cq = inp                     # (B,Q,H,P) (B,Q,H) (B,Q,N)
+        dA = dtq * A.astype(f32)[None, None, :]   # (B,Q,H), ≤ 0
+        s = jnp.cumsum(dA, axis=1)                # inclusive log-decay
+        total = s[:, -1]                          # (B,H)
+
+        # intra-chunk: y_q += Σ_{j≤q} (C_q·B_j) exp(s_q - s_j) dt_j x_j
+        rel = s[:, :, None, :] - s[:, None, :, :]             # (B,Q,Q,H)
+        L = jnp.where(mask[None, :, :, None], jnp.exp(rel), 0.0)
+        cb = jnp.einsum("bqn,bkn->bqk", Cq, Bq)               # (B,Q,Q)
+        w = cb[..., None] * L * dtq[:, None, :, :]            # (B,Q,Q,H)
+        y = jnp.einsum("bqkh,bkhp->bqhp", w, xq.astype(f32))
+
+        # inter-chunk: previous state decayed into each position
+        decay_in = jnp.exp(s)                                 # (B,Q,H)
+        y = y + jnp.einsum("bqn,bhpn->bqhp", Cq, state) * decay_in[..., None]
+
+        # state update: state' = state·exp(total) + Σ_j dt_j x_j B_j exp(total - s_j)
+        decay_out = jnp.exp(total[:, None, :] - s)            # (B,Q,H)
+        xw = xq.astype(f32) * (dtq * decay_out)[..., None]
+        new_state = (state * jnp.exp(total)[:, :, None, None]
+                     + jnp.einsum("bqhp,bqn->bhpn", xw, Bq))
+        return new_state, y
+
+    last, ys = jax.lax.scan(chunk_step, init, (xc, dtc, Bc, Cc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, P)
+    if D is not None:
+        y = y + x.astype(f32) * D.astype(f32)[None, None, :, None]
+    return y.astype(x.dtype), last
+
+
+def ssd_decode_step(state, x_t, dt_t, A, B_t, C_t, D=None):
+    """One-token recurrent update.
+
+    state (B,H,P,N); x_t (B,H,P); dt_t (B,H); B_t/C_t (B,N).
+    Returns (y_t (B,H,P), new_state)."""
+    f32 = jnp.float32
+    dA = jnp.exp(dt_t.astype(f32) * A.astype(f32)[None, :])        # (B,H)
+    upd = jnp.einsum("bhp,bn->bhpn",
+                     x_t.astype(f32) * dt_t.astype(f32)[..., None],
+                     B_t.astype(f32))
+    new_state = state.astype(f32) * dA[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, C_t.astype(f32))
+    if D is not None:
+        y = y + x_t.astype(f32) * D.astype(f32)[None, :, None]
+    return y.astype(x_t.dtype), new_state
+
+
+def ssd_scan_naive(x, dt, A, Bm, Cm, D=None, *, initial_state=None):
+    """O(S) sequential reference (ground truth for the chunked form)."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    f32 = jnp.float32
+    state = (jnp.zeros((B, H, P, N), f32) if initial_state is None
+             else initial_state.astype(f32))
+
+    def step(carry, t):
+        y_t, new = ssd_decode_step(carry, x[:, t], dt[:, t], A, Bm[:, t], Cm[:, t], D)
+        return new, y_t
+
+    state, ys = jax.lax.scan(step, state, jnp.arange(S))
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), state

@@ -1,0 +1,177 @@
+"""Pallas TPU WeakHash routing kernels (integer outputs; differentiable
+combine weights are reconstructed outside from the router probabilities).
+
+Two phases, both gridded over token tiles:
+  1. demand: group-masked argmax histogram over all tokens (sequential
+     accumulation into an (E,) scratch — the load estimate).
+  2. select: demand-penalized scores → iterative top-k → arrival-order
+     slot positions via an (E,) running-count scratch that carries across
+     the sequential token-tile grid (matching the oracle's token-major
+     cumsum exactly).
+
+VPU-only (no MXU); token tiles are 8×128-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.flash_attention.kernel import pltpu_scratch
+
+NEG_INF = -1e30
+DEFAULT_BLOCK_T = 256
+KNUTH = 2654435761
+
+
+def _group_mask(keys, n_groups, E, gsz):
+    """(bt, E) bool mask of each token's candidate group."""
+    hashed = keys.astype(jnp.uint32) * jnp.uint32(KNUTH)
+    gid = (hashed % jnp.uint32(n_groups)).astype(jnp.int32)     # (bt,)
+    eg = jax.lax.broadcasted_iota(jnp.int32, (keys.shape[0], E), 1) // gsz
+    return eg == gid[:, None], gid
+
+
+def _demand_kernel(logits_ref, keys_ref, dem_ref, dem_scr, *,
+                   n_groups, E, gsz, nt, use_groups):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        dem_scr[...] = jnp.zeros_like(dem_scr)
+
+    logits = logits_ref[...]
+    if use_groups:
+        mask, _ = _group_mask(keys_ref[...], n_groups, E, gsz)
+        logits = jnp.where(mask, logits, NEG_INF)
+    top1 = jnp.argmax(logits, axis=-1)                          # (bt,)
+    onehot = (top1[:, None]
+              == jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1))
+    dem_scr[...] += jnp.sum(onehot.astype(jnp.float32), axis=0)
+
+    @pl.when(t == nt - 1)
+    def _fin():
+        dem_ref[...] = dem_scr[...]
+
+
+def _select_kernel(logits_ref, keys_ref, dem_ref, idx_ref, pos_ref, gid_ref,
+                   count_scr, *, top_k, capacity, n_groups, E, gsz,
+                   load_penalty, mode):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        count_scr[...] = jnp.zeros_like(count_scr)
+
+    logits = logits_ref[...].astype(jnp.float32)                # (bt, E)
+    bt = logits.shape[0]
+    if mode == "weakhash":
+        mask, gid = _group_mask(keys_ref[...], n_groups, E, gsz)
+        masked = jnp.where(mask, logits, NEG_INF)
+        scores = masked - load_penalty * (dem_ref[...][None, :]
+                                          / float(max(capacity, 1)))
+    else:
+        masked = logits
+        scores = logits
+        gid = jnp.zeros((bt,), jnp.int32)
+    gid_ref[...] = gid
+
+    counts = count_scr[...]                                     # (E,) f32
+    eye = jax.lax.broadcasted_iota(jnp.int32, (bt, E), 1)
+    sel = scores
+    for j in range(top_k):
+        e_j = jnp.argmax(sel, axis=-1).astype(jnp.int32)        # (bt,)
+        onehot = (eye == e_j[:, None]).astype(jnp.float32)
+        # arrival positions: running count + exclusive prefix within tile
+        prefix = jnp.cumsum(onehot, axis=0) - onehot
+        pos_j = jnp.sum((counts[None, :] + prefix) * onehot, axis=-1)
+        idx_ref[:, j] = e_j
+        pos_ref[:, j] = pos_j.astype(jnp.int32)
+        counts = counts + jnp.sum(onehot, axis=0)
+        sel = jnp.where(eye == e_j[:, None], NEG_INF, sel)
+    count_scr[...] = counts
+
+
+def weakhash_route_ints(logits, *, top_k, capacity, n_groups=1,
+                        mode="weakhash", token_keys=None, load_penalty=1.0,
+                        block_t=DEFAULT_BLOCK_T, interpret=False):
+    """Integer routing outputs: (expert_idx, position, group_id, demand).
+
+    NOTE: the oracle's per-(token,k)-flattened arrival order is token-major
+    with all k selections of token t adjacent; this kernel assigns positions
+    per selection column j across the tile instead. Both are valid
+    arrival orders; for exact oracle parity the wrapper recomputes positions
+    when cross-validating — see ops.weakhash_route.
+    """
+    T, E = logits.shape
+    bt = min(block_t, T)
+    assert T % bt == 0
+    nt = T // bt
+    gsz = E // max(n_groups, 1)
+    keys = (token_keys if token_keys is not None
+            else jnp.zeros((T,), jnp.int32))
+    use_groups = mode == "weakhash" and n_groups > 1
+
+    demand = pl.pallas_call(
+        functools.partial(_demand_kernel, n_groups=n_groups, E=E, gsz=gsz,
+                          nt=nt, use_groups=use_groups),
+        grid=(nt,),
+        in_specs=[pl.BlockSpec((bt, E), lambda t: (t, 0)),
+                  pl.BlockSpec((bt,), lambda t: (t,))],
+        out_specs=pl.BlockSpec((E,), lambda t: (0,)),
+        out_shape=jax.ShapeDtypeStruct((E,), jnp.float32),
+        scratch_shapes=[pltpu_scratch((E,), jnp.float32)],
+        interpret=interpret,
+    )(logits.astype(jnp.float32), keys.astype(jnp.int32))
+
+    idx, pos, gid = pl.pallas_call(
+        functools.partial(_select_kernel, top_k=top_k, capacity=capacity,
+                          n_groups=n_groups, E=E, gsz=gsz,
+                          load_penalty=load_penalty, mode=mode),
+        grid=(nt,),
+        in_specs=[pl.BlockSpec((bt, E), lambda t: (t, 0)),
+                  pl.BlockSpec((bt,), lambda t: (t,)),
+                  pl.BlockSpec((E,), lambda t: (0,))],
+        out_specs=[pl.BlockSpec((bt, top_k), lambda t: (t, 0)),
+                   pl.BlockSpec((bt, top_k), lambda t: (t, 0)),
+                   pl.BlockSpec((bt,), lambda t: (t,))],
+        out_shape=[jax.ShapeDtypeStruct((T, top_k), jnp.int32),
+                   jax.ShapeDtypeStruct((T, top_k), jnp.int32),
+                   jax.ShapeDtypeStruct((T,), jnp.int32)],
+        scratch_shapes=[pltpu_scratch((E,), jnp.float32)],
+        interpret=interpret,
+    )(logits.astype(jnp.float32), keys.astype(jnp.int32), demand)
+    return idx, pos, gid, demand
+
+
+def weakhash_route(logits, *, top_k, capacity, n_groups=1, mode="weakhash",
+                   token_keys=None, prior_load=None, load_penalty=1.0,
+                   rescue=False, interpret=False):
+    """Kernel-backed RouteResult; rescue (γ=full second pass) and prior_load
+    fall back to the oracle (cold paths)."""
+    from repro.kernels.weakhash_route import ref
+    if rescue or prior_load is not None:
+        return ref.weakhash_route(
+            logits, top_k=top_k, capacity=capacity, n_groups=n_groups,
+            mode=mode, token_keys=token_keys, prior_load=prior_load,
+            load_penalty=load_penalty, rescue=rescue)
+    idx, _, gid, demand = weakhash_route_ints(
+        logits, top_k=top_k, capacity=capacity, n_groups=n_groups, mode=mode,
+        token_keys=token_keys, load_penalty=load_penalty,
+        interpret=interpret)
+    # positions in oracle token-major order (cheap; keeps dispatch parity)
+    position = ref._positions_in_expert(idx, logits.shape[1])
+    keep = position < capacity
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gates = jnp.take_along_axis(probs, idx, axis=1)
+    weights = gates / jnp.clip(gates.sum(-1, keepdims=True), 1e-9)
+    me = probs.mean(0)
+    top1 = jax.nn.one_hot(jnp.argmax(logits, -1), logits.shape[1],
+                          dtype=jnp.float32).mean(0)
+    aux = logits.shape[1] * jnp.sum(me * top1)
+    dem = jax.nn.one_hot(idx.reshape(-1), logits.shape[1],
+                         dtype=jnp.float32).sum(0)
+    return ref.RouteResult(expert_idx=idx, weights=weights, position=position,
+                           keep=keep, group_id=gid, demand=dem, aux_loss=aux)

@@ -1,0 +1,26 @@
+"""jit-level wrapper for WeakHash routing with impl dispatch."""
+from __future__ import annotations
+
+from repro.kernels.common import resolve_impl
+from repro.kernels.weakhash_route import ref
+
+RouteResult = ref.RouteResult
+dispatch = ref.dispatch
+combine = ref.combine
+
+
+def weakhash_route(logits, *, top_k, capacity, n_groups=1, mode="weakhash",
+                   token_keys=None, prior_load=None, load_penalty=1.0,
+                   rescue=False, impl: str | None = None):
+    impl = resolve_impl(impl)
+    if impl == "ref":
+        return ref.weakhash_route(
+            logits, top_k=top_k, capacity=capacity, n_groups=n_groups,
+            mode=mode, token_keys=token_keys, prior_load=prior_load,
+            load_penalty=load_penalty, rescue=rescue)
+    from repro.kernels.weakhash_route import kernel
+    return kernel.weakhash_route(
+        logits, top_k=top_k, capacity=capacity, n_groups=n_groups, mode=mode,
+        token_keys=token_keys, prior_load=prior_load,
+        load_penalty=load_penalty, rescue=rescue,
+        interpret=(impl == "interpret"))

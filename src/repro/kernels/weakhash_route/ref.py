@@ -1,0 +1,156 @@
+"""Pure-jnp oracle for WeakHash MoE routing (the paper's §III-A technique).
+
+StreamShield's WeakHash "relaxes the strict key-to-task binding by mapping each
+key to a bounded set of candidate tasks and dynamically selecting the execution
+task". The MoE adaptation:
+
+* strict mode (Flink's hash partitioning / vanilla top-k): each token's experts
+  are the global top-k of the router — a hot expert saturates its capacity and
+  overflow tokens are dropped (or, in γ=full mode, rescued by a second pass).
+* weakhash mode: experts are partitioned into ``n_groups`` disjoint groups
+  (aligned with device groups — Group-Rescale). A token's candidate set is one
+  group; within it, selection is *load-aware*: router scores are penalized by
+  the group-local demand estimate, diffusing hot keys across the group.
+
+All outputs are deterministic functions of (logits, prior loads) so the Pallas
+kernel and this oracle agree exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class RouteResult:
+    expert_idx: jax.Array   # (T, k) int32, chosen experts
+    weights: jax.Array      # (T, k) f32, combine weights (renormalized)
+    position: jax.Array     # (T, k) int32, slot within expert buffer
+    keep: jax.Array         # (T, k) bool, False = dropped by capacity
+    group_id: jax.Array     # (T,)  int32, candidate group per token
+    demand: jax.Array       # (E,)  f32, pre-capacity expert demand
+    aux_loss: jax.Array     # scalar, switch-style load-balance loss
+
+
+def positions_in_bucket(ids: jax.Array, n_buckets: int) -> jax.Array:
+    """Arrival-order slot of each id within its bucket. ids (...,) → (...,)."""
+    flat = ids.reshape(-1)
+    onehot = jax.nn.one_hot(flat, n_buckets, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) - 1
+    pos = jnp.take_along_axis(pos, flat[:, None], axis=1)[:, 0]
+    return pos.reshape(ids.shape)
+
+
+def _positions_in_expert(expert_idx: jax.Array, n_experts: int) -> jax.Array:
+    """Arrival-order slot of each (token, k) assignment within its expert.
+
+    expert_idx (T, k) → positions (T, k). Token-major arrival order (matches
+    the kernel's sequential tile walk)."""
+    T, k = expert_idx.shape
+    flat = expert_idx.reshape(-1)                       # (T*k,) token-major
+    onehot = jax.nn.one_hot(flat, n_experts, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) - 1                # exclusive prefix
+    pos = jnp.take_along_axis(pos, flat[:, None], axis=1)[:, 0]
+    return pos.reshape(T, k)
+
+
+def weakhash_route(
+    logits: jax.Array,                  # (T, E) router logits (f32)
+    *,
+    top_k: int,
+    capacity: int,
+    n_groups: int = 1,
+    mode: Literal["strict", "weakhash"] = "weakhash",
+    token_keys: jax.Array | None = None,  # (T,) int32 keys (e.g. token ids)
+    prior_load: jax.Array | None = None,  # (E,) f32 running load estimate
+    load_penalty: float = 1.0,
+    rescue: bool = False,               # γ=full: re-route capacity overflow
+) -> RouteResult:
+    T, E = logits.shape
+    logits = logits.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    if mode == "strict" or n_groups <= 1:
+        group_id = jnp.zeros((T,), jnp.int32)
+        masked = logits
+    else:
+        assert E % n_groups == 0, (E, n_groups)
+        gsz = E // n_groups
+        if token_keys is not None:
+            # WeakHash: bounded candidate set from a cheap key hash
+            # (Knuth multiplicative; deterministic across hosts).
+            hashed = token_keys.astype(jnp.uint32) * jnp.uint32(2654435761)
+            group_id = (hashed % jnp.uint32(n_groups)).astype(jnp.int32)
+        else:
+            # router-preferred group: argmax of group-pooled scores
+            pooled = probs.reshape(T, n_groups, gsz).sum(-1)
+            group_id = jnp.argmax(pooled, axis=-1).astype(jnp.int32)
+        expert_group = jnp.arange(E, dtype=jnp.int32) // gsz
+        in_group = expert_group[None, :] == group_id[:, None]
+        masked = jnp.where(in_group, logits, -jnp.inf)
+
+    scores = masked
+    if mode == "weakhash":
+        # load-aware dispatch: penalize in-proportion to demand estimate.
+        demand0 = jax.nn.one_hot(jnp.argmax(masked, -1), E, dtype=jnp.float32).sum(0)
+        load = demand0 if prior_load is None else prior_load + demand0
+        scores = masked - load_penalty * (load[None, :] / float(max(capacity, 1)))
+
+    _, expert_idx = jax.lax.top_k(scores, top_k)
+    expert_idx = expert_idx.astype(jnp.int32)
+    gates = jnp.take_along_axis(probs, expert_idx, axis=1)
+    weights = gates / jnp.clip(gates.sum(-1, keepdims=True), 1e-9)
+
+    position = _positions_in_expert(expert_idx, E)
+    keep = position < capacity
+
+    if rescue:
+        # γ=full second pass: overflowed assignments are re-routed to the
+        # least-demanded expert in the candidate set that still has room.
+        demand = jax.nn.one_hot(expert_idx.reshape(-1), E,
+                                dtype=jnp.float32).sum(0)
+        spare = jnp.maximum(capacity - demand, 0.0)
+        fallback = jnp.argmax(
+            jnp.where(jnp.isfinite(masked), spare[None, :], -1.0), axis=-1)
+        fb = jnp.broadcast_to(fallback[:, None], expert_idx.shape)
+        expert_idx = jnp.where(keep, expert_idx, fb.astype(jnp.int32))
+        position = _positions_in_expert(expert_idx, E)
+        keep = position < capacity
+
+    demand = jax.nn.one_hot(expert_idx.reshape(-1), E, dtype=jnp.float32).sum(0)
+
+    # switch-style aux loss on the *unmasked* router distribution
+    me = probs.mean(0)                                   # (E,)
+    top1 = jax.nn.one_hot(jnp.argmax(logits, -1), E, dtype=jnp.float32).mean(0)
+    aux = E * jnp.sum(me * top1)
+
+    return RouteResult(expert_idx=expert_idx, weights=weights,
+                       position=position, keep=keep, group_id=group_id,
+                       demand=demand, aux_loss=aux)
+
+
+def dispatch(x: jax.Array, route: RouteResult, n_experts: int,
+             capacity: int) -> jax.Array:
+    """Scatter tokens into (E, C, d) expert buffers (dropped → zero rows)."""
+    T, d = x.shape
+    k = route.expert_idx.shape[1]
+    buf = jnp.zeros((n_experts, capacity, d), x.dtype)
+    e = route.expert_idx.reshape(-1)
+    p = jnp.clip(route.position.reshape(-1), 0, capacity - 1)
+    keep = route.keep.reshape(-1)
+    src = jnp.repeat(x, k, axis=0) * keep[:, None].astype(x.dtype)
+    # dropped tokens scatter to slot 0 with zero payload; mode="drop" guards OOB
+    return buf.at[e, p].add(src, mode="drop")
+
+
+def combine(expert_out: jax.Array, route: RouteResult, T: int) -> jax.Array:
+    """Gather expert outputs back per token, weighted. expert_out (E,C,d)."""
+    k = route.expert_idx.shape[1]
+    e = route.expert_idx.reshape(-1)
+    p = jnp.clip(route.position.reshape(-1), 0, expert_out.shape[1] - 1)
+    rows = expert_out[e, p]                                # (T*k, d)
+    w = (route.weights * route.keep).reshape(-1, 1).astype(expert_out.dtype)
+    return (rows * w).reshape(T, k, -1).sum(axis=1)

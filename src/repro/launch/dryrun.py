@@ -1,0 +1,229 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^^ MUST precede any jax-importing module: jax locks device count on init.
+
+"""Multi-pod dry-run: lower + compile every (architecture × input-shape × mesh)
+cell against the production mesh with ShapeDtypeStruct stand-ins (no
+allocation), then record memory_analysis / cost_analysis / collective traffic
+for EXPERIMENTS.md §Dry-run and the §Roofline terms.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch arctic-480b \
+      --shape train_4k [--multi-pod] [--out results/dryrun] [--opt ...]
+"""
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+
+from repro.configs import base as cfg_base
+from repro.configs import registry
+from repro.dist import sharding as shd
+from repro.launch import hlo_stats
+from repro.launch.mesh import make_production_mesh
+from repro.models import build
+from repro.train import optimizer as opt_lib
+from repro.train import train_loop
+
+
+def _batch_shardings(model, shape, ctx):
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding
+
+    pspecs = model.input_pspecs(shape, ctx)
+    return jax.tree.map(lambda s: NamedSharding(ctx.mesh, s), pspecs,
+                        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+
+
+def lower_cell(run: cfg_base.RunConfig, *, unroll: bool = True):
+    """Build mesh + model + step for one cell and lower it. Returns
+    (lowered, info dict). ``unroll`` expands layer scans so cost_analysis
+    counts every layer (XLA does not scale while-loop bodies by trip count).
+    """
+    mesh = make_production_mesh(multi_pod=run.multi_pod)
+    serving = run.shape.kind != "train"
+    rules = dict(shd.DEFAULT_RULES)
+    slot_axes_rule = train_loop.expert_slot_axes(run)
+    rules["expert"] = slot_axes_rule
+    if serving:
+        # Serving profile: no FSDP (per-step param all-gathers would dominate
+        # decode); params TP-sharded over "model", replicated over data axes;
+        # replicated experts spread over the whole pod (global EP).
+        rules["embed"] = ()
+    ctx = shd.ShardingCtx(mesh=mesh, rules=rules,
+                          sequence_parallel=run.sharding.sequence_parallel,
+                          unroll=unroll)
+    slot_axes = train_loop.expert_slot_axes(run)
+    n_slots = 1
+    if run.model.moe.enabled:
+        import math
+        n_slots = math.prod(mesh.shape[a] for a in slot_axes)
+    from repro.models import moe as moe_lib
+    replicate = (serving and run.model.moe.enabled
+                 and moe_lib.serve_replicate(run.model))
+    model = build(run.model, n_slots=n_slots, moe_replicate=replicate)
+
+    abstract_params = model.abstract_params()
+    param_sh = model.param_shardings(ctx)
+    batch_sds = model.input_specs(run.shape)
+    batch_sh = _batch_shardings(model, run.shape, ctx)
+
+    if run.shape.kind == "train":
+        step = train_loop.make_train_step(model, run, ctx)
+        opt = step.optimizer
+        opt_specs = opt.state_specs(model.param_specs())
+        abstract_opt = shd.tree_abstract(opt_specs)
+        opt_sh = shd.tree_shardings(opt_specs, ctx)
+        jf = jax.jit(step,
+                     in_shardings=(param_sh, opt_sh, batch_sh),
+                     out_shardings=(param_sh, opt_sh, None),
+                     donate_argnums=(0, 1))
+        lowered = jf.lower(abstract_params, abstract_opt, batch_sds)
+    elif run.shape.kind == "prefill":
+        step = train_loop.make_prefill_step(model, run, ctx)
+        cache_sh = model.cache_shardings(run.shape.global_batch,
+                                         run.shape.seq_len, ctx)
+        jf = jax.jit(step, in_shardings=(param_sh, batch_sh),
+                     out_shardings=(None, cache_sh, None))
+        lowered = jf.lower(abstract_params, batch_sds)
+    else:  # decode
+        step = train_loop.make_decode_step(model, run, ctx)
+        cache_sh = model.cache_shardings(run.shape.global_batch,
+                                         run.shape.seq_len, ctx)
+        jf = jax.jit(step,
+                     in_shardings=(param_sh, cache_sh, batch_sh["tokens"],
+                                   batch_sh["pos"]),
+                     out_shardings=(None, cache_sh),
+                     donate_argnums=(1,))
+        lowered = jf.lower(abstract_params, batch_sds["cache"],
+                           batch_sds["tokens"], batch_sds["pos"])
+    return lowered, {"mesh": dict(mesh.shape), "n_slots": n_slots}
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
+             overrides: dict | None = None, unroll: bool = True,
+             layers: int | None = None) -> dict:
+    """Lower + compile one cell; returns the JSON-able result record.
+
+    layers: override n_layers (the roofline's linear-in-L extrapolation for
+    heavy unrolled cells: full = rolled + (L-1)·(small_unrolled - rolled)/(l-1)).
+    """
+    t0 = time.time()
+    run = registry.make_run(arch, shape, multi_pod=multi_pod)
+    if layers:
+        model = dataclasses.replace(run.model, n_layers=layers)
+        if model.family.value == "hybrid":
+            model = dataclasses.replace(
+                model, shared_attn_every=min(model.shared_attn_every, layers))
+        run = dataclasses.replace(run, model=model)
+        rec_layers = layers
+    if overrides:
+        run = dataclasses.replace(
+            run, sharding=dataclasses.replace(run.sharding, **overrides))
+    ok, why = registry.cell_applicable(run.model, run.shape)
+    rec: dict = {"arch": arch, "shape": shape,
+                 "mesh": "multi_pod" if multi_pod else "single_pod",
+                 "sharding": dataclasses.asdict(run.sharding),
+                 "optimizer": run.optimizer.name}
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+    rec["unroll"] = unroll
+    if layers:
+        rec["layers_override"] = layers
+    try:
+        lowered, info = lower_cell(run, unroll=unroll)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        txt = compiled.as_text()
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            memory=hlo_stats.memory_stats(compiled),
+            cost=hlo_stats.cost_stats(compiled),
+            collectives=hlo_stats.collective_stats(txt),
+            devices=int(len(jax.devices())),
+            **info,
+        )
+    except Exception as e:  # a failure here is a bug in the system
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(registry.ARCHS))
+    ap.add_argument("--shape", required=True, choices=sorted(cfg_base.SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--no-seq-parallel", action="store_true")
+    ap.add_argument("--global-a2a", action="store_true",
+                    help="baseline: expert dispatch over (data×model)")
+    ap.add_argument("--no-unroll", action="store_true",
+                    help="keep layer scans rolled (fast compile; costs count "
+                         "the loop body once — used for the multi-pod pass)")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--layers", type=int, default=None)
+    ap.add_argument("--cap-floor", type=int, default=None)
+    ap.add_argument("--grad-bf16", action="store_true")
+    ap.add_argument("--exact-attn", action="store_true")
+    ap.add_argument("--remat-dots", action="store_true")
+    args = ap.parse_args()
+
+    overrides: dict = {}
+    if args.cap_floor is not None:
+        overrides["moe_capacity_floor"] = args.cap_floor
+    if args.grad_bf16:
+        overrides["grad_reduce_bf16"] = True
+    if args.exact_attn:
+        overrides["exact_attn_blocks"] = True
+    if args.remat_dots:
+        overrides["remat"] = "dots"
+    if args.remat:
+        overrides["remat"] = args.remat
+    if args.no_seq_parallel:
+        overrides["sequence_parallel"] = False
+    if args.global_a2a:
+        overrides["grouped_a2a"] = False
+
+    rec = run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                   overrides=overrides or None, unroll=not args.no_unroll,
+                   layers=args.layers)
+    out = pathlib.Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    mesh_tag = "multi" if args.multi_pod else "single"
+    suffix = f"-{args.tag}" if args.tag else ""
+    path = out / f"{args.arch}--{args.shape}--{mesh_tag}{suffix}.json"
+    path.write_text(json.dumps(rec, indent=1))
+
+    if rec["status"] == "ok":
+        mem = rec["memory"]
+        cost = rec["cost"]
+        coll = rec["collectives"]["total"]
+        print(f"OK {args.arch} {args.shape} {mesh_tag}{suffix} "
+              f"compile={rec['compile_s']}s "
+              f"peak={mem['peak_bytes']/2**30:.2f}GiB/dev "
+              f"flops={cost['flops']/1e12:.3f}T/dev "
+              f"hbm={cost['bytes_accessed']/2**30:.2f}GiB/dev "
+              f"ici={coll['ici_bytes']/2**20:.1f}MiB/dev")
+        # paper deliverable: prove it fits + expose FLOPs/bytes
+        print(json.dumps({"memory_analysis": mem, "cost_analysis": cost},
+                         indent=1))
+    else:
+        print(f"{rec['status'].upper()} {args.arch} {args.shape}: "
+              f"{rec.get('reason') or rec.get('error')}")
+        if rec["status"] == "error":
+            print(rec["trace"])
+            raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,110 @@
+"""Parse collective traffic out of compiled (post-SPMD) HLO text.
+
+``cost_analysis()`` does not report collective bytes, so the roofline's
+collective term is derived here: every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute op is matched, its per-device
+shape and replica-group size extracted, and effective ICI bytes-per-device
+computed with standard ring-cost factors:
+
+  all-gather        out_bytes · (g-1)/g
+  reduce-scatter    out_bytes · (g-1)
+  all-reduce        out_bytes · 2(g-1)/g
+  all-to-all        out_bytes · (g-1)/g
+  collective-permute out_bytes · 1
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_EXPLICIT_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = math.prod(int(d) for d in dims.split(",") if d) if dims else 1
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_EXPLICIT_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return 1
+
+
+_FACTORS = {
+    "all-gather": lambda b, g: b * (g - 1) / g,
+    "reduce-scatter": lambda b, g: b * (g - 1),
+    "all-reduce": lambda b, g: b * 2 * (g - 1) / g,
+    "all-to-all": lambda b, g: b * (g - 1) / g,
+    "collective-permute": lambda b, g: b,
+}
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Returns {op: {"count": int, "bytes": raw output bytes,
+    "ici_bytes": effective per-device bytes}} plus a "total" entry."""
+    stats: dict = defaultdict(lambda: {"count": 0, "bytes": 0.0, "ici_bytes": 0.0})
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        shape_str, op, is_start = m.group(1), m.group(2), m.group(3)
+        if "-done" in line.split("=")[1][:40]:
+            continue
+        b = _shape_bytes(shape_str)
+        g = _group_size(line)
+        if g <= 1:
+            # degenerate group → no traffic
+            stats[op]["count"] += 1
+            continue
+        stats[op]["count"] += 1
+        stats[op]["bytes"] += b
+        stats[op]["ici_bytes"] += _FACTORS[op](b, g)
+    total = {"count": sum(v["count"] for v in stats.values()),
+             "bytes": sum(v["bytes"] for v in stats.values()),
+             "ici_bytes": sum(v["ici_bytes"] for v in stats.values())}
+    out = {k: dict(v) for k, v in stats.items()}
+    out["total"] = total
+    return out
+
+
+def memory_stats(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    return {
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "alias_bytes": int(getattr(ma, "alias_size_in_bytes", 0)),
+        "peak_bytes": int(ma.argument_size_in_bytes + ma.output_size_in_bytes
+                          + ma.temp_size_in_bytes
+                          - int(getattr(ma, "alias_size_in_bytes", 0))),
+    }
+
+
+def cost_stats(compiled) -> dict:
+    ca = compiled.cost_analysis() or {}
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+            "transcendentals": float(ca.get("transcendentals", 0.0))}

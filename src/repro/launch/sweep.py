@@ -1,0 +1,113 @@
+"""Sequential dry-run sweep over all (arch × shape × mesh) cells.
+
+Each cell runs in a fresh subprocess (fresh XLA, RAM released); existing JSONs
+are skipped so the sweep is resumable. Three passes per the §Dry-run protocol:
+
+  1. single-pod, layer-scans UNROLLED  → accurate flops / collective bytes
+  2. single-pod train+prefill, ROLLED (tag "mem") → realistic loop-buffer
+     memory_analysis (unrolled HLO loses buffer reuse)
+  3. multi-pod, ROLLED → proves the "pod" axis shards every cell
+
+Usage: PYTHONPATH=src python -m repro.launch.sweep [--only-pass N] [--dry]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import subprocess
+import sys
+import time
+
+from repro.configs import registry
+from repro.configs.base import SHAPES
+
+OUT = pathlib.Path("results/dryrun")
+
+# cheap-to-expensive compile order (by layer count × width)
+ARCH_ORDER = [
+    "stablelm-1.6b", "mamba2-1.3b", "whisper-medium", "zamba2-2.7b",
+    "phi-3-vision-4.2b", "minitron-8b", "stablelm-12b", "arctic-480b",
+    "mixtral-8x22b", "granite-34b",
+]
+SHAPE_ORDER = ["decode_32k", "long_500k", "prefill_32k", "train_4k"]
+
+
+def jobs(only_pass: int | None = None):
+    out = []
+    for pass_id, (multi, unroll, tag, kinds) in enumerate([
+        (False, True, "", ("train", "prefill", "decode")),
+        (False, False, "mem", ("train", "prefill")),
+        (True, False, "", ("train", "prefill", "decode")),
+    ], start=1):
+        if only_pass and pass_id != only_pass:
+            continue
+        for arch in ARCH_ORDER:
+            model = registry.get_arch(arch)
+            for shape_name in SHAPE_ORDER:
+                shape = SHAPES[shape_name]
+                if shape.kind not in kinds:
+                    continue
+                ok, _ = registry.cell_applicable(model, shape)
+                if not ok:
+                    continue
+                out.append((pass_id, arch, shape_name, multi, unroll, tag))
+    return out
+
+
+def job_path(arch, shape, multi, tag):
+    mesh_tag = "multi" if multi else "single"
+    suffix = f"-{tag}" if tag else ""
+    return OUT / f"{arch}--{shape}--{mesh_tag}{suffix}.json"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only-pass", type=int, default=None)
+    ap.add_argument("--timeout", type=int, default=3000)
+    ap.add_argument("--dry", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    todo = jobs(args.only_pass)
+    print(f"{len(todo)} cells")
+    for i, (pass_id, arch, shape, multi, unroll, tag) in enumerate(todo):
+        path = job_path(arch, shape, multi, tag)
+        if path.exists() and not args.force:
+            try:
+                rec = json.loads(path.read_text())
+                if rec.get("status") == "ok" and rec.get("unroll") == unroll:
+                    print(f"[{i+1}/{len(todo)}] skip {path.name}")
+                    continue
+            except Exception:
+                pass
+        if args.dry:
+            print(f"[{i+1}/{len(todo)}] would run {path.name}")
+            continue
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape]
+        if multi:
+            cmd.append("--multi-pod")
+        if not unroll:
+            cmd.append("--no-unroll")
+        if tag:
+            cmd += ["--tag", tag]
+        t0 = time.time()
+        print(f"[{i+1}/{len(todo)}] pass{pass_id} {path.name} ...", flush=True)
+        try:
+            r = subprocess.run(cmd, timeout=args.timeout,
+                               capture_output=True, text=True)
+            first = (r.stdout or r.stderr).strip().splitlines()
+            print(f"    {first[0] if first else '??'} "
+                  f"[{time.time()-t0:.0f}s rc={r.returncode}]", flush=True)
+        except subprocess.TimeoutExpired:
+            print(f"    TIMEOUT after {args.timeout}s", flush=True)
+            path.write_text(json.dumps(
+                {"arch": arch, "shape": shape,
+                 "mesh": "multi_pod" if multi else "single_pod",
+                 "status": "error", "error": f"compile timeout {args.timeout}s",
+                 "unroll": unroll}))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,175 @@
+"""GQA attention: train/prefill (flash) and decode (incl. the distributed-LSE
+path for KV-sequence-sharded caches).
+
+Cache layout per layer: k/v (B, S_max, KV, D); a single scalar ``pos`` (fill
+level) is carried by the model. Sliding-window archs use a ring cache of
+length ``min(window, S_max)``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import ParamSpec, ShardingCtx
+from repro.kernels import api as K
+from repro.models import layers as L
+
+
+def attn_params(cfg: ModelConfig, d_in: int | None = None,
+                d_out: int | None = None) -> dict:
+    d_in = d_in or cfg.d_model
+    d_out = d_out or cfg.d_model
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "wq": ParamSpec((d_in, H, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d_in, KV, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d_in, KV, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((H, hd, d_out), ("heads", "head_dim", "embed")),
+    }
+
+
+def _qkv(p: dict, x: jax.Array):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    return q, k, v
+
+
+def attend_full(p: dict, x: jax.Array, cfg: ModelConfig, ctx: ShardingCtx, *,
+                causal: bool = True,
+                rope_positions: jax.Array | None = None,
+                cross_kv: tuple[jax.Array, jax.Array] | None = None,
+                window: int = 0,
+                exact_blocks: bool = False,
+                chunk: int = 512) -> jax.Array:
+    """Full-sequence attention (train / prefill). Returns (out, (k, v))."""
+    if cross_kv is None:
+        q, k, v = _qkv(p, x)
+        if rope_positions is not None:
+            q = L.rope(q, rope_positions, cfg.rope_theta)
+            k = L.rope(k, rope_positions, cfg.rope_theta)
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+        k, v = cross_kv
+        causal = False
+    # attention computes with heads sharded (seq gathered); ctx falls back to
+    # no head sharding when H % model != 0 (arctic) — XLA then keeps seq sharded.
+    q = ctx.constrain(q, "batch", None, "heads", None)
+    k = ctx.constrain(k, "batch", None, "kv_heads", None)
+    v = ctx.constrain(v, "batch", None, "kv_heads", None)
+    out = K.flash_attention(q, k, v, causal=causal, window=window,
+                            chunk=chunk, exact_blocks=exact_blocks,
+                            unroll=ctx.unroll)
+    out = ctx.constrain(out, "batch", None, "heads", None)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, (k, v)
+
+
+def cross_kv(p: dict, enc: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Precompute encoder K/V for cross-attention (cached for decode)."""
+    k = jnp.einsum("bsd,dhk->bshk", enc, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc, p["wv"])
+    return k, v
+
+
+# ----------------------------------------------------------------------
+# Decode
+# ----------------------------------------------------------------------
+def cache_len(cfg: ModelConfig, s_max: int) -> int:
+    if cfg.swa_window:
+        return min(cfg.swa_window, s_max)
+    return s_max
+
+
+def cache_spec(cfg: ModelConfig, batch: int, s_max: int) -> dict:
+    """ParamSpec tree for one layer's KV cache (stacked by caller)."""
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    slen = cache_len(cfg, s_max)
+    # kv_heads preferred; kv_seq is the fallback (distributed-LSE decode)
+    # when n_kv_heads does not divide the model axis (kv ∈ {1, 8} archs).
+    axes = ("batch", "kv_seq", "kv_heads", None)
+    return {
+        "k": ParamSpec((batch, slen, KV, hd), axes, dtype=jnp.bfloat16),
+        "v": ParamSpec((batch, slen, KV, hd), axes, dtype=jnp.bfloat16),
+    }
+
+
+def decode_attend(p: dict, x: jax.Array, cache: dict, pos: jax.Array,
+                  cfg: ModelConfig, ctx: ShardingCtx, *,
+                  use_rope: bool = True) -> tuple[jax.Array, dict]:
+    """One-token self-attention decode. x (B,1,d); pos scalar = absolute
+    position. Returns (out (B,1,d), updated cache)."""
+    q, k_new, v_new = _qkv(p, x)
+    positions = jnp.asarray(pos)[None, None]
+    if use_rope and cfg.rope_theta:
+        q = L.rope(q, positions, cfg.rope_theta)
+        k_new = L.rope(k_new, positions, cfg.rope_theta)
+
+    slen = cache["k"].shape[1]
+    write_at = (pos % slen) if cfg.swa_window else pos
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                     (0, write_at, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                     (0, write_at, 0, 0))
+    valid = jnp.minimum(pos + 1, slen)
+
+    out = _decode_core(q, k, v, valid, cfg, ctx)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), {"k": k, "v": v}
+
+
+def decode_cross_attend(p: dict, x: jax.Array, cross_cache: dict,
+                        cfg: ModelConfig, ctx: ShardingCtx) -> jax.Array:
+    """One-token cross-attention against a precomputed encoder K/V cache."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])  # no RoPE on cross
+    o = _decode_core(q, cross_cache["k"], cross_cache["v"],
+                     cross_cache["k"].shape[1], cfg, ctx)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def _decode_core(q, k, v, valid_len, cfg: ModelConfig, ctx: ShardingCtx):
+    """Dispatch between head-sharded decode and KV-seq-sharded distributed LSE."""
+    KV = cfg.n_kv_heads
+    if ctx.mesh is None or ctx.divides("kv_heads", KV) \
+            or not ctx.divides("kv_seq", k.shape[1]):
+        q = ctx.constrain(q, "batch", None, "heads", None)
+        k = ctx.constrain(k, "batch", None, "kv_heads", None)
+        v = ctx.constrain(v, "batch", None, "kv_heads", None)
+        o = K.decode_attention(q, k, v, kv_valid_len=valid_len)
+        return o[:, None]  # (B,1,H,D)
+    return _distributed_decode(q, k, v, valid_len, ctx)
+
+
+def _distributed_decode(q, k, v, valid_len, ctx: ShardingCtx):
+    """KV cache sharded on sequence over "model": per-shard partial softmax,
+    merged with a distributed log-sum-exp (flash-decode across chips)."""
+    mesh = ctx.mesh
+    from repro.dist.sharding import batch_axes_for
+    batch_axes = batch_axes_for(mesh, q.shape[0])
+    bspec = (batch_axes if len(batch_axes) > 1
+             else (batch_axes[0] if batch_axes else None))
+    kv_spec = P(bspec, "model", None, None)
+    q_spec = P(bspec, None, None, None)
+
+    k = jax.lax.with_sharding_constraint(
+        k, jax.sharding.NamedSharding(mesh, kv_spec))
+    v = jax.lax.with_sharding_constraint(
+        v, jax.sharding.NamedSharding(mesh, kv_spec))
+
+    @partial(jax.shard_map, mesh=mesh,
+             in_specs=(q_spec, kv_spec, kv_spec, P()),
+             out_specs=q_spec, check_vma=False)
+    def f(q_l, k_l, v_l, valid):
+        idx = jax.lax.axis_index("model")
+        s_local = k_l.shape[1]
+        o, m, l = K.decode_attention_partial(
+            q_l, k_l, v_l, kv_valid_len=valid, k_offset=idx * s_local)
+        os = jax.lax.all_gather(o, "model")   # (16, B, H, D)
+        ms = jax.lax.all_gather(m, "model")
+        ls = jax.lax.all_gather(l, "model")
+        return K.merge_partials(os, ms, ls)[:, None]
+
+    return f(q, k, v, jnp.asarray(valid_len, jnp.int32))

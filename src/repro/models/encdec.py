@@ -1,0 +1,170 @@
+"""Whisper-style encoder-decoder backbone (conv frontend is a stub by
+assignment: ``input_specs()`` supplies precomputed frame embeddings).
+
+Encoder: bidirectional attention + sinusoidal positions over 1500 frames.
+Decoder: causal self-attention + cross-attention, learned positions (table
+extended to the assigned 32k decode length), LayerNorm, GELU MLP, tied head.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import ParamSpec, ShardingCtx
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models.transformer import stack_specs
+
+MAX_POS = 32_768  # assigned decode_32k length
+
+
+def enc_block_params(cfg: ModelConfig) -> dict:
+    return {"ln1": L.norm_params(cfg.d_model, "layer"),
+            "attn": A.attn_params(cfg),
+            "ln2": L.norm_params(cfg.d_model, "layer"),
+            "mlp": L.mlp_params(cfg)}
+
+
+def dec_block_params(cfg: ModelConfig) -> dict:
+    return {"ln1": L.norm_params(cfg.d_model, "layer"),
+            "self_attn": A.attn_params(cfg),
+            "ln_x": L.norm_params(cfg.d_model, "layer"),
+            "cross_attn": A.attn_params(cfg),
+            "ln2": L.norm_params(cfg.d_model, "layer"),
+            "mlp": L.mlp_params(cfg)}
+
+
+def encdec_params(cfg: ModelConfig) -> dict:
+    return {
+        "embed": L.embed_params(cfg),
+        "pos": ParamSpec((MAX_POS, cfg.d_model), (None, "embed"), scale=0.02),
+        "enc_blocks": stack_specs(enc_block_params(cfg), cfg.n_encoder_layers),
+        "enc_norm": L.norm_params(cfg.d_model, "layer"),
+        "dec_blocks": stack_specs(dec_block_params(cfg), cfg.n_layers),
+        "dec_norm": L.norm_params(cfg.d_model, "layer"),
+    }
+
+
+def encode(params: dict, frames: jax.Array, cfg: ModelConfig,
+           ctx: ShardingCtx, remat: str = "block") -> jax.Array:
+    """frames (B, S_enc, d_model) — the conv-stub output."""
+    S = frames.shape[1]
+    h = frames + L.sinusoidal_positions(S, cfg.d_model).astype(frames.dtype)
+    h = ctx.constrain(h, "batch", "seq", None)
+
+    def block(h, pl):
+        a, _ = A.attend_full(pl["attn"], L.apply_norm(pl["ln1"], h, cfg.norm_eps),
+                             cfg, ctx, causal=False)
+        h = h + a
+        h = h + L.apply_mlp(pl["mlp"], L.apply_norm(pl["ln2"], h, cfg.norm_eps),
+                            cfg, ctx)
+        return h, None
+
+    if remat != "none":
+        block = jax.checkpoint(block)
+    h, _ = jax.lax.scan(block, h, params["enc_blocks"], unroll=ctx.unroll)
+    return L.apply_norm(params["enc_norm"], h, cfg.norm_eps)
+
+
+def decode_train(params: dict, tokens: jax.Array, enc_out: jax.Array,
+                 cfg: ModelConfig, ctx: ShardingCtx, *,
+                 remat: str = "block", collect_cache: bool = False):
+    """Teacher-forced decoder pass; optionally collects self+cross caches."""
+    B, S = tokens.shape
+    h = L.embed_tokens(params["embed"], tokens, ctx)
+    h = h + params["pos"][:S][None].astype(h.dtype)
+    h = ctx.constrain(h, "batch", "seq", None)
+
+    def block(h, pl):
+        a, self_kv = A.attend_full(
+            pl["self_attn"], L.apply_norm(pl["ln1"], h, cfg.norm_eps), cfg, ctx,
+            causal=True)
+        h = h + a
+        ckv = A.cross_kv(pl["cross_attn"], enc_out)
+        c, _ = A.attend_full(
+            pl["cross_attn"], L.apply_norm(pl["ln_x"], h, cfg.norm_eps), cfg,
+            ctx, cross_kv=ckv)
+        h = h + c
+        h = h + L.apply_mlp(pl["mlp"], L.apply_norm(pl["ln2"], h, cfg.norm_eps),
+                            cfg, ctx)
+        if collect_cache:
+            k, v = self_kv
+            caches = ({"k": k.astype(jnp.bfloat16), "v": v.astype(jnp.bfloat16)},
+                      {"k": ckv[0].astype(jnp.bfloat16),
+                       "v": ckv[1].astype(jnp.bfloat16)})
+            return h, caches
+        return h, None
+
+    if remat != "none":
+        block = jax.checkpoint(block)
+    h, ys = jax.lax.scan(block, h, params["dec_blocks"], unroll=ctx.unroll)
+    h = L.apply_norm(params["dec_norm"], h, cfg.norm_eps)
+    logits = L.lm_logits(params["embed"], h, ctx)
+    if collect_cache:
+        return logits, ys
+    return logits
+
+
+def loss_fn(params: dict, batch: dict, cfg: ModelConfig, ctx: ShardingCtx,
+            **kw):
+    enc = encode(params, batch["frames"].astype(jnp.bfloat16), cfg, ctx,
+                 remat=kw.get("remat", "block"))
+    logits = decode_train(params, batch["tokens"], enc, cfg, ctx,
+                          remat=kw.get("remat", "block"))
+    ce = L.cross_entropy(logits, batch["targets"])
+    return ce, {"ce": ce, "aux_loss": jnp.zeros(()), "drop_frac": jnp.zeros(())}
+
+
+def cache_specs(cfg: ModelConfig, batch: int, s_max: int) -> dict:
+    self_c = stack_specs(A.cache_spec(cfg, batch, s_max), cfg.n_layers)
+    cross_c = stack_specs(A.cache_spec(cfg, batch, cfg.encoder_seq),
+                          cfg.n_layers)
+    return {"self": self_c, "cross": cross_c}
+
+
+def prefill(params: dict, batch: dict, cfg: ModelConfig, ctx: ShardingCtx,
+            s_max: int | None = None, **kw):
+    """Encode + teacher-forced decoder prefill → (last logits, caches, pos)."""
+    enc = encode(params, batch["frames"].astype(jnp.bfloat16), cfg, ctx,
+                 remat=kw.get("remat", "block"))
+    logits, (self_c, cross_c) = decode_train(
+        params, batch["tokens"], enc, cfg, ctx, collect_cache=True,
+        remat=kw.get("remat", "block"))
+    S = batch["tokens"].shape[1]
+    s_max = s_max or S
+    if s_max > S:
+        pad = s_max - S
+        self_c = jax.tree.map(
+            lambda c: jnp.pad(c, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+            self_c)
+    return logits[:, -1:], {"self": self_c, "cross": cross_c}, S
+
+
+def decode_step(params: dict, cache: dict, tokens: jax.Array, pos: jax.Array,
+                cfg: ModelConfig, ctx: ShardingCtx, **_):
+    B = tokens.shape[0]
+    h = L.embed_tokens(params["embed"], tokens, ctx)
+    h = h + jax.lax.dynamic_slice_in_dim(params["pos"], pos, 1)[None].astype(h.dtype)
+
+    def block(h, xs):
+        pl, sk, sv, ck, cv = xs
+        a, new_self = A.decode_attend(
+            pl["self_attn"], L.apply_norm(pl["ln1"], h, cfg.norm_eps),
+            {"k": sk, "v": sv}, pos, cfg, ctx, use_rope=False)
+        h = h + a
+        c = A.decode_cross_attend(
+            pl["cross_attn"], L.apply_norm(pl["ln_x"], h, cfg.norm_eps),
+            {"k": ck, "v": cv}, cfg, ctx)
+        h = h + c
+        h = h + L.apply_mlp(pl["mlp"], L.apply_norm(pl["ln2"], h, cfg.norm_eps),
+                            cfg, ctx)
+        return h, new_self
+
+    h, new_self = jax.lax.scan(
+        block, h, (params["dec_blocks"], cache["self"]["k"], cache["self"]["v"],
+                   cache["cross"]["k"], cache["cross"]["v"]),
+        unroll=ctx.unroll)
+    h = L.apply_norm(params["dec_norm"], h, cfg.norm_eps)
+    logits = L.lm_logits(params["embed"], h, ctx)
+    return logits, {"self": new_self, "cross": cache["cross"]}

@@ -1,0 +1,158 @@
+"""Zamba2-style hybrid: Mamba-2 backbone + one *shared* attention block
+(arXiv:2411.15242). The shared block attends over concat(h, h0) (2·d_model)
+— h0 = the initial embeddings — and is applied after every
+``shared_attn_every`` Mamba layers with shared weights (per-invocation LoRA
+deltas omitted; recorded in DESIGN.md).
+
+Structure: scan over ``n_super = n_layers // every`` super-blocks; each
+super-block is an inner scan over ``every`` Mamba layers followed by the
+shared block. Caches: mamba (n_super, every, ...) + shared-attn KV
+(n_super, ...) — distinct state per invocation, shared weights.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import ParamSpec, ShardingCtx
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.transformer import stack_specs
+
+
+def _shared_block_params(cfg: ModelConfig) -> dict:
+    d2 = 2 * cfg.d_model
+    return {"ln1": L.norm_params(d2),
+            "attn": A.attn_params(cfg, d_in=d2, d_out=cfg.d_model),
+            "ln2": L.norm_params(cfg.d_model),
+            "mlp": L.mlp_params(cfg)}
+
+
+def hybrid_params(cfg: ModelConfig) -> dict:
+    every = cfg.shared_attn_every
+    n_super = cfg.n_layers // every
+    mamba = stack_specs(stack_specs(
+        {"ln": L.norm_params(cfg.d_model), "mix": S.ssm_params(cfg)}, every),
+        n_super)
+    return {"embed": L.embed_params(cfg),
+            "mamba": mamba,
+            "shared": _shared_block_params(cfg),
+            "final_norm": L.norm_params(cfg.d_model)}
+
+
+def _apply_shared(ps: dict, h, h0, cfg: ModelConfig, ctx: ShardingCtx,
+                  positions):
+    x2 = jnp.concatenate([h, h0], axis=-1)
+    a, kv = A.attend_full(ps["attn"], L.apply_norm(ps["ln1"], x2, cfg.norm_eps),
+                          cfg, ctx, causal=True, rope_positions=positions)
+    h = h + a
+    h = h + L.apply_mlp(ps["mlp"], L.apply_norm(ps["ln2"], h, cfg.norm_eps),
+                        cfg, ctx)
+    return h, kv
+
+
+def forward(params: dict, batch: dict, cfg: ModelConfig, ctx: ShardingCtx, *,
+            remat: str = "block", collect_cache: bool = False,
+            cache_len: int | None = None, **_):
+    h = L.embed_tokens(params["embed"], batch["tokens"], ctx)
+    h0 = h
+    B, Sq, _ = h.shape
+    positions = jnp.arange(Sq)[None, :]
+
+    def mamba_layer(h, pl):
+        out, cache = S.apply_ssm(pl["mix"], L.apply_norm(pl["ln"], h,
+                                                         cfg.norm_eps), cfg, ctx)
+        return h + out, cache if collect_cache else None
+
+    def super_block(carry, pl):
+        h, h0 = carry
+        h, mcache = jax.lax.scan(mamba_layer, h, pl, unroll=ctx.unroll)
+        h, kv = _apply_shared(params["shared"], h, h0, cfg, ctx, positions)
+        if collect_cache:
+            k, v = kv
+            clen = cache_len or Sq
+            acache = {"k": k[:, -clen:].astype(jnp.bfloat16),
+                      "v": v[:, -clen:].astype(jnp.bfloat16)}
+            return (h, h0), (mcache, acache)
+        return (h, h0), None
+
+    if remat != "none":
+        super_block = jax.checkpoint(super_block)
+    (h, _), ys = jax.lax.scan(super_block, (h, h0), params["mamba"],
+                              unroll=ctx.unroll)
+    h = L.apply_norm(params["final_norm"], h, cfg.norm_eps)
+    logits = L.lm_logits(params["embed"], h, ctx)
+    stats = {"aux_loss": jnp.zeros(()), "drop_frac": jnp.zeros(())}
+    if collect_cache:
+        return logits, stats, ys
+    return logits, stats
+
+
+def loss_fn(params: dict, batch: dict, cfg: ModelConfig, ctx: ShardingCtx,
+            **kw):
+    logits, stats = forward(params, batch, cfg, ctx,
+                            remat=kw.get("remat", "block"))
+    ce = L.cross_entropy(logits, batch["targets"])
+    return ce, {"ce": ce, **stats}
+
+
+def cache_specs(cfg: ModelConfig, batch: int, s_max: int) -> dict:
+    every = cfg.shared_attn_every
+    n_super = cfg.n_layers // every
+    mamba = stack_specs(stack_specs(S.ssm_cache_spec(cfg, batch), every),
+                        n_super)
+    attn = stack_specs(A.cache_spec(cfg, batch, s_max), n_super)
+    return {"mamba": mamba, "attn": attn}
+
+
+def prefill(params: dict, batch: dict, cfg: ModelConfig, ctx: ShardingCtx,
+            s_max: int | None = None, **kw):
+    Sq = batch["tokens"].shape[1]
+    s_max = s_max or Sq
+    logits, _, (mcache, acache) = forward(
+        params, batch, cfg, ctx, collect_cache=True, cache_len=s_max,
+        remat=kw.get("remat", "block"))
+    if s_max > Sq:
+        pad = s_max - Sq
+        acache = jax.tree.map(
+            lambda c: jnp.pad(c, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+            acache)
+    return logits[:, -1:], {"mamba": mcache, "attn": acache}, Sq
+
+
+def decode_step(params: dict, cache: dict, tokens: jax.Array, pos: jax.Array,
+                cfg: ModelConfig, ctx: ShardingCtx, **_):
+    h = L.embed_tokens(params["embed"], tokens, ctx)
+    h0 = h
+
+    def mamba_layer(h, xs):
+        pl, conv_c, state_c = xs
+        out, cache = S.decode_ssm(pl["mix"],
+                                  L.apply_norm(pl["ln"], h, cfg.norm_eps),
+                                  {"conv": conv_c, "state": state_c}, cfg, ctx)
+        return h + out, cache
+
+    def super_block(h, xs):
+        pl, mconv, mstate, ak, av = xs
+        h, mcache = jax.lax.scan(mamba_layer, h,
+                                 (pl, mconv, mstate), unroll=ctx.unroll)
+        x2 = jnp.concatenate([h, h0], axis=-1)
+        a, new_kv = A.decode_attend(
+            params["shared"]["attn"],
+            L.apply_norm(params["shared"]["ln1"], x2, cfg.norm_eps),
+            {"k": ak, "v": av}, pos, cfg, ctx)
+        h = h + a
+        h = h + L.apply_mlp(params["shared"]["mlp"],
+                            L.apply_norm(params["shared"]["ln2"], h,
+                                         cfg.norm_eps), cfg, ctx)
+        return h, (mcache, {"k": new_kv["k"], "v": new_kv["v"]})
+
+    h, (mcache, acache) = jax.lax.scan(
+        super_block, h,
+        (params["mamba"], cache["mamba"]["conv"], cache["mamba"]["state"],
+         cache["attn"]["k"], cache["attn"]["v"]), unroll=ctx.unroll)
+    h = L.apply_norm(params["final_norm"], h, cfg.norm_eps)
+    logits = L.lm_logits(params["embed"], h, ctx)
+    return logits, {"mamba": mcache, "attn": acache}

@@ -1,0 +1,135 @@
+"""Shared layers: norms, RoPE, MLP variants — pure functions over param trees.
+
+Params are declared as :class:`ParamSpec` trees (dist/sharding.py) so the same
+definition materializes real arrays (smoke tests), ShapeDtypeStructs (dry-run)
+and PartitionSpecs (mesh lowering).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import ParamSpec, ShardingCtx
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, w: jax.Array, b: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def norm_params(d: int, kind: str = "rms") -> dict:
+    if kind == "rms":
+        return {"w": ParamSpec((d,), (None,), init="ones", dtype=jnp.float32)}
+    return {"w": ParamSpec((d,), (None,), init="ones", dtype=jnp.float32),
+            "b": ParamSpec((d,), (None,), init="zeros", dtype=jnp.float32)}
+
+
+def apply_norm(p: dict, x: jax.Array, eps: float) -> jax.Array:
+    if "b" in p:
+        return layer_norm(x, p["w"], p["b"], eps)
+    return rms_norm(x, p["w"], eps)
+
+
+# ----------------------------------------------------------------------
+# RoPE
+# ----------------------------------------------------------------------
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x (..., S, H, D) with D even; positions broadcastable to (..., S)."""
+    D = x.shape[-1]
+    half = D // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None, None].astype(jnp.float32) * freq  # (..., S, 1, half)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(S: int, d: int) -> jax.Array:
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, dim / d)
+    pe = jnp.zeros((S, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(ang))
+    pe = pe.at[:, 1::2].set(jnp.cos(ang))
+    return pe
+
+
+# ----------------------------------------------------------------------
+# MLP (SwiGLU / GELU / squared-ReLU) — dense feed-forward
+# ----------------------------------------------------------------------
+def mlp_params(cfg: ModelConfig, d: int | None = None,
+               d_ff: int | None = None) -> dict:
+    d = d or cfg.d_model
+    d_ff = d_ff or cfg.d_ff
+    p = {"up": ParamSpec((d, d_ff), ("embed", "ff")),
+         "down": ParamSpec((d_ff, d), ("ff", "embed"))}
+    if cfg.mlp_variant == "swiglu":
+        p["gate"] = ParamSpec((d, d_ff), ("embed", "ff"))
+    return p
+
+
+def apply_mlp(p: dict, x: jax.Array, cfg: ModelConfig,
+              ctx: ShardingCtx) -> jax.Array:
+    up = jnp.einsum("...d,df->...f", x, p["up"])
+    if cfg.mlp_variant == "swiglu":
+        gate = jnp.einsum("...d,df->...f", x, p["gate"])
+        h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    elif cfg.mlp_variant == "relu2":
+        r = jax.nn.relu(up.astype(jnp.float32))
+        h = (r * r).astype(x.dtype)
+    else:  # gelu2
+        h = jax.nn.gelu(up.astype(jnp.float32)).astype(x.dtype)
+    h = ctx.constrain(h, "batch", "seq", "ff") if h.ndim == 3 else h
+    return jnp.einsum("...f,fd->...d", h, p["down"])
+
+
+# ----------------------------------------------------------------------
+# Embeddings / LM head
+# ----------------------------------------------------------------------
+def embed_params(cfg: ModelConfig) -> dict:
+    p = {"tok": ParamSpec((cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                          scale=1.0)}
+    if not cfg.tie_embeddings:
+        p["head"] = ParamSpec((cfg.d_model, cfg.vocab), ("embed", "vocab"))
+    return p
+
+
+def embed_tokens(p: dict, tokens: jax.Array, ctx: ShardingCtx) -> jax.Array:
+    h = jnp.take(p["tok"], tokens, axis=0)
+    return ctx.constrain(h, "batch", "seq", None)
+
+
+def lm_logits(p: dict, h: jax.Array, ctx: ShardingCtx) -> jax.Array:
+    if "head" in p:
+        logits = jnp.einsum("...d,dv->...v", h, p["head"])
+    else:
+        logits = jnp.einsum("...d,vd->...v", h, p["tok"])
+    return logits
+
+
+def cross_entropy(logits: jax.Array, targets: jax.Array,
+                  mask: jax.Array | None = None) -> jax.Array:
+    """Mean CE in fp32; targets < 0 are ignored (in addition to mask)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    tgt = jnp.clip(targets, 0, logits.shape[-1] - 1)
+    picked = jnp.take_along_axis(lf, tgt[..., None], axis=-1)[..., 0]
+    nll = lse - picked
+    valid = (targets >= 0)
+    if mask is not None:
+        valid &= mask.astype(bool)
+    nll = jnp.where(valid, nll, 0.0)
+    denom = jnp.maximum(jnp.sum(valid), 1)
+    return jnp.sum(nll) / denom

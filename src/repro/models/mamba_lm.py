@@ -1,0 +1,77 @@
+"""Pure Mamba-2 LM (mamba2-1.3b): embeddings + N SSD blocks, scan-stacked."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import ShardingCtx
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.transformer import stack_specs
+
+
+def lm_params(cfg: ModelConfig) -> dict:
+    block = {"ln": L.norm_params(cfg.d_model), "mix": S.ssm_params(cfg)}
+    return {"embed": L.embed_params(cfg),
+            "blocks": stack_specs(block, cfg.n_layers),
+            "final_norm": L.norm_params(cfg.d_model)}
+
+
+def forward(params: dict, batch: dict, cfg: ModelConfig, ctx: ShardingCtx, *,
+            remat: str = "block", collect_cache: bool = False, **_):
+    h = L.embed_tokens(params["embed"], batch["tokens"], ctx)
+
+    def block(h, pl):
+        out, cache = S.apply_ssm(pl["mix"],
+                                 L.apply_norm(pl["ln"], h, cfg.norm_eps),
+                                 cfg, ctx)
+        return h + out, cache if collect_cache else None
+
+    if remat != "none":
+        block = jax.checkpoint(block)
+    h, caches = jax.lax.scan(block, h, params["blocks"], unroll=ctx.unroll)
+    h = L.apply_norm(params["final_norm"], h, cfg.norm_eps)
+    logits = L.lm_logits(params["embed"], h, ctx)
+    stats = {"aux_loss": jnp.zeros(()), "drop_frac": jnp.zeros(())}
+    if collect_cache:
+        return logits, stats, caches
+    return logits, stats
+
+
+def loss_fn(params, batch, cfg: ModelConfig, ctx: ShardingCtx, **kw):
+    logits, stats = forward(params, batch, cfg, ctx,
+                            remat=kw.get("remat", "block"))
+    ce = L.cross_entropy(logits, batch["targets"])
+    return ce, {"ce": ce, **stats}
+
+
+def cache_specs(cfg: ModelConfig, batch: int, s_max: int) -> dict:
+    del s_max  # SSM state is O(1) in sequence length
+    return stack_specs(S.ssm_cache_spec(cfg, batch), cfg.n_layers)
+
+
+def prefill(params, batch, cfg: ModelConfig, ctx: ShardingCtx, s_max=None,
+            **kw):
+    logits, _, caches = forward(params, batch, cfg, ctx, collect_cache=True,
+                                remat=kw.get("remat", "block"))
+    return logits[:, -1:], caches, batch["tokens"].shape[1]
+
+
+def decode_step(params, cache, tokens, pos, cfg: ModelConfig,
+                ctx: ShardingCtx, **_):
+    h = L.embed_tokens(params["embed"], tokens, ctx)
+
+    def block(h, xs):
+        pl, conv_c, state_c = xs
+        out, new_cache = S.decode_ssm(
+            pl["mix"], L.apply_norm(pl["ln"], h, cfg.norm_eps),
+            {"conv": conv_c, "state": state_c}, cfg, ctx)
+        return h + out, new_cache
+
+    h, new_cache = jax.lax.scan(block, h,
+                                (params["blocks"], cache["conv"],
+                                 cache["state"]), unroll=ctx.unroll)
+    h = L.apply_norm(params["final_norm"], h, cfg.norm_eps)
+    logits = L.lm_logits(params["embed"], h, ctx)
+    return logits, new_cache

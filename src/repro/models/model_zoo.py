@@ -1,0 +1,161 @@
+"""Uniform model API over all assigned architectures.
+
+``build(cfg, n_slots)`` returns a :class:`Model` whose methods cover the four
+assigned shapes: ``loss_fn`` (train_4k), ``prefill`` (prefill_32k),
+``decode_step`` (decode_32k / long_500k). ``input_specs`` produces
+ShapeDtypeStruct stand-ins for every input — weak-type-correct, shardable, no
+device allocation (the dry-run path).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import Family, ModelConfig, ShapeConfig
+from repro.dist import sharding as shd
+from repro.dist.sharding import ParamSpec, ShardingCtx
+from repro.models import encdec, hybrid, transformer
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    n_slots: int
+    _params: dict
+    _loss: Callable
+    _prefill: Callable
+    _decode: Callable
+    _cache_specs: Callable
+
+    # ---- parameters --------------------------------------------------
+    def param_specs(self) -> dict:
+        return self._params
+
+    def init(self, rng: jax.Array) -> dict:
+        return shd.tree_init(rng, self._params)
+
+    def abstract_params(self) -> dict:
+        return shd.tree_abstract(self._params)
+
+    def param_shardings(self, ctx: ShardingCtx):
+        return shd.tree_shardings(self._params, ctx)
+
+    def param_pspecs(self, ctx: ShardingCtx):
+        return shd.tree_pspecs(self._params, ctx)
+
+    # ---- compute -----------------------------------------------------
+    def loss_fn(self, params, batch, ctx: ShardingCtx, **kw):
+        return self._loss(params, batch, self.cfg, ctx, **kw)
+
+    def prefill(self, params, batch, ctx: ShardingCtx, s_max=None, **kw):
+        return self._prefill(params, batch, self.cfg, ctx, s_max=s_max, **kw)
+
+    def decode_step(self, params, cache, tokens, pos, ctx: ShardingCtx, **kw):
+        return self._decode(params, cache, tokens, pos, self.cfg, ctx, **kw)
+
+    # ---- caches & inputs ----------------------------------------------
+    def cache_specs(self, batch: int, s_max: int) -> dict:
+        return self._cache_specs(self.cfg, batch, s_max)
+
+    def abstract_cache(self, batch: int, s_max: int):
+        return shd.tree_abstract(self.cache_specs(batch, s_max))
+
+    def cache_shardings(self, batch: int, s_max: int, ctx: ShardingCtx):
+        return shd.tree_shardings(self.cache_specs(batch, s_max), ctx)
+
+    def init_cache(self, batch: int, s_max: int):
+        import numpy as np
+        return jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype or jnp.bfloat16),
+            self.cache_specs(batch, s_max),
+            is_leaf=lambda x: isinstance(x, ParamSpec))
+
+    def input_specs(self, shape: ShapeConfig) -> dict:
+        """ShapeDtypeStruct stand-ins for every model input of this shape."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        sds = jax.ShapeDtypeStruct
+        if shape.kind == "decode":
+            batch: dict[str, Any] = {
+                "tokens": sds((B, 1), i32),
+                "cache": self.abstract_cache(B, S),
+                "pos": sds((), i32),
+            }
+            return batch
+        s_text = S
+        batch = {}
+        if cfg.family == Family.VLM:
+            s_text = S - cfg.n_patches
+            batch["patches"] = sds((B, cfg.n_patches, cfg.d_patch), jnp.bfloat16)
+        if cfg.family == Family.ENCDEC:
+            batch["frames"] = sds((B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+        batch["tokens"] = sds((B, s_text), i32)
+        if shape.kind == "train":
+            batch["targets"] = sds((B, s_text), i32)
+        return batch
+
+    def input_pspecs(self, shape: ShapeConfig, ctx: ShardingCtx):
+        """PartitionSpecs matching input_specs structure (batch-sharded)."""
+        from jax.sharding import PartitionSpec as P
+        def leaf_spec(path_leaf):
+            sds = path_leaf
+            axes = ("batch",) + (None,) * (len(sds.shape) - 1)
+            return ctx.spec(axes, sds.shape)
+
+        specs = self.input_specs(shape)
+        if shape.kind == "decode":
+            cache_ps = shd.tree_pspecs(self.cache_specs(
+                shape.global_batch, shape.seq_len), ctx)
+            return {"tokens": ctx.spec(("batch", None), specs["tokens"].shape),
+                    "cache": cache_ps,
+                    "pos": P()}
+        return jax.tree.map(leaf_spec, specs)
+
+    def demo_batch(self, shape: ShapeConfig, rng=None) -> dict:
+        """Materialized random batch (smoke tests / examples)."""
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        specs = self.input_specs(shape)
+
+        def mk(rng, s):
+            if jnp.issubdtype(s.dtype, jnp.integer):
+                return jax.random.randint(rng, s.shape, 0, max(self.cfg.vocab, 2),
+                                          s.dtype)
+            return jax.random.normal(rng, s.shape, jnp.float32).astype(s.dtype)
+
+        leaves, treedef = jax.tree.flatten(specs)
+        rngs = jax.random.split(rng, len(leaves))
+        if shape.kind == "decode":
+            out = jax.tree.unflatten(treedef, [mk(r, s) for r, s in
+                                               zip(rngs, leaves)])
+            out["cache"] = self.init_cache(shape.global_batch, shape.seq_len)
+            out["pos"] = jnp.asarray(min(shape.seq_len - 1, 7), jnp.int32)
+            return out
+        return jax.tree.unflatten(treedef, [mk(r, s) for r, s in
+                                            zip(rngs, leaves)])
+
+
+def build(cfg: ModelConfig, n_slots: int = 1,
+          moe_replicate: bool = False) -> Model:
+    if cfg.family in (Family.DENSE, Family.MOE, Family.VLM):
+        params = transformer.lm_params(cfg, n_slots, moe_replicate)
+        return Model(cfg, n_slots, params, transformer.loss_fn,
+                     transformer.prefill, transformer.decode_step,
+                     transformer.cache_specs)
+    if cfg.family in (Family.SSM, Family.HYBRID):
+        if cfg.family == Family.SSM:
+            # pure-SSM = hybrid with a single degenerate super-block period:
+            # reuse the mamba assembly without shared attention.
+            from repro.models import mamba_lm
+            return Model(cfg, n_slots, mamba_lm.lm_params(cfg),
+                         mamba_lm.loss_fn, mamba_lm.prefill,
+                         mamba_lm.decode_step, mamba_lm.cache_specs)
+        return Model(cfg, n_slots, hybrid.hybrid_params(cfg), hybrid.loss_fn,
+                     hybrid.prefill, hybrid.decode_step, hybrid.cache_specs)
+    if cfg.family == Family.ENCDEC:
+        return Model(cfg, n_slots, encdec.encdec_params(cfg), encdec.loss_fn,
+                     encdec.prefill, encdec.decode_step, encdec.cache_specs)
+    raise ValueError(cfg.family)

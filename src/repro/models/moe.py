@@ -1,0 +1,291 @@
+"""Mixture-of-Experts block with StreamShield WeakHash routing and
+Group-Rescale-confined expert-parallel dispatch.
+
+Expert placement ("slots"): the expert dimension is laid out over ``n_slots``
+device slots (= the size of the dispatch axis group):
+
+* ``experts_per_slot = E // n_slots`` when E >= n_slots (arctic: 128/16 = 8);
+* otherwise each expert is **TP-split across ``slots_per_expert`` slots**
+  (mixtral: 8 experts × 2 slots, each slot holding half of d_ff). SwiGLU is
+  elementwise in d_ff, so per-slot partial down-projections sum exactly.
+
+Weights are stored pre-slotted as (n_slots, eps, d, ff_slot); the dispatch
+all-to-all is confined to the slot axes (default: the ICI-contiguous
+``"model"`` axis — the paper's Group-Rescale; the §Perf baseline alternative
+is a global ("data","model") dispatch).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import ParamSpec, ShardingCtx
+from repro.kernels import api as K
+from repro.kernels.weakhash_route.ref import positions_in_bucket
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class MoELayout:
+    n_experts: int
+    n_slots: int
+    # replicate=True (serving): when n_slots > E each slot holds a FULL copy
+    # of one expert; a token is dispatched to a single replica chosen by
+    # WeakHash (bounded candidate set = the expert's replicas, dynamic
+    # load/hash selection — the paper's key-to-task relaxation). Physical
+    # weight duplication; the content-addressed checkpoint dedups it.
+    # replicate=False (training): slots TP-split d_ff instead (exact math,
+    # partial down-projections sum; every send goes to all splits).
+    replicate: bool = False
+
+    @property
+    def experts_per_slot(self) -> int:
+        return max(1, self.n_experts // self.n_slots)
+
+    @property
+    def slots_per_expert(self) -> int:
+        return max(1, self.n_slots // self.n_experts)
+
+    def ff_slot(self, d_ff: int) -> int:
+        return d_ff if self.replicate else d_ff // self.slots_per_expert
+
+
+def serve_replicate(cfg: ModelConfig) -> bool:
+    """Serving expert layout rule: replicate a full expert per slot when the
+    per-device copy (one expert × n_layers, bf16) fits a ~8 GiB budget —
+    WeakHash replica selection then keeps dispatch to 1 send/assignment.
+    Otherwise fall back to ff-split slots (mixtral-8x22b: 8 × 16384 experts
+    would be 33.8 GiB/device replicated)."""
+    per_dev = (cfg.n_layers * cfg.mlp_mats * cfg.d_model
+               * cfg.moe.d_ff_expert * 2)
+    return per_dev <= 8 * 2**30
+
+
+def moe_params(cfg: ModelConfig, n_slots: int = 1,
+               replicate: bool = False) -> dict:
+    m = cfg.moe
+    lay = MoELayout(m.n_experts, n_slots, replicate)
+    d, ffs, eps = cfg.d_model, lay.ff_slot(m.d_ff_expert), lay.experts_per_slot
+    mats = cfg.mlp_mats
+    p = {
+        "router": ParamSpec((d, m.n_experts), ("embed", None),
+                            dtype=jnp.float32, scale=0.02),
+        "up": ParamSpec((n_slots, eps, d, ffs), ("expert", None, "embed", None)),
+        "down": ParamSpec((n_slots, eps, ffs, d), ("expert", None, None, "embed")),
+    }
+    if mats == 3:
+        p["gate"] = ParamSpec((n_slots, eps, d, ffs),
+                              ("expert", None, "embed", None))
+    return p
+
+
+def _expert_ffn(cfg: ModelConfig, p: dict, x):
+    """x (..., eps, C, d) with weights (..., eps, d, ffs) → (..., eps, C, d)."""
+    up = jnp.einsum("...ecd,...edf->...ecf", x, p["up"])
+    if "gate" in p:
+        g = jnp.einsum("...ecd,...edf->...ecf", x, p["gate"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * up
+    elif cfg.mlp_variant == "relu2":
+        r = jax.nn.relu(up.astype(jnp.float32))
+        h = (r * r).astype(x.dtype)
+    else:
+        h = jax.nn.gelu(up.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("...ecf,...efd->...ecd", h, p["down"])
+
+
+# ----------------------------------------------------------------------
+# Local (single-device / no-mesh) path — also the numeric oracle for the
+# distributed path (tests compare them with generous capacities).
+# ----------------------------------------------------------------------
+def _local_moe(p: dict, x, token_keys, cfg: ModelConfig, *, mode: str,
+               rescue: bool, capacity_factor: float):
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    xt = x.reshape(T, d)
+    logits = xt.astype(jnp.float32) @ p["router"]
+    cap = _round_up(max(int(T * m.top_k * capacity_factor / m.n_experts), 4), 4)
+    route = K.weakhash_route(
+        logits, top_k=m.top_k, capacity=cap, n_groups=m.n_groups, mode=mode,
+        token_keys=None if token_keys is None else token_keys.reshape(-1),
+        rescue=rescue)
+    buf = K.dispatch(xt, route, m.n_experts, cap)      # (E, C, d)
+    n_slots, eps = p["up"].shape[0], p["up"].shape[1]
+    w = {k: p[k].reshape(n_slots * eps, p[k].shape[2], p[k].shape[3])
+         for k in ("up", "down", "gate") if k in p}
+    assert w["up"].shape[0] == m.n_experts, "local path expects n_slots*eps == E"
+    out = _expert_ffn(cfg, w, buf)
+    y = K.combine(out, route, T)
+    drop = 1.0 - route.keep.mean()
+    return y.reshape(B, S, d), route.aux_loss, drop
+
+
+# ----------------------------------------------------------------------
+# Distributed (shard_map) path: WeakHash route → slot dispatch →
+# group-limited all-to-all → per-slot expert FFN → reverse all-to-all.
+# ----------------------------------------------------------------------
+def apply_moe(p: dict, x, token_keys, cfg: ModelConfig, ctx: ShardingCtx, *,
+              mode: str = "weakhash", rescue: bool = True,
+              slot_axes: tuple[str, ...] = ("model",),
+              replicate: bool = False,
+              capacity_factor: float | None = None,
+              capacity_floor: int = 4):
+    """x (B, S, d) → (y, aux_loss, drop_fraction).
+
+    mode "strict" = paper-baseline top-k routing; "weakhash" = StreamShield
+    group-restricted, load-aware routing. rescue=True re-routes capacity
+    overflow (γ=full); False drops it (γ=partial). replicate: serving layout
+    (full expert copy per slot, WeakHash replica selection).
+    """
+    m = cfg.moe
+    cf = capacity_factor if capacity_factor is not None else m.capacity_factor
+    if ctx.mesh is None:
+        return _local_moe(p, x, token_keys, cfg, mode=mode, rescue=rescue,
+                          capacity_factor=cf)
+
+    mesh = ctx.mesh
+    slot_axes = tuple(a for a in slot_axes if a in mesh.shape)
+    n_slots = math.prod(mesh.shape[a] for a in slot_axes)
+    assert p["up"].shape[0] == n_slots, (p["up"].shape, n_slots)
+    lay = MoELayout(m.n_experts, n_slots, replicate)
+
+    B, S, d = x.shape
+    from repro.dist.sharding import batch_axes_for
+    batch_axes = batch_axes_for(mesh, B)
+    bspec = (batch_axes if len(batch_axes) > 1
+             else (batch_axes[0] if batch_axes else None))
+    seq_shardable = ctx.sequence_parallel and S % ctx.axis_size("model") == 0
+    x_spec = P(bspec, "model" if seq_shardable else None, None)
+    w_spec = P("model" if "model" in slot_axes else slot_axes, None, None, None)
+    # slots laid out over ("data","model") for the global-dispatch baseline
+    if len(slot_axes) > 1:
+        w_spec = P(slot_axes, None, None, None)
+
+    batch_shards = math.prod(mesh.shape[a] for a in batch_axes) \
+        if batch_axes else 1
+    t_local = (B * S) // (batch_shards
+                          * (ctx.axis_size("model") if seq_shardable else 1))
+    sends = 1 if lay.replicate else lay.slots_per_expert
+    fl = max(capacity_floor, 1)
+    c_send = _round_up(
+        max(math.ceil(t_local * m.top_k * sends * cf / n_slots), fl), fl)
+    c_local = _round_up(
+        max(math.ceil(n_slots * c_send * cf / lay.experts_per_slot), fl), fl)
+
+    wr = p["router"]
+    args = [p["up"], p["down"]]
+    specs = [w_spec, w_spec]
+    if "gate" in p:
+        args.append(p["gate"])
+        specs.append(w_spec)
+
+    keys = token_keys if token_keys is not None else jnp.zeros((B, S), jnp.int32)
+
+    @partial(jax.shard_map, mesh=mesh,
+             in_specs=(x_spec, P(x_spec[0], x_spec[1]), P(None, None),
+                       *specs),
+             out_specs=(x_spec, P(), P()), check_vma=False)
+    def run(x_l, keys_l, wr_l, up_l, down_l, *maybe_gate):
+        w_l = {"up": up_l[0], "down": down_l[0]}
+        if maybe_gate:
+            w_l["gate"] = maybe_gate[0][0]
+        b_l, s_l, _ = x_l.shape
+        T = b_l * s_l
+        xt = x_l.reshape(T, d)
+        logits = xt.astype(jnp.float32) @ wr_l
+        cap_e = _round_up(
+            max(math.ceil(T * m.top_k * cf / m.n_experts), 2), 2)
+        route = K.weakhash_route(
+            logits, top_k=m.top_k, capacity=cap_e, n_groups=m.n_groups,
+            mode=mode, token_keys=keys_l.reshape(-1), rescue=rescue)
+
+        e = route.expert_idx                                    # (T, k)
+        keep0 = route.keep
+        if lay.slots_per_expert == 1:
+            slot = e // lay.experts_per_slot                    # (T, k)
+            local_e = e % lay.experts_per_slot
+        elif lay.replicate:
+            # WeakHash replica selection: each expert has spe full replicas;
+            # the candidate set is bounded and the pick is a cheap hash of
+            # (token key, k-index) — deterministic, diffuses hot experts.
+            spe = lay.slots_per_expert
+            kk = keys_l.reshape(-1)[:, None].astype(jnp.uint32)
+            kk = kk * jnp.uint32(2654435761) + jnp.arange(
+                e.shape[1], dtype=jnp.uint32)[None, :] * jnp.uint32(40503)
+            replica = (kk % jnp.uint32(spe)).astype(e.dtype)
+            slot = e * spe + replica                            # (T, k)
+            local_e = jnp.zeros_like(slot)
+        else:
+            spe = lay.slots_per_expert
+            slot = (e[..., None] * spe
+                    + jnp.arange(spe, dtype=e.dtype)).reshape(T, -1)
+            local_e = jnp.zeros_like(slot)
+            keep0 = jnp.repeat(keep0, spe, axis=-1)
+        n_sends = slot.shape[-1]
+
+        pos = positions_in_bucket(slot.reshape(-1), n_slots)
+        keep = keep0.reshape(-1) & (pos < c_send)
+        sl, pos_c = slot.reshape(-1), jnp.clip(pos, 0, c_send - 1)
+
+        payload = jnp.zeros((n_slots, c_send, d), x_l.dtype)
+        src = jnp.repeat(xt, n_sends, axis=0)
+        payload = payload.at[sl, pos_c].add(
+            src * keep[:, None].astype(x_l.dtype), mode="drop")
+        meta = jnp.full((n_slots, c_send), 0, jnp.int32)
+        meta = meta.at[sl, pos_c].max(
+            jnp.where(keep, local_e.reshape(-1), 0), mode="drop")
+
+        a2a = partial(jax.lax.all_to_all, axis_name=slot_axes
+                      if len(slot_axes) > 1 else slot_axes[0],
+                      split_axis=0, concat_axis=0, tiled=True)
+        recv = a2a(payload)                                     # (n_slots, C, d)
+        recv_e = a2a(meta)
+
+        if lay.experts_per_slot == 1:
+            # one expert per slot: every received row belongs to it — no
+            # second-level scatter, no capacity inflation (§Perf: removes
+            # phantom-row FFN compute, biggest at decode shapes)
+            buf = recv.reshape(1, n_slots * c_send, d)
+            out = _expert_ffn(cfg, w_l, buf)                    # (1, n·C, d)
+            back = a2a(out.reshape(n_slots, c_send, d))         # at source
+        else:
+            # second-level dispatch into this slot's experts
+            flat = recv.reshape(n_slots * c_send, d)
+            fe = recv_e.reshape(-1)
+            pos2 = positions_in_bucket(fe, lay.experts_per_slot)
+            keep2 = pos2 < c_local
+            buf = jnp.zeros((lay.experts_per_slot, c_local, d), x_l.dtype)
+            buf = buf.at[fe, jnp.clip(pos2, 0, c_local - 1)].add(
+                flat * keep2[:, None].astype(x_l.dtype), mode="drop")
+
+            out = _expert_ffn(cfg, w_l, buf)                    # (eps, C2, d)
+
+            back = out[fe, jnp.clip(pos2, 0, c_local - 1)]
+            back = back * keep2[:, None].astype(back.dtype)
+            back = a2a(back.reshape(n_slots, c_send, d))        # at source
+
+        rows = back[sl, pos_c] * keep[:, None].astype(back.dtype)
+        w_tok = route.weights
+        if lay.slots_per_expert > 1 and not lay.replicate:
+            w_tok = jnp.repeat(w_tok, lay.slots_per_expert, axis=-1)
+        y = (rows.reshape(T, n_sends, d)
+             * w_tok[..., None].astype(back.dtype)).sum(axis=1)
+
+        # tokens vary over the batch axes (+ "model" when sequence-sharded);
+        # pmean only over varying axes (vma-checked by shard_map)
+        red_axes = batch_axes + (("model",) if seq_shardable else ())
+        aux = jax.lax.pmean(route.aux_loss, red_axes)
+        drop = jax.lax.pmean(1.0 - (keep0.reshape(-1) & (pos < c_send)
+                                    ).mean(), red_axes)
+        return y.reshape(b_l, s_l, d), aux, drop
+
+    return run(x, keys, wr, *args)

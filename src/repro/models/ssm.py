@@ -1,0 +1,139 @@
+"""Mamba-2 (SSD) block — arXiv:2405.21060.
+
+Projections → short causal depthwise conv (k=4) on (x, B, C) → SSD chunked
+scan (kernels/ssd_scan) → gated RMSNorm → output projection.
+
+Decode carries {"conv": (B, K-1, d_in + 2N) pre-activation window,
+"state": (B, H, P, N) SSM state} per layer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import ParamSpec, ShardingCtx
+from repro.kernels import api as K
+from repro.models import layers as L
+
+
+def ssm_params(cfg: ModelConfig) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.d_inner(d)
+    nh = s.n_heads(d)
+    N = s.d_state
+    Kc = s.conv_kernel
+    return {
+        "wz": ParamSpec((d, d_in), ("embed", "d_inner")),
+        "wx": ParamSpec((d, d_in), ("embed", "d_inner")),
+        "wB": ParamSpec((d, N), ("embed", None)),
+        "wC": ParamSpec((d, N), ("embed", None)),
+        "wdt": ParamSpec((d, nh), ("embed", "ssm_heads")),
+        "conv": ParamSpec((Kc, d_in + 2 * N), (None, None), scale=0.5,
+                          dtype=jnp.float32),
+        "A_log": ParamSpec((nh,), ("ssm_heads",), init="zeros",
+                           dtype=jnp.float32),
+        "D": ParamSpec((nh,), ("ssm_heads",), init="ones", dtype=jnp.float32),
+        "dt_bias": ParamSpec((nh,), ("ssm_heads",), init="zeros",
+                             dtype=jnp.float32),
+        "norm": ParamSpec((d_in,), (None,), init="ones", dtype=jnp.float32),
+        "wo": ParamSpec((d_in, d), ("d_inner", "embed")),
+    }
+
+
+def _causal_conv(u: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv via K shifted adds. u (B,S,C); w (K,C)."""
+    Kc = w.shape[0]
+    out = u * w[Kc - 1][None, None, :].astype(u.dtype)
+    for i in range(1, Kc):
+        shifted = jnp.pad(u, ((0, 0), (i, 0), (0, 0)))[:, :-i or None][:, :u.shape[1]]
+        out = out + shifted * w[Kc - 1 - i][None, None, :].astype(u.dtype)
+    return out
+
+
+def _split_proj(p: dict, x: jax.Array):
+    z = jnp.einsum("bsd,de->bse", x, p["wz"])
+    xs = jnp.einsum("bsd,de->bse", x, p["wx"])
+    Bm = jnp.einsum("bsd,dn->bsn", x, p["wB"])
+    Cm = jnp.einsum("bsd,dn->bsn", x, p["wC"])
+    dt = jnp.einsum("bsd,dh->bsh", x, p["wdt"])
+    return z, xs, Bm, Cm, dt
+
+
+def _gated_norm(y: jax.Array, z: jax.Array, w: jax.Array,
+                eps: float) -> jax.Array:
+    g = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    return L.rms_norm(g, w, eps)
+
+
+def apply_ssm(p: dict, x: jax.Array, cfg: ModelConfig,
+              ctx: ShardingCtx) -> jax.Array:
+    """Full-sequence Mamba-2 mixer (train / prefill). Returns (y, cache)."""
+    s = cfg.ssm
+    B, S, d = x.shape
+    d_in = s.d_inner(d)
+    nh = s.n_heads(d)
+
+    z, xs, Bm, Cm, dt_raw = _split_proj(p, x)
+    u = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    conv_tail = u[:, -(s.conv_kernel - 1):, :]          # decode conv window
+    u = jax.nn.silu(_causal_conv(u, p["conv"]).astype(jnp.float32)).astype(x.dtype)
+    xs, Bm, Cm = jnp.split(u, [d_in, d_in + s.d_state], axis=-1)
+    xs = ctx.constrain(xs, "batch", None, "d_inner")
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])
+    xh = xs.reshape(B, S, nh, s.head_dim)
+    xh = ctx.constrain(xh, "batch", None, "ssm_heads", None)
+    y, state = K.ssd_scan(xh, dt, A, Bm, Cm, p["D"], chunk=s.chunk_size)
+    y = y.reshape(B, S, d_in)
+    y = _gated_norm(y, z, p["norm"], cfg.norm_eps)
+    out = jnp.einsum("be,ed->bd", y.reshape(B * S, d_in),
+                     p["wo"]).reshape(B, S, d)
+    cache = {"conv": conv_tail.astype(jnp.bfloat16),
+             "state": state.astype(jnp.float32)}
+    return out, cache
+
+
+def ssm_cache_spec(cfg: ModelConfig, batch: int) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    return {
+        "conv": ParamSpec((batch, s.conv_kernel - 1, s.d_inner(d) + 2 * s.d_state),
+                          ("batch", None, None), dtype=jnp.bfloat16,
+                          init="zeros"),
+        "state": ParamSpec((batch, s.n_heads(d), s.head_dim, s.d_state),
+                           ("batch", "ssm_heads", None, None),
+                           dtype=jnp.float32, init="zeros"),
+    }
+
+
+def decode_ssm(p: dict, x: jax.Array, cache: dict, cfg: ModelConfig,
+               ctx: ShardingCtx):
+    """One-token recurrent step. x (B,1,d) → (y (B,1,d), cache)."""
+    s = cfg.ssm
+    B, _, d = x.shape
+    d_in = s.d_inner(d)
+    nh = s.n_heads(d)
+
+    z, xs, Bm, Cm, dt_raw = _split_proj(p, x)
+    u_t = jnp.concatenate([xs, Bm, Cm], axis=-1)[:, 0]   # (B, C)
+    win = jnp.concatenate([cache["conv"].astype(u_t.dtype),
+                           u_t[:, None]], axis=1)        # (B, K, C)
+    conv_out = jnp.einsum("bkc,kc->bc", win, p["conv"].astype(u_t.dtype))
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
+    new_conv = win[:, 1:]
+
+    xs_t, B_t, C_t = jnp.split(conv_out, [d_in, d_in + s.d_state], axis=-1)
+    dt_t = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                           + p["dt_bias"][None, :])
+    A = -jnp.exp(p["A_log"])
+    y_t, state = K.ssd_decode_step(
+        cache["state"], xs_t.reshape(B, nh, s.head_dim), dt_t, A, B_t, C_t,
+        p["D"])
+    y = _gated_norm(y_t.reshape(B, 1, d_in), z, p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["wo"])
+    return out, {"conv": new_conv.astype(jnp.bfloat16),
+                 "state": state.astype(jnp.float32)}

@@ -1,0 +1,201 @@
+"""Decoder-only transformer LM assembly (dense / MoE / VLM).
+
+Layer parameters are *stacked* (leading n_layers dim) and the forward pass is
+a ``lax.scan`` over layers — compile time stays O(1) in depth at 512 devices.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import Family, ModelConfig
+from repro.dist.sharding import ParamSpec, ShardingCtx
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+
+AUX_COEF = 0.01
+
+
+def stack_specs(tree, n: int):
+    def f(s: ParamSpec):
+        return ParamSpec((n,) + s.shape, ("layers",) + s.axes, dtype=s.dtype,
+                         init=s.init, scale=s.scale)
+    return jax.tree.map(f, tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def block_params(cfg: ModelConfig, n_slots: int = 1,
+                 moe_replicate: bool = False) -> dict:
+    p = {"ln1": L.norm_params(cfg.d_model),
+         "attn": A.attn_params(cfg),
+         "ln2": L.norm_params(cfg.d_model)}
+    if cfg.moe.enabled:
+        p["moe"] = M.moe_params(cfg, n_slots, replicate=moe_replicate)
+        if cfg.moe.dense_residual:
+            p["mlp"] = L.mlp_params(cfg)
+    else:
+        p["mlp"] = L.mlp_params(cfg)
+    return p
+
+
+def lm_params(cfg: ModelConfig, n_slots: int = 1,
+              moe_replicate: bool = False) -> dict:
+    p = {"embed": L.embed_params(cfg),
+         "blocks": stack_specs(block_params(cfg, n_slots, moe_replicate),
+                               cfg.n_layers),
+         "final_norm": L.norm_params(cfg.d_model)}
+    if cfg.family == Family.VLM:
+        p["patch_proj"] = ParamSpec((cfg.d_patch, cfg.d_model),
+                                    (None, "embed"))
+    return p
+
+
+def _apply_ffn(pl: dict, h: jax.Array, keys, cfg: ModelConfig,
+               ctx: ShardingCtx, moe_opts: dict):
+    """The post-attention half of a block. Returns (delta, aux, drop)."""
+    hn = L.apply_norm(pl["ln2"], h, cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    drop = jnp.zeros((), jnp.float32)
+    out = jnp.zeros_like(h)
+    if cfg.moe.enabled:
+        mo, aux, drop = M.apply_moe(pl["moe"], hn, keys, cfg, ctx, **moe_opts)
+        out = out + mo
+        if cfg.moe.dense_residual:
+            out = out + L.apply_mlp(pl["mlp"], hn, cfg, ctx)
+    else:
+        out = out + L.apply_mlp(pl["mlp"], hn, cfg, ctx)
+    return out, aux, drop
+
+
+def _embed_inputs(params: dict, batch: dict, cfg: ModelConfig,
+                  ctx: ShardingCtx):
+    """tokens (+ VLM patches) → (h, token_keys)."""
+    tokens = batch["tokens"]
+    h = L.embed_tokens(params["embed"], tokens, ctx)
+    keys = tokens
+    if cfg.family == Family.VLM and "patches" in batch:
+        pe = jnp.einsum("bpc,cd->bpd", batch["patches"].astype(h.dtype),
+                        params["patch_proj"])
+        h = jnp.concatenate([pe, h], axis=1)
+        keys = jnp.concatenate(
+            [jnp.zeros(pe.shape[:2], tokens.dtype), tokens], axis=1)
+    h = ctx.constrain(h, "batch", "seq", None)
+    return h, keys
+
+
+def forward(params: dict, batch: dict, cfg: ModelConfig, ctx: ShardingCtx, *,
+            remat: str = "block", collect_cache: bool = False,
+            cache_len: int | None = None, moe_opts: dict | None = None,
+            attn_opts: dict | None = None):
+    """Full-sequence forward. Returns (logits, aux) or with cache when
+    collect_cache (prefill)."""
+    moe_opts = moe_opts or {}
+    attn_opts = attn_opts or {}
+    h, keys = _embed_inputs(params, batch, cfg, ctx)
+    B, S, _ = h.shape
+    positions = jnp.arange(S)[None, :]
+
+    def block(h, pl):
+        h = ctx.constrain(h, "batch", "seq", None)
+        a, kv = A.attend_full(pl["attn"], L.apply_norm(pl["ln1"], h, cfg.norm_eps),
+                              cfg, ctx, causal=True, rope_positions=positions,
+                              window=cfg.swa_window, **attn_opts)
+        h = h + a
+        delta, aux, drop = _apply_ffn(pl, h, keys, cfg, ctx, moe_opts)
+        h = h + delta
+        h = ctx.constrain(h, "batch", "seq", None)
+        if collect_cache:
+            clen = cache_len or A.cache_len(cfg, S)
+            k, v = kv
+            cache = {"k": k[:, -clen:].astype(jnp.bfloat16),
+                     "v": v[:, -clen:].astype(jnp.bfloat16)}
+            return h, (aux, drop, cache)
+        return h, (aux, drop)
+
+    if remat != "none":
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if remat == "dots" else None)
+        block = jax.checkpoint(block, policy=policy)
+
+    h, ys = jax.lax.scan(block, h, params["blocks"], unroll=ctx.unroll)
+    if collect_cache:
+        aux, drop, cache = ys
+    else:
+        aux, drop = ys
+    h = L.apply_norm(params["final_norm"], h, cfg.norm_eps)
+    logits = L.lm_logits(params["embed"], h, ctx)
+    logits = ctx.constrain(logits, "batch", "seq", None)
+    stats = {"aux_loss": aux.sum(), "drop_frac": drop.mean()}
+    if collect_cache:
+        return logits, stats, cache
+    return logits, stats
+
+
+def loss_fn(params: dict, batch: dict, cfg: ModelConfig, ctx: ShardingCtx,
+            **fwd_kw):
+    logits, stats = forward(params, batch, cfg, ctx, **fwd_kw)
+    targets = batch["targets"]
+    if cfg.family == Family.VLM and "patches" in batch:
+        pad = -jnp.ones((targets.shape[0], batch["patches"].shape[1]),
+                        targets.dtype)
+        targets = jnp.concatenate([pad, targets], axis=1)
+    ce = L.cross_entropy(logits, targets)
+    loss = ce + AUX_COEF * stats["aux_loss"]
+    return loss, {"ce": ce, **stats}
+
+
+# ----------------------------------------------------------------------
+# Serving
+# ----------------------------------------------------------------------
+def cache_specs(cfg: ModelConfig, batch: int, s_max: int) -> dict:
+    per_layer = A.cache_spec(cfg, batch, s_max)
+    return stack_specs(per_layer, cfg.n_layers)
+
+
+def prefill(params: dict, batch: dict, cfg: ModelConfig, ctx: ShardingCtx,
+            s_max: int | None = None, **fwd_kw):
+    """Returns (last-token logits, cache, pos). The cache is sized/aligned for
+    continuation at position ``pos``: padded to the target cache length and,
+    for sliding-window ring caches, rolled so slot j holds position ≡ j (mod W).
+    """
+    S = batch["tokens"].shape[1]
+    if cfg.family == Family.VLM and "patches" in batch:
+        S += batch["patches"].shape[1]
+    clen = A.cache_len(cfg, s_max or S)
+    logits, stats, cache = forward(
+        params, batch, cfg, ctx, collect_cache=True,
+        cache_len=min(clen, S), **fwd_kw)
+    # stacked cache layout: (L, B, S_c, KV, hd) — seq axis 2
+    if cfg.swa_window and S > clen and S % clen:
+        cache = jax.tree.map(lambda c: jnp.roll(c, S % clen, axis=2), cache)
+    if S < clen:
+        cache = jax.tree.map(
+            lambda c: jnp.pad(c, ((0, 0), (0, 0), (0, clen - S), (0, 0),
+                                  (0, 0))), cache)
+    return logits[:, -1:], cache, S
+
+
+def decode_step(params: dict, cache: dict, tokens: jax.Array, pos: jax.Array,
+                cfg: ModelConfig, ctx: ShardingCtx,
+                moe_opts: dict | None = None):
+    """One-token step. tokens (B,1); pos scalar. Returns (logits, cache)."""
+    moe_opts = moe_opts or {}
+    h, keys = _embed_inputs(params, {"tokens": tokens}, cfg, ctx)
+
+    def block(h, xs):
+        pl, kc, vc = xs
+        a, new_cache = A.decode_attend(
+            pl["attn"], L.apply_norm(pl["ln1"], h, cfg.norm_eps),
+            {"k": kc, "v": vc}, pos, cfg, ctx)
+        h = h + a
+        delta, _, _ = _apply_ffn(pl, h, keys, cfg, ctx, moe_opts)
+        return h + delta, new_cache
+
+    h, new_cache = jax.lax.scan(block, h, (params["blocks"], cache["k"],
+                                           cache["v"]), unroll=ctx.unroll)
+    h = L.apply_norm(params["final_norm"], h, cfg.norm_eps)
+    logits = L.lm_logits(params["embed"], h, ctx)
+    return logits, new_cache

@@ -1,0 +1,129 @@
+"""Workloads from the paper's Table III: Nexmark Q2, Q12, Data
+Synchronization (DS), Sample Stitching (SS) — as logical graphs for the
+engine plus record-level vectorized operator kernels (jnp) used by the
+correctness tests and the micro benchmarks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.streams.graph import LogicalEdge, LogicalGraph, LogicalOp
+
+
+# ----------------------------------------------------------------------
+# Logical graphs (engine workloads)
+# ----------------------------------------------------------------------
+def q2(parallelism: int = 8, source_rate: float = 0.8e6,
+       service_rate: float = 1.2e5, partitioner: str = "rebalance",
+       n_groups: int = 1) -> LogicalGraph:
+    """Filter bids on predefined conditions: two logical nodes, one source."""
+    return LogicalGraph(
+        "nexmark_q2",
+        ops=(LogicalOp("source", parallelism, service_rate, is_source=True,
+                       source_rate=source_rate),
+             LogicalOp("filter", parallelism, service_rate,
+                       selectivity=0.2)),
+        edges=(LogicalEdge("source", "filter", partitioner,
+                           n_groups=n_groups),))
+
+
+def q12(parallelism: int = 8, source_rate: float = 0.8e6,
+        service_rate: float = 1.2e5) -> LogicalGraph:
+    """Count bids per bidder in processing-time windows: three nodes."""
+    return LogicalGraph(
+        "nexmark_q12",
+        ops=(LogicalOp("source", parallelism, service_rate, is_source=True,
+                       source_rate=source_rate),
+             LogicalOp("window_count", parallelism, service_rate,
+                       selectivity=0.05,
+                       state_bytes_per_task=64 << 20),
+             LogicalOp("sink", parallelism, service_rate)),
+        edges=(LogicalEdge("source", "window_count", "hash",
+                           key_skew_zipf=0.8),
+               LogicalEdge("window_count", "sink", "forward")))
+
+
+def ds(parallelism: int = 6, source_rate: float = 1e6,
+       service_rate: float = 2.5e5) -> LogicalGraph:
+    """Data synchronization: MQ → Hive, two nodes, forward chains (the
+    region-checkpointing showcase: one region per chain)."""
+    return LogicalGraph(
+        "data_sync",
+        ops=(LogicalOp("mq_source", parallelism, service_rate,
+                       is_source=True, source_rate=source_rate,
+                       state_bytes_per_task=512 << 20),
+             LogicalOp("hive_sink", parallelism, service_rate,
+                       state_bytes_per_task=512 << 20)),
+        edges=(LogicalEdge("mq_source", "hive_sink", "forward"),))
+
+
+def ss(parallelism: int = 8, feature_rate: float = 25e3,
+       label_rate: float = 20e3, service_rate: float = 1.2e4) -> LogicalGraph:
+    """Sample stitching: dual-stream keyed join for a recommender —
+    all-to-all exchanges merge everything into ONE region (the single-task
+    recovery showcase)."""
+    sr = service_rate
+    return LogicalGraph(
+        "sample_stitching",
+        ops=(LogicalOp("features", parallelism, sr, is_source=True,
+                       source_rate=feature_rate),
+             LogicalOp("labels", parallelism, sr, is_source=True,
+                       source_rate=label_rate),
+             LogicalOp("parse_f", parallelism, sr, selectivity=1.0),
+             LogicalOp("parse_l", parallelism, sr, selectivity=1.0),
+             LogicalOp("join", parallelism, sr, selectivity=0.9,
+                       state_bytes_per_task=256 << 20),
+             LogicalOp("stitch", parallelism, sr, selectivity=1.0),
+             LogicalOp("sink", parallelism, sr)),
+        edges=(LogicalEdge("features", "parse_f", "forward"),
+               LogicalEdge("labels", "parse_l", "forward"),
+               LogicalEdge("parse_f", "join", "hash", key_skew_zipf=0.6),
+               LogicalEdge("parse_l", "join", "hash", key_skew_zipf=0.6),
+               LogicalEdge("join", "stitch", "rebalance"),
+               LogicalEdge("stitch", "sink", "forward")))
+
+
+# ----------------------------------------------------------------------
+# Record-level vectorized operator kernels (correctness oracle + micro bench)
+# ----------------------------------------------------------------------
+def gen_bids(n: int, seed: int = 0, n_auctions: int = 1000,
+             n_bidders: int = 5000):
+    rng = np.random.default_rng(seed)
+    return {
+        "auction": jnp.asarray(rng.integers(0, n_auctions, n)),
+        "bidder": jnp.asarray(rng.zipf(1.3, n) % n_bidders),
+        "price": jnp.asarray(rng.lognormal(3.0, 1.0, n)),
+        "ts": jnp.asarray(np.sort(rng.uniform(0, 600.0, n))),
+    }
+
+
+@jax.jit
+def q2_filter(bids: dict) -> jax.Array:
+    """Nexmark Q2: bids on a fixed set of auctions (auction % 123 == 0)."""
+    return bids["auction"] % 123 == 0
+
+
+def q12_window_counts(bids: dict, window_s: float = 10.0,
+                      n_bidders: int = 5000):
+    """Bids per bidder per processing-time window → (n_windows, n_bidders)."""
+    win = (bids["ts"] // window_s).astype(jnp.int32)
+    n_windows = int(jnp.max(win)) + 1
+    flat = win * n_bidders + bids["bidder"].astype(jnp.int32)
+    counts = jnp.zeros((n_windows * n_bidders,), jnp.int32).at[flat].add(1)
+    return counts.reshape(n_windows, n_bidders)
+
+
+@jax.jit
+def ss_join(feat_keys, feat_vals, label_keys, label_vals):
+    """Keyed sample stitching: for each label, attach the latest feature row
+    with the same key (hash-join via sorted search; -1 when no match)."""
+    order = jnp.argsort(feat_keys)
+    fk = feat_keys[order]
+    fv = feat_vals[order]
+    pos = jnp.searchsorted(fk, label_keys, side="left")
+    pos = jnp.clip(pos, 0, fk.shape[0] - 1)
+    hit = fk[pos] == label_keys
+    joined = jnp.where(hit[:, None], fv[pos], -1.0)
+    return jnp.concatenate([label_vals, joined], axis=1), hit

@@ -1,0 +1,188 @@
+"""Pure-JAX optimizers: AdamW, Adafactor, SGD-momentum.
+
+State is declared through the same ParamSpec machinery as model params, so
+the dry-run gets abstract optimizer state + shardings without allocation
+(``state_specs`` maps each parameter's ParamSpec to its slot ParamSpecs).
+
+Adafactor (factored second moments) is the production choice for arctic-480b:
+Adam's fp32 moments at 480B parameters exceed one pod's per-chip HBM.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+from repro.dist.sharding import ParamSpec
+
+_SPEC_LEAF = lambda x: isinstance(x, ParamSpec)  # noqa: E731
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    cfg: OptimizerConfig
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple[Any, Any]]  # (g, state, p) -> (p, state)
+    state_specs: Callable[[Any], Any]
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        tree), norm
+
+
+def make_optimizer(cfg: OptimizerConfig) -> Optimizer:
+    if cfg.name == "adamw":
+        return _adamw(cfg)
+    if cfg.name == "adafactor":
+        return _adafactor(cfg)
+    if cfg.name == "sgdm":
+        return _sgdm(cfg)
+    raise ValueError(cfg.name)
+
+
+# ----------------------------------------------------------------------
+def _adamw(cfg: OptimizerConfig) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def state_specs(pspecs):
+        f32 = lambda s: ParamSpec(s.shape, s.axes, dtype=jnp.float32,
+                                  init="zeros")
+        return {"m": jax.tree.map(f32, pspecs, is_leaf=_SPEC_LEAF),
+                "v": jax.tree.map(f32, pspecs, is_leaf=_SPEC_LEAF),
+                "step": ParamSpec((), (), dtype=jnp.int32, init="zeros")}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        bc1 = 1.0 - cfg.b1 ** t
+        bc2 = 1.0 - cfg.b2 ** t
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m = cfg.b1 * m + (1 - cfg.b1) * gf
+            v = cfg.b2 * v + (1 - cfg.b2) * gf * gf
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - cfg.lr * u).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"m": new_m, "v": new_v, "step": step}
+
+    return Optimizer(cfg, init, update, state_specs)
+
+
+# ----------------------------------------------------------------------
+def _factored(shape: tuple[int, ...]) -> bool:
+    return len(shape) >= 2
+
+
+def _adafactor(cfg: OptimizerConfig) -> Optimizer:
+    eps2 = 1e-30
+
+    def init(params):
+        def slot(p):
+            if _factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"slots": jax.tree.map(slot, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def state_specs(pspecs):
+        def slot(s: ParamSpec):
+            if _factored(s.shape):
+                return {"vr": ParamSpec(s.shape[:-1], s.axes[:-1],
+                                        dtype=jnp.float32, init="zeros"),
+                        "vc": ParamSpec(s.shape[:-2] + s.shape[-1:],
+                                        s.axes[:-2] + s.axes[-1:],
+                                        dtype=jnp.float32, init="zeros")}
+            return {"v": ParamSpec(s.shape, s.axes, dtype=jnp.float32,
+                                   init="zeros")}
+        return {"slots": jax.tree.map(slot, pspecs, is_leaf=_SPEC_LEAF),
+                "step": ParamSpec((), (), dtype=jnp.int32, init="zeros")}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        decay = 1.0 - t ** -0.8  # standard Adafactor schedule
+
+        def upd(g, sl, p):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + eps2
+            if _factored(p.shape):
+                vr = decay * sl["vr"] + (1 - decay) * jnp.mean(g2, axis=-1)
+                vc = decay * sl["vc"] + (1 - decay) * jnp.mean(g2, axis=-2)
+                denom = jnp.mean(vr, axis=-1, keepdims=True)
+                u = (gf
+                     / jnp.sqrt(vr / jnp.maximum(denom, eps2))[..., None]
+                     / jnp.sqrt(vc)[..., None, :])
+                new_sl = {"vr": vr, "vc": vc}
+            else:
+                v = decay * sl["v"] + (1 - decay) * g2
+                u = gf / jnp.sqrt(v)
+                new_sl = {"v": v}
+            # update clipping (RMS <= 1)
+            rms = jnp.sqrt(jnp.mean(u * u) + eps2)
+            u = u / jnp.maximum(1.0, rms)
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - cfg.lr * u).astype(p.dtype), new_sl
+
+        is_slot = lambda x: isinstance(x, dict) and ("vr" in x or "v" in x)
+        out = jax.tree.map(upd, grads, state["slots"], params,
+                           is_leaf=lambda x: False)
+        # out mirrors params tree with (new_p, new_slot) tuples at leaves —
+        # but tree.map already descended into grads/params leaves, so leaves
+        # of `out` are tuples:
+        new_p = jax.tree.map(lambda o: o[0], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_s = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"slots": new_s, "step": step}
+
+    return Optimizer(cfg, init, update, state_specs)
+
+
+# ----------------------------------------------------------------------
+def _sgdm(cfg: OptimizerConfig) -> Optimizer:
+    def init(params):
+        return {"m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                  params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def state_specs(pspecs):
+        f32 = lambda s: ParamSpec(s.shape, s.axes, dtype=jnp.float32,
+                                  init="zeros")
+        return {"m": jax.tree.map(f32, pspecs, is_leaf=_SPEC_LEAF),
+                "step": ParamSpec((), (), dtype=jnp.int32, init="zeros")}
+
+    def update(grads, state, params):
+        def upd(g, m, p):
+            m = cfg.b1 * m + g.astype(jnp.float32)
+            return (p.astype(jnp.float32) - cfg.lr * m).astype(p.dtype), m
+        out = jax.tree.map(upd, grads, state["m"], params)
+        new_p = jax.tree.map(lambda o: o[0], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"m": new_m, "step": state["step"] + 1}
+
+    return Optimizer(cfg, init, update, state_specs)

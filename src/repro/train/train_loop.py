@@ -1,0 +1,125 @@
+"""Train/serve step factories.
+
+``make_train_step`` builds the jit-able (params, opt_state, batch) →
+(params, opt_state, metrics) function with the run's remat policy, SLO-derived
+MoE routing options, optional gradient-accumulation microbatching, and the
+StreamShield knobs (WeakHash mode, Group-Rescale dispatch scope).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import Completeness, RunConfig
+from repro.dist.sharding import ShardingCtx
+from repro.models import moe as moe_lib
+from repro.models.model_zoo import Model
+from repro.train import optimizer as opt_lib
+
+
+def expert_slot_axes(run: RunConfig) -> tuple[str, ...]:
+    """Training confines the dispatch all-to-all to the ICI-contiguous
+    "model" axis (Group-Rescale); serving spreads replicated experts over
+    the whole pod (global EP — WeakHash replica selection)."""
+    if run.shape.kind != "train" or not run.sharding.grouped_a2a:
+        return ("data", "model")
+    return ("model",)
+
+
+def moe_opts_for(run: RunConfig) -> dict:
+    """SLO → routing policy (paper Table I): γ=full keeps every token
+    (rescue overflow); γ=partial may drop (WeakHash's loss-tolerant relax)."""
+    opts: dict[str, Any] = {
+        "mode": "weakhash" if run.model.moe.enabled else "strict",
+        "rescue": run.slo.gamma == Completeness.FULL,
+        "slot_axes": expert_slot_axes(run),
+        "replicate": (run.shape.kind != "train" and run.model.moe.enabled
+                      and moe_lib.serve_replicate(run.model)),
+        "capacity_floor": run.sharding.moe_capacity_floor,
+    }
+    return opts
+
+
+def make_train_step(model: Model, run: RunConfig, ctx: ShardingCtx,
+                    moe_opts: dict | None = None) -> Callable:
+    opt = opt_lib.make_optimizer(run.optimizer)
+    mo = moe_opts if moe_opts is not None else moe_opts_for(run)
+    remat = run.sharding.remat
+    n_micro = run.sharding.microbatches
+
+    attn_opts = ({"exact_blocks": True}
+                 if run.sharding.exact_attn_blocks else {})
+
+    def loss_fn(params, batch):
+        kw = {"attn_opts": attn_opts} if attn_opts else {}
+        return model.loss_fn(params, batch, ctx, remat=remat, moe_opts=mo,
+                             **kw)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if n_micro <= 1:
+            (loss, aux), grads = grad_fn(params, batch)
+            return loss, aux, grads
+        # gradient accumulation: scan over microbatches
+        split = jax.tree.map(
+            lambda x: x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:]),
+            batch)
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params)
+
+        def body(acc, mb):
+            (loss, aux), g = grad_fn(params, mb)
+            acc = jax.tree.map(lambda a, gi: a + gi.astype(jnp.float32) / n_micro,
+                               acc, g)
+            return acc, (loss, aux)
+
+        grads, (losses, auxes) = jax.lax.scan(body, zeros, split)
+        loss = losses.mean()
+        aux = jax.tree.map(lambda a: a.mean(), auxes)
+        return loss, aux, grads
+
+    def train_step(params, opt_state, batch):
+        loss, aux, grads = compute_grads(params, batch)
+        if run.sharding.grad_reduce_bf16:
+            # cast before the cross-replica reduction XLA inserts — halves
+            # the dominant gradient all-reduce bytes (§Perf)
+            grads = jax.tree.map(
+                lambda g: g.astype(jnp.bfloat16) if g.dtype == jnp.float32
+                else g, grads)
+        grads, gnorm = opt_lib.clip_by_global_norm(grads, run.optimizer.grad_clip)
+        params, opt_state = opt.update(grads, opt_state, params)
+        metrics = {"loss": loss.astype(jnp.float32), "grad_norm": gnorm,
+                   **{k: v for k, v in aux.items()}}
+        return params, opt_state, metrics
+
+    train_step.optimizer = opt  # expose for state init/specs
+    return train_step
+
+
+def make_prefill_step(model: Model, run: RunConfig, ctx: ShardingCtx,
+                      moe_opts: dict | None = None) -> Callable:
+    mo = moe_opts if moe_opts is not None else moe_opts_for(run)
+
+    def prefill_step(params, batch):
+        logits, cache, pos = model.prefill(
+            params, batch, ctx, s_max=run.shape.seq_len, remat="none",
+            moe_opts=mo)
+        return logits, cache, pos
+
+    return prefill_step
+
+
+def make_decode_step(model: Model, run: RunConfig, ctx: ShardingCtx,
+                     moe_opts: dict | None = None) -> Callable:
+    mo = moe_opts if moe_opts is not None else moe_opts_for(run)
+
+    def decode_step(params, cache, tokens, pos):
+        logits, cache = model.decode_step(params, cache, tokens, pos, ctx,
+                                          moe_opts=mo)
+        return logits, cache
+
+    return decode_step

@@ -1,0 +1,194 @@
+"""Multi-device integration (subprocess with forced host devices — the main
+process must keep seeing 1 CPU device): EP MoE parity local-vs-shard_map,
+distributed-LSE decode parity, mini dry-run lower+compile on a (2,4) mesh,
+elastic resharding, LocalSGD pod sync."""
+import pytest
+
+from helpers import assert_ok, run_multidevice
+
+pytestmark = pytest.mark.slow
+
+
+def test_moe_shard_map_matches_local():
+    code = """
+import jax, jax.numpy as jnp, numpy as np, dataclasses
+from repro.configs import get_smoke_arch
+from repro.dist.sharding import ShardingCtx, DEFAULT_RULES
+from repro.models import moe as M
+from repro.launch.mesh import make_mesh
+
+cfg = get_smoke_arch("arctic-480b")   # 4 experts top-2 in smoke form
+mesh = make_mesh((2, 4), ("data", "model"))
+rules = dict(DEFAULT_RULES)
+ctx = ShardingCtx(mesh=mesh, rules=rules)
+
+n_slots = 4
+pl_ = M.moe_params(cfg, n_slots=n_slots)
+pl_loc = M.moe_params(cfg, n_slots=1)
+import repro.dist.sharding as shd
+rng = jax.random.PRNGKey(0)
+params = shd.tree_init(rng, pl_)
+# identical logical weights for the local layout
+params_loc = dict(params)
+for k in ("up", "down", "gate"):
+    if k in params:
+        w = params[k]
+        params_loc[k] = w.reshape((1, n_slots * w.shape[1]) + w.shape[2:])
+
+B, S, d = 4, 16, cfg.d_model
+x = jax.random.normal(jax.random.PRNGKey(1), (B, S, d), jnp.float32) * 0.3
+keys = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, 1000)
+
+from repro.dist.sharding import NO_SHARDING
+y_loc, aux_loc, drop_loc = M._local_moe(
+    params_loc, x, keys, cfg, mode="strict", rescue=False,
+    capacity_factor=64.0)
+y_dist, aux_d, drop_d = M.apply_moe(
+    params, x, keys, cfg, ctx, mode="strict", rescue=False,
+    slot_axes=("model",), capacity_factor=64.0)
+err = float(jnp.max(jnp.abs(y_loc - y_dist)))
+scale = float(jnp.max(jnp.abs(y_loc))) + 1e-9
+assert err / scale < 2e-2, (err, scale)
+# aux is a per-shard estimator pmean'd across devices (the standard
+# distributed-MoE choice); it differs from the global-batch estimator by a
+# covariance term — same scale, not bitwise equal.
+assert abs(float(aux_loc) - float(aux_d)) < 0.25 * max(abs(float(aux_loc)), 1.0)
+print("moe parity ok", err / scale)
+"""
+    assert_ok(run_multidevice(code, 8))
+
+
+def test_distributed_lse_decode_matches_ref():
+    code = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_smoke_arch
+from repro.dist.sharding import ShardingCtx
+from repro.launch.mesh import make_mesh
+from repro.models import attention as A
+from repro.kernels.decode_attention import ref as R
+
+mesh = make_mesh((2, 4), ("data", "model"))
+ctx = ShardingCtx(mesh=mesh)
+B, S, KV, hd = 4, 64, 2, 16   # KV=2 < model=4 → kv_seq sharding path
+H = 4
+q = jax.random.normal(jax.random.PRNGKey(0), (B, 1, H, hd))
+k = jax.random.normal(jax.random.PRNGKey(1), (B, S, KV, hd))
+v = jax.random.normal(jax.random.PRNGKey(2), (B, S, KV, hd))
+valid = 50
+out = A._distributed_decode(q, k, v, valid, ctx)
+ref = R.decode_attention(q, k, v, kv_valid_len=valid)[:, None]
+err = float(jnp.max(jnp.abs(out - ref)))
+assert err < 1e-4, err
+print("distributed decode ok", err)
+"""
+    assert_ok(run_multidevice(code, 8))
+
+
+def test_mini_dryrun_all_kinds():
+    """Full lower+compile of train/prefill/decode for a reduced MoE arch and
+    a reduced hybrid arch on a (2,4) mesh — the dry-run machinery end to end."""
+    code = """
+import dataclasses, jax
+from repro.configs import registry, base
+from repro.configs.base import ShapeConfig
+from repro.launch import dryrun
+import repro.launch.mesh as mesh_mod
+
+# shrink the production mesh for the test
+mesh_mod.make_production_mesh = lambda multi_pod=False: mesh_mod.make_mesh(
+    (2, 2, 2) if multi_pod else (2, 4),
+    ("pod", "data", "model") if multi_pod else ("data", "model"))
+
+for arch in ("arctic-480b", "zamba2-2.7b"):
+    smoke = registry.get_smoke_arch(arch)
+    for kind, shape in (("train", ShapeConfig("t", 32, 8, "train")),
+                        ("prefill", ShapeConfig("p", 32, 8, "prefill")),
+                        ("decode", ShapeConfig("d", 32, 8, "decode"))):
+        run = base.RunConfig(model=smoke, shape=shape)
+        lowered, info = dryrun.lower_cell(run, unroll=False)
+        compiled = lowered.compile()
+        assert compiled.cost_analysis() is not None
+        print(arch, kind, "ok")
+    run = base.RunConfig(model=smoke, shape=ShapeConfig("t", 32, 8, "train"),
+                         multi_pod=True)
+    lowered, info = dryrun.lower_cell(run, unroll=False)
+    lowered.compile()
+    print(arch, "multi-pod ok")
+"""
+    r = run_multidevice(code, 8)
+    assert_ok(r)
+    assert r.stdout.count("ok") == 8
+
+
+def test_elastic_resize_and_localsgd():
+    code = """
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.launch.mesh import make_mesh
+from repro.train.elastic import LocalSGDPods, LocalSGDConfig, elastic_resize
+from repro.dist.sharding import ShardingCtx
+from repro.configs import get_smoke_arch
+from repro.models import build
+
+m = build(get_smoke_arch("stablelm-1.6b"))
+params = m.init(jax.random.PRNGKey(0))
+ctx8 = ShardingCtx(mesh=make_mesh((4, 2), ("data", "model")))
+ctx4 = ShardingCtx(mesh=make_mesh((2, 2), ("data", "model")))
+pspecs = m.param_pspecs(ctx8)
+from repro.train.optimizer import make_optimizer
+from repro.configs import OptimizerConfig
+opt = make_optimizer(OptimizerConfig())
+state = opt.init(params)
+ospecs = jax.tree.map(lambda s: s if isinstance(s, jax.sharding.PartitionSpec)
+                      else s, opt.state_specs(m.param_specs()))
+import repro.dist.sharding as shd
+opspec = shd.tree_pspecs(opt.state_specs(m.param_specs()), ctx8)
+p2, s2, rep = elastic_resize(params, state, m.param_pspecs(ctx4),
+                             opspec, ctx4.mesh)
+# values preserved across the shrink (pod-loss survival)
+for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+print("elastic resize ok", rep.new_devices)
+
+# LocalSGD pod sync: identical pods stay identical; divergent pods average
+mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+pods = LocalSGDPods(mesh, LocalSGDConfig(compress=True))
+w = jnp.ones((8, 8), jnp.float32)
+anchor = w
+spec_tree = {"w": P()}
+sync = pods.sync_fn(spec_tree)
+out = sync({"w": w * 3.0}, {"w": anchor})
+np.testing.assert_allclose(np.asarray(out["w"]), 3.0, rtol=1e-2)
+print("localsgd ok")
+"""
+    assert_ok(run_multidevice(code, 8))
+
+
+def test_pipeline_parallel_matches_sequential():
+    code = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.launch.mesh import make_mesh
+from repro.dist.pipeline_parallel import pipeline_apply
+
+mesh = make_mesh((4,), ("pipe",))
+n_stages, L_per, d = 4, 2, 16
+rng = jax.random.PRNGKey(0)
+ws = jax.random.normal(rng, (n_stages, L_per, d, d)) * 0.1
+
+def block(params, h):  # params (L_per, d, d)
+    def layer(h, w):
+        return jnp.tanh(h @ w), None
+    h, _ = jax.lax.scan(layer, h, params)
+    return h
+
+x = jax.random.normal(jax.random.PRNGKey(1), (8, d))
+y_pipe = pipeline_apply(mesh, block, ws, x, n_micro=4)
+# sequential reference
+h = x
+for s in range(n_stages):
+    h = block(ws[s], h)
+err = float(jnp.max(jnp.abs(y_pipe - h)))
+assert err < 1e-5, err
+print("pipeline parallel ok", err)
+"""
+    assert_ok(run_multidevice(code, 4))

@@ -1,0 +1,218 @@
+"""SLO policies, autoscaler, replication, single-task recovery, lazyload,
+hotupdate — the engine/cluster resiliency mechanisms end to end."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import Completeness, SLOConfig, ShapeConfig, get_smoke_arch
+from repro.configs.registry import make_run
+from repro.core import regions as R
+from repro.core.autoscaler import DS2Scaler, OpMetrics, ScalerConfig
+from repro.core.chaos import ChaosEngine, ChaosSpec
+from repro.core.clock import VirtualClock
+from repro.core.lazyload import LazyRestorer
+from repro.core.region_checkpoint import RegionCheckpointer
+from repro.core.replication import ReplicationManager, TimingModel
+from repro.core.single_task_recovery import MultiWorkerTrainer, RecoveryTiming
+from repro.core.slo import InfeasibleSLO, policy_for
+from repro.ckpt.storage import SimHDFS
+from repro.models import build
+
+
+# ----------------------------------------------------------------------
+# SLO decision table (paper Table I)
+# ----------------------------------------------------------------------
+def test_slo_table():
+    p = policy_for(SLOConfig(Completeness.PARTIAL, 0.1, 0.5))
+    assert p.replication == "active" and p.recovery == "single_task"
+    p = policy_for(SLOConfig(Completeness.FULL, 1.0, 30.0))
+    assert p.replication == "passive" and p.recovery == "region"
+    assert p.rescue_overflow
+    p = policy_for(SLOConfig(Completeness.FULL, 60.0, 7200.0))
+    assert p.ckpt_mode == "global" and p.ckpt_interval_s >= 600
+    with pytest.raises(InfeasibleSLO):
+        policy_for(SLOConfig(Completeness.PARTIAL, 60.0, 7200.0))
+
+
+# ----------------------------------------------------------------------
+# DS2 autoscaler
+# ----------------------------------------------------------------------
+def _metrics(rate, par, true_rate, backlog=0.0, bp=False):
+    # busy time such that processed/busy == true_rate per task
+    processed = min(rate, par * true_rate) * 60
+    busy = processed / true_rate
+    return [OpMetrics("op", rate, processed, busy, par, backlog, bp)]
+
+
+def test_ds2_scales_up_to_demand():
+    sc = DS2Scaler(ScalerConfig(cooldown_s=0, window=1, ewma_alpha=1.0))
+    d = sc.observe(0.0, _metrics(rate=10_000, par=4, true_rate=100))
+    assert d and d[0].new >= int(10_000 / 100 / 0.9)
+
+
+def test_ds2_scales_down_and_veto():
+    sc = DS2Scaler(ScalerConfig(cooldown_s=0, window=1, ewma_alpha=1.0))
+    d = sc.observe(0.0, _metrics(rate=800, par=64, true_rate=100))
+    assert d and d[0].new < 64
+    veto = DS2Scaler(ScalerConfig(cooldown_s=0, ewma_alpha=1.0),
+                     shrink_veto=lambda t: True)
+    assert veto.observe(0.0, _metrics(rate=800, par=64, true_rate=100)) == []
+
+
+def test_ds2_hysteresis_and_cooldown():
+    sc = DS2Scaler(ScalerConfig(cooldown_s=1000, hysteresis=0.5,
+                                ewma_alpha=1.0))
+    assert sc.observe(0.0, _metrics(rate=4100, par=50, true_rate=100)) == []
+    d = sc.observe(1.0, _metrics(rate=40_000, par=50, true_rate=100))
+    assert d
+    # cooldown blocks the immediate follow-up
+    assert sc.observe(2.0, _metrics(rate=80_000, par=d[0].new,
+                                    true_rate=100)) == []
+
+
+def test_ds2_rollback_and_breaker():
+    cfg = ScalerConfig(cooldown_s=0, ewma_alpha=1.0, breaker_failures=2)
+    sc = DS2Scaler(cfg)
+    d = sc.observe(0.0, _metrics(rate=50_000, par=10, true_rate=100))
+    assert d
+    rb = sc.notify_result("op", 1.0, success=False)
+    assert rb is not None and rb.new == 10, "failed resize rolls back"
+    sc.observe(2.0, _metrics(rate=90_000, par=10, true_rate=100))
+    sc.notify_result("op", 3.0, success=False)
+    assert sc.observe(4.0, _metrics(rate=90_000, par=10,
+                                    true_rate=100)) == [], "breaker open"
+
+
+# ----------------------------------------------------------------------
+# replication manager
+# ----------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def small_model():
+    m = build(get_smoke_arch("stablelm-1.6b"))
+    return m, m.init(jax.random.PRNGKey(0))
+
+
+def _checkpointer(tmp, model, clock):
+    regions = R.partition_regions(model.param_specs(), 3)
+    store = SimHDFS(tmp, clock=clock, chaos=ChaosEngine())
+    return RegionCheckpointer(store, "j", regions, clock=clock)
+
+
+def test_active_vs_passive_recovery_latency(small_model, tmp_path):
+    model, params = small_model
+    clock = VirtualClock()
+    timing = TimingModel(restore_bps=1e5)  # restore cost visible at smoke size
+    pol_a = policy_for(SLOConfig(Completeness.PARTIAL, 0.1, 0.5))
+    mgr_a = ReplicationManager(pol_a, _checkpointer(tmp_path / "a", model,
+                                                    clock),
+                               timing=timing, clock=clock)
+    pol_p = policy_for(SLOConfig(Completeness.FULL, 1.0, 30.0))
+    mgr_p = ReplicationManager(pol_p, _checkpointer(tmp_path / "p", model,
+                                                    clock),
+                               timing=timing, clock=clock)
+    state = params
+    for step in range(3):
+        mgr_a.on_step(step, state)
+        mgr_p.on_step(step, state)
+        clock.sleep(60)
+    _, oc_a = mgr_a.on_failure(3, params)
+    _, oc_p = mgr_p.on_failure(3, params)
+    assert oc_a.downtime_s < oc_p.downtime_s, \
+        "active replication must recover faster than passive"
+    assert oc_a.mode == "active" and oc_p.mode == "passive"
+
+
+# ----------------------------------------------------------------------
+# single-task recovery (Fig 9 semantics on a real jax trainer)
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("mode", ["single_task", "global_restart"])
+def test_single_task_recovery_qps(mode, small_model):
+    model, _ = small_model
+    run = make_run("stablelm-1.6b", "train_4k")
+    run = dataclasses.replace(run, model=model.cfg,
+                              shape=ShapeConfig("s", 16, 2, "train"))
+    chaos = ChaosEngine(ChaosSpec(seed=0, host_kill_at=((5.0, 1),)))
+    tr = MultiWorkerTrainer(model, run, n_workers=4, mode=mode,
+                            step_time_s=1.0, chaos=chaos,
+                            timing=RecoveryTiming(global_restore_s=10,
+                                                  global_replay_s=10))
+    trace = tr.run_for(30.0)
+    qps = np.array([p["qps"] for p in trace])
+    full = qps.max()
+    if mode == "global_restart":
+        assert (qps == 0).sum() >= 10, "global restart zeroes throughput"
+    else:
+        assert (qps == 0).sum() == 0, "survivors keep processing"
+        assert qps.min() >= full * (3 / 4) - 1e-6, "dip bounded by 1/N"
+    assert qps[-1] == full, "throughput recovers"
+
+
+def test_str_worker_rejoins_with_peer_params(small_model):
+    model, _ = small_model
+    run = make_run("stablelm-1.6b", "train_4k")
+    run = dataclasses.replace(run, model=model.cfg,
+                              shape=ShapeConfig("s", 16, 2, "train"))
+    chaos = ChaosEngine(ChaosSpec(seed=0, host_kill_at=((3.0, 0),)))
+    tr = MultiWorkerTrainer(model, run, n_workers=3, mode="single_task",
+                            step_time_s=1.0, chaos=chaos)
+    tr.run_for(20.0)
+    p0 = jax.tree.leaves(tr.workers[0].params)
+    p1 = jax.tree.leaves(tr.workers[1].params)
+    assert all(np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(p0, p1)), "rebuilt replica == healthy peer"
+
+
+# ----------------------------------------------------------------------
+# lazyload
+# ----------------------------------------------------------------------
+def test_lazyload_matches_eager(small_model, tmp_path):
+    model, params = small_model
+    clock = VirtualClock()
+    ck = _checkpointer(tmp_path / "l", model, clock)
+    ck.save(1, params)
+    eager, _ = ck.restore(params, gamma="full")
+    lazy = LazyRestorer(ck, params, gamma="full")
+    tree = lazy.wait_all()
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(eager)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert len(lazy.timeline) == len(ck.regions)
+
+
+def test_lazyload_priority_order_ready_first(small_model, tmp_path):
+    model, params = small_model
+    clock = VirtualClock()
+    ck = _checkpointer(tmp_path / "l2", model, clock)
+    ck.save(1, params)
+    lazy = LazyRestorer(ck, params, gamma="full", priority=[2, 1, 0],
+                        max_workers=1)
+    lazy.wait_region(2)
+    assert 2 in lazy.ready_regions()
+    lazy.wait_all()
+
+
+# ----------------------------------------------------------------------
+# hotupdate
+# ----------------------------------------------------------------------
+def test_hotupdate_reuses_executable_and_state(small_model):
+    from repro.core.hotupdate import HotUpdateManager
+    model, params = small_model
+    mgr = HotUpdateManager()
+
+    def make_step():
+        @jax.jit
+        def step(state, x):
+            return jax.tree.map(lambda p: p * 0.999, state), x.sum()
+        return step
+
+    x = jnp.ones((8, 8))
+    cold = mgr.deploy("v1", make_step, params, (x,), reuse_state=False)
+    hot = mgr.deploy("v1", make_step, params, (x,))
+    assert hot.kind == "hot" and cold.kind == "cold"
+    assert mgr.cache.hits == 1
+    assert hot.total_s < cold.total_s
+    # new business logic: recompiles but still reuses device state
+    hot2 = mgr.deploy("v2", make_step, params, (x,))
+    assert hot2.kind == "hot" and mgr.cache.misses == 2
