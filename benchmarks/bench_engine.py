@@ -1,0 +1,83 @@
+"""Stream-engine hot-path benchmark: ticks/sec of the vectorized
+routing-plan engine vs the pre-refactor per-edge interpreter
+(`streams/reference_engine.py`), at 100 / 1k / 10k tasks.
+
+The graph mixes the paper's partitioners (hash keyBy with Zipf skew,
+WeakHash groups, backlog shuffle, Group-Rescale) so every routing path is
+on the clock. Emits the usual CSV rows through benchmarks/run.py and
+additionally writes ``results/bench_engine.json`` for the perf trajectory.
+
+Quick mode (REPRO_BENCH_QUICK=1 or --quick on run.py) drops the 10k-task
+cell and shrinks tick counts so the whole module runs in a few seconds.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import time
+
+from repro.streams.engine import StreamEngine
+from repro.streams.graph import LogicalEdge, LogicalGraph, LogicalOp
+from repro.streams.reference_engine import ReferenceStreamEngine
+
+
+def bench_graph(n_tasks: int) -> LogicalGraph:
+    """5-op chain exercising hash / weakhash / backlog / group_rescale."""
+    par = max(n_tasks // 5, 1)
+    sr = 1.5e5
+    return LogicalGraph(
+        "bench_mixed",
+        ops=(LogicalOp("source", par, sr, is_source=True, source_rate=0.8e6),
+             LogicalOp("keyed", par, sr, selectivity=0.9),
+             LogicalOp("agg", par, sr, selectivity=0.5),
+             LogicalOp("writer", par, sr, selectivity=1.0),
+             LogicalOp("sink", par, sr)),
+        edges=(LogicalEdge("source", "keyed", "hash", key_skew_zipf=0.8),
+               LogicalEdge("keyed", "agg", "weakhash", n_groups=8),
+               LogicalEdge("agg", "writer", "backlog"),
+               LogicalEdge("writer", "sink", "group_rescale", n_groups=8)))
+
+
+def _ticks_per_sec(cls, n_tasks: int, n_ticks: int, repeats: int = 3) -> float:
+    eng = cls(bench_graph(n_tasks), n_hosts=max(n_tasks // 10, 4))
+    eng.run(5 * eng.dt)  # warm caches / buffers
+    best = 0.0
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(n_ticks):
+            eng.tick()
+        best = max(best, n_ticks / (time.perf_counter() - t0))
+    return best
+
+
+def quick_mode() -> bool:
+    return os.environ.get("REPRO_BENCH_QUICK", "") not in ("", "0")
+
+
+def run():
+    quick = quick_mode()
+    cells = [(100, 500, 4000), (1000, 60, 4000)]
+    if not quick:
+        cells = [(100, 1000, 10000), (1000, 150, 10000), (10000, 10, 1500)]
+    rows, record = [], {"cells": []}
+    for n_tasks, n_ref, n_vec in cells:
+        ref = _ticks_per_sec(ReferenceStreamEngine, n_tasks, n_ref,
+                             repeats=1 if quick else 3)
+        vec = _ticks_per_sec(StreamEngine, n_tasks, n_vec,
+                             repeats=1 if quick else 3)
+        speedup = vec / ref
+        rows.append((f"engine/tick/{n_tasks}tasks", 1e6 / vec,
+                     f"ticks_s={vec:.0f};ref_ticks_s={ref:.0f};"
+                     f"speedup={speedup:.1f}x"))
+        record["cells"].append({"n_tasks": n_tasks, "ticks_s": vec,
+                                "ref_ticks_s": ref, "speedup": speedup})
+    out = pathlib.Path("results")
+    out.mkdir(parents=True, exist_ok=True)
+    (out / "bench_engine.json").write_text(json.dumps(record, indent=1))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

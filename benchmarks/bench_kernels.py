@@ -12,8 +12,9 @@ import numpy as np
 
 
 def _time(fn, *args, iters=3):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    # one warmup call; block on the whole result pytree (the old version
+    # called fn twice during warmup and only synced tuple results' first leaf)
+    jax.block_until_ready(fn(*args))
     t0 = time.perf_counter()
     for _ in range(iters):
         jax.block_until_ready(fn(*args))

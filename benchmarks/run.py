@@ -2,9 +2,13 @@
 
 Prints ``name,us_per_call,derived`` CSV (derived = the reproduced headline
 metric of that table/figure).
+
+``--quick`` runs a fast smoke subset (sets REPRO_BENCH_QUICK=1, which
+modules may honor to shrink their workloads) — used by scripts/ci.sh.
 """
 from __future__ import annotations
 
+import os
 import sys
 import traceback
 
@@ -17,16 +21,26 @@ MODULES = [
     "benchmarks.bench_weakhash",            # §III-A WeakHash
     "benchmarks.bench_hotupdate",           # §III-C HotUpdate
     "benchmarks.bench_lazyload",            # §III-B State LazyLoad
+    "benchmarks.bench_engine",              # stream-engine hot path
     "benchmarks.bench_kernels",             # §V-C micro benchmarking
+]
+
+QUICK_MODULES = [
+    "benchmarks.bench_engine",              # vectorized vs reference engine
+    "benchmarks.bench_weakhash",            # WeakHash assignment path
+    "benchmarks.bench_hotupdate",           # pure-python, fast
 ]
 
 
 def main() -> None:
     import importlib
 
+    quick = "--quick" in sys.argv[1:]
+    if quick:
+        os.environ["REPRO_BENCH_QUICK"] = "1"
     print("name,us_per_call,derived")
     failures = 0
-    for mod_name in MODULES:
+    for mod_name in (QUICK_MODULES if quick else MODULES):
         try:
             mod = importlib.import_module(mod_name)
             for name, us, derived in mod.run():

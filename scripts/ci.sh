@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# Tier-1 CI: test suite + quick benchmark smoke.
+#
+#   scripts/ci.sh            # non-slow tests + quick benches
+#   scripts/ci.sh --full     # include the slow multi-device subprocess tests
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+if [[ "${1:-}" == "--full" ]]; then
+  python -m pytest -x -q
+else
+  python -m pytest -x -q -m "not slow"
+fi
+
+echo "== quick benchmark smoke =="
+PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" python benchmarks/run.py --quick
+
+echo "CI OK"

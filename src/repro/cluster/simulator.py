@@ -142,17 +142,16 @@ class ClusterSim:
 
 def nexmark_edges(n_tasks_per_op: int, n_ops: int = 3) -> list[EdgeDescriptor]:
     """Physical-plan edges of a Nexmark-style chain (one edge object per task
-    pair on all-to-all hops, per task on forward hops)."""
-    edges = []
+    pair on all-to-all hops, per task on forward hops). The per-hop edge
+    descriptors are structurally identical, so build one and replicate —
+    an all-to-all hop at n=2048 is 4.2M descriptors; constructing them
+    one-by-one dominated large startup benches."""
+    edges: list[EdgeDescriptor] = []
     for i in range(n_ops - 1):
         part = "hash" if i % 2 else "forward"
-        if part == "forward":
-            for t in range(n_tasks_per_op):
-                edges.append(EdgeDescriptor(f"op{i}", f"op{i+1}", part,
-                                            ("bid", "price", "ts")))
-        else:
-            for s in range(n_tasks_per_op):
-                for d in range(n_tasks_per_op):
-                    edges.append(EdgeDescriptor(f"op{i}", f"op{i+1}", part,
-                                                ("bid", "price", "ts")))
+        count = (n_tasks_per_op if part == "forward"
+                 else n_tasks_per_op * n_tasks_per_op)
+        proto = EdgeDescriptor(f"op{i}", f"op{i+1}", part,
+                               ("bid", "price", "ts"))
+        edges.extend([proto] * count)
     return edges

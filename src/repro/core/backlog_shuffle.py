@@ -115,13 +115,20 @@ class KeyHash:
 
 
 class WeakHash:
-    """Key → bounded candidate group → least-loaded member (paper §III-A)."""
+    """Key → bounded candidate group → least-loaded member (paper §III-A).
+
+    Uses the vectorized water-fill assignment by default (exact per-task
+    counts, task-major key order within a batch); pass ``sequential=True``
+    for strict arrival-order greedy semantics (slow, reference path).
+    """
     name = "weakhash"
 
-    def __init__(self, n_groups: int):
+    def __init__(self, n_groups: int, sequential: bool = False):
         self.n_groups = n_groups
+        self.sequential = sequential
 
     def assign(self, n: int, st: ChannelState, keys=None) -> np.ndarray:
         assert keys is not None
         return wh.weakhash_assign(np.asarray(keys), st.n_down, self.n_groups,
-                                  loads=st.backlog.astype(np.float64))
+                                  loads=st.backlog.astype(np.float64),
+                                  sequential=self.sequential)

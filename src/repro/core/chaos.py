@@ -43,6 +43,16 @@ class ChaosEngine:
             return self.spec.storage_slow_factor
         return 1.0
 
+    def storage_latency_factors(self, n: int) -> np.ndarray:
+        """Vectorized batch of `n` latency factors. Draw-for-draw equivalent
+        to `n` sequential `storage_latency_factor()` calls (numpy Generators
+        produce the same stream for `random(n)` as for n scalar draws), so
+        the vectorized engine stays bit-identical to the reference."""
+        if not self.spec.storage_slow_prob:
+            return np.ones(n)
+        slow = self._rng.random(n) < self.spec.storage_slow_prob
+        return np.where(slow, self.spec.storage_slow_factor, 1.0)
+
     def storage_fails(self) -> bool:
         return bool(self.spec.storage_fail_prob
                     and self._rng.random() < self.spec.storage_fail_prob)

@@ -64,8 +64,12 @@ class InternedPlan:
 def intern_plan(edges: list[EdgeDescriptor],
                 per_edge_bytes: int = 2048) -> InternedPlan:
     unique: dict[str, EdgeDescriptor] = {}
-    for e in edges:
-        unique.setdefault(e.structural_key(), e)
+    key_memo: dict[int, str] = {}   # plans replicate shared descriptor
+    for e in edges:                 # objects; hash each body only once
+        k = key_memo.get(id(e))
+        if k is None:
+            k = key_memo[id(e)] = e.structural_key()
+        unique.setdefault(k, e)
     n, u = len(edges), len(unique)
     # interned: one body per unique edge + an 8-byte reference per instance
     return InternedPlan(n, u, u * per_edge_bytes + n * 8, n * per_edge_bytes)

@@ -71,17 +71,37 @@ class BackpressurePipeline:
         self._drain_credit = np.zeros(cfg.n_hosts)
 
     def pump(self, n_batches: int = 1) -> None:
-        """Produce n batches and route them to host queues."""
+        """Produce n batches and route them to host queues (backlog
+        refreshed between batches — the fine-grained reference path)."""
+        lens = np.array([len(q) for q in self.queues], np.int64)
         for _ in range(n_batches):
-            self.state.backlog = np.array([len(q) for q in self.queues])
+            self.state.backlog = lens
             host = int(self.router.assign(1, self.state)[0])
-            if len(self.queues[host]) >= self.cfg.queue_cap:
+            if lens[host] >= self.cfg.queue_cap:
                 # credit exhausted → stall (backpressure to the producer)
                 self.stalls += 1
-                order = np.argsort([len(q) for q in self.queues])
-                host = int(order[0])
+                host = int(np.argmin(lens))
             self.queues[host].append(self.source.next())
+            lens[host] += 1
             self.produced += 1
+
+    def pump_chunked(self, n_batches: int) -> None:
+        """Vectorized pump: route the whole chunk in ONE `router.assign`
+        call against the chunk-start backlog (the quota logic inside
+        BacklogShuffle was built for exactly this), then apply credit caps.
+        Overflowing batches stall and divert to the least-backlogged hosts.
+        Semantically this is the coarse-credit variant of `pump` — backlog
+        feedback is per chunk, not per batch."""
+        lens = np.array([len(q) for q in self.queues], np.int64)
+        self.state.backlog = lens
+        hosts = np.asarray(self.router.assign(n_batches, self.state))
+        for host in hosts:
+            if lens[host] >= self.cfg.queue_cap:
+                self.stalls += 1
+                host = int(np.argmin(lens))
+            self.queues[host].append(self.source.next())
+            lens[host] += 1
+        self.produced += n_batches
 
     def drain_step(self) -> list[dict]:
         """Each host consumes according to its drain rate (stragglers lag)."""

@@ -1,0 +1,13 @@
+"""Distributed substrate: logical-axis sharding + pipeline parallelism."""
+from repro.dist import sharding  # noqa: F401
+from repro.dist.sharding import (  # noqa: F401
+    DEFAULT_RULES,
+    NO_SHARDING,
+    ParamSpec,
+    ShardingCtx,
+    batch_axes_for,
+    tree_abstract,
+    tree_init,
+    tree_pspecs,
+    tree_shardings,
+)

@@ -1,13 +1,23 @@
-"""Pallas TPU WeakHash routing kernels (integer outputs; differentiable
+"""Pallas TPU WeakHash routing kernel (integer outputs; differentiable
 combine weights are reconstructed outside from the router probabilities).
 
-Two phases, both gridded over token tiles:
-  1. demand: group-masked argmax histogram over all tokens (sequential
-     accumulation into an (E,) scratch — the load estimate).
-  2. select: demand-penalized scores → iterative top-k → arrival-order
-     slot positions via an (E,) running-count scratch that carries across
-     the sequential token-tile grid (matching the oracle's token-major
-     cumsum exactly).
+Single fused ``pallas_call`` over a ``(2, nt)`` phase-major grid (TPU grids
+iterate the last dimension fastest, so all of phase 0 runs before phase 1):
+
+  phase 0 (demand): group-masked argmax histogram over all token tiles,
+     accumulated into an (E,) VMEM scratch — the load estimate. The final
+     demand never round-trips through HBM between phases (the pre-fusion
+     version ran two kernels and re-read the (E,) demand from HBM on every
+     select tile); it is exported once as an output for the API.
+  phase 1 (select): demand-penalized scores → iterative top-k → arrival-
+     order slot positions via an (E,) running-count scratch that carries
+     across the sequential token-tile grid (matching the oracle's
+     column-major cumsum exactly). The per-selection prefix cumsum is
+     HOISTED out of the top-k loop: the k onehot matrices are stacked
+     (k·bt, E) column-major and one cumsum produces every position.
+
+When the whole token axis fits one tile (nt == 1) both phases run on a
+single resident block, so the logits are read from HBM exactly once.
 
 VPU-only (no MXU); token tiles are 8×128-aligned.
 """
@@ -34,64 +44,67 @@ def _group_mask(keys, n_groups, E, gsz):
     return eg == gid[:, None], gid
 
 
-def _demand_kernel(logits_ref, keys_ref, dem_ref, dem_scr, *,
-                   n_groups, E, gsz, nt, use_groups):
-    t = pl.program_id(0)
+def _fused_kernel(logits_ref, keys_ref, idx_ref, pos_ref, gid_ref, dem_ref,
+                  dem_scr, count_scr, *, top_k, capacity, n_groups, E, gsz,
+                  nt, load_penalty, mode, use_groups):
+    phase = pl.program_id(0)
+    t = pl.program_id(1)
 
-    @pl.when(t == 0)
+    @pl.when(jnp.logical_and(phase == 0, t == 0))
     def _init():
         dem_scr[...] = jnp.zeros_like(dem_scr)
-
-    logits = logits_ref[...]
-    if use_groups:
-        mask, _ = _group_mask(keys_ref[...], n_groups, E, gsz)
-        logits = jnp.where(mask, logits, NEG_INF)
-    top1 = jnp.argmax(logits, axis=-1)                          # (bt,)
-    onehot = (top1[:, None]
-              == jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1))
-    dem_scr[...] += jnp.sum(onehot.astype(jnp.float32), axis=0)
-
-    @pl.when(t == nt - 1)
-    def _fin():
-        dem_ref[...] = dem_scr[...]
-
-
-def _select_kernel(logits_ref, keys_ref, dem_ref, idx_ref, pos_ref, gid_ref,
-                   count_scr, *, top_k, capacity, n_groups, E, gsz,
-                   load_penalty, mode):
-    t = pl.program_id(0)
-
-    @pl.when(t == 0)
-    def _init():
         count_scr[...] = jnp.zeros_like(count_scr)
 
     logits = logits_ref[...].astype(jnp.float32)                # (bt, E)
     bt = logits.shape[0]
-    if mode == "weakhash":
+    if use_groups:
         mask, gid = _group_mask(keys_ref[...], n_groups, E, gsz)
         masked = jnp.where(mask, logits, NEG_INF)
-        scores = masked - load_penalty * (dem_ref[...][None, :]
-                                          / float(max(capacity, 1)))
     else:
         masked = logits
-        scores = logits
         gid = jnp.zeros((bt,), jnp.int32)
     gid_ref[...] = gid
-
-    counts = count_scr[...]                                     # (E,) f32
     eye = jax.lax.broadcasted_iota(jnp.int32, (bt, E), 1)
-    sel = scores
-    for j in range(top_k):
-        e_j = jnp.argmax(sel, axis=-1).astype(jnp.int32)        # (bt,)
-        onehot = (eye == e_j[:, None]).astype(jnp.float32)
-        # arrival positions: running count + exclusive prefix within tile
-        prefix = jnp.cumsum(onehot, axis=0) - onehot
-        pos_j = jnp.sum((counts[None, :] + prefix) * onehot, axis=-1)
-        idx_ref[:, j] = e_j
-        pos_ref[:, j] = pos_j.astype(jnp.int32)
-        counts = counts + jnp.sum(onehot, axis=0)
-        sel = jnp.where(eye == e_j[:, None], NEG_INF, sel)
-    count_scr[...] = counts
+
+    @pl.when(phase == 0)
+    def _demand():
+        top1 = jnp.argmax(masked, axis=-1)                      # (bt,)
+        onehot = (top1[:, None] == eye)
+        dem_scr[...] += jnp.sum(onehot.astype(jnp.float32), axis=0)
+        # deterministic phase-0 writeback for the revisited output tiles
+        idx_ref[...] = jnp.zeros_like(idx_ref)
+        pos_ref[...] = jnp.zeros_like(pos_ref)
+
+        @pl.when(t == nt - 1)
+        def _export():
+            dem_ref[...] = dem_scr[...]
+
+    @pl.when(phase == 1)
+    def _select():
+        if mode == "weakhash":
+            scores = masked - load_penalty * (dem_scr[...][None, :]
+                                              / float(max(capacity, 1)))
+        else:
+            scores = masked
+
+        counts = count_scr[...]                                 # (E,) f32
+        sel = scores
+        onehots = []
+        for j in range(top_k):
+            e_j = jnp.argmax(sel, axis=-1).astype(jnp.int32)    # (bt,)
+            idx_ref[:, j] = e_j
+            onehots.append((eye == e_j[:, None]).astype(jnp.float32))
+            sel = jnp.where(eye == e_j[:, None], NEG_INF, sel)
+        # positions: ONE column-major cumsum over the stacked selections
+        # replaces the per-j cumsum the loop used to carry (row (j, t) sees
+        # every selection of earlier columns plus earlier tokens of its own
+        # column — exactly the reference's arrival order)
+        stacked = jnp.concatenate(onehots, axis=0)              # (k·bt, E)
+        prefix = jnp.cumsum(stacked, axis=0) - stacked
+        pos_flat = jnp.sum((counts[None, :] + prefix) * stacked, axis=-1)
+        for j in range(top_k):
+            pos_ref[:, j] = pos_flat[j * bt:(j + 1) * bt].astype(jnp.int32)
+        count_scr[...] = counts + jnp.sum(stacked, axis=0)
 
 
 def weakhash_route_ints(logits, *, top_k, capacity, n_groups=1,
@@ -114,35 +127,26 @@ def weakhash_route_ints(logits, *, top_k, capacity, n_groups=1,
             else jnp.zeros((T,), jnp.int32))
     use_groups = mode == "weakhash" and n_groups > 1
 
-    demand = pl.pallas_call(
-        functools.partial(_demand_kernel, n_groups=n_groups, E=E, gsz=gsz,
-                          nt=nt, use_groups=use_groups),
-        grid=(nt,),
-        in_specs=[pl.BlockSpec((bt, E), lambda t: (t, 0)),
-                  pl.BlockSpec((bt,), lambda t: (t,))],
-        out_specs=pl.BlockSpec((E,), lambda t: (0,)),
-        out_shape=jax.ShapeDtypeStruct((E,), jnp.float32),
-        scratch_shapes=[pltpu_scratch((E,), jnp.float32)],
-        interpret=interpret,
-    )(logits.astype(jnp.float32), keys.astype(jnp.int32))
-
-    idx, pos, gid = pl.pallas_call(
-        functools.partial(_select_kernel, top_k=top_k, capacity=capacity,
-                          n_groups=n_groups, E=E, gsz=gsz,
-                          load_penalty=load_penalty, mode=mode),
-        grid=(nt,),
-        in_specs=[pl.BlockSpec((bt, E), lambda t: (t, 0)),
-                  pl.BlockSpec((bt,), lambda t: (t,)),
-                  pl.BlockSpec((E,), lambda t: (0,))],
-        out_specs=[pl.BlockSpec((bt, top_k), lambda t: (t, 0)),
-                   pl.BlockSpec((bt, top_k), lambda t: (t, 0)),
-                   pl.BlockSpec((bt,), lambda t: (t,))],
+    idx, pos, gid, demand = pl.pallas_call(
+        functools.partial(_fused_kernel, top_k=top_k, capacity=capacity,
+                          n_groups=n_groups, E=E, gsz=gsz, nt=nt,
+                          load_penalty=load_penalty, mode=mode,
+                          use_groups=use_groups),
+        grid=(2, nt),
+        in_specs=[pl.BlockSpec((bt, E), lambda p, t: (t, 0)),
+                  pl.BlockSpec((bt,), lambda p, t: (t,))],
+        out_specs=[pl.BlockSpec((bt, top_k), lambda p, t: (t, 0)),
+                   pl.BlockSpec((bt, top_k), lambda p, t: (t, 0)),
+                   pl.BlockSpec((bt,), lambda p, t: (t,)),
+                   pl.BlockSpec((E,), lambda p, t: (0,))],
         out_shape=[jax.ShapeDtypeStruct((T, top_k), jnp.int32),
                    jax.ShapeDtypeStruct((T, top_k), jnp.int32),
-                   jax.ShapeDtypeStruct((T,), jnp.int32)],
-        scratch_shapes=[pltpu_scratch((E,), jnp.float32)],
+                   jax.ShapeDtypeStruct((T,), jnp.int32),
+                   jax.ShapeDtypeStruct((E,), jnp.float32)],
+        scratch_shapes=[pltpu_scratch((E,), jnp.float32),
+                        pltpu_scratch((E,), jnp.float32)],
         interpret=interpret,
-    )(logits.astype(jnp.float32), keys.astype(jnp.int32), demand)
+    )(logits.astype(jnp.float32), keys.astype(jnp.int32))
     return idx, pos, gid, demand
 
 

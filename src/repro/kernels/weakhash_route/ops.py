@@ -1,4 +1,9 @@
-"""jit-level wrapper for WeakHash routing with impl dispatch."""
+"""jit-level wrapper for WeakHash routing with impl dispatch.
+
+impl="ref" runs the jnp oracle; otherwise the fused single-pass Pallas
+kernel (kernel.py: demand + select share one launch and one (E,) VMEM
+scratch; interpret mode when impl="interpret").
+"""
 from __future__ import annotations
 
 from repro.kernels.common import resolve_impl

@@ -13,7 +13,10 @@ task". The MoE adaptation:
   the group-local demand estimate, diffusing hot keys across the group.
 
 All outputs are deterministic functions of (logits, prior loads) so the Pallas
-kernel and this oracle agree exactly.
+kernel and this oracle agree exactly. The kernel is a FUSED single pass
+(demand histogram + select in one launch; kernel.py) — its global-demand
+semantics are pinned to this oracle by tests/test_kernels.py and
+tests/test_engine_vectorized.py across tile counts.
 """
 from __future__ import annotations
 

@@ -1,10 +1,42 @@
-"""Credit-based stream engine (micro-tick, counts-vectorized).
+"""Credit-based stream engine — precompiled routing plan over a flat task
+arena (vectorized micro-tick simulator).
 
-Each tick (dt): sources emit, every task consumes from its bounded input
-queue at service_rate × host_speed and pushes downstream according to the
-edge's partitioner weights. Bounded queues give credit-based backpressure:
-when a downstream queue is full the upstream cannot emit into it and stalls
-(the paper's §III-A setting). Partitioner weight policies:
+Architecture
+------------
+`StreamEngine.__init__` lowers the logical graph into a static **routing
+plan** so that `tick()` touches no per-task, per-group or per-dst Python
+loops:
+
+* **Task arena** — one contiguous float array per state variable
+  (`queue`, `speed`, `down_until`, `qcap`), indexed by global task id.
+  Tasks of an op occupy a contiguous slice (`expand()` numbers them that
+  way), so per-op views are zero-copy slices of the arena.
+* **Op plan** — cached topo order plus per-op scalars (service rate,
+  selectivity, source rate, arena slice) resolved once.
+* **Edge plans** — for every logical edge the per-tick routing weight
+  matrix of the reference interpreter collapses analytically:
+
+    - all-to-all hops (rebalance / hash / weakhash / backlog) have
+      identical weight rows, so `produced @ W == produced.sum() * w_row`
+      — O(n_dst) instead of O(n_src · n_dst);
+    - blocky hops (rescale / group_rescale) reduce to CSR-style segment
+      sums over precomputed block boundaries (`np.bincount` /
+      `np.add.reduceat` / `np.minimum.reduceat`);
+    - forward is elementwise.
+
+  Static key-mass shares (Zipf-skewed `keyBy`) and per-group mass sums
+  are precomputed into the plan.
+* **Metric buffers** — metrics append into preallocated, doubling numpy
+  buffers (`EngineMetrics`); per-tick cost is one row write instead of
+  O(ops) list appends, and consumers get zero-copy array views.
+
+Semantics are pinned (within float round-off) to the per-edge reference
+interpreter preserved in `streams/reference_engine.py`; see
+`tests/test_engine_vectorized.py`. Each tick (dt): sources emit, every task
+consumes from its bounded input queue at service_rate × host_speed and
+pushes downstream according to the edge's partitioner weights. Bounded
+queues give credit-based backpressure (paper §III-A). Partitioner weight
+policies:
 
   rebalance / rescale / group_rescale — uniform over connected tasks
   hash      — static weights ∝ hashed key mass (Zipf-skewed when configured)
@@ -23,7 +55,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from collections import defaultdict
 
 import numpy as np
 
@@ -47,18 +78,114 @@ class CheckpointConfig:
     retry_failed_region: bool = True
 
 
-@dataclasses.dataclass
+class _Series(dict):
+    """Read-mostly mapping op name → metric column view."""
+
+
 class EngineMetrics:
-    t: list = dataclasses.field(default_factory=list)
-    qps: dict = dataclasses.field(default_factory=lambda: defaultdict(list))
-    backlog: dict = dataclasses.field(default_factory=lambda: defaultdict(list))
-    source_lag: list = dataclasses.field(default_factory=list)
-    dropped: float = 0.0
-    emitted: float = 0.0
-    ckpt_attempts: int = 0
-    ckpt_success: int = 0
-    ckpt_failed: int = 0
-    recoveries: list = dataclasses.field(default_factory=list)
+    """Preallocated per-tick metric buffers.
+
+    `t`, `source_lag` and the per-op `qps` / `backlog` entries are numpy
+    array views (zero-copy, trimmed to the ticks recorded so far) — they
+    support the same indexing/aggregation the old list-based metrics did.
+    """
+
+    def __init__(self, op_names: list[str], capacity: int = 1024):
+        self._ops = list(op_names)
+        self._col = {n: j for j, n in enumerate(self._ops)}
+        self._n = 0
+        cap = max(capacity, 16)
+        self._t = np.zeros(cap)
+        self._lag = np.zeros(cap)
+        self._qps = np.zeros((cap, len(self._ops)))
+        self._backlog = np.zeros((cap, len(self._ops)))
+        self.dropped = 0.0
+        self.emitted = 0.0
+        self.ckpt_attempts = 0
+        self.ckpt_success = 0
+        self.ckpt_failed = 0
+        self.recoveries: list[dict] = []
+
+    # -- recording (engine-internal) -----------------------------------
+    def _reserve(self, n_more: int) -> None:
+        need = self._n + n_more
+        if need <= len(self._t):
+            return
+        cap = max(need, 2 * len(self._t))
+        grow = lambda a: np.concatenate(  # noqa: E731
+            [a, np.zeros((cap - len(a),) + a.shape[1:])])
+        self._t, self._lag = grow(self._t), grow(self._lag)
+        self._qps, self._backlog = grow(self._qps), grow(self._backlog)
+
+    def _record(self, t: float, qps_row: np.ndarray, backlog_row: np.ndarray,
+                lag: float) -> None:
+        self._reserve(1)
+        i = self._n
+        self._t[i] = t
+        self._lag[i] = lag
+        self._qps[i] = qps_row
+        self._backlog[i] = backlog_row
+        self._n = i + 1
+
+    # -- views ----------------------------------------------------------
+    @property
+    def t(self) -> np.ndarray:
+        return self._t[:self._n]
+
+    @property
+    def source_lag(self) -> np.ndarray:
+        return self._lag[:self._n]
+
+    @property
+    def qps(self) -> _Series:
+        return _Series((n, self._qps[:self._n, j])
+                       for n, j in self._col.items())
+
+    @property
+    def backlog(self) -> _Series:
+        return _Series((n, self._backlog[:self._n, j])
+                       for n, j in self._col.items())
+
+
+@dataclasses.dataclass
+class _OpPlan:
+    name: str
+    lo: int
+    hi: int
+    par: int
+    is_source: bool
+    service_rate: float
+    selectivity: float
+    source_rate: float
+    out_edges: list["_EdgePlan"] = dataclasses.field(default_factory=list)
+    # precomputed all-alive fast-path rows (speed is static per run)
+    cap_row: np.ndarray | None = None       # service_rate·dt·speed
+    src_row: np.ndarray | None = None       # per-task source emission
+    src_sum: float = 0.0
+
+
+@dataclasses.dataclass
+class _EdgePlan:
+    kind: str                       # partitioner name
+    src: _OpPlan
+    dst: _OpPlan
+    static: bool                    # head-of-line acceptance family
+    share: np.ndarray | None = None         # hash: normalized key mass
+    raw_share: np.ndarray | None = None     # weakhash: unnormalized mass
+    grp_starts: np.ndarray | None = None    # weakhash/group_rescale segments
+    grp_mass: np.ndarray | None = None      # weakhash: per-group mass sums
+    grp_of_dst: np.ndarray | None = None    # weakhash/group_rescale: dst→grp
+    mass_of_dst: np.ndarray | None = None   # weakhash: grp_mass gathered
+    blk_of_src: np.ndarray | None = None    # rescale/group_rescale: src→blk
+    blk_of_dst: np.ndarray | None = None    # dst→blk (-1 = unconnected)
+    dst_in_blk: np.ndarray | None = None    # bool: dst has a block
+    any_unblocked: bool = False             # static: some dst has no block
+    blk_idx: np.ndarray | None = None       # blk_of_dst clipped to >= 0
+    n_blocks: int = 0
+    dst_qcap: float = 0.0                   # backlog threshold base
+    # per-edge scratch (reused every tick — avoids small-array allocations)
+    ratio_buf: np.ndarray | None = None
+    live_buf: np.ndarray | None = None
 
 
 class StreamEngine:
@@ -77,178 +204,330 @@ class StreamEngine:
         self.failover = failover or FailoverConfig()
         self.ckpt_cfg = ckpt
         self.rng = np.random.default_rng(seed)
-        self.metrics = EngineMetrics()
         self.t = 0.0
         self._next_ckpt = (self.ckpt_cfg.interval_s if ckpt else math.inf)
 
+        # ---- task arena ------------------------------------------------
+        order = graph.topo_order()
         ops = {o.name: o for o in graph.ops}
-        self.par = {n: ops[n].parallelism for n in ops}
-        # credit budget per task: a few ticks of service capacity (bounded
-        # buffers = credit-based flow control)
-        self.qcap = {n: max(ops[n].service_rate * dt * 4.0, queue_cap)
-                     for n in ops}
-        # per-op per-task state
-        self.queue = {n: np.zeros(self.par[n]) for n in ops}
-        self.down_until = {n: np.zeros(self.par[n]) for n in ops}
-        self.speed = {n: np.ones(self.par[n]) for n in ops}
+        n_tasks = len(self.phys.tasks)
+        # expand() numbers tasks contiguously per op, in graph.ops order
+        offs: dict[str, int] = {}
+        off = 0
+        for o in graph.ops:
+            offs[o.name] = off
+            off += o.parallelism
+        assert off == n_tasks
+
+        self._queue = np.zeros(n_tasks)
+        self._down_until = np.zeros(n_tasks)
+        self._speed = np.ones(n_tasks)
+        self._qcap = np.zeros(n_tasks)
+        for o in graph.ops:
+            self._qcap[offs[o.name]:offs[o.name] + o.parallelism] = \
+                max(o.service_rate * dt * 4.0, queue_cap)
         if task_speed_override:
-            for t in self.phys.tasks:
-                if t.task_id in task_speed_override:
-                    self.speed[t.op][t.index] = task_speed_override[t.task_id]
-        # chaos host stragglers
-        for t in self.phys.tasks:
-            self.speed[t.op][t.index] *= self.chaos.host_speed(t.host)
-        # hashed key-mass shares per keyed edge (Zipf skew)
-        self._key_share: dict[tuple[str, str], np.ndarray] = {}
-        for e in graph.edges:
-            if e.partitioner in ("hash", "weakhash") or e.key_skew_zipf:
-                nd = self.par[e.dst]
-                nkeys = max(nd * 64, 1024)
-                if e.key_skew_zipf > 0:
-                    mass = 1.0 / np.arange(1, nkeys + 1) ** e.key_skew_zipf
-                else:
-                    mass = np.ones(nkeys)
-                mass /= mass.sum()
-                owner = (np.arange(nkeys) * 2654435761 % nd).astype(int)
-                share = np.bincount(owner, weights=mass, minlength=nd)
-                self._key_share[(e.src, e.dst)] = share
+            for tk in self.phys.tasks:
+                if tk.task_id in task_speed_override:
+                    self._speed[tk.task_id] = task_speed_override[tk.task_id]
+        # chaos host stragglers (queried in task order — keeps the chaos rng
+        # stream identical to the reference engine)
+        for tk in self.phys.tasks:
+            self._speed[tk.task_id] *= self.chaos.host_speed(tk.host)
+
+        self._task_host = np.array([tk.host for tk in self.phys.tasks])
+        self._task_region = np.array(
+            [self.phys.task_region[tk.task_id] for tk in self.phys.tasks])
+        self._n_hosts = int(self._task_host.max()) + 1
+
+        # compat: per-op dict views aliasing the arena (tests / tooling)
+        self.par = {n: ops[n].parallelism for n in ops}
+        self.qcap = {n: float(self._qcap[offs[n]]) for n in ops}
+        self.queue = {n: self._queue[offs[n]:offs[n] + self.par[n]]
+                      for n in ops}
+        self.down_until = {n: self._down_until[offs[n]:offs[n] + self.par[n]]
+                           for n in ops}
+        self.speed = {n: self._speed[offs[n]:offs[n] + self.par[n]]
+                      for n in ops}
+
+        # ---- op + edge plans ------------------------------------------
+        self._ops: list[_OpPlan] = []
+        by_name: dict[str, _OpPlan] = {}
+        for name in order:
+            o = ops[name]
+            p = _OpPlan(name, offs[name], offs[name] + o.parallelism,
+                        o.parallelism, o.is_source, o.service_rate,
+                        o.selectivity, o.source_rate)
+            if o.is_source:
+                p.src_row = np.full(o.parallelism,
+                                    o.source_rate * dt / o.parallelism)
+                p.src_sum = float(p.src_row.sum())
+            else:
+                p.cap_row = o.service_rate * dt * \
+                    self._speed[p.lo:p.hi].copy()
+            self._ops.append(p)
+            by_name[name] = p
+        self._src_ops = [p for p in self._ops if p.is_source]
+
+        for name in order:
+            for e in graph.downstream(name):
+                by_name[name].out_edges.append(
+                    self._plan_edge(e, by_name[name], by_name[e.dst]))
+
+        # metric plumbing: one reduceat over the arena gives every op's
+        # backlog; permute arena (declaration) order → topo column order
+        arena_order = sorted(self._ops, key=lambda p: p.lo)
+        self._arena_starts = np.array([p.lo for p in arena_order])
+        topo_pos = {p.name: j for j, p in enumerate(self._ops)}
+        self._backlog_perm = np.argsort(
+            [topo_pos[p.name] for p in arena_order])
+        self._src_cols = np.array([j for j, p in enumerate(self._ops)
+                                   if p.is_source])
+
+        # per-tick reusable arena-sized scratch
+        self._alive_buf = np.empty(n_tasks, bool)
+        self._alive_f_buf = np.empty(n_tasks)
+        self._free_buf = np.empty(n_tasks)
+        self._qps_buf = np.zeros(len(self._ops))
+        self._true_buf = np.ones(n_tasks, bool)
+        self._ones_buf = np.ones(n_tasks)
+        self._max_down = 0.0          # latest down_until across the arena
+        spec = self.chaos.spec
+        self._chaos_kills_possible = bool(
+            spec.host_kill_at or spec.host_kill_prob_per_s)
+
+        self.metrics = EngineMetrics([p.name for p in self._ops])
+
+    # ------------------------------------------------------------------
+    def _plan_edge(self, e, src: _OpPlan, dst: _OpPlan) -> _EdgePlan:
+        nd = dst.par
+        ns = src.par
+        plan = _EdgePlan(
+            kind=e.partitioner, src=src, dst=dst,
+            static=e.partitioner in ("rebalance", "rescale", "forward",
+                                     "hash"),
+            dst_qcap=float(self._qcap[dst.lo]))
+        if e.partitioner in ("hash", "weakhash"):
+            # hashed key-mass share (identical construction to the
+            # reference engine — same bincount over the same Zipf mass)
+            nkeys = max(nd * 64, 1024)
+            if e.key_skew_zipf > 0:
+                mass = 1.0 / np.arange(1, nkeys + 1) ** e.key_skew_zipf
+            else:
+                mass = np.ones(nkeys)
+            mass /= mass.sum()
+            owner = (np.arange(nkeys) * 2654435761 % nd).astype(int)
+            share = np.bincount(owner, weights=mass, minlength=nd)
+            if e.partitioner == "hash":
+                plan.share = share / share.sum()
+            else:
+                plan.raw_share = share
+        if e.partitioner == "weakhash":
+            g = max(e.n_groups, 1)
+            starts = np.array([grp * nd // g for grp in range(g)])
+            bounds = np.append(starts, nd)
+            plan.grp_starts = starts
+            # per-group mass via the same slice-sum the reference performs
+            plan.grp_mass = np.array(
+                [plan.raw_share[bounds[i]:bounds[i + 1]].sum()
+                 for i in range(g)])
+            plan.grp_of_dst = np.searchsorted(starts, np.arange(nd),
+                                              side="right") - 1
+            plan.mass_of_dst = plan.grp_mass[plan.grp_of_dst]
+        if e.partitioner == "group_rescale":
+            g = max(e.n_groups, 1)
+            starts = np.array([grp * nd // g for grp in range(g)])
+            plan.grp_starts = starts
+            plan.grp_of_dst = np.searchsorted(starts, np.arange(nd),
+                                              side="right") - 1
+            plan.blk_of_src = np.arange(ns) * g // ns
+            plan.blk_of_dst = plan.grp_of_dst
+            plan.n_blocks = g
+        if e.partitioner == "rescale":
+            per = max(1, nd // ns)
+            src_lo = (np.arange(ns) * per) % nd
+            blocks, blk_of_src = np.unique(src_lo, return_inverse=True)
+            plan.blk_of_src = blk_of_src
+            plan.n_blocks = len(blocks)
+            blk_of_dst = np.full(nd, -1)
+            for b, lo in enumerate(blocks):
+                blk_of_dst[lo:lo + per] = b
+            plan.blk_of_dst = blk_of_dst
+        if plan.blk_of_dst is not None:
+            plan.dst_in_blk = plan.blk_of_dst >= 0
+            plan.any_unblocked = not bool(plan.dst_in_blk.all())
+            plan.blk_idx = np.clip(plan.blk_of_dst, 0, None)
+        plan.ratio_buf = np.empty(nd)
+        plan.live_buf = np.empty(nd, bool)
+        return plan
 
     # ------------------------------------------------------------------
     def _alive(self, op: str) -> np.ndarray:
         return self.down_until[op] <= self.t
 
-    def _edge_weights(self, e, free_down: np.ndarray) -> np.ndarray:
-        """Row-stochastic (n_src, n_dst) routing weights for this tick."""
-        conn = self.phys.channels[(e.src, e.dst)].astype(float)
-        ns, nd = conn.shape
-        alive_d = self._alive(e.dst).astype(float)
-        base = conn * alive_d[None, :]
-
-        if e.partitioner in ("rebalance", "rescale", "group_rescale",
-                             "forward"):
-            w = base
-        elif e.partitioner == "hash":
-            # strict keyBy: key→task binding cannot divert around dead or
-            # congested tasks (records to a dead task are lost under
-            # single-task recovery — the γ=partial trade)
-            share = self._key_share[(e.src, e.dst)]
-            w = conn * share[None, :]
-        elif e.partitioner == "weakhash":
-            # key mass per group redistributes within the group ∝ free space
-            share = self._key_share[(e.src, e.dst)]
-            g = e.n_groups
-            w = np.zeros_like(base)
-            for grp in range(g):
-                lo, hi = grp * nd // g, (grp + 1) * nd // g
-                mass = share[lo:hi].sum()
-                cap = np.maximum(free_down[lo:hi], 1e-9) * alive_d[lo:hi]
-                if cap.sum() <= 0:
-                    cap = alive_d[lo:hi] + 1e-9
-                w[:, lo:hi] = base[:, lo:hi] * (mass * cap / cap.sum())[None, :]
-        elif e.partitioner == "backlog":
-            cap = self.qcap[e.dst]
-            open_ = (free_down > cap * 0.25).astype(float)
-            w = base * np.maximum(free_down, 1e-9)[None, :] * \
-                np.maximum(open_, 0.05)[None, :]
+    # -- per-edge vectorized routing -----------------------------------
+    def _route(self, ep: _EdgePlan, produced: np.ndarray,
+               free_down: np.ndarray, alive_d: np.ndarray) -> np.ndarray:
+        """arriving (n_dst,) — the collapsed `produced @ W` of the
+        reference's row-stochastic weights."""
+        kind = ep.kind
+        if kind == "forward":
+            return produced * alive_d
+        if kind in ("rescale", "group_rescale"):
+            prod_blk = np.bincount(ep.blk_of_src, weights=produced,
+                                   minlength=ep.n_blocks)
+            alive_blk = np.bincount(ep.blk_idx[ep.dst_in_blk],
+                                    weights=alive_d[ep.dst_in_blk],
+                                    minlength=ep.n_blocks)
+            prod_blk[alive_blk <= 0] = 0.0
+            rate_blk = np.divide(prod_blk, alive_blk, out=prod_blk,
+                                 where=alive_blk > 0)
+            arriving = rate_blk[ep.blk_idx]
+            arriving *= alive_d
+            if ep.any_unblocked:
+                arriving[~ep.dst_in_blk] = 0.0
+            return arriving
+        # all-to-all family: identical weight rows → scale a single row
+        total = produced.sum()
+        if kind == "rebalance":
+            val = alive_d
+        elif kind == "hash":
+            # strict keyBy ignores dst liveness/congestion (γ=partial trade)
+            return total * ep.share
+        elif kind == "weakhash":
+            cap = np.maximum(free_down, 1e-9, out=ep.ratio_buf)
+            cap *= alive_d
+            capsum = np.add.reduceat(cap, ep.grp_starts)
+            # groups with zero capacity fall back to alive-uniform spread
+            # (only reachable when a whole group is down — cheap to branch)
+            if not capsum.all():
+                fall = capsum <= 0
+                cap = np.where(fall[ep.grp_of_dst], alive_d + 1e-9, cap)
+                capsum = np.where(fall, np.add.reduceat(alive_d + 1e-9,
+                                                        ep.grp_starts),
+                                  capsum)
+                cap *= alive_d   # dead dsts stay weightless (alive² = alive)
+            val = cap
+            val *= ep.mass_of_dst
+            val /= capsum[ep.grp_of_dst]
+        elif kind == "backlog":
+            open_ = np.greater(free_down, ep.dst_qcap * 0.25,
+                               out=ep.live_buf)
+            val = np.maximum(free_down, 1e-9, out=ep.ratio_buf)
+            val *= alive_d
+            val *= np.maximum(open_, 0.05)
         else:
-            raise ValueError(e.partitioner)
-        rs = w.sum(axis=1, keepdims=True)
-        return np.divide(w, rs, out=np.zeros_like(w), where=rs > 0)
+            raise ValueError(kind)
+        rs = val.sum()
+        return val * (total / rs) if rs > 0 else np.zeros_like(val)
+
+    def _accept(self, ep: _EdgePlan, arriving: np.ndarray,
+                room: np.ndarray) -> np.ndarray:
+        if ep.static:
+            # head-of-line blocking: the most congested live channel
+            # throttles the whole exchange (credit-based flow control)
+            live = np.greater(arriving, 1e-9, out=ep.live_buf)
+            ratio = ep.ratio_buf
+            ratio.fill(np.inf)
+            np.divide(room, arriving, out=ratio, where=live)
+            lam = float(ratio.min())
+            if lam >= 1.0:   # includes the no-live-channel case (all inf)
+                return arriving
+            return arriving * lam
+        if ep.kind == "group_rescale":
+            # blocking confined to each group (Fig 2c)
+            live = np.greater(arriving, 1e-9, out=ep.live_buf)
+            ratio = ep.ratio_buf
+            ratio.fill(np.inf)
+            np.divide(room, arriving, out=ratio, where=live)
+            lam_g = np.minimum(np.minimum.reduceat(ratio, ep.grp_starts), 1.0)
+            return arriving * lam_g[ep.grp_of_dst]
+        # adaptive routing (backlog/weakhash): channels accept up to their
+        # credits; remainder re-queues at the source for re-routing
+        return np.minimum(arriving, room)
 
     # ------------------------------------------------------------------
     def tick(self) -> None:
         dt = self.dt
-        g = self.g
-        order = g.topo_order()
-        free = {n: np.maximum(self.qcap[n] - self.queue[n], 0.0)
-                for n in order}
-        qps_tick = {n: 0.0 for n in order}
+        t = self.t
+        q = self._queue
+        all_alive = t >= self._max_down
+        if all_alive:
+            alive_all = self._true_buf
+            alive_f = self._ones_buf
+        else:
+            alive_all = np.less_equal(self._down_until, t,
+                                      out=self._alive_buf)
+            np.copyto(self._alive_f_buf, alive_all)   # bool → float cast
+            alive_f = self._alive_f_buf
+            all_alive = bool(alive_all.all())
+        free = np.subtract(self._qcap, q, out=self._free_buf)
+        np.maximum(free, 0.0, out=free)
+        qps_row = self._qps_buf
+        qps_row.fill(0.0)
         drop_tick = 0.0
+        single_task = self.failover.mode == "single_task"
+        emitted = 0.0
 
-        for name in order:
-            op = g.op(name)
-            alive = self._alive(name)
+        for oi, op in enumerate(self._ops):
+            sl = slice(op.lo, op.hi)
             if op.is_source:
-                produced = np.full(self.par[name],
-                                   op.source_rate * dt / self.par[name])
-                produced *= alive
-                self.metrics.emitted += produced.sum()
-            else:
-                cap = op.service_rate * dt * self.speed[name] * alive
-                take = np.minimum(self.queue[name], cap)
-                self.queue[name] -= take
-                produced = take * op.selectivity
-                qps_tick[name] = take.sum() / dt
-
-            outs = g.downstream(name)
-            if not outs:
-                continue
-            for e in outs:
-                w = self._edge_weights(e, free[e.dst])
-                arriving = produced @ w                  # (n_dst,)
-                dead = ~self._alive(e.dst)
-                # single-task recovery: records keyed/routed to a dead task
-                # are dropped (γ=partial) — they cannot stall the pipeline
-                if dead.any() and self.failover.mode == "single_task":
-                    drop_tick += arriving[dead].sum()
-                    arriving = np.where(dead, 0.0, arriving)
-                room = free[e.dst]
-                if e.partitioner in ("rebalance", "rescale", "forward",
-                                     "hash"):
-                    # static routing = head-of-line blocking: the most
-                    # congested live channel throttles the whole exchange
-                    # (credit-based flow control, paper §III-A)
-                    live = arriving > 1e-9
-                    lam = float(np.min(room[live] / arriving[live])) \
-                        if live.any() else 1.0
-                    lam = min(1.0, lam)
-                    accepted = arriving * lam
-                elif e.partitioner == "group_rescale":
-                    # blocking confined to each group (Fig 2c): a straggler
-                    # stalls its group only
-                    nd = len(arriving)
-                    gcount = max(e.n_groups, 1)
-                    accepted = np.zeros_like(arriving)
-                    for grp in range(gcount):
-                        lo, hi = grp * nd // gcount, (grp + 1) * nd // gcount
-                        a, r = arriving[lo:hi], room[lo:hi]
-                        live = a > 1e-9
-                        lam = float(np.min(r[live] / a[live])) \
-                            if live.any() else 1.0
-                        accepted[lo:hi] = a * min(1.0, lam)
+                if all_alive:
+                    produced = op.src_row
+                    emitted += op.src_sum
                 else:
-                    # adaptive routing (backlog/weakhash): channels accept up
-                    # to their credits; remainder re-queues for re-routing
-                    accepted = np.minimum(arriving, room)
-                overflow = (arriving - accepted).sum()
-                self.queue[name] += overflow / max(self.par[name], 1)
-                self.queue[e.dst] += accepted
-                free[e.dst] = np.maximum(free[e.dst] - accepted, 0.0)
+                    produced = op.src_row * alive_f[sl]
+                    emitted += produced.sum()
+            else:
+                cap = op.cap_row if all_alive else op.cap_row * alive_f[sl]
+                take = np.minimum(q[sl], cap)
+                q[sl] -= take
+                produced = take * op.selectivity
+                qps_row[oi] = take.sum() / dt
 
-        # chaos host kills → failover
-        kills = self.chaos.step_kills(self.t, self.t + dt,
-                                      n_hosts=max(t.host for t in
-                                                  self.phys.tasks) + 1)
-        for host in kills:
-            self._fail_host(host)
+            for ep in op.out_edges:
+                dsl = slice(ep.dst.lo, ep.dst.hi)
+                arriving = self._route(ep, produced, free[dsl], alive_f[dsl])
+                if single_task and not all_alive:
+                    alive_d = alive_all[dsl]
+                    if not alive_d.all():
+                        # records routed to a dead task drop (γ=partial)
+                        dead = ~alive_d
+                        drop_tick += arriving[dead].sum()
+                        arriving = np.where(dead, 0.0, arriving)
+                accepted = self._accept(ep, arriving, free[dsl])
+                if accepted is not arriving:
+                    overflow = (arriving - accepted).sum()
+                    if overflow != 0.0:
+                        q[sl] += overflow / max(op.par, 1)
+                q[dsl] += accepted
+                free_d = free[dsl]
+                free_d -= accepted
+                np.maximum(free_d, 0.0, out=free_d)
+
+        # chaos host kills → failover (skip entirely when the chaos spec
+        # cannot produce kills — step_kills would draw nothing and return [])
+        if self._chaos_kills_possible:
+            kills = self.chaos.step_kills(t, t + dt, n_hosts=self._n_hosts)
+            for host in kills:
+                self._fail_host(host)
 
         # checkpoint coordinator
-        if self.t + dt >= self._next_ckpt:
+        if t + dt >= self._next_ckpt:
             self._run_checkpoint()
             self._next_ckpt += self.ckpt_cfg.interval_s
 
-        self.metrics.t.append(self.t)
-        for n in order:
-            self.metrics.qps[n].append(qps_tick[n])
-            self.metrics.backlog[n].append(float(self.queue[n].sum()))
-        src = [n for n in order if g.op(n).is_source]
-        self.metrics.source_lag.append(
-            float(sum(self.queue[n].sum() for n in src)))
+        backlog_row = np.add.reduceat(q, self._arena_starts)[
+            self._backlog_perm]
+        lag = float(backlog_row[self._src_cols].sum())
+        self.metrics._record(t, qps_row, backlog_row, lag)
+        self.metrics.emitted += emitted
         self.metrics.dropped += drop_tick
-        self.t += dt
+        self.t = t + dt
 
     def run(self, duration_s: float) -> EngineMetrics:
         n = int(round(duration_s / self.dt))
+        self.metrics._reserve(n)
         for _ in range(n):
             self.tick()
         return self.metrics
@@ -256,29 +535,27 @@ class StreamEngine:
     # ------------------------------------------------------------------
     def _fail_host(self, host: int) -> None:
         fo = self.failover
-        victims = [t for t in self.phys.tasks if t.host == host]
-        if not victims or fo.mode == "none":
+        victims = self._task_host == host
+        if not victims.any() or fo.mode == "none":
             self.chaos.revive(host)
             return
         if fo.mode == "single_task":
             until = self.t + fo.detect_s + fo.single_restart_s
-            for t in victims:
-                self.down_until[t.op][t.index] = until
-                self.queue[t.op][t.index] = 0.0  # incomplete output discarded
+            self._max_down = max(self._max_down, until)
+            self._down_until[victims] = until
+            self._queue[victims] = 0.0   # incomplete output discarded
             self.metrics.recoveries.append(
-                {"t": self.t, "mode": "single_task", "tasks": len(victims),
+                {"t": self.t, "mode": "single_task",
+                 "tasks": int(victims.sum()),
                  "downtime": fo.detect_s + fo.single_restart_s})
         else:
-            regions = {self.phys.task_region[t.task_id] for t in victims}
+            hit = np.isin(self._task_region, self._task_region[victims])
             until = self.t + fo.detect_s + fo.region_restart_s
-            n_restart = 0
-            for t in self.phys.tasks:
-                if self.phys.task_region[t.task_id] in regions:
-                    self.down_until[t.op][t.index] = until
-                    self.queue[t.op][t.index] = 0.0
-                    n_restart += 1
+            self._max_down = max(self._max_down, until)
+            self._down_until[hit] = until
+            self._queue[hit] = 0.0
             self.metrics.recoveries.append(
-                {"t": self.t, "mode": "region", "tasks": n_restart,
+                {"t": self.t, "mode": "region", "tasks": int(hit.sum()),
                  "downtime": fo.detect_s + fo.region_restart_s})
         self.chaos.revive(host)  # replacement host
 
@@ -288,21 +565,22 @@ class StreamEngine:
         m = self.metrics
         m.ckpt_attempts += 1
         timeout = cfg.interval_s
-        # per-task upload durations with chaos slow factors
-        task_fail: dict[int, bool] = {}
-        for t in self.phys.tasks:
-            dur = cfg.upload_s * self.chaos.storage_latency_factor()
-            task_fail[t.task_id] = dur > timeout or not self._alive(t.op)[t.index]
+        # vectorized per-task upload draws (stream-identical to per-task
+        # scalar draws in task-id order)
+        factors = self.chaos.storage_latency_factors(len(self._task_host))
+        alive = self._down_until <= self.t
+        task_fail = (cfg.upload_s * factors > timeout) | ~alive
         if cfg.mode == "global":
-            ok = not any(task_fail.values())
+            ok = bool(not task_fail.any())
         else:
             ok = True
             for region in self.phys.regions:
                 bad = any(task_fail[tid] for tid in region)
                 if bad and cfg.retry_failed_region:
                     # one in-attempt retry of the region's uploads
-                    bad = any(cfg.upload_s * self.chaos.storage_latency_factor()
-                              > timeout for _ in region)
+                    bad = any(
+                        cfg.upload_s * self.chaos.storage_latency_factor()
+                        > timeout for _ in region)
                 if bad:
                     ok = False  # region keeps previous snapshot; attempt
                     break       # counted failed, job continues (no abort)

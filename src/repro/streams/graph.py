@@ -10,6 +10,7 @@ backlog / weakhash) merges everything it touches (the SS join case).
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import numpy as np
 
@@ -54,19 +55,27 @@ class LogicalGraph:
         return [e for e in self.edges if e.dst == name]
 
     def topo_order(self) -> list[str]:
-        order, seen = [], set()
+        return list(_topo_order(self))
 
-        def visit(n):
-            if n in seen:
-                return
-            seen.add(n)
-            for e in self.upstream(n):
-                visit(e.src)
-            order.append(n)
 
-        for o in self.ops:
-            visit(o.name)
-        return order
+@functools.lru_cache(maxsize=None)
+def _topo_order(g: "LogicalGraph") -> tuple[str, ...]:
+    """Cached DFS topo order (graphs are frozen/hashable; the engine asks
+    for the order every tick, so recomputing the DFS would dominate small
+    graphs' tick time)."""
+    order, seen = [], set()
+
+    def visit(n):
+        if n in seen:
+            return
+        seen.add(n)
+        for e in g.upstream(n):
+            visit(e.src)
+        order.append(n)
+
+    for o in g.ops:
+        visit(o.name)
+    return tuple(order)
 
 
 @dataclasses.dataclass
@@ -127,7 +136,11 @@ def expand(graph: LogicalGraph, *, n_hosts: int,
             conn[:] = True
         channels[(e.src, e.dst)] = conn
 
-    # regions = connected components over channel connectivity
+    # regions = connected components over channel connectivity. For
+    # component purposes a src connected to a dst-set only needs a union
+    # with ONE member, plus unions chaining the dst-set itself ("hub"
+    # unions) — O(ns + nd) per edge instead of O(nnz), which matters for
+    # all-to-all hops at large parallelism.
     parent = list(range(len(tasks)))
 
     def find(x):
@@ -141,11 +154,32 @@ def expand(graph: LogicalGraph, *, n_hosts: int,
         if ra != rb:
             parent[ra] = rb
 
-    for (src, dst), conn in channels.items():
-        st, dt = by_op[src], by_op[dst]
-        ss, dd = np.nonzero(conn)
-        for s, d in zip(ss, dd):
-            union(st[s].task_id, dt[d].task_id)
+    for e in graph.edges:
+        conn = channels[(e.src, e.dst)]
+        st, dtt = by_op[e.src], by_op[e.dst]
+        if e.partitioner not in POINTWISE and conn.all():
+            # all-to-all: everything merges into one component
+            hub = dtt[0].task_id
+            for t in st:
+                union(t.task_id, hub)
+            for t in dtt[1:]:
+                union(t.task_id, hub)
+            continue
+        # pointwise / blocky hops: first connected dst per src acts as the
+        # row hub; the rest of the row chains to it once (rows produced by
+        # forward/rescale/group_rescale that share a first dst are
+        # identical blocks, so one chaining per hub suffices)
+        chained: set[int] = set()
+        for s, row in enumerate(conn):
+            dd = np.nonzero(row)[0]
+            if len(dd) == 0:
+                continue
+            hub = dtt[dd[0]].task_id
+            union(st[s].task_id, hub)
+            if hub not in chained:
+                chained.add(hub)
+                for d in dd[1:]:
+                    union(dtt[d].task_id, hub)
 
     groups: dict[int, set[int]] = {}
     for t in tasks:

@@ -1,0 +1,166 @@
+"""Parity pins for the vectorized hot path.
+
+* StreamEngine (routing-plan arena) vs the preserved per-edge reference
+  interpreter: identical EngineMetrics (1e-6) across every partitioner,
+  failover mode and the checkpoint coordinator.
+* weakhash_assign: vectorized water-fill vs the sequential greedy — exact
+  per-task counts (hence exact load_cv) for integer-valued loads.
+* Fused single-pass weakhash_route kernel vs the jnp oracle across tile
+  counts (nt = 1, 2, 4) in interpret mode.
+"""
+import numpy as np
+import pytest
+
+from repro.core.chaos import ChaosEngine, ChaosSpec
+from repro.core.weakhash import candidate_group, load_cv, weakhash_assign
+from repro.streams import nexmark
+from repro.streams.engine import (CheckpointConfig, FailoverConfig,
+                                  StreamEngine)
+from repro.streams.graph import LogicalEdge, LogicalGraph, LogicalOp
+from repro.streams.reference_engine import ReferenceStreamEngine
+
+
+# ----------------------------------------------------------------------
+# engine parity
+# ----------------------------------------------------------------------
+def _assert_metrics_equal(ref_eng, vec_eng, label=""):
+    ma, mb = ref_eng.metrics, vec_eng.metrics
+    for n in ref_eng.g.topo_order():
+        np.testing.assert_allclose(np.array(ma.qps[n]), mb.qps[n],
+                                   rtol=1e-6, atol=1e-6,
+                                   err_msg=f"{label} qps[{n}]")
+        np.testing.assert_allclose(np.array(ma.backlog[n]), mb.backlog[n],
+                                   rtol=1e-6, atol=1e-6,
+                                   err_msg=f"{label} backlog[{n}]")
+    np.testing.assert_allclose(np.array(ma.t), mb.t, atol=0)
+    np.testing.assert_allclose(np.array(ma.source_lag), mb.source_lag,
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(ma.dropped, mb.dropped, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(ma.emitted, mb.emitted, rtol=1e-6)
+    assert (ma.ckpt_attempts, ma.ckpt_success, ma.ckpt_failed) == \
+        (mb.ckpt_attempts, mb.ckpt_success, mb.ckpt_failed), label
+    assert ma.recoveries == mb.recoveries, label
+
+
+def _run_pair(make_graph, duration, **kw):
+    def mk(cls):
+        kw2 = dict(kw)
+        if "chaos_spec" in kw2:
+            kw2["chaos"] = ChaosEngine(kw2.pop("chaos_spec"))
+        return cls(make_graph(), **kw2)
+    a = mk(ReferenceStreamEngine)
+    a.run(duration)
+    b = mk(StreamEngine)
+    b.run(duration)
+    return a, b
+
+
+@pytest.mark.parametrize("partitioner", ["rebalance", "hash", "weakhash",
+                                         "backlog", "group_rescale"])
+def test_engine_parity_partitioners(partitioner):
+    slow = {t: 1e-3 for t in range(16, 32, 5)}  # stragglers → congestion
+    a, b = _run_pair(
+        lambda: nexmark.q2(parallelism=16, partitioner=partitioner,
+                           n_groups=4),
+        60, n_hosts=16, task_speed_override=slow, seed=3)
+    _assert_metrics_equal(a, b, partitioner)
+
+
+def test_engine_parity_mixed_graph():
+    """All adaptive partitioners chained in one graph."""
+    def g():
+        par, sr = 20, 1.5e5
+        return LogicalGraph(
+            "mixed",
+            ops=(LogicalOp("source", par, sr, is_source=True,
+                           source_rate=0.8e6),
+                 LogicalOp("keyed", par, sr, selectivity=0.9),
+                 LogicalOp("agg", par, sr, selectivity=0.5),
+                 LogicalOp("writer", par, sr),
+                 LogicalOp("sink", par, sr)),
+            edges=(LogicalEdge("source", "keyed", "hash", key_skew_zipf=0.8),
+                   LogicalEdge("keyed", "agg", "weakhash", n_groups=4),
+                   LogicalEdge("agg", "writer", "backlog"),
+                   LogicalEdge("writer", "sink", "group_rescale",
+                               n_groups=4)))
+    a, b = _run_pair(g, 120)
+    _assert_metrics_equal(a, b, "mixed")
+
+
+@pytest.mark.parametrize("mode", ["region", "single_task"])
+def test_engine_parity_host_kill(mode):
+    a, b = _run_pair(
+        lambda: nexmark.ss(parallelism=8), 300, n_hosts=8,
+        chaos_spec=ChaosSpec(seed=0, host_kill_at=((100.0, 2),)),
+        failover=FailoverConfig(mode=mode, region_restart_s=60.0))
+    _assert_metrics_equal(a, b, mode)
+    assert len(b.metrics.recoveries) == 1
+
+
+def test_engine_parity_checkpoints():
+    for cm in ("region", "global"):
+        a, b = _run_pair(
+            lambda: nexmark.ds(parallelism=6), 400, n_hosts=6,
+            chaos_spec=ChaosSpec(seed=2, storage_slow_prob=0.3,
+                                 storage_slow_factor=10),
+            ckpt=CheckpointConfig(interval_s=30, mode=cm))
+        assert b.metrics.ckpt_attempts > 0
+        _assert_metrics_equal(a, b, cm)
+
+
+# ----------------------------------------------------------------------
+# weakhash_assign parity
+# ----------------------------------------------------------------------
+def test_weakhash_assign_counts_match_sequential():
+    """Vectorized water-fill reproduces the sequential greedy's per-task
+    counts exactly (integer starting loads) — load_cv parity is exact."""
+    rng = np.random.default_rng(0)
+    for trial in range(40):
+        n_groups = int(rng.integers(1, 9))
+        gsz = int(rng.integers(1, 7))
+        n_tasks = n_groups * gsz
+        keys = rng.integers(0, 1 << 20, int(rng.integers(0, 400)))
+        loads = (rng.integers(0, 50, n_tasks).astype(np.float64)
+                 if trial % 2 else None)
+        a = weakhash_assign(keys, n_tasks, n_groups, loads=loads,
+                            sequential=True)
+        b = weakhash_assign(keys, n_tasks, n_groups, loads=loads)
+        assert np.array_equal(np.bincount(a, minlength=n_tasks),
+                              np.bincount(b, minlength=n_tasks)), trial
+        assert load_cv(a, n_tasks) == load_cv(b, n_tasks)
+        # bounded candidate set is preserved
+        assert np.array_equal(b // gsz, candidate_group(keys, n_groups))
+
+
+def test_weakhash_assign_float_loads_cv_parity():
+    rng = np.random.default_rng(1)
+    keys = rng.integers(0, 1 << 20, 3000)
+    loads = rng.uniform(0.0, 30.0, 32)
+    a = weakhash_assign(keys, 32, 8, loads=loads, sequential=True)
+    b = weakhash_assign(keys, 32, 8, loads=loads)
+    assert abs(load_cv(a, 32) - load_cv(b, 32)) < 1e-9
+
+
+# ----------------------------------------------------------------------
+# fused kernel parity (interpret mode)
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("block_t", [512, 256, 128])  # nt = 1, 2, 4
+def test_fused_kernel_parity_tilings(block_t):
+    import jax.numpy as jnp
+    from repro.kernels.weakhash_route import kernel as K, ref as R
+    rng = np.random.default_rng(7)
+    T, E, k = 512, 32, 2
+    logits = jnp.asarray(rng.normal(size=(T, E)), jnp.float32)
+    keys = jnp.asarray(rng.integers(0, 10_000, T), jnp.int32)
+    cap = 4 * T // E
+    idx, _, gid, demand = K.weakhash_route_ints(
+        logits, top_k=k, capacity=cap, n_groups=8, mode="weakhash",
+        token_keys=keys, block_t=block_t, interpret=True)
+    rr = R.weakhash_route(logits, top_k=k, capacity=cap, n_groups=8,
+                          mode="weakhash", token_keys=keys)
+    assert bool(jnp.all(idx == rr.expert_idx))
+    assert bool(jnp.all(gid == rr.group_id))
+    rk = K.weakhash_route(logits, top_k=k, capacity=cap, n_groups=8,
+                          mode="weakhash", token_keys=keys, interpret=True)
+    assert bool(jnp.all(rk.position == rr.position))
+    assert bool(jnp.all(rk.keep == rr.keep))

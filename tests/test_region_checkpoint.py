@@ -6,7 +6,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from helpers import given, settings, st  # hypothesis, or seeded fallback
 
 from repro.ckpt.manifest import Manifest, RegionSnapshot
 from repro.ckpt.storage import LocalFS, ObjectStoreSim, SimHDFS, FallbackStorage
