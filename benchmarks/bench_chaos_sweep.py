@@ -1,0 +1,82 @@
+"""Chaos-sweep throughput: scenarios/s of the vmapped `jit` sweep
+(`streams/chaos_sweep.py`) vs sequential numpy-engine drills on the same
+scenario batch.
+
+Emits the usual CSV rows through benchmarks/run.py and writes
+``results/bench_chaos_sweep.json`` for the perf trajectory. Quick mode
+(REPRO_BENCH_QUICK=1) shrinks the batch and horizon so the module runs
+in a few seconds on CPU.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import time
+
+import numpy as np
+
+from repro.core.chaos import ChaosEngine, ChaosSpec
+from repro.streams import nexmark
+from repro.streams.chaos_sweep import sweep
+from repro.streams.engine import FailoverConfig, StreamEngine
+
+BASE_SPEC = ChaosSpec(host_kill_prob_per_s=0.004, straggler_frac=0.2)
+FAILOVER = FailoverConfig(mode="region", region_restart_s=20.0)
+
+
+def quick_mode() -> bool:
+    return os.environ.get("REPRO_BENCH_QUICK", "") not in ("", "0")
+
+
+def _numpy_scenarios_per_s(graph, duration_s: float, n_probe: int) -> float:
+    import dataclasses
+    t0 = time.perf_counter()
+    for s in range(n_probe):
+        eng = StreamEngine(
+            graph, n_hosts=8,
+            chaos=ChaosEngine(dataclasses.replace(BASE_SPEC, seed=s)),
+            failover=FAILOVER)
+        eng.run(duration_s)
+    return n_probe / (time.perf_counter() - t0)
+
+
+def run():
+    quick = quick_mode()
+    n_seeds = 32 if quick else 256
+    duration = 60.0 if quick else 120.0
+    graph = nexmark.q2(parallelism=8, partitioner="weakhash", n_groups=4)
+
+    # cold (includes trace+compile) then warm sweep
+    res_cold = sweep(graph, range(n_seeds), base_spec=BASE_SPEC,
+                     duration_s=duration, n_hosts=8, failover=FAILOVER)
+    res = sweep(graph, range(n_seeds), base_spec=BASE_SPEC,
+                duration_s=duration, n_hosts=8, failover=FAILOVER)
+    np_rate = _numpy_scenarios_per_s(graph, duration, 2 if quick else 4)
+    agg = res.aggregate()
+    ticks_s = n_seeds * res.n_ticks / res.wall_s
+    speedup = res.scenarios_per_s / np_rate
+
+    rows = [(f"chaos_sweep/q2_weakhash/{n_seeds}seeds",
+             1e6 / res.scenarios_per_s,
+             f"scenarios_s={res.scenarios_per_s:.0f};"
+             f"np_scenarios_s={np_rate:.1f};speedup={speedup:.0f}x;"
+             f"ticks_s={ticks_s:.0f};"
+             f"recovery_p95_s={agg['recovery_p95_s']:.1f}")]
+    record = {
+        "n_seeds": n_seeds, "duration_s": duration,
+        "n_ticks": res.n_ticks,
+        "cold_wall_s": res_cold.wall_s, "warm_wall_s": res.wall_s,
+        "scenarios_per_s": res.scenarios_per_s,
+        "numpy_scenarios_per_s": np_rate, "speedup": speedup,
+        "aggregate": agg,
+    }
+    out = pathlib.Path("results")
+    out.mkdir(parents=True, exist_ok=True)
+    (out / "bench_chaos_sweep.json").write_text(json.dumps(record, indent=1))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

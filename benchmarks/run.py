@@ -22,11 +22,13 @@ MODULES = [
     "benchmarks.bench_hotupdate",           # §III-C HotUpdate
     "benchmarks.bench_lazyload",            # §III-B State LazyLoad
     "benchmarks.bench_engine",              # stream-engine hot path
+    "benchmarks.bench_chaos_sweep",         # vmapped jit chaos sweeps
     "benchmarks.bench_kernels",             # §V-C micro benchmarking
 ]
 
 QUICK_MODULES = [
     "benchmarks.bench_engine",              # vectorized vs reference engine
+    "benchmarks.bench_chaos_sweep",         # vmapped jit chaos sweeps
     "benchmarks.bench_weakhash",            # WeakHash assignment path
     "benchmarks.bench_hotupdate",           # pure-python, fast
 ]

@@ -1,8 +1,9 @@
 #!/usr/bin/env bash
 # Tier-1 CI: test suite + quick benchmark smoke.
 #
-#   scripts/ci.sh            # non-slow tests + quick benches
-#   scripts/ci.sh --full     # include the slow multi-device subprocess tests
+#   scripts/ci.sh                # non-slow tests + quick benches
+#   scripts/ci.sh --full         # include the slow multi-device subprocess tests
+#   scripts/ci.sh --sweep-smoke  # also run a 16-seed chaos sweep (vmapped jit, CPU)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -17,5 +18,10 @@ fi
 
 echo "== quick benchmark smoke =="
 PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" python benchmarks/run.py --quick
+
+if [[ "${1:-}" == "--sweep-smoke" ]]; then
+  echo "== chaos-sweep smoke: 16 seeds, one vmapped jit call =="
+  python examples/chaos_sweep.py --seeds 16 --duration 60
+fi
 
 echo "CI OK"

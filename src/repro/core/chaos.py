@@ -5,6 +5,7 @@ generator, so every drill is reproducible bit-for-bit."""
 from __future__ import annotations
 
 import dataclasses
+import math
 
 import numpy as np
 
@@ -93,3 +94,134 @@ class ChaosEngine:
 
     def hdfs_available(self, t: float) -> bool:
         return not any(a <= t < b for a, b in self.spec.hdfs_down)
+
+
+# ----------------------------------------------------------------------
+# Pregenerated event tensors (accelerator backends / chaos sweeps)
+# ----------------------------------------------------------------------
+@dataclasses.dataclass
+class ChaosTimeline:
+    """Chaos events for one run, materialized as per-tick tensors.
+
+    A `jit`-compiled engine cannot consume the sequential numpy rng draws
+    of `ChaosEngine` mid-scan, so the whole chaos/failover/checkpoint
+    control timeline is replayed here on the host — draw-for-draw in the
+    exact order `streams.engine.StreamEngine` consumes the rng stream
+    (straggler speeds at init; per tick: kill draws, then checkpoint
+    storage draws) — and exported as dense arrays the device loop indexes
+    by tick. Kill/checkpoint *times* are thereby quantized to tick
+    boundaries, which is exactly the resolution the tick engines observe
+    them at anyway.
+    """
+    dt: float
+    n_ticks: int
+    ts: np.ndarray             # (n_ticks,) tick-start times (accumulated)
+    task_speed: np.ndarray     # (n_tasks,) chaos straggler speed factors
+    kills: np.ndarray          # (n_ticks, n_hosts) bool host killed in tick
+    ckpt_at: np.ndarray        # (n_ticks,) bool checkpoint attempted
+    ckpt_ok: np.ndarray        # (n_ticks,) bool checkpoint succeeded
+    ckpt_attempts: int
+    ckpt_success: int
+    ckpt_failed: int
+    recoveries: list[dict]     # same dict layout as EngineMetrics.recoveries
+
+
+def build_chaos_timeline(
+        spec: ChaosSpec, *, n_ticks: int, dt: float, n_hosts: int,
+        task_host: np.ndarray, task_region: np.ndarray | None = None,
+        regions: list | None = None,
+        failover_mode: str = "region", detect_s: float = 1.0,
+        region_restart_s: float = 45.0, single_restart_s: float = 3.0,
+        ckpt_interval_s: float | None = None, ckpt_mode: str = "region",
+        ckpt_upload_s: float = 4.0, ckpt_retry: bool = True) -> ChaosTimeline:
+    """Replay the engine's chaos rng consumption for `n_ticks` ticks.
+
+    Host kills, checkpoint outcomes and failover downtimes are all
+    data-independent of queue dynamics (downtime depends only on kills +
+    failover config), so the full control timeline is computable here
+    without simulating a single record. `task_host`/`task_region`/`regions`
+    describe the physical placement (same arrays the engine derives from
+    `PhysicalGraph`); failover/checkpoint parameters mirror
+    `FailoverConfig`/`CheckpointConfig` field-for-field (passed as plain
+    scalars to keep `core` free of a `streams` import).
+    """
+    eng = ChaosEngine(spec)
+    task_host = np.asarray(task_host)
+    n_tasks = len(task_host)
+    kills_possible = bool(spec.host_kill_at or spec.host_kill_prob_per_s)
+    if kills_possible and failover_mode == "region" and task_region is None:
+        raise ValueError(
+            "failover_mode='region' with kills enabled requires task_region")
+    if ckpt_interval_s is not None and ckpt_mode != "global" \
+            and regions is None:
+        raise ValueError(
+            "region checkpoint mode requires regions (the retry draws "
+            "consume the rng stream — omitting them would desynchronize "
+            "every later draw from the live engine)")
+    # straggler draws happen at first sight of each host, in task order —
+    # identical to StreamEngine.__init__'s per-task host_speed() queries
+    task_speed = np.array([eng.host_speed(int(h)) for h in task_host])
+
+    ts = np.zeros(n_ticks)
+    kills = np.zeros((n_ticks, n_hosts), bool)
+    ckpt_at = np.zeros(n_ticks, bool)
+    ckpt_ok = np.zeros(n_ticks, bool)
+    down = np.zeros(n_tasks)
+    recoveries: list[dict] = []
+    attempts = success = failed = 0
+    next_ckpt = ckpt_interval_s if ckpt_interval_s is not None else math.inf
+    t = 0.0
+    for i in range(n_ticks):
+        ts[i] = t
+        if kills_possible:
+            for host in eng.step_kills(t, t + dt, n_hosts=n_hosts):
+                if host < n_hosts:
+                    # scheduled kills are unbounded by n_hosts; a kill of
+                    # a hostless id is a no-op (the engine just revives)
+                    kills[i, host] = True
+                victims = task_host == host
+                if victims.any() and failover_mode != "none":
+                    if failover_mode == "single_task":
+                        down[victims] = t + detect_s + single_restart_s
+                        recoveries.append(
+                            {"t": t, "mode": "single_task",
+                             "tasks": int(victims.sum()),
+                             "downtime": detect_s + single_restart_s})
+                    else:
+                        hit = np.isin(task_region, task_region[victims])
+                        down[hit] = t + detect_s + region_restart_s
+                        recoveries.append(
+                            {"t": t, "mode": "region",
+                             "tasks": int(hit.sum()),
+                             "downtime": detect_s + region_restart_s})
+                eng.revive(host)   # replacement host, as in _fail_host
+        if t + dt >= next_ckpt:
+            ckpt_at[i] = True
+            attempts += 1
+            timeout = ckpt_interval_s
+            factors = eng.storage_latency_factors(n_tasks)
+            alive = down <= t
+            task_fail = (ckpt_upload_s * factors > timeout) | ~alive
+            if ckpt_mode == "global":
+                ok = bool(not task_fail.any())
+            else:
+                ok = True
+                for region in (regions or ()):
+                    bad = any(task_fail[tid] for tid in region)
+                    if bad and ckpt_retry:
+                        # one in-attempt retry of the region's uploads
+                        # (short-circuits on the first slow draw, exactly
+                        # like the engine's any(...) generator)
+                        bad = any(
+                            ckpt_upload_s * eng.storage_latency_factor()
+                            > timeout for _ in region)
+                    if bad:
+                        ok = False
+                        break
+            ckpt_ok[i] = ok
+            success += int(ok)
+            failed += int(not ok)
+            next_ckpt += ckpt_interval_s
+        t = t + dt
+    return ChaosTimeline(dt, n_ticks, ts, task_speed, kills, ckpt_at,
+                         ckpt_ok, attempts, success, failed, recoveries)

@@ -71,13 +71,33 @@ def _group_counts(L: np.ndarray, k: np.ndarray) -> np.ndarray:
 def weakhash_assign(keys: np.ndarray, n_tasks: int, n_groups: int,
                     loads: np.ndarray | None = None,
                     rng: np.random.Generator | None = None,
-                    sequential: bool = False) -> np.ndarray:
+                    sequential: bool = False,
+                    chunk: int | None = None) -> np.ndarray:
     """Assign each key to a task within its candidate group, least-loaded
     first (records within a batch update the load estimate greedily,
     mirroring credit consumption). Vectorized; see the module docstring for
-    the tie-order relaxation versus ``sequential=True``."""
+    the tie-order relaxation versus ``sequential=True``.
+
+    ``chunk=C`` enables the chunked-streaming mode: the water-fill runs
+    per chunk of C keys and the load estimates are refreshed between
+    chunks, interpolating between the batch semantics (``chunk >= N``
+    reproduces the batch assignment array exactly — one chunk IS the
+    batch) and the sequential credit semantics (``chunk=1`` degenerates
+    to one least-loaded pick per key, i.e. ``sequential=True``
+    key-for-key)."""
     assert n_tasks % n_groups == 0, (n_tasks, n_groups)
     gsz = n_tasks // n_groups
+    if chunk is not None and not sequential:
+        assert chunk > 0, chunk
+        loads_c = (np.zeros(n_tasks, np.float64) if loads is None
+                   else loads.astype(np.float64).copy())
+        out = np.empty(len(keys), np.int64)
+        for lo in range(0, len(keys), chunk):
+            part = weakhash_assign(keys[lo:lo + chunk], n_tasks, n_groups,
+                                   loads=loads_c)
+            out[lo:lo + chunk] = part
+            loads_c += np.bincount(part, minlength=n_tasks)
+        return out
     group = candidate_group(keys, n_groups)
     loads = np.zeros(n_tasks, np.float64) if loads is None else loads.astype(
         np.float64).copy()

@@ -188,6 +188,138 @@ class _EdgePlan:
     live_buf: np.ndarray | None = None
 
 
+@dataclasses.dataclass
+class RoutingPlan:
+    """Speed-independent lowering of a logical graph: arena layout, per-op
+    scalars and per-edge routing constants. Built once per engine by
+    `build_plan` and shared (code-wise) between the numpy `StreamEngine`
+    and the JAX twin in `streams/jax_engine.py` — the twin converts the
+    same plan arrays to device constants instead of re-deriving them."""
+    graph: LogicalGraph
+    dt: float
+    queue_cap: float
+    offs: dict[str, int]
+    n_tasks: int
+    qcap: np.ndarray                     # (n_tasks,)
+    ops: list[_OpPlan]                   # topo order, out_edges populated
+    by_name: dict[str, _OpPlan]
+    arena_starts: np.ndarray
+    backlog_perm: np.ndarray
+    src_cols: np.ndarray
+
+
+def build_plan(graph: LogicalGraph, dt: float,
+               queue_cap: float) -> RoutingPlan:
+    """Lower `graph` into a `RoutingPlan` (everything in
+    `StreamEngine.__init__` that does not depend on host speeds/chaos)."""
+    order = graph.topo_order()
+    ops = {o.name: o for o in graph.ops}
+    # expand() numbers tasks contiguously per op, in graph.ops order
+    offs: dict[str, int] = {}
+    off = 0
+    for o in graph.ops:
+        offs[o.name] = off
+        off += o.parallelism
+    n_tasks = off
+
+    qcap = np.zeros(n_tasks)
+    for o in graph.ops:
+        qcap[offs[o.name]:offs[o.name] + o.parallelism] = \
+            max(o.service_rate * dt * 4.0, queue_cap)
+
+    plan_ops: list[_OpPlan] = []
+    by_name: dict[str, _OpPlan] = {}
+    for name in order:
+        o = ops[name]
+        p = _OpPlan(name, offs[name], offs[name] + o.parallelism,
+                    o.parallelism, o.is_source, o.service_rate,
+                    o.selectivity, o.source_rate)
+        if o.is_source:
+            p.src_row = np.full(o.parallelism,
+                                o.source_rate * dt / o.parallelism)
+            p.src_sum = float(p.src_row.sum())
+        plan_ops.append(p)
+        by_name[name] = p
+    for name in order:
+        for e in graph.downstream(name):
+            by_name[name].out_edges.append(
+                _plan_edge(e, by_name[name], by_name[e.dst],
+                           float(qcap[by_name[e.dst].lo])))
+
+    # metric plumbing: one reduceat over the arena gives every op's
+    # backlog; permute arena (declaration) order → topo column order
+    arena_order = sorted(plan_ops, key=lambda p: p.lo)
+    arena_starts = np.array([p.lo for p in arena_order])
+    topo_pos = {p.name: j for j, p in enumerate(plan_ops)}
+    backlog_perm = np.argsort([topo_pos[p.name] for p in arena_order])
+    src_cols = np.array([j for j, p in enumerate(plan_ops) if p.is_source])
+    return RoutingPlan(graph, dt, queue_cap, offs, n_tasks, qcap, plan_ops,
+                       by_name, arena_starts, backlog_perm, src_cols)
+
+
+def _plan_edge(e, src: _OpPlan, dst: _OpPlan, dst_qcap: float) -> _EdgePlan:
+    nd = dst.par
+    ns = src.par
+    plan = _EdgePlan(
+        kind=e.partitioner, src=src, dst=dst,
+        static=e.partitioner in ("rebalance", "rescale", "forward",
+                                 "hash"),
+        dst_qcap=dst_qcap)
+    if e.partitioner in ("hash", "weakhash"):
+        # hashed key-mass share (identical construction to the
+        # reference engine — same bincount over the same Zipf mass)
+        nkeys = max(nd * 64, 1024)
+        if e.key_skew_zipf > 0:
+            mass = 1.0 / np.arange(1, nkeys + 1) ** e.key_skew_zipf
+        else:
+            mass = np.ones(nkeys)
+        mass /= mass.sum()
+        owner = (np.arange(nkeys) * 2654435761 % nd).astype(int)
+        share = np.bincount(owner, weights=mass, minlength=nd)
+        if e.partitioner == "hash":
+            plan.share = share / share.sum()
+        else:
+            plan.raw_share = share
+    if e.partitioner == "weakhash":
+        g = max(e.n_groups, 1)
+        starts = np.array([grp * nd // g for grp in range(g)])
+        bounds = np.append(starts, nd)
+        plan.grp_starts = starts
+        # per-group mass via the same slice-sum the reference performs
+        plan.grp_mass = np.array(
+            [plan.raw_share[bounds[i]:bounds[i + 1]].sum()
+             for i in range(g)])
+        plan.grp_of_dst = np.searchsorted(starts, np.arange(nd),
+                                          side="right") - 1
+        plan.mass_of_dst = plan.grp_mass[plan.grp_of_dst]
+    if e.partitioner == "group_rescale":
+        g = max(e.n_groups, 1)
+        starts = np.array([grp * nd // g for grp in range(g)])
+        plan.grp_starts = starts
+        plan.grp_of_dst = np.searchsorted(starts, np.arange(nd),
+                                          side="right") - 1
+        plan.blk_of_src = np.arange(ns) * g // ns
+        plan.blk_of_dst = plan.grp_of_dst
+        plan.n_blocks = g
+    if e.partitioner == "rescale":
+        per = max(1, nd // ns)
+        src_lo = (np.arange(ns) * per) % nd
+        blocks, blk_of_src = np.unique(src_lo, return_inverse=True)
+        plan.blk_of_src = blk_of_src
+        plan.n_blocks = len(blocks)
+        blk_of_dst = np.full(nd, -1)
+        for b, lo in enumerate(blocks):
+            blk_of_dst[lo:lo + per] = b
+        plan.blk_of_dst = blk_of_dst
+    if plan.blk_of_dst is not None:
+        plan.dst_in_blk = plan.blk_of_dst >= 0
+        plan.any_unblocked = not bool(plan.dst_in_blk.all())
+        plan.blk_idx = np.clip(plan.blk_of_dst, 0, None)
+    plan.ratio_buf = np.empty(nd)
+    plan.live_buf = np.empty(nd, bool)
+    return plan
+
+
 class StreamEngine:
     def __init__(self, graph: LogicalGraph, *, n_hosts: int = 8,
                  dt: float = 0.5, queue_cap: float = 256.0,
@@ -207,25 +339,17 @@ class StreamEngine:
         self.t = 0.0
         self._next_ckpt = (self.ckpt_cfg.interval_s if ckpt else math.inf)
 
-        # ---- task arena ------------------------------------------------
-        order = graph.topo_order()
+        # ---- task arena + routing plan --------------------------------
+        self.plan = build_plan(graph, dt, queue_cap)
         ops = {o.name: o for o in graph.ops}
-        n_tasks = len(self.phys.tasks)
-        # expand() numbers tasks contiguously per op, in graph.ops order
-        offs: dict[str, int] = {}
-        off = 0
-        for o in graph.ops:
-            offs[o.name] = off
-            off += o.parallelism
-        assert off == n_tasks
+        offs = self.plan.offs
+        n_tasks = self.plan.n_tasks
+        assert n_tasks == len(self.phys.tasks)
 
         self._queue = np.zeros(n_tasks)
         self._down_until = np.zeros(n_tasks)
         self._speed = np.ones(n_tasks)
-        self._qcap = np.zeros(n_tasks)
-        for o in graph.ops:
-            self._qcap[offs[o.name]:offs[o.name] + o.parallelism] = \
-                max(o.service_rate * dt * 4.0, queue_cap)
+        self._qcap = self.plan.qcap
         if task_speed_override:
             for tk in self.phys.tasks:
                 if tk.task_id in task_speed_override:
@@ -250,39 +374,15 @@ class StreamEngine:
         self.speed = {n: self._speed[offs[n]:offs[n] + self.par[n]]
                       for n in ops}
 
-        # ---- op + edge plans ------------------------------------------
-        self._ops: list[_OpPlan] = []
-        by_name: dict[str, _OpPlan] = {}
-        for name in order:
-            o = ops[name]
-            p = _OpPlan(name, offs[name], offs[name] + o.parallelism,
-                        o.parallelism, o.is_source, o.service_rate,
-                        o.selectivity, o.source_rate)
-            if o.is_source:
-                p.src_row = np.full(o.parallelism,
-                                    o.source_rate * dt / o.parallelism)
-                p.src_sum = float(p.src_row.sum())
-            else:
-                p.cap_row = o.service_rate * dt * \
-                    self._speed[p.lo:p.hi].copy()
-            self._ops.append(p)
-            by_name[name] = p
+        # ---- op + edge plans (speed-dependent fast-path rows) ----------
+        self._ops = self.plan.ops
+        for p in self._ops:
+            if not p.is_source:
+                p.cap_row = p.service_rate * dt * self._speed[p.lo:p.hi].copy()
         self._src_ops = [p for p in self._ops if p.is_source]
-
-        for name in order:
-            for e in graph.downstream(name):
-                by_name[name].out_edges.append(
-                    self._plan_edge(e, by_name[name], by_name[e.dst]))
-
-        # metric plumbing: one reduceat over the arena gives every op's
-        # backlog; permute arena (declaration) order → topo column order
-        arena_order = sorted(self._ops, key=lambda p: p.lo)
-        self._arena_starts = np.array([p.lo for p in arena_order])
-        topo_pos = {p.name: j for j, p in enumerate(self._ops)}
-        self._backlog_perm = np.argsort(
-            [topo_pos[p.name] for p in arena_order])
-        self._src_cols = np.array([j for j, p in enumerate(self._ops)
-                                   if p.is_source])
+        self._arena_starts = self.plan.arena_starts
+        self._backlog_perm = self.plan.backlog_perm
+        self._src_cols = self.plan.src_cols
 
         # per-tick reusable arena-sized scratch
         self._alive_buf = np.empty(n_tasks, bool)
@@ -297,70 +397,6 @@ class StreamEngine:
             spec.host_kill_at or spec.host_kill_prob_per_s)
 
         self.metrics = EngineMetrics([p.name for p in self._ops])
-
-    # ------------------------------------------------------------------
-    def _plan_edge(self, e, src: _OpPlan, dst: _OpPlan) -> _EdgePlan:
-        nd = dst.par
-        ns = src.par
-        plan = _EdgePlan(
-            kind=e.partitioner, src=src, dst=dst,
-            static=e.partitioner in ("rebalance", "rescale", "forward",
-                                     "hash"),
-            dst_qcap=float(self._qcap[dst.lo]))
-        if e.partitioner in ("hash", "weakhash"):
-            # hashed key-mass share (identical construction to the
-            # reference engine — same bincount over the same Zipf mass)
-            nkeys = max(nd * 64, 1024)
-            if e.key_skew_zipf > 0:
-                mass = 1.0 / np.arange(1, nkeys + 1) ** e.key_skew_zipf
-            else:
-                mass = np.ones(nkeys)
-            mass /= mass.sum()
-            owner = (np.arange(nkeys) * 2654435761 % nd).astype(int)
-            share = np.bincount(owner, weights=mass, minlength=nd)
-            if e.partitioner == "hash":
-                plan.share = share / share.sum()
-            else:
-                plan.raw_share = share
-        if e.partitioner == "weakhash":
-            g = max(e.n_groups, 1)
-            starts = np.array([grp * nd // g for grp in range(g)])
-            bounds = np.append(starts, nd)
-            plan.grp_starts = starts
-            # per-group mass via the same slice-sum the reference performs
-            plan.grp_mass = np.array(
-                [plan.raw_share[bounds[i]:bounds[i + 1]].sum()
-                 for i in range(g)])
-            plan.grp_of_dst = np.searchsorted(starts, np.arange(nd),
-                                              side="right") - 1
-            plan.mass_of_dst = plan.grp_mass[plan.grp_of_dst]
-        if e.partitioner == "group_rescale":
-            g = max(e.n_groups, 1)
-            starts = np.array([grp * nd // g for grp in range(g)])
-            plan.grp_starts = starts
-            plan.grp_of_dst = np.searchsorted(starts, np.arange(nd),
-                                              side="right") - 1
-            plan.blk_of_src = np.arange(ns) * g // ns
-            plan.blk_of_dst = plan.grp_of_dst
-            plan.n_blocks = g
-        if e.partitioner == "rescale":
-            per = max(1, nd // ns)
-            src_lo = (np.arange(ns) * per) % nd
-            blocks, blk_of_src = np.unique(src_lo, return_inverse=True)
-            plan.blk_of_src = blk_of_src
-            plan.n_blocks = len(blocks)
-            blk_of_dst = np.full(nd, -1)
-            for b, lo in enumerate(blocks):
-                blk_of_dst[lo:lo + per] = b
-            plan.blk_of_dst = blk_of_dst
-        if plan.blk_of_dst is not None:
-            plan.dst_in_blk = plan.blk_of_dst >= 0
-            plan.any_unblocked = not bool(plan.dst_in_blk.all())
-            plan.blk_idx = np.clip(plan.blk_of_dst, 0, None)
-        plan.ratio_buf = np.empty(nd)
-        plan.live_buf = np.empty(nd, bool)
-        return plan
-
     # ------------------------------------------------------------------
     def _alive(self, op: str) -> np.ndarray:
         return self.down_until[op] <= self.t

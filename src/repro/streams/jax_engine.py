@@ -1,0 +1,511 @@
+"""Batched JAX twin of the vectorized stream engine (`jit`/`scan`/`vmap`).
+
+A functional re-expression of `streams.engine.StreamEngine` for chaos
+sweeps: where the numpy engine mutates a flat task arena in place, this
+twin threads a single pytree of arena state through a pure
+`state -> state` tick lowered from the same `RoutingPlan`
+(`streams.engine.build_plan`), runs whole horizons as one
+`jax.lax.scan` under `jit`, and `vmap`s the scan over a ``(S,)`` batch
+of failure seeds so thousands of chaos scenarios execute in a single
+device call.
+
+State-pytree layout (`EngineState`, one leaf per arena variable; under
+`vmap` every leaf gains a leading ``(S,)`` seed axis):
+
+    queue      (n_tasks,) f64  bounded input queues (records)
+    down_until (n_tasks,) f64  failover downtime horizon per task
+    speed      (n_tasks,) f64  static host speed (overrides × stragglers)
+    ckpt_epoch ()         i32  checkpoints attempted so far
+    emitted    ()         f64  source records emitted (running total)
+    dropped    ()         f64  records dropped by single_task failover
+
+Chaos pregeneration semantics (the one intentional delta vs the numpy
+engine's *mechanism*, not its numbers): a `jit`-ted scan cannot consume
+sequential numpy rng draws, so all chaos is materialized up front by
+`core.chaos.build_chaos_timeline` — draw-for-draw in the engine's rng
+consumption order — into per-tick event tensors (host-kill masks,
+checkpoint flags/outcomes, straggler speeds). Event times are thereby
+quantized to tick boundaries, which is exactly the resolution at which
+the tick-driven numpy engine observes them, so metrics stay pinned to
+`StreamEngine` at 1e-5 over full runs (`tests/test_jax_engine.py`);
+checkpoint outcomes and recovery events ride along as host-side
+metadata because they never feed back into queue dynamics.
+
+Compiled `run` functions are cached per *plan shape* (op slices, edge
+kinds, segment counts, failover mode — never float parameters, which
+are traced), so two engines over same-shaped graphs share one trace;
+`get_cached_run_fns` exposes the cache for tests.
+
+Everything runs in float64 (scoped `jax.experimental.enable_x64`, no
+global config flip) to hold parity with the float64 numpy engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core.chaos import (ChaosEngine, ChaosSpec, ChaosTimeline,
+                              build_chaos_timeline)
+from repro.streams.engine import (CheckpointConfig, FailoverConfig,
+                                  build_plan)
+from repro.streams.graph import LogicalGraph, PhysicalGraph, expand
+
+try:  # scoped x64 — keeps the rest of the process on default f32
+    from jax.experimental import enable_x64 as _enable_x64
+except ImportError:  # pragma: no cover - old/new jax without the ctx
+    import contextlib
+
+    @contextlib.contextmanager
+    def _enable_x64():
+        jax.config.update("jax_enable_x64", True)
+        yield
+
+
+class EngineState(NamedTuple):
+    """All mutable arena state of one scenario (see module docstring)."""
+    queue: jax.Array
+    down_until: jax.Array
+    speed: jax.Array
+    ckpt_epoch: jax.Array
+    emitted: jax.Array
+    dropped: jax.Array
+
+
+class _OpDesc(NamedTuple):
+    lo: int
+    hi: int
+    is_source: bool
+
+
+class _EdgeDesc(NamedTuple):
+    kind: str
+    static: bool
+    src_op: int
+    src_par: int
+    dst_lo: int
+    dst_hi: int
+    n_blocks: int
+    n_groups: int
+    any_unblocked: bool
+
+
+# ----------------------------------------------------------------------
+# pure routing (mirrors StreamEngine._route / _accept op-for-op)
+# ----------------------------------------------------------------------
+def _route(ed: _EdgeDesc, ea: dict, produced, free_down, alive_d):
+    kind = ed.kind
+    if kind == "forward":
+        return produced * alive_d
+    if kind in ("rescale", "group_rescale"):
+        prod_blk = jax.ops.segment_sum(produced, ea["blk_of_src"],
+                                       num_segments=ed.n_blocks)
+        alive_blk = jax.ops.segment_sum(alive_d * ea["dst_in_blk"],
+                                        ea["blk_idx"],
+                                        num_segments=ed.n_blocks)
+        has = alive_blk > 0.0
+        rate_blk = jnp.where(has, prod_blk / jnp.where(has, alive_blk, 1.0),
+                             0.0)
+        arriving = rate_blk[ea["blk_idx"]] * alive_d
+        if ed.any_unblocked:
+            arriving = jnp.where(ea["dst_in_blk"] > 0.0, arriving, 0.0)
+        return arriving
+    # all-to-all family: identical weight rows → scale a single row
+    total = produced.sum()
+    if kind == "rebalance":
+        val = alive_d
+    elif kind == "hash":
+        return total * ea["share"]
+    elif kind == "weakhash":
+        cap = jnp.maximum(free_down, 1e-9) * alive_d
+        capsum = jax.ops.segment_sum(cap, ea["grp_of_dst"],
+                                     num_segments=ed.n_groups)
+        # groups with zero capacity fall back to alive-uniform spread
+        # (jit evaluates both branches; numpy branches — values match)
+        alive_eps = alive_d + 1e-9
+        capsum_fb = jax.ops.segment_sum(alive_eps, ea["grp_of_dst"],
+                                        num_segments=ed.n_groups)
+        fall = capsum <= 0.0
+        cap = jnp.where(fall[ea["grp_of_dst"]], alive_eps, cap) * alive_d
+        capsum = jnp.where(fall, capsum_fb, capsum)
+        val = cap * ea["mass_of_dst"] / capsum[ea["grp_of_dst"]]
+    elif kind == "backlog":
+        open_ = (free_down > ea["dst_qcap"] * 0.25).astype(alive_d.dtype)
+        val = jnp.maximum(free_down, 1e-9) * alive_d * jnp.maximum(open_,
+                                                                   0.05)
+    else:
+        raise ValueError(kind)
+    rs = val.sum()
+    return jnp.where(rs > 0.0, val * (total / rs), jnp.zeros_like(val))
+
+
+def _hol_ratio(arriving, room):
+    live = arriving > 1e-9
+    return jnp.where(live, room / jnp.maximum(arriving, 1e-300), jnp.inf)
+
+
+def _accept(ed: _EdgeDesc, ea: dict, arriving, room):
+    if ed.static:
+        # head-of-line blocking: most congested live channel throttles all
+        lam = jnp.minimum(_hol_ratio(arriving, room).min(), 1.0)
+        return arriving * lam
+    if ed.kind == "group_rescale":
+        ratio = _hol_ratio(arriving, room)
+        lam_g = jnp.minimum(
+            jax.ops.segment_min(ratio, ea["blk_idx"],
+                                num_segments=ed.n_blocks), 1.0)
+        return arriving * lam_g[ea["blk_idx"]]
+    # adaptive routing: channels accept up to their credits
+    return jnp.minimum(arriving, room)
+
+
+# ----------------------------------------------------------------------
+# tick/run construction + per-plan-shape trace cache
+# ----------------------------------------------------------------------
+def _build_run(desc):
+    (op_descs, edge_descs, edges_of_op, src_cols, n_tasks, n_hosts,
+     n_regions, failover_mode) = desc
+    single_task = failover_mode == "single_task"
+
+    def tick(pa, state: EngineState, x):
+        t = x["t"]
+        q = state.queue
+        alive_f = (state.down_until <= t).astype(q.dtype)
+        free = jnp.maximum(pa["qcap"] - q, 0.0)
+        emitted, dropped = state.emitted, state.dropped
+        qps_cols = []
+        backlog_zero = jnp.zeros((), q.dtype)
+
+        for oi, od in enumerate(op_descs):
+            sl = slice(od.lo, od.hi)
+            if od.is_source:
+                produced = pa["src_row"][sl] * alive_f[sl]
+                emitted = emitted + produced.sum()
+                qps_cols.append(backlog_zero)
+            else:
+                cap = pa["cap_base"][sl] * state.speed[sl] * alive_f[sl]
+                take = jnp.minimum(q[sl], cap)
+                q = q.at[sl].add(-take)
+                produced = take * pa["sel"][oi]
+                qps_cols.append(take.sum() / pa["dt"])
+            for ei in edges_of_op[oi]:
+                ed, ea = edge_descs[ei], pa["edges"][ei]
+                dsl = slice(ed.dst_lo, ed.dst_hi)
+                arriving = _route(ed, ea, produced, free[dsl], alive_f[dsl])
+                if single_task:
+                    # records routed to a dead task drop (γ=partial)
+                    dead = alive_f[dsl] <= 0.0
+                    dropped = dropped + jnp.where(dead, arriving, 0.0).sum()
+                    arriving = jnp.where(dead, 0.0, arriving)
+                accepted = _accept(ed, ea, arriving, free[dsl])
+                overflow = (arriving - accepted).sum()
+                q = q.at[sl].add(overflow / max(ed.src_par, 1))
+                q = q.at[dsl].add(accepted)
+                free = free.at[dsl].set(
+                    jnp.maximum(free[dsl] - accepted, 0.0))
+
+        # pregenerated chaos host kills → failover
+        down_until = state.down_until
+        if failover_mode != "none":
+            vict = x["kills"][pa["task_host"]]
+            if failover_mode == "single_task":
+                hit = vict > 0.0
+                until = t + pa["detect"] + pa["restart_single"]
+            else:
+                reg_hit = jax.ops.segment_max(vict, pa["task_region"],
+                                              num_segments=n_regions)
+                hit = reg_hit[pa["task_region"]] > 0.0
+                until = t + pa["detect"] + pa["restart_region"]
+            down_until = jnp.where(hit, until, down_until)
+            q = jnp.where(hit, 0.0, q)
+
+        ckpt_epoch = state.ckpt_epoch + x["ckpt"].astype(jnp.int32)
+
+        backlog_row = jnp.stack([q[od.lo:od.hi].sum() for od in op_descs])
+        qps_row = jnp.stack(qps_cols)
+        lag = jnp.stack([backlog_row[j] for j in src_cols]).sum()
+        new_state = EngineState(q, down_until, state.speed, ckpt_epoch,
+                                emitted, dropped)
+        return new_state, {"qps": qps_row, "backlog": backlog_row,
+                           "lag": lag}
+
+    def run(pa, state, xs):
+        return lax.scan(lambda st, x: tick(pa, st, x), state, xs)
+
+    return run
+
+
+_FN_CACHE: dict = {}
+
+_XS_AXES = {"t": None, "kills": 0, "ckpt": None}
+
+
+def get_cached_run_fns(desc):
+    """(jitted run, jitted vmapped run) for a static plan descriptor.
+
+    One entry — hence one trace per call signature — per plan *shape*;
+    float parameters (rates, selectivities, restart times, …) are traced
+    arguments, so sweeping them never re-traces."""
+    if desc not in _FN_CACHE:
+        run = _build_run(desc)
+        _FN_CACHE[desc] = (
+            jax.jit(run),
+            jax.jit(jax.vmap(run, in_axes=(None, 0, _XS_AXES))))
+    return _FN_CACHE[desc]
+
+
+# ----------------------------------------------------------------------
+# lowering: LogicalGraph + configs → static desc + plan arrays
+# ----------------------------------------------------------------------
+class _Lowered:
+    def __init__(self, graph: LogicalGraph, *, n_hosts: int, dt: float,
+                 queue_cap: float, failover: FailoverConfig | None,
+                 ckpt: CheckpointConfig | None, seed: int):
+        self.graph = graph
+        self.dt = dt
+        self.failover = failover or FailoverConfig()
+        self.ckpt_cfg = ckpt
+        self.phys: PhysicalGraph = expand(graph, n_hosts=n_hosts, seed=seed)
+        self.plan = build_plan(graph, dt, queue_cap)
+        self.task_host = np.array([tk.host for tk in self.phys.tasks])
+        self.task_region = np.array(
+            [self.phys.task_region[tk.task_id] for tk in self.phys.tasks])
+        self.n_hosts = int(self.task_host.max()) + 1
+        self.n_regions = len(self.phys.regions)
+
+        plan = self.plan
+        n_tasks = plan.n_tasks
+        src_row = np.zeros(n_tasks)
+        cap_base = np.zeros(n_tasks)
+        sel = np.zeros(len(plan.ops))
+        op_descs, edge_descs, edge_arrays, edges_of_op = [], [], [], []
+        for oi, p in enumerate(plan.ops):
+            op_descs.append(_OpDesc(p.lo, p.hi, p.is_source))
+            sel[oi] = p.selectivity
+            if p.is_source:
+                src_row[p.lo:p.hi] = p.src_row
+            else:
+                cap_base[p.lo:p.hi] = p.service_rate * dt
+        for oi, p in enumerate(plan.ops):
+            mine = []
+            for ep in p.out_edges:
+                mine.append(len(edge_descs))
+                n_groups = (len(ep.grp_starts)
+                            if ep.grp_starts is not None else 0)
+                edge_descs.append(_EdgeDesc(
+                    ep.kind, ep.static, oi, p.par, ep.dst.lo, ep.dst.hi,
+                    ep.n_blocks, n_groups, ep.any_unblocked))
+                ea: dict = {}
+                if ep.kind == "hash":
+                    ea["share"] = ep.share
+                elif ep.kind == "weakhash":
+                    ea["grp_of_dst"] = ep.grp_of_dst.astype(np.int32)
+                    ea["mass_of_dst"] = ep.mass_of_dst
+                elif ep.kind == "backlog":
+                    ea["dst_qcap"] = np.float64(ep.dst_qcap)
+                if ep.kind in ("rescale", "group_rescale"):
+                    ea["blk_of_src"] = ep.blk_of_src.astype(np.int32)
+                    ea["blk_idx"] = ep.blk_idx.astype(np.int32)
+                    ea["dst_in_blk"] = ep.dst_in_blk.astype(np.float64)
+                edge_arrays.append(ea)
+            edges_of_op.append(tuple(mine))
+
+        fo = self.failover
+        self.desc = (tuple(op_descs), tuple(edge_descs),
+                     tuple(edges_of_op), tuple(int(j) for j in
+                                               plan.src_cols),
+                     n_tasks, self.n_hosts, self.n_regions, fo.mode)
+        self.arrays = {
+            "qcap": plan.qcap,
+            "src_row": src_row,
+            "cap_base": cap_base,
+            "sel": sel,
+            "dt": np.float64(dt),
+            "task_host": self.task_host.astype(np.int32),
+            "task_region": self.task_region.astype(np.int32),
+            "detect": np.float64(fo.detect_s),
+            "restart_region": np.float64(fo.region_restart_s),
+            "restart_single": np.float64(fo.single_restart_s),
+            "edges": edge_arrays,
+        }
+        self.op_names = [p.name for p in plan.ops]
+
+    # ------------------------------------------------------------------
+    def prepare(self, spec: ChaosSpec, n_ticks: int,
+                task_speed_override: dict[int, float] | None = None
+                ) -> tuple[EngineState, dict, ChaosTimeline]:
+        """Pregenerate one seed's chaos timeline → (state0, scan xs)."""
+        fo, ck = self.failover, self.ckpt_cfg
+        tl = build_chaos_timeline(
+            spec, n_ticks=n_ticks, dt=self.dt, n_hosts=self.n_hosts,
+            task_host=self.task_host, task_region=self.task_region,
+            regions=self.phys.regions, failover_mode=fo.mode,
+            detect_s=fo.detect_s, region_restart_s=fo.region_restart_s,
+            single_restart_s=fo.single_restart_s,
+            ckpt_interval_s=(ck.interval_s if ck else None),
+            ckpt_mode=(ck.mode if ck else "region"),
+            ckpt_upload_s=(ck.upload_s if ck else 4.0),
+            ckpt_retry=(ck.retry_failed_region if ck else True))
+        n_tasks = self.plan.n_tasks
+        speed = np.ones(n_tasks)
+        if task_speed_override:
+            for tid, s in task_speed_override.items():
+                speed[tid] = s
+        speed *= tl.task_speed
+        state = EngineState(
+            queue=np.zeros(n_tasks), down_until=np.zeros(n_tasks),
+            speed=speed, ckpt_epoch=np.int32(0),
+            emitted=np.float64(0.0), dropped=np.float64(0.0))
+        xs = {"t": tl.ts, "kills": tl.kills.astype(np.float64),
+              "ckpt": tl.ckpt_at}
+        return state, xs, tl
+
+
+# ----------------------------------------------------------------------
+# metrics façades (same read API as streams.engine.EngineMetrics)
+# ----------------------------------------------------------------------
+class JaxEngineMetrics:
+    def __init__(self, op_names, t, lag, qps, backlog, emitted, dropped,
+                 timeline: ChaosTimeline, ckpt_epoch: int | None = None):
+        self.t = t
+        self.source_lag = lag
+        self.qps = {n: qps[:, j] for j, n in enumerate(op_names)}
+        self.backlog = {n: backlog[:, j] for j, n in enumerate(op_names)}
+        self.emitted = float(emitted)
+        self.dropped = float(dropped)
+        self.ckpt_attempts = timeline.ckpt_attempts
+        self.ckpt_success = timeline.ckpt_success
+        self.ckpt_failed = timeline.ckpt_failed
+        # device-side attempt counter (scan state) — must agree with the
+        # host-side timeline; pinned in tests/test_jax_engine.py
+        self.ckpt_epoch = (timeline.ckpt_attempts if ckpt_epoch is None
+                           else int(ckpt_epoch))
+        self.recoveries = timeline.recoveries
+        self.timeline = timeline
+
+
+class JaxBatchMetrics:
+    """Stacked metrics of a vmapped seed batch; `row(i)` is identical to
+    a standalone single-seed run (pinned in tests/test_jax_engine.py)."""
+
+    def __init__(self, op_names, t, lag, qps, backlog, emitted, dropped,
+                 timelines, ckpt_epoch=None):
+        self.op_names = list(op_names)
+        self.t = t                     # (n_ticks,)
+        self.source_lag = lag          # (S, n_ticks)
+        self.qps = qps                 # (S, n_ticks, n_ops)
+        self.backlog = backlog         # (S, n_ticks, n_ops)
+        self.emitted = emitted         # (S,)
+        self.dropped = dropped         # (S,)
+        self.ckpt_epoch = ckpt_epoch   # (S,) device-side attempt counter
+        self.timelines = list(timelines)
+        self.ckpt_attempts = np.array([tl.ckpt_attempts for tl in timelines])
+        self.ckpt_success = np.array([tl.ckpt_success for tl in timelines])
+        self.ckpt_failed = np.array([tl.ckpt_failed for tl in timelines])
+        self.recoveries = [tl.recoveries for tl in timelines]
+
+    def __len__(self) -> int:
+        return len(self.timelines)
+
+    def row(self, i: int) -> JaxEngineMetrics:
+        return JaxEngineMetrics(self.op_names, self.t, self.source_lag[i],
+                                self.qps[i], self.backlog[i],
+                                self.emitted[i], self.dropped[i],
+                                self.timelines[i],
+                                ckpt_epoch=(self.ckpt_epoch[i]
+                                            if self.ckpt_epoch is not None
+                                            else None))
+
+
+# ----------------------------------------------------------------------
+# public API
+# ----------------------------------------------------------------------
+class JaxStreamEngine:
+    """Drop-in (single-seed) twin of `StreamEngine`: same constructor
+    signature, `run(duration_s)` returns `JaxEngineMetrics` with the
+    numpy engine's metric names/values (1e-5)."""
+
+    def __init__(self, graph: LogicalGraph, *, n_hosts: int = 8,
+                 dt: float = 0.5, queue_cap: float = 256.0,
+                 chaos: ChaosEngine | ChaosSpec | None = None,
+                 failover: FailoverConfig | None = None,
+                 ckpt: CheckpointConfig | None = None,
+                 task_speed_override: dict[int, float] | None = None,
+                 seed: int = 0):
+        if isinstance(chaos, ChaosEngine):
+            chaos = chaos.spec
+        self.spec = chaos or ChaosSpec()
+        self.g = graph
+        self.dt = dt
+        self._override = task_speed_override
+        self._low = _Lowered(graph, n_hosts=n_hosts, dt=dt,
+                             queue_cap=queue_cap, failover=failover,
+                             ckpt=ckpt, seed=seed)
+        self.metrics: JaxEngineMetrics | None = None
+
+    @property
+    def lowered(self) -> _Lowered:
+        return self._low
+
+    def run(self, duration_s: float) -> JaxEngineMetrics:
+        low = self._low
+        n_ticks = int(round(duration_s / self.dt))
+        state, xs, tl = low.prepare(self.spec, n_ticks, self._override)
+        run_fn, _ = get_cached_run_fns(low.desc)
+        with _enable_x64():
+            final, ys = run_fn(low.arrays, state, xs)
+            qps = np.asarray(ys["qps"])
+            backlog = np.asarray(ys["backlog"])
+            lag = np.asarray(ys["lag"])
+            emitted = float(final.emitted)
+            dropped = float(final.dropped)
+            ckpt_epoch = int(final.ckpt_epoch)
+        self.metrics = JaxEngineMetrics(low.op_names, tl.ts, lag, qps,
+                                        backlog, emitted, dropped, tl,
+                                        ckpt_epoch=ckpt_epoch)
+        return self.metrics
+
+
+def run_batch(graph: LogicalGraph, seeds, *, duration_s: float,
+              base_spec: ChaosSpec | None = None, n_hosts: int = 8,
+              dt: float = 0.5, queue_cap: float = 256.0,
+              failover: FailoverConfig | None = None,
+              ckpt: CheckpointConfig | None = None,
+              task_speed_override: dict[int, float] | None = None,
+              seed: int = 0) -> JaxBatchMetrics:
+    """Run a ``(S,)`` batch of chaos scenarios as ONE vmapped `jit` call.
+
+    `seeds` is a sequence of ints (merged into `base_spec` via
+    ``dataclasses.replace(spec, seed=s)``) or of full `ChaosSpec`s.
+    """
+    specs = [dataclasses.replace(base_spec or ChaosSpec(), seed=int(s))
+             if isinstance(s, (int, np.integer)) else s for s in seeds]
+    if not specs:
+        raise ValueError("run_batch requires at least one seed/spec")
+    low = _Lowered(graph, n_hosts=n_hosts, dt=dt, queue_cap=queue_cap,
+                   failover=failover, ckpt=ckpt, seed=seed)
+    n_ticks = int(round(duration_s / dt))
+    prepped = [low.prepare(spec, n_ticks, task_speed_override)
+               for spec in specs]
+    states = [p[0] for p in prepped]
+    tls = [p[2] for p in prepped]
+    batch_state = EngineState(*(np.stack([getattr(s, f) for s in states])
+                                for f in EngineState._fields))
+    xs = {"t": prepped[0][1]["t"],                 # identical across seeds
+          "kills": np.stack([p[1]["kills"] for p in prepped]),
+          "ckpt": prepped[0][1]["ckpt"]}           # static schedule
+    _, batch_fn = get_cached_run_fns(low.desc)
+    with _enable_x64():
+        final, ys = batch_fn(low.arrays, batch_state, xs)
+        qps = np.asarray(ys["qps"])
+        backlog = np.asarray(ys["backlog"])
+        lag = np.asarray(ys["lag"])
+        emitted = np.asarray(final.emitted)
+        dropped = np.asarray(final.dropped)
+        ckpt_epoch = np.asarray(final.ckpt_epoch)
+    return JaxBatchMetrics(low.op_names, tls[0].ts, lag, qps, backlog,
+                           emitted, dropped, tls, ckpt_epoch=ckpt_epoch)

@@ -1,0 +1,206 @@
+"""Parity pins for the JAX engine twin (`streams/jax_engine.py`).
+
+The jax engine is pinned to the numpy `StreamEngine` the same way the
+numpy engine is pinned to `reference_engine.py`: identical chaos event
+streams (pregenerated draw-for-draw), metrics parity at 1e-5 over full
+runs — across every partitioner, both failover modes, the checkpoint
+coordinator, and under Poisson host kills + stragglers. The vmapped
+batch path is additionally pinned row-for-row to standalone runs, and
+the compiled-run cache is pinned to one trace per plan shape.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.chaos import ChaosEngine, ChaosSpec
+from repro.streams import nexmark
+from repro.streams.engine import (CheckpointConfig, FailoverConfig,
+                                  StreamEngine)
+from repro.streams.jax_engine import (JaxStreamEngine, get_cached_run_fns,
+                                      run_batch)
+
+TOL = dict(rtol=1e-5, atol=1e-5)
+
+
+def assert_metrics_match(np_eng, jax_metrics, label="", tol=TOL):
+    ma, mb = np_eng.metrics, jax_metrics
+    for n in np_eng.g.topo_order():
+        np.testing.assert_allclose(np.array(ma.qps[n]), mb.qps[n],
+                                   err_msg=f"{label} qps[{n}]", **tol)
+        np.testing.assert_allclose(np.array(ma.backlog[n]), mb.backlog[n],
+                                   err_msg=f"{label} backlog[{n}]", **tol)
+    np.testing.assert_allclose(np.array(ma.t), mb.t, atol=0)
+    np.testing.assert_allclose(np.array(ma.source_lag), mb.source_lag,
+                               **tol)
+    np.testing.assert_allclose(ma.emitted, mb.emitted, rtol=1e-5)
+    np.testing.assert_allclose(ma.dropped, mb.dropped, **tol)
+    assert (ma.ckpt_attempts, ma.ckpt_success, ma.ckpt_failed) == \
+        (mb.ckpt_attempts, mb.ckpt_success, mb.ckpt_failed), label
+    # device-side scan counter agrees with the host-side timeline
+    assert mb.ckpt_epoch == mb.ckpt_attempts, label
+    assert ma.recoveries == mb.recoveries, label
+
+
+def _run_pair(make_graph, duration, **kw):
+    kw_np = dict(kw)
+    spec = kw_np.pop("chaos_spec", None)
+    if spec is not None:
+        kw_np["chaos"] = ChaosEngine(spec)
+    a = StreamEngine(make_graph(), **kw_np)
+    a.run(duration)
+    kw_jx = dict(kw)
+    if spec is not None:
+        kw_jx["chaos"] = kw_jx.pop("chaos_spec")
+    b = JaxStreamEngine(make_graph(), **kw_jx)
+    mb = b.run(duration)
+    return a, b, mb
+
+
+# ----------------------------------------------------------------------
+# single-seed parity (full runs, 1e-5)
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("partitioner", ["rebalance", "hash", "weakhash",
+                                         "backlog", "group_rescale"])
+def test_jax_parity_partitioners(partitioner):
+    slow = {t: 1e-3 for t in range(16, 32, 5)}  # stragglers → congestion
+    a, _, mb = _run_pair(
+        lambda: nexmark.q2(parallelism=16, partitioner=partitioner,
+                           n_groups=4),
+        60, n_hosts=16, task_speed_override=slow, seed=3)
+    assert_metrics_match(a, mb, partitioner)
+
+
+def test_jax_parity_forward_chain():
+    a, _, mb = _run_pair(lambda: nexmark.ds(parallelism=6), 120, n_hosts=6)
+    assert_metrics_match(a, mb, "forward")
+
+
+@pytest.mark.parametrize("mode", ["region", "single_task"])
+def test_jax_parity_host_kill(mode):
+    a, _, mb = _run_pair(
+        lambda: nexmark.ss(parallelism=8), 300, n_hosts=8,
+        chaos_spec=ChaosSpec(seed=0, host_kill_at=((100.0, 2),)),
+        failover=FailoverConfig(mode=mode, region_restart_s=60.0))
+    assert_metrics_match(a, mb, mode)
+    assert len(mb.recoveries) == 1
+    if mode == "single_task":
+        assert mb.dropped > 0
+
+
+def test_jax_parity_poisson_kills_and_stragglers():
+    """Long run, random kill process + stragglers: the pregenerated event
+    tensors must consume the chaos rng draw-for-draw with the numpy
+    engine or everything after the first divergent draw falls apart."""
+    spec = ChaosSpec(seed=5, host_kill_prob_per_s=0.002,
+                     straggler_frac=0.25, straggler_factor=4.0)
+    a, _, mb = _run_pair(
+        lambda: nexmark.q12(parallelism=8), 600, n_hosts=8,
+        chaos_spec=spec,
+        failover=FailoverConfig(mode="region", region_restart_s=20.0))
+    assert len(mb.recoveries) > 1          # chaos actually fired
+    assert_metrics_match(a, mb, "poisson")
+
+
+def test_jax_parity_checkpoints():
+    for cm in ("region", "global"):
+        a, _, mb = _run_pair(
+            lambda: nexmark.ds(parallelism=6), 400, n_hosts=6,
+            chaos_spec=ChaosSpec(seed=2, storage_slow_prob=0.3,
+                                 storage_slow_factor=10),
+            ckpt=CheckpointConfig(interval_s=30, mode=cm))
+        assert mb.ckpt_attempts > 0
+        assert_metrics_match(a, mb, cm)
+
+
+def test_jax_parity_ckpt_under_kills():
+    """Interleaved rng consumers: kill draws + checkpoint storage draws."""
+    spec = ChaosSpec(seed=7, host_kill_prob_per_s=0.001,
+                     storage_slow_prob=0.2, storage_slow_factor=12)
+    a, _, mb = _run_pair(
+        lambda: nexmark.ds(parallelism=6), 500, n_hosts=6,
+        chaos_spec=spec,
+        failover=FailoverConfig(mode="region", region_restart_s=15.0),
+        ckpt=CheckpointConfig(interval_s=40, mode="region"))
+    assert mb.ckpt_attempts > 0
+    assert_metrics_match(a, mb, "ckpt+kills")
+
+
+# ----------------------------------------------------------------------
+# vmapped batch: row i == standalone seed i, and both == numpy engine
+# ----------------------------------------------------------------------
+def test_jax_batch_rows_match_standalone_and_numpy():
+    base = ChaosSpec(host_kill_prob_per_s=0.003, straggler_frac=0.2)
+    fo = FailoverConfig(mode="region", region_restart_s=20.0)
+    def graph():
+        return nexmark.q2(parallelism=8, partitioner="weakhash",
+                          n_groups=4)
+    seeds = list(range(6))
+    bm = run_batch(graph(), seeds, base_spec=base, duration_s=120,
+                   n_hosts=8, failover=fo)
+    assert bm.source_lag.shape == (6, 240)
+    for i in seeds:
+        spec = dataclasses.replace(base, seed=i)
+        # batch row i == standalone jax run with seed i (same lowering,
+        # so down to vmap-reduction reassociation only)
+        m = JaxStreamEngine(graph(), n_hosts=8, chaos=spec,
+                            failover=fo).run(120)
+        np.testing.assert_allclose(bm.source_lag[i], m.source_lag,
+                                   rtol=1e-12, atol=1e-9)
+        np.testing.assert_allclose(bm.dropped[i], m.dropped,
+                                   rtol=1e-12, atol=1e-9)
+        assert bm.recoveries[i] == m.recoveries
+        # ... and both pin to the numpy engine at 1e-5
+        a = StreamEngine(graph(), n_hosts=8, chaos=ChaosEngine(spec),
+                         failover=fo)
+        a.run(120)
+        assert_metrics_match(a, bm.row(i), f"seed {i}")
+
+
+# ----------------------------------------------------------------------
+# trace cache: one trace per plan shape
+# ----------------------------------------------------------------------
+def test_jit_cache_one_trace_per_plan_shape():
+    def g(s):
+        return nexmark.q2(parallelism=12, partitioner="weakhash",
+                          n_groups=4, source_rate=s)
+    e1 = JaxStreamEngine(g(0.8e6), n_hosts=8, chaos=ChaosSpec(seed=1))
+    e2 = JaxStreamEngine(g(0.5e6), n_hosts=8, chaos=ChaosSpec(seed=2))
+    # same plan shape → the very same cached callable
+    assert e1.lowered.desc == e2.lowered.desc
+    fn1, _ = get_cached_run_fns(e1.lowered.desc)
+    fn2, _ = get_cached_run_fns(e2.lowered.desc)
+    assert fn1 is fn2
+    before = fn1._cache_size()
+    e1.run(30)
+    e2.run(30)   # different rates/seeds, same shapes → no retrace
+    assert fn1._cache_size() - before == 1
+    # a different plan shape misses the cache (different callable)
+    e3 = JaxStreamEngine(nexmark.q2(parallelism=4), n_hosts=4)
+    fn3, _ = get_cached_run_fns(e3.lowered.desc)
+    assert fn3 is not fn1
+
+
+def test_run_batch_rejects_empty_seed_batch():
+    with pytest.raises(ValueError, match="at least one"):
+        run_batch(nexmark.q2(parallelism=4), [], duration_s=10,
+                  base_spec=ChaosSpec(), n_hosts=4)
+
+
+def test_sweep_accepts_full_chaos_spec_entries():
+    from repro.streams.chaos_sweep import sweep
+    res = sweep(nexmark.q2(parallelism=4),
+                [ChaosSpec(seed=1), ChaosSpec(seed=2)],
+                base_spec=ChaosSpec(), duration_s=30, n_hosts=4)
+    assert [s.seed for s in res.summaries] == [1, 2]
+
+
+def test_jax_parity_scheduled_kill_of_hostless_id():
+    """Scheduled kills are unbounded by the host count actually used
+    (n_hosts=8 but only 4 tasks → hosts 0-3); a kill of a hostless id
+    must be a no-op in both engines, not a crash."""
+    spec = ChaosSpec(seed=0, host_kill_at=((2.0, 7),))
+    a, _, mb = _run_pair(lambda: nexmark.q2(parallelism=2), 20,
+                         n_hosts=8, chaos_spec=spec)
+    assert mb.recoveries == []
+    assert_metrics_match(a, mb, "hostless kill")

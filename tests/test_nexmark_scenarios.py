@@ -1,0 +1,93 @@
+"""Nexmark failure scenarios (paper Table III workloads under chaos).
+
+Q2 and Q12 run through BOTH engines (numpy `StreamEngine` and the JAX
+twin) for a short horizon with one injected host kill; the assertions
+pin actual *recovery*, not just survival:
+
+* Q2 + weakhash + single-task failover — the live sources keep pushing
+  into the degraded candidate group, so backlog visibly piles up and
+  must drain after the task restarts; source lag (retained backlog —
+  sources never re-emit in this sim, so it is monotone) must plateau.
+* Q12 + region failover — the all-to-all hash hop makes the whole graph
+  one region, so the kill silences the job; recovery means window qps
+  returns to the pre-kill steady state and queues stay drained.
+
+Seeds the "larger Nexmark scenarios" ROADMAP item.
+"""
+import numpy as np
+import pytest
+
+from repro.core.chaos import ChaosEngine, ChaosSpec
+from repro.streams import nexmark
+from repro.streams.engine import FailoverConfig, StreamEngine
+from repro.streams.jax_engine import JaxStreamEngine
+
+KILL = ChaosSpec(seed=0, host_kill_at=((60.0, 1),))
+
+
+def _run_both(graph_fn, fo, duration=240.0):
+    a = StreamEngine(graph_fn(), n_hosts=8, chaos=ChaosEngine(KILL),
+                     failover=fo)
+    ma = a.run(duration)
+    mb = JaxStreamEngine(graph_fn(), n_hosts=8, chaos=KILL,
+                         failover=fo).run(duration)
+    # engines agree on the whole scenario (1e-5, full run)
+    for n in a.g.topo_order():
+        np.testing.assert_allclose(np.array(ma.backlog[n]), mb.backlog[n],
+                                   rtol=1e-5, atol=1e-5, err_msg=n)
+        np.testing.assert_allclose(np.array(ma.qps[n]), mb.qps[n],
+                                   rtol=1e-5, atol=1e-5, err_msg=n)
+    np.testing.assert_allclose(np.array(ma.source_lag), mb.source_lag,
+                               rtol=1e-5, atol=1e-5)
+    assert ma.recoveries == mb.recoveries
+    return a, ma, mb
+
+
+def test_q2_single_task_kill_backlog_drains():
+    fo = FailoverConfig(mode="single_task", single_restart_s=20.0)
+    a, ma, mb = _run_both(
+        lambda: nexmark.q2(parallelism=8, partitioner="weakhash",
+                           n_groups=4, service_rate=1.1e5), fo)
+    assert len(mb.recoveries) == 1
+    ts = np.array(ma.t)
+    lag = np.array(ma.source_lag)
+    bk = np.array(ma.backlog["filter"])
+    pre = (ts > 30) & (ts < 60)
+    steady_bk = float(np.median(bk[pre]))
+    # the kill visibly backs the group up ...
+    outage_peak = float(bk[(ts >= 60) & (ts <= 90)].max())
+    assert outage_peak > 10 * steady_bk + 1e4
+    lag_outage = lag[ts.searchsorted(100)] - lag[ts.searchsorted(59)]
+    assert lag_outage > 1e5
+    # ... backlog drains once the task is back ...
+    assert bk[ts > 200].max() <= 1.5 * steady_bk + 1e3
+    # ... and retained source lag returns below threshold (plateaus):
+    # post-recovery growth under 5% of the outage growth
+    lag_tail = lag[-1] - lag[ts.searchsorted(200)]
+    assert lag_tail <= 0.05 * lag_outage
+
+
+def test_q12_region_kill_qps_recovers():
+    fo = FailoverConfig(mode="region", region_restart_s=10.0)
+    a, ma, mb = _run_both(
+        lambda: nexmark.q12(parallelism=8, service_rate=2.4e5), fo)
+    assert len(mb.recoveries) == 1
+    rec = mb.recoveries[0]
+    assert rec["t"] == pytest.approx(60.0, abs=0.5)
+    ts = np.array(ma.t)
+    q = np.array(ma.qps["window_count"])
+    steady = float(np.median(q[(ts > 30) & (ts < 60)]))
+    assert steady > 0
+    down_end = rec["t"] + rec["downtime"]
+    # the region kill silences the window operator ...
+    assert q[(ts > rec["t"] + 2) & (ts < down_end - 1)].max() == 0.0
+    # ... and qps returns to the steady state after restart
+    tail = q[ts > down_end + 30]
+    assert tail.min() >= 0.95 * steady
+    # queues stay drained: backlog and lag back below (pre-kill) threshold
+    for n in ("window_count", "sink"):
+        assert np.array(ma.backlog[n])[ts > down_end + 30].max() <= \
+            np.array(ma.backlog[n])[(ts > 30) & (ts < 60)].max() + 1e-6
+    lag = np.array(ma.source_lag)
+    assert lag[ts > down_end + 30].max() <= lag[(ts > 30) & (ts < 60)].max() \
+        + 1e-6
