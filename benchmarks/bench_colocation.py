@@ -1,0 +1,110 @@
+"""Multi-job mega-arena throughput: scenarios/s of ONE packed co-located
+sweep (K jobs, shared host pool, one device call per shard) vs running
+the K jobs' sweeps separately on the same seed batch.
+
+The packed arena shares one trace, one chaos-timeline prep pass per seed
+(instead of K) and one device dispatch per tick horizon, so co-located
+fleet screening beats sequential per-job sweeps well beyond 2x per core.
+Emits the usual CSV rows through benchmarks/run.py and writes
+``results/bench_colocation.json`` (scenarios/s, per-job p95 recovery,
+vs-separate speedup) for the perf trajectory. Quick mode
+(REPRO_BENCH_QUICK=1) shrinks the batch and horizon to a few seconds.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+try:
+    from benchmarks.run import quick_mode
+except ImportError:      # standalone: sys.path[0] is benchmarks/
+    from run import quick_mode
+from repro.core.chaos import ChaosSpec
+from repro.streams import nexmark
+from repro.streams.chaos_sweep import sweep
+from repro.streams.engine import FailoverConfig, pack_arena
+
+BASE_SPEC = ChaosSpec(host_kill_prob_per_s=0.004, straggler_frac=0.2)
+FAILOVER = FailoverConfig(mode="region", region_restart_s=20.0)
+
+
+def _job_mix():
+    return [nexmark.q2(parallelism=8, partitioner="weakhash", n_groups=4,
+                       service_rate=1.1e5),
+            nexmark.q12(parallelism=8, service_rate=2.4e5),
+            nexmark.ds(parallelism=6),
+            nexmark.ss(parallelism=4)]
+
+
+def run():
+    quick = quick_mode()
+    n_seeds = 16 if quick else 256
+    duration = 60.0 if quick else 120.0
+    graphs = _job_mix()
+    arena = pack_arena(graphs, "shared", n_hosts=8)
+
+    def packed():
+        return sweep(arena, range(n_seeds), base_spec=BASE_SPEC,
+                     duration_s=duration, failover=FAILOVER)
+
+    def separate():
+        t0 = time.perf_counter()
+        res = [sweep(g, range(n_seeds), base_spec=BASE_SPEC,
+                     duration_s=duration, n_hosts=8, failover=FAILOVER)
+               for g in graphs]
+        return res, time.perf_counter() - t0
+
+    # cold (trace + compile) then warm for both strategies
+    t0 = time.perf_counter()
+    packed()
+    packed_cold = time.perf_counter() - t0
+    _, sep_cold = separate()
+    t0 = time.perf_counter()
+    res = packed()
+    packed_warm = time.perf_counter() - t0
+    sep_res, sep_warm = separate()
+
+    k = arena.n_jobs
+    job_scen_s = k * n_seeds / packed_warm
+    speedup = sep_warm / packed_warm
+    per_job = {
+        name: {
+            "recovery_p95_s": jr.aggregate()["recovery_p95_s"],
+            "slo_violation_frac_p95":
+                jr.aggregate()["slo_violation_frac_p95"],
+        } for name, jr in res.job_results.items()}
+    rows = [(f"colocation/{k}jobs/{n_seeds}seeds",
+             1e6 / job_scen_s,
+             f"job_scenarios_s={job_scen_s:.0f};"
+             f"speedup_vs_separate={speedup:.2f}x;"
+             f"cold_speedup={sep_cold / packed_cold:.2f}x;"
+             f"p95_recovery_worst="
+             f"{max(v['recovery_p95_s'] for v in per_job.values()):.1f}s")]
+    if quick:   # quick smoke must not overwrite the tracked record
+        return rows
+    record = {
+        "n_jobs": k, "n_seeds": n_seeds, "duration_s": duration,
+        "n_ticks": res.n_ticks, "n_hosts": arena.n_hosts,
+        "n_tasks": arena.plan.n_tasks,
+        "packed_cold_wall_s": packed_cold, "packed_warm_wall_s": packed_warm,
+        "separate_cold_wall_s": sep_cold, "separate_warm_wall_s": sep_warm,
+        "scenarios_per_s": job_scen_s,
+        "separate_scenarios_per_s": k * n_seeds / sep_warm,
+        "speedup_vs_separate": speedup,
+        "cold_speedup_vs_separate": sep_cold / packed_cold,
+        "per_job": per_job,
+        "separate_recovery_p95_s": {
+            g.name: r.aggregate()["recovery_p95_s"]
+            for g, r in zip(graphs, sep_res)},
+        "fleet_aggregate": res.aggregate(),
+    }
+    out = pathlib.Path("results")
+    out.mkdir(parents=True, exist_ok=True)
+    (out / "bench_colocation.json").write_text(json.dumps(record, indent=1))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

@@ -13,10 +13,13 @@ cell and shrinks tick counts so the whole module runs in a few seconds.
 from __future__ import annotations
 
 import json
-import os
 import pathlib
 import time
 
+try:
+    from benchmarks.run import quick_mode
+except ImportError:      # standalone: sys.path[0] is benchmarks/
+    from run import quick_mode
 from repro.streams.engine import StreamEngine
 from repro.streams.graph import LogicalEdge, LogicalGraph, LogicalOp
 from repro.streams.reference_engine import ReferenceStreamEngine
@@ -51,10 +54,6 @@ def _ticks_per_sec(cls, n_tasks: int, n_ticks: int, repeats: int = 3) -> float:
     return best
 
 
-def quick_mode() -> bool:
-    return os.environ.get("REPRO_BENCH_QUICK", "") not in ("", "0")
-
-
 def run():
     quick = quick_mode()
     cells = [(100, 500, 4000), (1000, 60, 4000)]
@@ -72,9 +71,10 @@ def run():
                      f"speedup={speedup:.1f}x"))
         record["cells"].append({"n_tasks": n_tasks, "ticks_s": vec,
                                 "ref_ticks_s": ref, "speedup": speedup})
-    out = pathlib.Path("results")
-    out.mkdir(parents=True, exist_ok=True)
-    (out / "bench_engine.json").write_text(json.dumps(record, indent=1))
+    if not quick:   # quick smoke must not overwrite the tracked record
+        out = pathlib.Path("results")
+        out.mkdir(parents=True, exist_ok=True)
+        (out / "bench_engine.json").write_text(json.dumps(record, indent=1))
     return rows
 
 

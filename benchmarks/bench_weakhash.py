@@ -1,15 +1,79 @@
 """§III-A WeakHash: hot-key diffusion. Zipf-skewed keys → per-task load CV
 under strict hash vs WeakHash (bounded groups, load-aware), plus the MoE
-token-path variant (hot expert overflow / drop rates)."""
+token-path variant (hot expert overflow / drop rates) and the demand
+carry-forward approximation study (single-pass kernel vs exact global
+demand; per-expert load CV over a stream of batches, recorded in
+``results/weakhash_carry_forward.json`` — the ROADMAP open item)."""
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 
 import jax.numpy as jnp
 import numpy as np
 
+try:
+    from benchmarks.run import quick_mode
+except ImportError:      # standalone: sys.path[0] is benchmarks/
+    from run import quick_mode
 from repro.core.weakhash import load_cv, strong_hash, weakhash_assign
 from repro.kernels.weakhash_route import ref as route_ref
+
+
+def _expert_load_cv(demand: np.ndarray) -> float:
+    m = demand.mean()
+    return float(demand.std() / m) if m > 0 else 0.0
+
+
+def carry_forward_study(n_batches: int = 6, T: int = 1024, E: int = 32,
+                        G: int = 8, top_k: int = 2,
+                        block_t: int = 256) -> dict:
+    """Routing-quality delta of the single-pass carry-forward kernel.
+
+    Streams `n_batches` hot-keyed batches through the fused kernel twice
+    — exact global demand (two logits reads for nt > 1) vs carry-forward
+    (previous batch's demand + running tile histogram, one read) — and
+    compares the per-expert selection-load CV. Runs in Pallas interpret
+    mode so the measurement works on any backend."""
+    from repro.kernels.weakhash_route import kernel as K
+
+    rng = np.random.default_rng(42)
+    cap = 2 * T // E
+    prior = None
+    cv_exact, cv_carry, disagree = [], [], []
+    for _ in range(n_batches):
+        logits = rng.normal(size=(T, E)).astype(np.float32)
+        logits[:, rng.integers(0, E)] += 2.5      # a migrating hot expert
+        keys = jnp.asarray(rng.integers(0, 1 << 20, T), jnp.int32)
+        lg = jnp.asarray(logits)
+        ex = K.weakhash_route_ints(lg, top_k=top_k, capacity=cap,
+                                   n_groups=G, token_keys=keys,
+                                   block_t=block_t, interpret=True)
+        cf = K.weakhash_route_ints(lg, top_k=top_k, capacity=cap,
+                                   n_groups=G, token_keys=keys,
+                                   block_t=block_t, interpret=True,
+                                   carry_forward=True, prior_demand=prior)
+        prior = cf[3]                             # chain the batches
+        sel_ex = np.bincount(np.asarray(ex[0]).ravel(), minlength=E)
+        sel_cf = np.bincount(np.asarray(cf[0]).ravel(), minlength=E)
+        cv_exact.append(_expert_load_cv(sel_ex))
+        cv_carry.append(_expert_load_cv(sel_cf))
+        disagree.append(float(np.mean(np.asarray(ex[0]) !=
+                                      np.asarray(cf[0]))))
+    mean_ex = float(np.mean(cv_exact))
+    mean_cf = float(np.mean(cv_carry))
+    return {
+        "config": {"n_batches": n_batches, "T": T, "E": E, "n_groups": G,
+                   "top_k": top_k, "block_t": block_t,
+                   "nt": T // block_t, "capacity": cap},
+        "load_cv_exact": mean_ex,
+        "load_cv_carry_forward": mean_cf,
+        "load_cv_delta": mean_cf - mean_ex,
+        "load_cv_rel_delta": (mean_cf - mean_ex) / max(mean_ex, 1e-9),
+        "selection_disagreement_frac": float(np.mean(disagree)),
+        "per_batch": {"cv_exact": cv_exact, "cv_carry": cv_carry},
+    }
 
 
 def run():
@@ -43,4 +107,21 @@ def run():
                  f"max_demand_weak={float(weak.demand.max()):.0f};"
                  f"drop_strict={1 - float(strict.keep.mean()):.2%};"
                  f"drop_weak={1 - float(weak.keep.mean()):.2%}"))
+
+    # demand carry-forward approximation (single-pass kernel) vs exact
+    quick = quick_mode()
+    t0 = time.perf_counter()
+    study = carry_forward_study(n_batches=3 if quick else 6,
+                                T=512 if quick else 1024)
+    us = (time.perf_counter() - t0) * 1e6
+    if not quick:   # the quality record tracks the full-size study only
+        out = pathlib.Path("results")
+        out.mkdir(parents=True, exist_ok=True)
+        (out / "weakhash_carry_forward.json").write_text(
+            json.dumps(study, indent=1))
+    rows.append((f"weakhash/carry_forward/nt{study['config']['nt']}", us,
+                 f"cv_exact={study['load_cv_exact']:.3f};"
+                 f"cv_carry={study['load_cv_carry_forward']:.3f};"
+                 f"rel_delta={study['load_cv_rel_delta']:+.1%};"
+                 f"disagree={study['selection_disagreement_frac']:.2%}"))
     return rows

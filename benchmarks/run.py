@@ -5,12 +5,21 @@ metric of that table/figure).
 
 ``--quick`` runs a fast smoke subset (sets REPRO_BENCH_QUICK=1, which
 modules may honor to shrink their workloads) — used by scripts/ci.sh.
+Quick mode must NOT overwrite the tracked ``results/*.json`` perf
+records (they are the full-size measurements of record): modules guard
+their JSON writes with `quick_mode()`.
 """
 from __future__ import annotations
 
 import os
 import sys
 import traceback
+
+
+def quick_mode() -> bool:
+    """Shared REPRO_BENCH_QUICK parse — one truthiness rule for every
+    benchmark module."""
+    return os.environ.get("REPRO_BENCH_QUICK", "") not in ("", "0")
 
 MODULES = [
     "benchmarks.bench_startup",             # Table II + Fig 5
@@ -23,12 +32,14 @@ MODULES = [
     "benchmarks.bench_lazyload",            # §III-B State LazyLoad
     "benchmarks.bench_engine",              # stream-engine hot path
     "benchmarks.bench_chaos_sweep",         # vmapped jit chaos sweeps
+    "benchmarks.bench_colocation",          # multi-job mega-arena sweeps
     "benchmarks.bench_kernels",             # §V-C micro benchmarking
 ]
 
 QUICK_MODULES = [
     "benchmarks.bench_engine",              # vectorized vs reference engine
     "benchmarks.bench_chaos_sweep",         # vmapped jit chaos sweeps
+    "benchmarks.bench_colocation",          # multi-job mega-arena sweeps
     "benchmarks.bench_weakhash",            # WeakHash assignment path
     "benchmarks.bench_hotupdate",           # pure-python, fast
 ]

@@ -1,9 +1,10 @@
 #!/usr/bin/env bash
 # Tier-1 CI: test suite + quick benchmark smoke.
 #
-#   scripts/ci.sh                # non-slow tests + quick benches
-#   scripts/ci.sh --full         # include the slow multi-device subprocess tests
-#   scripts/ci.sh --sweep-smoke  # also run a 16-seed chaos sweep (vmapped jit, CPU)
+#   scripts/ci.sh                     # non-slow tests + quick benches
+#   scripts/ci.sh --full              # include the slow multi-device subprocess tests
+#   scripts/ci.sh --sweep-smoke       # also run a 16-seed chaos sweep (vmapped jit, CPU)
+#   scripts/ci.sh --colocation-smoke  # also run a 4-job 16-seed sharded co-location sweep
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -22,6 +23,11 @@ PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" python benchmarks/run.py --quick
 if [[ "${1:-}" == "--sweep-smoke" ]]; then
   echo "== chaos-sweep smoke: 16 seeds, one vmapped jit call =="
   python examples/chaos_sweep.py --seeds 16 --duration 60
+fi
+
+if [[ "${1:-}" == "--colocation-smoke" ]]; then
+  echo "== co-location smoke: 4 jobs, 16 seeds, 2 device shards =="
+  python examples/colocation_sweep.py --jobs 4 --seeds 16 --duration 60 --devices 2
 fi
 
 echo "CI OK"

@@ -71,14 +71,25 @@ class ChaosEngine:
                 if self.is_straggler(host_id) else 1.0)
 
     def step_kills(self, t0: float, t1: float, n_hosts: int) -> list[int]:
-        """Hosts killed in (t0, t1]: scheduled kills + Poisson random kills."""
+        """Hosts killed in (t0, t1]: scheduled kills + Poisson random kills.
+
+        The Poisson draws are batched — one ``random(n_alive)`` call over
+        the alive hosts in ascending id order, which numpy Generators
+        guarantee is the same stream as n_alive sequential scalar draws —
+        so large host pools (multi-job arenas) don't pay per-host Python
+        rng calls every tick."""
         kills = [h for (t, h) in self.spec.host_kill_at
                  if t0 < t <= t1 and h not in self._killed]
         if self.spec.host_kill_prob_per_s:
             p = 1.0 - np.exp(-self.spec.host_kill_prob_per_s * (t1 - t0))
-            for h in range(n_hosts):
-                if h not in self._killed and self._rng.random() < p:
-                    kills.append(h)
+            if self._killed:
+                alive = np.array([h for h in range(n_hosts)
+                                  if h not in self._killed])
+            else:
+                alive = np.arange(n_hosts)
+            if len(alive):
+                kills.extend(
+                    int(h) for h in alive[self._rng.random(len(alive)) < p])
         self._killed.update(kills)
         return sorted(set(kills))
 
@@ -94,6 +105,27 @@ class ChaosEngine:
 
     def hdfs_available(self, t: float) -> bool:
         return not any(a <= t < b for a, b in self.spec.hdfs_down)
+
+
+def failover_recovery_entries(t: float, mode: str, hit: np.ndarray,
+                              downtime: float,
+                              job_of_task: np.ndarray | None = None
+                              ) -> list[dict]:
+    """Recovery-event dicts for one failover action over `hit` tasks.
+
+    Single-job runs (``job_of_task=None``) keep the historical one-entry
+    format. Packed multi-job arenas (`streams.engine.pack_arena`) emit one
+    entry per affected job — ascending job id, with a ``"job"`` key — so a
+    shared-host kill that downs tasks of several co-located jobs is
+    attributable per job. Used by both the live `StreamEngine` and the
+    pregenerated timeline so the two stay comparable with ``==``."""
+    if job_of_task is None:
+        return [{"t": t, "mode": mode, "tasks": int(hit.sum()),
+                 "downtime": downtime}]
+    return [{"t": t, "mode": mode,
+             "tasks": int((hit & (job_of_task == j)).sum()),
+             "downtime": downtime, "job": int(j)}
+            for j in np.unique(job_of_task[hit])]
 
 
 # ----------------------------------------------------------------------
@@ -133,7 +165,8 @@ def build_chaos_timeline(
         failover_mode: str = "region", detect_s: float = 1.0,
         region_restart_s: float = 45.0, single_restart_s: float = 3.0,
         ckpt_interval_s: float | None = None, ckpt_mode: str = "region",
-        ckpt_upload_s: float = 4.0, ckpt_retry: bool = True) -> ChaosTimeline:
+        ckpt_upload_s: float = 4.0, ckpt_retry: bool = True,
+        job_of_task: np.ndarray | None = None) -> ChaosTimeline:
     """Replay the engine's chaos rng consumption for `n_ticks` ticks.
 
     Host kills, checkpoint outcomes and failover downtimes are all
@@ -182,18 +215,14 @@ def build_chaos_timeline(
                 victims = task_host == host
                 if victims.any() and failover_mode != "none":
                     if failover_mode == "single_task":
-                        down[victims] = t + detect_s + single_restart_s
-                        recoveries.append(
-                            {"t": t, "mode": "single_task",
-                             "tasks": int(victims.sum()),
-                             "downtime": detect_s + single_restart_s})
+                        hit = victims
+                        downtime = detect_s + single_restart_s
                     else:
                         hit = np.isin(task_region, task_region[victims])
-                        down[hit] = t + detect_s + region_restart_s
-                        recoveries.append(
-                            {"t": t, "mode": "region",
-                             "tasks": int(hit.sum()),
-                             "downtime": detect_s + region_restart_s})
+                        downtime = detect_s + region_restart_s
+                    down[hit] = t + downtime
+                    recoveries.extend(failover_recovery_entries(
+                        t, failover_mode, hit, downtime, job_of_task))
                 eng.revive(host)   # replacement host, as in _fail_host
         if t + dt >= next_ckpt:
             ckpt_at[i] = True

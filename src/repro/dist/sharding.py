@@ -145,6 +145,83 @@ class ShardingCtx:
 NO_SHARDING = ShardingCtx(mesh=None)
 
 
+# ----------------------------------------------------------------------
+# Seed-batch device sharding (chaos sweeps) — version-gated shim
+# ----------------------------------------------------------------------
+def jax_version() -> tuple[int, int]:
+    major, minor = jax.__version__.split(".")[:2]
+    return (int(major), int(minor))
+
+
+def shard_map_available() -> bool:
+    """True when the top-level `jax.shard_map` API exists (jax >= 0.6).
+    The container ships 0.4.x, where `pmap` is the sharding vehicle; the
+    gate keeps one call site working across both toolchains (ROADMAP's
+    version-gated `repro/dist` shim item)."""
+    return jax_version() >= (0, 6) and hasattr(jax, "shard_map")
+
+
+def local_shard_count(requested: int | str | None) -> int:
+    """Resolve a device-shard request against the local device count.
+    ``None`` → 1 (no sharding), ``"auto"`` → all local devices, an int is
+    clamped to the available devices."""
+    n_local = jax.local_device_count()
+    if requested is None:
+        return 1
+    if requested == "auto":
+        return n_local
+    return max(1, min(int(requested), n_local))
+
+
+def sharded_seed_fn(run, *, xs_axes, n_shards: int, donate_state=True):
+    """Device-sharded twin of ``jit(vmap(run))`` over a seed batch.
+
+    ``run(pa, state, xs)`` is the per-seed scan; the returned callable
+    takes a FLAT seed batch (leading axis ``S``, a multiple of
+    ``n_shards``) and splits it across local devices. ``pa`` is
+    replicated; ``state`` leaves and the seed-indexed ``xs`` leaves (axis
+    0 in `xs_axes`) carry the seed axis. The per-seed scan is
+    embarrassingly parallel, so the split maps straight onto local
+    devices: `pmap` on jax 0.4.x (shard axis folded out / back in around
+    the call), `jax.shard_map` on >= 0.6. The state argument is donated —
+    each call's arena state buffers are consumed in place instead of
+    being copied."""
+    donate = (1,) if donate_state else ()
+    if shard_map_available():  # pragma: no cover - requires jax >= 0.6
+        import numpy as np
+        from jax.sharding import Mesh
+
+        inner = jax.vmap(run, in_axes=(None, 0, xs_axes))
+        mesh = Mesh(np.array(jax.local_devices()[:n_shards]), ("seeds",))
+        seeded = lambda a: P("seeds") if a == 0 else P()  # noqa: E731
+        fn = jax.shard_map(
+            inner, mesh=mesh,
+            in_specs=(P(), P("seeds"),
+                      {k: seeded(a) for k, a in xs_axes.items()}),
+            out_specs=P("seeds"))
+        return jax.jit(fn, donate_argnums=donate)
+
+    inner = jax.vmap(run, in_axes=(None, 0, xs_axes))
+    shard_axes = {k: (0 if a == 0 else None) for k, a in xs_axes.items()}
+    pfn = jax.pmap(inner, in_axes=(None, 0, shard_axes),
+                   donate_argnums=donate)
+
+    def call(pa, state, xs):
+        def split(x):
+            x = jnp.asarray(x)
+            return x.reshape((n_shards, x.shape[0] // n_shards)
+                             + x.shape[1:])
+
+        state_s = jax.tree.map(split, state)
+        xs_s = {k: (split(v) if shard_axes[k] == 0 else v)
+                for k, v in xs.items()}
+        out = pfn(pa, state_s, xs_s)
+        return jax.tree.map(
+            lambda x: x.reshape((-1,) + x.shape[2:]), out)
+
+    return call
+
+
 def batch_axes_for(mesh, batch: int) -> tuple[str, ...]:
     """Data-parallel mesh axes whose product divides `batch` (longest
     prefix of ("pod", "data") present in the mesh)."""

@@ -19,6 +19,15 @@ iterate the last dimension fastest, so all of phase 0 runs before phase 1):
 When the whole token axis fits one tile (nt == 1) both phases run on a
 single resident block, so the logits are read from HBM exactly once.
 
+For nt > 1 the exact global-demand semantics force a second read of the
+logits (phase 1 revisits every tile). The optional demand
+"carry-forward" variant (`_carry_kernel`, ``carry_forward=True``) drops
+to ONE pass: the penalty uses the previous batch's demand plus a running
+histogram of already-processed tiles instead of the exact whole-batch
+histogram — bit-identical to exact when nt == 1, an approximation
+otherwise whose routing-quality delta (load CV vs exact) is recorded in
+results/weakhash_carry_forward.json by benchmarks/bench_weakhash.py.
+
 VPU-only (no MXU); token tiles are 8×128-aligned.
 """
 from __future__ import annotations
@@ -107,10 +116,86 @@ def _fused_kernel(logits_ref, keys_ref, idx_ref, pos_ref, gid_ref, dem_ref,
         count_scr[...] = counts + jnp.sum(stacked, axis=0)
 
 
+def _carry_kernel(logits_ref, keys_ref, prior_ref, idx_ref, pos_ref,
+                  gid_ref, dem_ref, dem_scr, count_scr, *, top_k, capacity,
+                  n_groups, E, gsz, nt, load_penalty, mode, use_groups):
+    """Single-pass demand "carry-forward" variant (grid ``(nt,)``).
+
+    Exact mode needs two passes because every token's penalty uses the
+    FULL batch's demand histogram. Carry-forward replaces that global
+    estimate with ``prior_ref`` (the previous batch's demand — the
+    streaming load signal) plus the running histogram of tiles already
+    processed, so each logits tile is read from HBM exactly once even
+    for nt > 1. With one tile (nt == 1) the running histogram IS the
+    full batch histogram, so carry-forward with a zero prior reproduces
+    the exact kernel bit-for-bit — the parity anchor in
+    tests/test_kernels.py. Quality impact (routing load CV vs exact) is
+    measured by benchmarks/bench_weakhash.py into
+    results/weakhash_carry_forward.json.
+    """
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        dem_scr[...] = prior_ref[...]
+        count_scr[...] = jnp.zeros_like(count_scr)
+
+    logits = logits_ref[...].astype(jnp.float32)                # (bt, E)
+    bt = logits.shape[0]
+    if use_groups:
+        mask, gid = _group_mask(keys_ref[...], n_groups, E, gsz)
+        masked = jnp.where(mask, logits, NEG_INF)
+    else:
+        masked = logits
+        gid = jnp.zeros((bt,), jnp.int32)
+    gid_ref[...] = gid
+    eye = jax.lax.broadcasted_iota(jnp.int32, (bt, E), 1)
+
+    # the tile's own top-1 histogram joins the load estimate BEFORE its
+    # selection (exact mode also counts a token's own batch in demand0)
+    top1 = jnp.argmax(masked, axis=-1)
+    dem_scr[...] += jnp.sum((top1[:, None] == eye).astype(jnp.float32),
+                            axis=0)
+    if mode == "weakhash":
+        scores = masked - load_penalty * (dem_scr[...][None, :]
+                                          / float(max(capacity, 1)))
+    else:
+        scores = masked
+
+    counts = count_scr[...]                                     # (E,) f32
+    sel = scores
+    onehots = []
+    for j in range(top_k):
+        e_j = jnp.argmax(sel, axis=-1).astype(jnp.int32)        # (bt,)
+        idx_ref[:, j] = e_j
+        onehots.append((eye == e_j[:, None]).astype(jnp.float32))
+        sel = jnp.where(eye == e_j[:, None], NEG_INF, sel)
+    stacked = jnp.concatenate(onehots, axis=0)                  # (k·bt, E)
+    prefix = jnp.cumsum(stacked, axis=0) - stacked
+    pos_flat = jnp.sum((counts[None, :] + prefix) * stacked, axis=-1)
+    for j in range(top_k):
+        pos_ref[:, j] = pos_flat[j * bt:(j + 1) * bt].astype(jnp.int32)
+    count_scr[...] = counts + jnp.sum(stacked, axis=0)
+
+    @pl.when(t == nt - 1)
+    def _export():
+        # the batch's OWN top-1 histogram (same statistic exact mode
+        # exports) — chain it into the next batch's prior_demand
+        dem_ref[...] = dem_scr[...] - prior_ref[...]
+
+
 def weakhash_route_ints(logits, *, top_k, capacity, n_groups=1,
                         mode="weakhash", token_keys=None, load_penalty=1.0,
-                        block_t=DEFAULT_BLOCK_T, interpret=False):
+                        block_t=DEFAULT_BLOCK_T, interpret=False,
+                        carry_forward=False, prior_demand=None):
     """Integer routing outputs: (expert_idx, position, group_id, demand).
+
+    ``carry_forward=True`` selects the truly single-pass variant for
+    nt > 1: the demand penalty uses ``prior_demand`` (previous batch's
+    histogram, zeros when None) plus the running histogram of earlier
+    tiles instead of the exact whole-batch histogram (see
+    `_carry_kernel`); the returned demand stays the batch's own top-1
+    histogram so callers can chain batches.
 
     NOTE: the oracle's per-(token,k)-flattened arrival order is token-major
     with all k selections of token t adjacent; this kernel assigns positions
@@ -126,6 +211,31 @@ def weakhash_route_ints(logits, *, top_k, capacity, n_groups=1,
     keys = (token_keys if token_keys is not None
             else jnp.zeros((T,), jnp.int32))
     use_groups = mode == "weakhash" and n_groups > 1
+
+    if carry_forward:
+        prior = (jnp.zeros((E,), jnp.float32) if prior_demand is None
+                 else prior_demand.astype(jnp.float32))
+        return pl.pallas_call(
+            functools.partial(_carry_kernel, top_k=top_k,
+                              capacity=capacity, n_groups=n_groups, E=E,
+                              gsz=gsz, nt=nt, load_penalty=load_penalty,
+                              mode=mode, use_groups=use_groups),
+            grid=(nt,),
+            in_specs=[pl.BlockSpec((bt, E), lambda t: (t, 0)),
+                      pl.BlockSpec((bt,), lambda t: (t,)),
+                      pl.BlockSpec((E,), lambda t: (0,))],
+            out_specs=[pl.BlockSpec((bt, top_k), lambda t: (t, 0)),
+                       pl.BlockSpec((bt, top_k), lambda t: (t, 0)),
+                       pl.BlockSpec((bt,), lambda t: (t,)),
+                       pl.BlockSpec((E,), lambda t: (0,))],
+            out_shape=[jax.ShapeDtypeStruct((T, top_k), jnp.int32),
+                       jax.ShapeDtypeStruct((T, top_k), jnp.int32),
+                       jax.ShapeDtypeStruct((T,), jnp.int32),
+                       jax.ShapeDtypeStruct((E,), jnp.float32)],
+            scratch_shapes=[pltpu_scratch((E,), jnp.float32),
+                            pltpu_scratch((E,), jnp.float32)],
+            interpret=interpret,
+        )(logits.astype(jnp.float32), keys.astype(jnp.int32), prior)
 
     idx, pos, gid, demand = pl.pallas_call(
         functools.partial(_fused_kernel, top_k=top_k, capacity=capacity,
@@ -152,11 +262,13 @@ def weakhash_route_ints(logits, *, top_k, capacity, n_groups=1,
 
 def weakhash_route(logits, *, top_k, capacity, n_groups=1, mode="weakhash",
                    token_keys=None, prior_load=None, load_penalty=1.0,
-                   rescue=False, interpret=False):
-    """Kernel-backed RouteResult; rescue (γ=full second pass) and prior_load
-    fall back to the oracle (cold paths)."""
+                   rescue=False, interpret=False, carry_forward=False):
+    """Kernel-backed RouteResult; rescue (γ=full second pass) falls back
+    to the oracle (cold path). ``carry_forward=True`` runs the
+    single-pass kernel with ``prior_load`` as the previous batch's
+    demand (the streaming chain signal)."""
     from repro.kernels.weakhash_route import ref
-    if rescue or prior_load is not None:
+    if rescue or (prior_load is not None and not carry_forward):
         return ref.weakhash_route(
             logits, top_k=top_k, capacity=capacity, n_groups=n_groups,
             mode=mode, token_keys=token_keys, prior_load=prior_load,
@@ -164,7 +276,8 @@ def weakhash_route(logits, *, top_k, capacity, n_groups=1, mode="weakhash",
     idx, _, gid, demand = weakhash_route_ints(
         logits, top_k=top_k, capacity=capacity, n_groups=n_groups, mode=mode,
         token_keys=token_keys, load_penalty=load_penalty,
-        interpret=interpret)
+        interpret=interpret, carry_forward=carry_forward,
+        prior_demand=prior_load)
     # positions in oracle token-major order (cheap; keeps dispatch parity)
     position = ref._positions_in_expert(idx, logits.shape[1])
     keep = position < capacity

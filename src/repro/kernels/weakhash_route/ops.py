@@ -16,9 +16,12 @@ combine = ref.combine
 
 def weakhash_route(logits, *, top_k, capacity, n_groups=1, mode="weakhash",
                    token_keys=None, prior_load=None, load_penalty=1.0,
-                   rescue=False, impl: str | None = None):
+                   rescue=False, carry_forward=False,
+                   impl: str | None = None):
     impl = resolve_impl(impl)
     if impl == "ref":
+        # the oracle's prior_load term IS the carry-forward load signal
+        # (prior + current-batch demand0), so ref serves both modes
         return ref.weakhash_route(
             logits, top_k=top_k, capacity=capacity, n_groups=n_groups,
             mode=mode, token_keys=token_keys, prior_load=prior_load,
@@ -28,4 +31,5 @@ def weakhash_route(logits, *, top_k, capacity, n_groups=1, mode="weakhash",
         logits, top_k=top_k, capacity=capacity, n_groups=n_groups, mode=mode,
         token_keys=token_keys, prior_load=prior_load,
         load_penalty=load_penalty, rescue=rescue,
+        carry_forward=carry_forward,
         interpret=(impl == "interpret"))

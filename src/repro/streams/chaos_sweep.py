@@ -15,6 +15,18 @@ Per scenario it reports recovery time (first post-failure return of
 source lag below the SLO threshold), maximum backlog, SLO-violation
 tick counts, dropped/emitted records and checkpoint success — the
 metrics the paper uses to gate a release.
+
+Cluster-perspective sweeps: pass a `streams.engine.PackedArena` instead
+of a graph and the whole co-located fleet (K jobs, shared host pool)
+sweeps in the same device call — `SweepResult.job_results` then carries
+per-job recovery/SLO breakdowns next to the fleet-level combined
+summaries, with shared-host kills coupling the co-located jobs'
+recoveries. ``devices=`` shards the seed batch across local devices
+(version-gated `repro.dist.sharding` shim: pmap on jax 0.4.x, shard_map
+on >= 0.6); seed batches are padded to the next power of two so varying
+S reuses one jit trace per bucket. The numpy-engine baseline replay is
+opt-in via ``compare_numpy=True`` — production-size sweeps never pay
+the single-core replay by default.
 """
 from __future__ import annotations
 
@@ -25,7 +37,8 @@ import time
 import numpy as np
 
 from repro.core.chaos import ChaosSpec
-from repro.streams.engine import CheckpointConfig, FailoverConfig
+from repro.streams.engine import (CheckpointConfig, FailoverConfig,
+                                  PackedArena)
 from repro.streams.graph import LogicalGraph
 from repro.streams.jax_engine import JaxBatchMetrics, run_batch
 
@@ -54,6 +67,12 @@ class SweepResult:
     summaries: list[ScenarioSummary]
     batch: JaxBatchMetrics
     wall_s: float                # end-to-end sweep wall time
+    # packed-arena sweeps: per-job breakdown (job name → its own
+    # SweepResult over the job's metric segment); None for single jobs
+    job_results: dict[str, "SweepResult"] | None = None
+    # opt-in numpy cross-check (see sweep(compare_numpy=...)); None unless
+    # requested — production sweeps never pay the single-core replay
+    numpy_check: dict | None = None
 
     @property
     def scenarios_per_s(self) -> float:
@@ -160,22 +179,88 @@ def summarize(batch: JaxBatchMetrics, seeds, *,
                        wall_s)
 
 
-def sweep(graph: LogicalGraph, seeds, *, base_spec: ChaosSpec,
+def sweep(graph: LogicalGraph | PackedArena, seeds, *,
+          base_spec: ChaosSpec,
           duration_s: float, n_hosts: int = 8, dt: float = 0.5,
           queue_cap: float = 256.0,
           failover: FailoverConfig | None = None,
           ckpt: CheckpointConfig | None = None,
           slo_lag: float | None = None,
           task_speed_override: dict[int, float] | None = None,
-          seed: int = 0) -> SweepResult:
-    """Sweep `seeds` chaos scenarios over `graph` in one vmapped jit call."""
+          seed: int = 0, pad_seeds: bool = True,
+          devices: int | str | None = None,
+          compare_numpy: bool = False) -> SweepResult:
+    """Sweep `seeds` chaos scenarios over `graph` in one vmapped jit call
+    (one call per device shard when `devices` is set).
+
+    `graph` may be a `PackedArena`: the co-located fleet sweeps in the
+    same call and the result carries per-job recovery/SLO breakdowns in
+    ``job_results`` (keyed by job name) next to the fleet-level combined
+    summaries.
+
+    ``compare_numpy`` is OPT-IN (default False): the numpy-engine
+    baseline replay costs a single-core scenario per checked seed, which
+    production-size sweeps must not pay on every call. When True, up to 3
+    seeds are re-run on `StreamEngine` and the max absolute source-lag
+    deviation is attached as ``numpy_check``.
+    """
     seeds = list(seeds)
+    logical = graph.graph if isinstance(graph, PackedArena) else graph
     t0 = time.perf_counter()
     batch = run_batch(graph, seeds, base_spec=base_spec,
                       duration_s=duration_s, n_hosts=n_hosts, dt=dt,
                       queue_cap=queue_cap, failover=failover, ckpt=ckpt,
-                      task_speed_override=task_speed_override, seed=seed)
+                      task_speed_override=task_speed_override, seed=seed,
+                      pad_seeds=pad_seeds, devices=devices)
     wall = time.perf_counter() - t0
-    return summarize(batch, seeds, graph=graph, slo_lag=slo_lag,
-                     wall_s=wall, graph_name=graph.name,
-                     duration_s=duration_s)
+    res = summarize(batch, seeds, graph=logical, slo_lag=slo_lag,
+                    wall_s=wall, graph_name=logical.name,
+                    duration_s=duration_s)
+    if isinstance(graph, PackedArena) and batch.jobs:
+        res.job_results = {
+            job.name: summarize(batch.job_view(job), seeds,
+                                graph=job.graph, slo_lag=slo_lag,
+                                wall_s=wall, graph_name=job.name,
+                                duration_s=duration_s)
+            for job in batch.jobs}
+    if compare_numpy:
+        res.numpy_check = _numpy_check(graph, seeds, batch,
+                                       base_spec=base_spec,
+                                       duration_s=duration_s,
+                                       n_hosts=n_hosts, dt=dt,
+                                       queue_cap=queue_cap,
+                                       failover=failover, ckpt=ckpt,
+                                       task_speed_override=
+                                       task_speed_override, seed=seed)
+    return res
+
+
+def _numpy_check(graph, seeds, batch: JaxBatchMetrics, *, base_spec,
+                 duration_s, n_hosts, dt, queue_cap, failover, ckpt,
+                 task_speed_override, seed, n_probe: int = 3) -> dict:
+    """Replay up to `n_probe` seeds on the single-core numpy engine and
+    report the worst source-lag deviation vs the batched JAX rows. This
+    is the sweep driver's opt-in correctness baseline — never run by
+    default (the replay is orders of magnitude slower than the sweep)."""
+    from repro.core.chaos import ChaosEngine
+    from repro.streams.engine import StreamEngine
+
+    checked, max_dev = [], 0.0
+    t0 = time.perf_counter()
+    for i, s in list(enumerate(seeds))[:n_probe]:
+        spec = (dataclasses.replace(base_spec or ChaosSpec(), seed=int(s))
+                if isinstance(s, (int, np.integer)) else s)
+        kw = {} if isinstance(graph, PackedArena) else \
+            {"n_hosts": n_hosts, "dt": dt, "queue_cap": queue_cap}
+        eng = StreamEngine(graph, chaos=ChaosEngine(spec),
+                           failover=failover, ckpt=ckpt,
+                           task_speed_override=task_speed_override,
+                           seed=seed, **kw)
+        eng.run(duration_s)
+        dev = float(np.max(np.abs(np.asarray(eng.metrics.source_lag)
+                                  - batch.source_lag[i])))
+        scale = float(np.max(np.abs(batch.source_lag[i]))) + 1e-9
+        max_dev = max(max_dev, dev / scale)
+        checked.append(int(getattr(s, "seed", s)))
+    return {"seeds_checked": checked, "max_rel_lag_dev": max_dev,
+            "wall_s": time.perf_counter() - t0}

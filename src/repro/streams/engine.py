@@ -50,6 +50,19 @@ task while upstream records destined to it are DROPPED (γ=partial, counted).
 The checkpoint coordinator implements Fig 8: per-task uploads with
 chaos-injected slow factors against the interval timeout; global mode aborts
 on any failure, region mode merges + retries the failed region once.
+
+Multi-job mega-arena (paper's cluster perspective)
+--------------------------------------------------
+`pack_arena(graphs, host_map)` concatenates K co-located job graphs into
+ONE flat arena sharing a host pool: ops are namespaced ``j{k}.``, tasks
+get arena-global ids (per-job contiguous slices), regions never merge
+across jobs, and each job's local round-robin host placement is lifted
+into the pool through a per-job host map ("shared" co-locates everything,
+"disjoint" reproduces K independent clusters exactly). Both engines accept
+the `PackedArena` in place of a graph; a chaos host kill then fans out to
+every co-located job on that host while metrics stay segmentable per job
+(`job_of_op` / `job_of_task`, per-job emitted/dropped, per-job recovery
+events). See the `PackedArena` docstring for the full layout contract.
 """
 from __future__ import annotations
 
@@ -58,8 +71,9 @@ import math
 
 import numpy as np
 
-from repro.core.chaos import ChaosEngine
-from repro.streams.graph import LogicalGraph, PhysicalGraph, expand
+from repro.core.chaos import ChaosEngine, failover_recovery_entries
+from repro.streams.graph import (LogicalGraph, PhysicalGraph, Task, expand,
+                                 namespaced)
 
 
 @dataclasses.dataclass
@@ -90,7 +104,8 @@ class EngineMetrics:
     support the same indexing/aggregation the old list-based metrics did.
     """
 
-    def __init__(self, op_names: list[str], capacity: int = 1024):
+    def __init__(self, op_names: list[str], capacity: int = 1024,
+                 n_jobs: int | None = None):
         self._ops = list(op_names)
         self._col = {n: j for j, n in enumerate(self._ops)}
         self._n = 0
@@ -101,10 +116,26 @@ class EngineMetrics:
         self._backlog = np.zeros((cap, len(self._ops)))
         self.dropped = 0.0
         self.emitted = 0.0
+        # per-job metric segments (n_jobs=None: plain single-graph engine
+        # — skip the per-op accumulation, derive the view from the scalars)
+        self._emitted_by_job = (np.zeros(n_jobs) if n_jobs is not None
+                                else None)
+        self._dropped_by_job = (np.zeros(n_jobs) if n_jobs is not None
+                                else None)
         self.ckpt_attempts = 0
         self.ckpt_success = 0
         self.ckpt_failed = 0
         self.recoveries: list[dict] = []
+
+    @property
+    def emitted_by_job(self) -> np.ndarray:
+        return (np.array([self.emitted]) if self._emitted_by_job is None
+                else self._emitted_by_job)
+
+    @property
+    def dropped_by_job(self) -> np.ndarray:
+        return (np.array([self.dropped]) if self._dropped_by_job is None
+                else self._dropped_by_job)
 
     # -- recording (engine-internal) -----------------------------------
     def _reserve(self, n_more: int) -> None:
@@ -320,16 +351,203 @@ def _plan_edge(e, src: _OpPlan, dst: _OpPlan, dst_qcap: float) -> _EdgePlan:
     return plan
 
 
+# ----------------------------------------------------------------------
+# Multi-job mega-arena (cluster-perspective co-location, paper §V)
+# ----------------------------------------------------------------------
+@dataclasses.dataclass
+class JobSlice:
+    """One job's footprint inside a packed arena.
+
+    ``task_lo:task_hi`` is the job's contiguous task-id slice of the flat
+    arena; ``op_cols`` are its columns in the plan's topo op order (also
+    contiguous — jobs have no cross edges, so the combined topo order is
+    the per-job topo orders concatenated); ``src_cols`` are the subset of
+    ``op_cols`` belonging to the job's sources (per-job source lag);
+    ``hosts`` maps the job's *local* host ids to the global pool."""
+    index: int
+    name: str
+    graph: LogicalGraph            # the original, un-namespaced graph
+    prefix: str
+    task_lo: int
+    task_hi: int
+    op_cols: np.ndarray            # indices into plan.ops (topo order)
+    op_names: list[str]            # original names, aligned with op_cols
+    src_cols: np.ndarray           # subset of op_cols: the job's sources
+    hosts: np.ndarray              # local host id -> global host id
+    region_lo: int = 0
+    region_hi: int = 0
+
+
+@dataclasses.dataclass
+class PackedArena:
+    """K co-located job graphs lowered into ONE flat task arena.
+
+    Arena layout
+    ------------
+    * Ops of job j are namespaced ``f"j{j}."`` and concatenated in job
+      order, so `build_plan` on the combined graph numbers every job's
+      tasks contiguously with arena-global offsets — one `RoutingPlan`,
+      one task arena, one engine tick for the whole co-located fleet.
+      Jobs have no cross edges: records never flow between jobs.
+    * Hosts are a single shared pool of size ``n_hosts``. Each job keeps
+      its *local* round-robin placement (``local_tid % n_hosts_local``,
+      identical to an independent `expand`) and a per-job ``hosts`` map
+      lifts local host ids into the pool — overlapping maps co-locate
+      jobs on shared hosts, disjoint maps reproduce K independent
+      clusters exactly (the parity anchor in tests/test_colocation.py).
+    * Failure regions never merge across jobs (no cross-job channels), so
+      the arena's region list is the per-job region lists, offset.
+
+    Shared-host kill semantics: a chaos kill of host h downs the tasks of
+    EVERY job placed on h — under region failover each affected job's hit
+    regions restart; under single_task each affected job drops in-flight
+    records routed to its dead tasks. Cross-job interference is therefore
+    a first-class swept quantity (one host kill couples many jobs'
+    recovery, the paper's cluster-level coupling).
+
+    Per-job metric segments: `job_of_op` / `job_of_task` segment the
+    per-op metric columns and the task arena by job; engines use them for
+    per-job emitted/dropped accounting and per-job recovery attribution
+    (``"job"`` key on recovery events).
+    """
+    graph: LogicalGraph            # combined, namespaced
+    plan: RoutingPlan
+    phys: PhysicalGraph
+    jobs: list[JobSlice]
+    job_of_task: np.ndarray        # (n_tasks,) int
+    job_of_op: np.ndarray          # (n_ops,) int, topo order
+    n_hosts: int                   # global pool size (kill-draw domain)
+
+    @property
+    def n_jobs(self) -> int:
+        return len(self.jobs)
+
+    @property
+    def dt(self) -> float:
+        return self.plan.dt
+
+    @property
+    def queue_cap(self) -> float:
+        return self.plan.queue_cap
+
+    def job(self, name_or_index) -> JobSlice:
+        if isinstance(name_or_index, int):
+            return self.jobs[name_or_index]
+        return next(j for j in self.jobs if j.name == name_or_index)
+
+    def lift_kills(self, job: int, host_kill_at) -> tuple:
+        """Translate a job-local ``host_kill_at`` schedule into the global
+        host pool (chaos specs address pool hosts; a drill written against
+        one job's local hosts is lifted through that job's host map)."""
+        m = self.jobs[job].hosts
+        return tuple((t, int(m[h])) for (t, h) in host_kill_at)
+
+
+def pack_arena(graphs, host_map="shared", *, n_hosts: int = 8,
+               dt: float = 0.5, queue_cap: float = 256.0,
+               names=None) -> PackedArena:
+    """Lower K co-located job graphs into one `PackedArena`.
+
+    `host_map` controls co-location:
+      * ``"shared"``   — every job uses the same pool hosts 0..n_hosts-1
+                         (full co-location; host kills couple all jobs);
+      * ``"disjoint"`` — job j uses hosts ``[j*n_hosts, (j+1)*n_hosts)``
+                         (no interference; packed == K independent runs);
+      * explicit       — sequence of K int arrays, each mapping the job's
+                         local host ids ``0..n_hosts-1`` to pool ids.
+
+    `names` optionally labels jobs (default ``f"j{j}.{graph.name}"``).
+    """
+    graphs = list(graphs)
+    if not graphs:
+        raise ValueError("pack_arena requires at least one job graph")
+    k = len(graphs)
+    if host_map == "shared":
+        maps = [np.arange(n_hosts) for _ in range(k)]
+    elif host_map == "disjoint":
+        maps = [j * n_hosts + np.arange(n_hosts) for j in range(k)]
+    else:
+        maps = [np.asarray(m, dtype=int) for m in host_map]
+        if len(maps) != k:
+            raise ValueError(f"host_map has {len(maps)} rows for {k} jobs")
+        if any(len(m) != n_hosts for m in maps):
+            raise ValueError("each host_map row must map all local hosts")
+    n_pool = int(max(m.max() for m in maps)) + 1
+
+    prefixes = [f"j{j}." for j in range(k)]
+    parts = [namespaced(g, p) for g, p in zip(graphs, prefixes)]
+    combined = LogicalGraph(
+        "+".join(g.name for g in graphs),
+        ops=tuple(o for g in parts for o in g.ops),
+        edges=tuple(e for g in parts for e in g.edges))
+    plan = build_plan(combined, dt, queue_cap)
+
+    # physical assembly: per-job expand (regions/channels depend only on
+    # connectivity) + manual host lift through the job's host map. Task
+    # numbering follows combined-graph op order, which equals per-job
+    # expand order with the job's task offset added — the same contract
+    # build_plan's offsets assume.
+    tasks: list[Task] = []
+    channels: dict = {}
+    regions: list[set[int]] = []
+    task_region: dict[int, int] = {}
+    jobs: list[JobSlice] = []
+    job_of_task = np.zeros(plan.n_tasks, dtype=int)
+    topo_pos = {p.name: i for i, p in enumerate(plan.ops)}
+    job_of_op = np.zeros(len(plan.ops), dtype=int)
+    task_off = 0
+    for j, (g, pre) in enumerate(zip(graphs, prefixes)):
+        local = expand(g, n_hosts=n_hosts)
+        for tk in local.tasks:
+            tasks.append(Task(pre + tk.op, tk.index, task_off + tk.task_id,
+                              host=int(maps[j][tk.host])))
+        for (s, d), conn in local.channels.items():
+            channels[(pre + s, pre + d)] = conn
+        region_lo = len(regions)
+        for r in local.regions:
+            regions.append({task_off + t for t in r})
+        for t, r in local.task_region.items():
+            task_region[task_off + t] = region_lo + r
+        n_local = len(local.tasks)
+        job_of_task[task_off:task_off + n_local] = j
+        op_cols = np.array(sorted(topo_pos[pre + o.name] for o in g.ops))
+        job_of_op[op_cols] = j
+        jobs.append(JobSlice(
+            index=j,
+            name=(names[j] if names is not None else pre + g.name),
+            graph=g, prefix=pre, task_lo=task_off,
+            task_hi=task_off + n_local, op_cols=op_cols,
+            op_names=[plan.ops[c].name[len(pre):] for c in op_cols],
+            src_cols=np.array([c for c in op_cols
+                               if plan.ops[c].is_source]),
+            hosts=maps[j], region_lo=region_lo, region_hi=len(regions)))
+        task_off += n_local
+    assert task_off == plan.n_tasks
+    phys = PhysicalGraph(combined, tasks, channels, regions, task_region)
+    return PackedArena(combined, plan, phys, jobs, job_of_task, job_of_op,
+                       n_pool)
+
+
 class StreamEngine:
-    def __init__(self, graph: LogicalGraph, *, n_hosts: int = 8,
+    def __init__(self, graph: LogicalGraph | PackedArena, *,
+                 n_hosts: int = 8,
                  dt: float = 0.5, queue_cap: float = 256.0,
                  chaos: ChaosEngine | None = None,
                  failover: FailoverConfig | None = None,
                  ckpt: CheckpointConfig | None = None,
                  task_speed_override: dict[int, float] | None = None,
                  seed: int = 0):
+        self.arena = graph if isinstance(graph, PackedArena) else None
+        if self.arena is not None:
+            # packed mega-arena: the lowering (plan + physical placement
+            # over the shared host pool) was done by pack_arena; dt and
+            # queue_cap come from the arena's plan.
+            graph = self.arena.graph
+            dt, queue_cap = self.arena.dt, self.arena.queue_cap
         self.g = graph
-        self.phys: PhysicalGraph = expand(graph, n_hosts=n_hosts, seed=seed)
+        self.phys: PhysicalGraph = (
+            self.arena.phys if self.arena is not None
+            else expand(graph, n_hosts=n_hosts, seed=seed))
         self.dt = dt
         self.queue_cap = queue_cap
         self.chaos = chaos or ChaosEngine()
@@ -340,7 +558,8 @@ class StreamEngine:
         self._next_ckpt = (self.ckpt_cfg.interval_s if ckpt else math.inf)
 
         # ---- task arena + routing plan --------------------------------
-        self.plan = build_plan(graph, dt, queue_cap)
+        self.plan = (self.arena.plan if self.arena is not None
+                     else build_plan(graph, dt, queue_cap))
         ops = {o.name: o for o in graph.ops}
         offs = self.plan.offs
         n_tasks = self.plan.n_tasks
@@ -362,7 +581,15 @@ class StreamEngine:
         self._task_host = np.array([tk.host for tk in self.phys.tasks])
         self._task_region = np.array(
             [self.phys.task_region[tk.task_id] for tk in self.phys.tasks])
-        self._n_hosts = int(self._task_host.max()) + 1
+        # kill draws cover the whole shared pool for packed arenas (hosts
+        # without tasks of SOME job may still host another job's tasks)
+        self._n_hosts = (self.arena.n_hosts if self.arena is not None
+                         else int(self._task_host.max()) + 1)
+        if self.arena is not None:
+            self._job_of_op = self.arena.job_of_op
+            self._job_of_task = self.arena.job_of_task
+        else:
+            self._job_of_op = self._job_of_task = None
 
         # compat: per-op dict views aliasing the arena (tests / tooling)
         self.par = {n: ops[n].parallelism for n in ops}
@@ -396,7 +623,9 @@ class StreamEngine:
         self._chaos_kills_possible = bool(
             spec.host_kill_at or spec.host_kill_prob_per_s)
 
-        self.metrics = EngineMetrics([p.name for p in self._ops])
+        self.metrics = EngineMetrics(
+            [p.name for p in self._ops],
+            n_jobs=(self.arena.n_jobs if self.arena is not None else None))
     # ------------------------------------------------------------------
     def _alive(self, op: str) -> np.ndarray:
         return self.down_until[op] <= self.t
@@ -505,15 +734,19 @@ class StreamEngine:
         single_task = self.failover.mode == "single_task"
         emitted = 0.0
 
+        jobs = self._job_of_op          # per-job segments (packed arenas)
         for oi, op in enumerate(self._ops):
             sl = slice(op.lo, op.hi)
             if op.is_source:
                 if all_alive:
                     produced = op.src_row
-                    emitted += op.src_sum
+                    e_op = op.src_sum
                 else:
                     produced = op.src_row * alive_f[sl]
-                    emitted += produced.sum()
+                    e_op = produced.sum()
+                emitted += e_op
+                if jobs is not None:
+                    self.metrics._emitted_by_job[jobs[oi]] += e_op
             else:
                 cap = op.cap_row if all_alive else op.cap_row * alive_f[sl]
                 take = np.minimum(q[sl], cap)
@@ -529,7 +762,10 @@ class StreamEngine:
                     if not alive_d.all():
                         # records routed to a dead task drop (γ=partial)
                         dead = ~alive_d
-                        drop_tick += arriving[dead].sum()
+                        d_edge = arriving[dead].sum()
+                        drop_tick += d_edge
+                        if jobs is not None:   # edges never cross jobs
+                            self.metrics._dropped_by_job[jobs[oi]] += d_edge
                         arriving = np.where(dead, 0.0, arriving)
                 accepted = self._accept(ep, arriving, free[dsl])
                 if accepted is not arriving:
@@ -576,23 +812,18 @@ class StreamEngine:
             self.chaos.revive(host)
             return
         if fo.mode == "single_task":
-            until = self.t + fo.detect_s + fo.single_restart_s
-            self._max_down = max(self._max_down, until)
-            self._down_until[victims] = until
-            self._queue[victims] = 0.0   # incomplete output discarded
-            self.metrics.recoveries.append(
-                {"t": self.t, "mode": "single_task",
-                 "tasks": int(victims.sum()),
-                 "downtime": fo.detect_s + fo.single_restart_s})
+            hit = victims
+            downtime = fo.detect_s + fo.single_restart_s
         else:
             hit = np.isin(self._task_region, self._task_region[victims])
-            until = self.t + fo.detect_s + fo.region_restart_s
-            self._max_down = max(self._max_down, until)
-            self._down_until[hit] = until
-            self._queue[hit] = 0.0
-            self.metrics.recoveries.append(
-                {"t": self.t, "mode": "region", "tasks": int(hit.sum()),
-                 "downtime": fo.detect_s + fo.region_restart_s})
+            downtime = fo.detect_s + fo.region_restart_s
+        until = self.t + downtime
+        self._max_down = max(self._max_down, until)
+        self._down_until[hit] = until
+        self._queue[hit] = 0.0   # incomplete output / state discarded
+        # packed arenas attribute the event per co-located job hit
+        self.metrics.recoveries.extend(failover_recovery_entries(
+            self.t, fo.mode, hit, downtime, self._job_of_task))
         self.chaos.revive(host)  # replacement host
 
     # ------------------------------------------------------------------

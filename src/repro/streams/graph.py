@@ -78,6 +78,21 @@ def _topo_order(g: "LogicalGraph") -> tuple[str, ...]:
     return tuple(order)
 
 
+def namespaced(graph: LogicalGraph, prefix: str) -> LogicalGraph:
+    """Clone `graph` with every op (and edge endpoint) renamed
+    ``prefix + name`` — the building block of multi-job arena packing
+    (`streams.engine.pack_arena`): namespacing keeps op names unique when
+    several jobs' graphs are concatenated into one arena, while the
+    per-job structure (edges, partitioners, rates) is untouched."""
+    return LogicalGraph(
+        graph.name,
+        ops=tuple(dataclasses.replace(o, name=prefix + o.name)
+                  for o in graph.ops),
+        edges=tuple(dataclasses.replace(e, src=prefix + e.src,
+                                        dst=prefix + e.dst)
+                    for e in graph.edges))
+
+
 @dataclasses.dataclass
 class Task:
     op: str

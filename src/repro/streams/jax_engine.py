@@ -16,8 +16,8 @@ State-pytree layout (`EngineState`, one leaf per arena variable; under
     down_until (n_tasks,) f64  failover downtime horizon per task
     speed      (n_tasks,) f64  static host speed (overrides × stragglers)
     ckpt_epoch ()         i32  checkpoints attempted so far
-    emitted    ()         f64  source records emitted (running total)
-    dropped    ()         f64  records dropped by single_task failover
+    emitted    (n_jobs,)  f64  source records emitted, per job segment
+    dropped    (n_jobs,)  f64  single_task failover drops, per job segment
 
 Chaos pregeneration semantics (the one intentional delta vs the numpy
 engine's *mechanism*, not its numbers): a `jit`-ted scan cannot consume
@@ -32,9 +32,25 @@ checkpoint outcomes and recovery events ride along as host-side
 metadata because they never feed back into queue dynamics.
 
 Compiled `run` functions are cached per *plan shape* (op slices, edge
-kinds, segment counts, failover mode — never float parameters, which
-are traced), so two engines over same-shaped graphs share one trace;
-`get_cached_run_fns` exposes the cache for tests.
+kinds, segment counts, failover mode, per-op job segments — never float
+parameters, which are traced), so two engines over same-shaped graphs
+share one trace; `get_cached_run_fns` exposes the cache for tests. The
+state argument is donated, so each call's arena buffers are reused in
+place.
+
+Mega-arena sweeps: a `streams.engine.PackedArena` drops in for the
+graph everywhere (`JaxStreamEngine`, `run_batch`, `run_mix_batch`) — K
+co-located jobs then scan as one arena with per-job emitted/dropped
+segment sums (a static job index per op) and per-job recovery
+attribution riding the shared-host chaos timeline. `run_batch` pads the
+seed axis to the next power of two (retrace-free batching: one trace
+per pow2 bucket, pad rows sliced off before metrics) and can split the
+padded batch across local devices (``devices=``) through the
+version-gated `repro.dist.sharding` shim — `pmap` on jax 0.4.x,
+`jax.shard_map` on >= 0.6. `run_mix_batch` adds a second vmap axis over
+job-mix configs (per-job source-rate multipliers): rates are traced,
+not baked, so an (M, S) mix × seed grid runs as one device call on the
+same trace.
 
 Everything runs in float64 (scoped `jax.experimental.enable_x64`, no
 global config flip) to hold parity with the float64 numpy engine.
@@ -51,8 +67,9 @@ from jax import lax
 
 from repro.core.chaos import (ChaosEngine, ChaosSpec, ChaosTimeline,
                               build_chaos_timeline)
+from repro.dist.sharding import local_shard_count, sharded_seed_fn
 from repro.streams.engine import (CheckpointConfig, FailoverConfig,
-                                  build_plan)
+                                  JobSlice, PackedArena, build_plan)
 from repro.streams.graph import LogicalGraph, PhysicalGraph, expand
 
 try:  # scoped x64 — keeps the rest of the process on default f32
@@ -67,7 +84,12 @@ except ImportError:  # pragma: no cover - old/new jax without the ctx
 
 
 class EngineState(NamedTuple):
-    """All mutable arena state of one scenario (see module docstring)."""
+    """All mutable arena state of one scenario (see module docstring).
+
+    ``emitted`` / ``dropped`` are per-job segment totals of shape
+    ``(n_jobs,)`` — single-job engines carry ``(1,)`` vectors (same adds,
+    same numerics as the former scalars); packed mega-arenas get the
+    per-job breakdown for free from a static segment index per op."""
     queue: jax.Array
     down_until: jax.Array
     speed: jax.Array
@@ -168,7 +190,7 @@ def _accept(ed: _EdgeDesc, ea: dict, arriving, room):
 # ----------------------------------------------------------------------
 def _build_run(desc):
     (op_descs, edge_descs, edges_of_op, src_cols, n_tasks, n_hosts,
-     n_regions, failover_mode) = desc
+     n_regions, failover_mode, job_of_op, n_jobs) = desc
     single_task = failover_mode == "single_task"
 
     def tick(pa, state: EngineState, x):
@@ -184,7 +206,8 @@ def _build_run(desc):
             sl = slice(od.lo, od.hi)
             if od.is_source:
                 produced = pa["src_row"][sl] * alive_f[sl]
-                emitted = emitted + produced.sum()
+                # static per-op job index → per-job segment sum for free
+                emitted = emitted.at[job_of_op[oi]].add(produced.sum())
                 qps_cols.append(backlog_zero)
             else:
                 cap = pa["cap_base"][sl] * state.speed[sl] * alive_f[sl]
@@ -197,9 +220,12 @@ def _build_run(desc):
                 dsl = slice(ed.dst_lo, ed.dst_hi)
                 arriving = _route(ed, ea, produced, free[dsl], alive_f[dsl])
                 if single_task:
-                    # records routed to a dead task drop (γ=partial)
+                    # records routed to a dead task drop (γ=partial);
+                    # edges never cross jobs, so the op's job segment owns
+                    # the drop
                     dead = alive_f[dsl] <= 0.0
-                    dropped = dropped + jnp.where(dead, arriving, 0.0).sum()
+                    dropped = dropped.at[job_of_op[oi]].add(
+                        jnp.where(dead, arriving, 0.0).sum())
                     arriving = jnp.where(dead, 0.0, arriving)
                 accepted = _accept(ed, ea, arriving, free[dsl])
                 overflow = (arriving - accepted).sum()
@@ -240,8 +266,18 @@ def _build_run(desc):
 
 
 _FN_CACHE: dict = {}
+_SHARD_CACHE: dict = {}
+_MIX_CACHE: dict = {}
 
 _XS_AXES = {"t": None, "kills": 0, "ckpt": None}
+
+# job-mix vmap axis: only the per-task source emission row varies with a
+# job mix (service capacity / selectivity are per-job constants the mix
+# leaves alone); everything else is broadcast
+_PA_MIX_AXES = {"qcap": None, "src_row": 0, "cap_base": None, "sel": None,
+                "dt": None, "task_host": None, "task_region": None,
+                "detect": None, "restart_region": None,
+                "restart_single": None, "edges": None}
 
 
 def get_cached_run_fns(desc):
@@ -249,33 +285,73 @@ def get_cached_run_fns(desc):
 
     One entry — hence one trace per call signature — per plan *shape*;
     float parameters (rates, selectivities, restart times, …) are traced
-    arguments, so sweeping them never re-traces."""
+    arguments, so sweeping them never re-traces. The state argument is
+    donated: arena state buffers are consumed in place every call."""
     if desc not in _FN_CACHE:
         run = _build_run(desc)
         _FN_CACHE[desc] = (
-            jax.jit(run),
-            jax.jit(jax.vmap(run, in_axes=(None, 0, _XS_AXES))))
+            jax.jit(run, donate_argnums=(1,)),
+            jax.jit(jax.vmap(run, in_axes=(None, 0, _XS_AXES)),
+                    donate_argnums=(1,)))
     return _FN_CACHE[desc]
+
+
+def get_sharded_run_fn(desc, n_shards: int):
+    """Device-sharded batch run fn (flat seed axis, a multiple of
+    `n_shards`) — `pmap` on jax 0.4.x, `jax.shard_map` on >= 0.6 via the
+    version-gated `repro.dist.sharding` shim. Cached per (plan shape,
+    shard count)."""
+    key = (desc, n_shards)
+    if key not in _SHARD_CACHE:
+        _SHARD_CACHE[key] = sharded_seed_fn(
+            _build_run(desc), xs_axes=_XS_AXES, n_shards=n_shards)
+    return _SHARD_CACHE[key]
+
+
+def get_cached_mix_fn(desc):
+    """Doubly-vmapped run fn: outer axis over job-mix configs (per-task
+    source-rate rows), inner axis over chaos seeds — one trace sweeps an
+    (M, S) grid of scenario × mix in a single device call."""
+    if desc not in _MIX_CACHE:
+        run = _build_run(desc)
+        _MIX_CACHE[desc] = jax.jit(
+            jax.vmap(jax.vmap(run, in_axes=(None, 0, _XS_AXES)),
+                     in_axes=(_PA_MIX_AXES, None, None)))
+    return _MIX_CACHE[desc]
 
 
 # ----------------------------------------------------------------------
 # lowering: LogicalGraph + configs → static desc + plan arrays
 # ----------------------------------------------------------------------
 class _Lowered:
-    def __init__(self, graph: LogicalGraph, *, n_hosts: int, dt: float,
+    def __init__(self, graph: LogicalGraph | PackedArena, *, n_hosts: int,
+                 dt: float,
                  queue_cap: float, failover: FailoverConfig | None,
                  ckpt: CheckpointConfig | None, seed: int):
+        self.arena = graph if isinstance(graph, PackedArena) else None
+        if self.arena is not None:
+            graph = self.arena.graph
+            dt, queue_cap = self.arena.dt, self.arena.queue_cap
         self.graph = graph
         self.dt = dt
         self.failover = failover or FailoverConfig()
         self.ckpt_cfg = ckpt
-        self.phys: PhysicalGraph = expand(graph, n_hosts=n_hosts, seed=seed)
-        self.plan = build_plan(graph, dt, queue_cap)
+        self.phys: PhysicalGraph = (
+            self.arena.phys if self.arena is not None
+            else expand(graph, n_hosts=n_hosts, seed=seed))
+        self.plan = (self.arena.plan if self.arena is not None
+                     else build_plan(graph, dt, queue_cap))
         self.task_host = np.array([tk.host for tk in self.phys.tasks])
         self.task_region = np.array(
             [self.phys.task_region[tk.task_id] for tk in self.phys.tasks])
-        self.n_hosts = int(self.task_host.max()) + 1
+        self.n_hosts = (self.arena.n_hosts if self.arena is not None
+                        else int(self.task_host.max()) + 1)
         self.n_regions = len(self.phys.regions)
+        self.n_jobs = self.arena.n_jobs if self.arena is not None else 1
+        self.job_of_task = (self.arena.job_of_task
+                            if self.arena is not None else None)
+        job_of_op = (self.arena.job_of_op if self.arena is not None
+                     else np.zeros(len(self.plan.ops), dtype=int))
 
         plan = self.plan
         n_tasks = plan.n_tasks
@@ -318,7 +394,8 @@ class _Lowered:
         self.desc = (tuple(op_descs), tuple(edge_descs),
                      tuple(edges_of_op), tuple(int(j) for j in
                                                plan.src_cols),
-                     n_tasks, self.n_hosts, self.n_regions, fo.mode)
+                     n_tasks, self.n_hosts, self.n_regions, fo.mode,
+                     tuple(int(j) for j in job_of_op), self.n_jobs)
         self.arrays = {
             "qcap": plan.qcap,
             "src_row": src_row,
@@ -349,7 +426,8 @@ class _Lowered:
             ckpt_interval_s=(ck.interval_s if ck else None),
             ckpt_mode=(ck.mode if ck else "region"),
             ckpt_upload_s=(ck.upload_s if ck else 4.0),
-            ckpt_retry=(ck.retry_failed_region if ck else True))
+            ckpt_retry=(ck.retry_failed_region if ck else True),
+            job_of_task=self.job_of_task)
         n_tasks = self.plan.n_tasks
         speed = np.ones(n_tasks)
         if task_speed_override:
@@ -359,7 +437,7 @@ class _Lowered:
         state = EngineState(
             queue=np.zeros(n_tasks), down_until=np.zeros(n_tasks),
             speed=speed, ckpt_epoch=np.int32(0),
-            emitted=np.float64(0.0), dropped=np.float64(0.0))
+            emitted=np.zeros(self.n_jobs), dropped=np.zeros(self.n_jobs))
         xs = {"t": tl.ts, "kills": tl.kills.astype(np.float64),
               "ckpt": tl.ckpt_at}
         return state, xs, tl
@@ -375,8 +453,11 @@ class JaxEngineMetrics:
         self.source_lag = lag
         self.qps = {n: qps[:, j] for j, n in enumerate(op_names)}
         self.backlog = {n: backlog[:, j] for j, n in enumerate(op_names)}
-        self.emitted = float(emitted)
-        self.dropped = float(dropped)
+        # emitted/dropped arrive as (n_jobs,) segment totals
+        self.emitted_by_job = np.atleast_1d(np.asarray(emitted, float))
+        self.dropped_by_job = np.atleast_1d(np.asarray(dropped, float))
+        self.emitted = float(self.emitted_by_job.sum())
+        self.dropped = float(self.dropped_by_job.sum())
         self.ckpt_attempts = timeline.ckpt_attempts
         self.ckpt_success = timeline.ckpt_success
         self.ckpt_failed = timeline.ckpt_failed
@@ -393,16 +474,23 @@ class JaxBatchMetrics:
     a standalone single-seed run (pinned in tests/test_jax_engine.py)."""
 
     def __init__(self, op_names, t, lag, qps, backlog, emitted, dropped,
-                 timelines, ckpt_epoch=None):
+                 timelines, ckpt_epoch=None, jobs=None):
         self.op_names = list(op_names)
         self.t = t                     # (n_ticks,)
         self.source_lag = lag          # (S, n_ticks)
         self.qps = qps                 # (S, n_ticks, n_ops)
         self.backlog = backlog         # (S, n_ticks, n_ops)
-        self.emitted = emitted         # (S,)
-        self.dropped = dropped         # (S,)
+        emitted = np.asarray(emitted, float)
+        dropped = np.asarray(dropped, float)
+        if emitted.ndim == 1:          # legacy (S,) scalar-per-seed form
+            emitted, dropped = emitted[:, None], dropped[:, None]
+        self.emitted_by_job = emitted  # (S, n_jobs)
+        self.dropped_by_job = dropped  # (S, n_jobs)
+        self.emitted = emitted.sum(axis=-1)   # (S,)
+        self.dropped = dropped.sum(axis=-1)   # (S,)
         self.ckpt_epoch = ckpt_epoch   # (S,) device-side attempt counter
         self.timelines = list(timelines)
+        self.jobs = list(jobs) if jobs is not None else None
         self.ckpt_attempts = np.array([tl.ckpt_attempts for tl in timelines])
         self.ckpt_success = np.array([tl.ckpt_success for tl in timelines])
         self.ckpt_failed = np.array([tl.ckpt_failed for tl in timelines])
@@ -414,11 +502,32 @@ class JaxBatchMetrics:
     def row(self, i: int) -> JaxEngineMetrics:
         return JaxEngineMetrics(self.op_names, self.t, self.source_lag[i],
                                 self.qps[i], self.backlog[i],
-                                self.emitted[i], self.dropped[i],
+                                self.emitted_by_job[i],
+                                self.dropped_by_job[i],
                                 self.timelines[i],
                                 ckpt_epoch=(self.ckpt_epoch[i]
                                             if self.ckpt_epoch is not None
                                             else None))
+
+    def job_view(self, job: JobSlice) -> "JaxBatchMetrics":
+        """Per-job slice of a packed-arena batch: the job's metric columns
+        under their original (un-namespaced) op names, source lag summed
+        over the job's own sources, per-job emitted/dropped segments, and
+        recovery events filtered to the job — shaped exactly like a
+        single-job batch so `chaos_sweep.summarize` works per job."""
+        cols = np.asarray(job.op_cols)
+        lag = self.backlog[:, :, np.asarray(job.src_cols)].sum(axis=-1)
+        j = job.index
+        tls = [dataclasses.replace(
+                   tl, recoveries=[r for r in tl.recoveries
+                                   if r.get("job", 0) == j])
+               for tl in self.timelines]
+        return JaxBatchMetrics(
+            job.op_names, self.t, lag, self.qps[:, :, cols],
+            self.backlog[:, :, cols],
+            self.emitted_by_job[:, j:j + 1],
+            self.dropped_by_job[:, j:j + 1], tls,
+            ckpt_epoch=self.ckpt_epoch)
 
 
 # ----------------------------------------------------------------------
@@ -429,7 +538,8 @@ class JaxStreamEngine:
     signature, `run(duration_s)` returns `JaxEngineMetrics` with the
     numpy engine's metric names/values (1e-5)."""
 
-    def __init__(self, graph: LogicalGraph, *, n_hosts: int = 8,
+    def __init__(self, graph: LogicalGraph | PackedArena, *,
+                 n_hosts: int = 8,
                  dt: float = 0.5, queue_cap: float = 256.0,
                  chaos: ChaosEngine | ChaosSpec | None = None,
                  failover: FailoverConfig | None = None,
@@ -439,7 +549,9 @@ class JaxStreamEngine:
         if isinstance(chaos, ChaosEngine):
             chaos = chaos.spec
         self.spec = chaos or ChaosSpec()
-        self.g = graph
+        self.g = graph.graph if isinstance(graph, PackedArena) else graph
+        if isinstance(graph, PackedArena):
+            dt = graph.dt
         self.dt = dt
         self._override = task_speed_override
         self._low = _Lowered(graph, n_hosts=n_hosts, dt=dt,
@@ -461,8 +573,8 @@ class JaxStreamEngine:
             qps = np.asarray(ys["qps"])
             backlog = np.asarray(ys["backlog"])
             lag = np.asarray(ys["lag"])
-            emitted = float(final.emitted)
-            dropped = float(final.dropped)
+            emitted = np.asarray(final.emitted)
+            dropped = np.asarray(final.dropped)
             ckpt_epoch = int(final.ckpt_epoch)
         self.metrics = JaxEngineMetrics(low.op_names, tl.ts, lag, qps,
                                         backlog, emitted, dropped, tl,
@@ -470,25 +582,37 @@ class JaxStreamEngine:
         return self.metrics
 
 
-def run_batch(graph: LogicalGraph, seeds, *, duration_s: float,
-              base_spec: ChaosSpec | None = None, n_hosts: int = 8,
-              dt: float = 0.5, queue_cap: float = 256.0,
-              failover: FailoverConfig | None = None,
-              ckpt: CheckpointConfig | None = None,
-              task_speed_override: dict[int, float] | None = None,
-              seed: int = 0) -> JaxBatchMetrics:
-    """Run a ``(S,)`` batch of chaos scenarios as ONE vmapped `jit` call.
+def _next_pow2(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length() if n > 1 else 1
 
-    `seeds` is a sequence of ints (merged into `base_spec` via
-    ``dataclasses.replace(spec, seed=s)``) or of full `ChaosSpec`s.
-    """
-    specs = [dataclasses.replace(base_spec or ChaosSpec(), seed=int(s))
-             if isinstance(s, (int, np.integer)) else s for s in seeds]
-    if not specs:
-        raise ValueError("run_batch requires at least one seed/spec")
-    low = _Lowered(graph, n_hosts=n_hosts, dt=dt, queue_cap=queue_cap,
-                   failover=failover, ckpt=ckpt, seed=seed)
-    n_ticks = int(round(duration_s / dt))
+
+def _pad_rows(a: np.ndarray, target: int) -> np.ndarray:
+    """Pad the leading axis to `target` by replicating row 0 (pad rows
+    simulate a real scenario, so no NaNs/branches — they are sliced off
+    before any aggregate sees them)."""
+    if len(a) == target:
+        return a
+    reps = np.broadcast_to(a[:1], (target - len(a),) + a.shape[1:])
+    return np.concatenate([a, reps])
+
+
+def _pad_batch(batch_state: EngineState, xs: dict, n_seeds: int,
+               pad_seeds: bool, n_shards: int = 1):
+    """Pad the seed axis to the next power of two (and to a multiple of
+    the shard count) — the retrace-free batching contract shared by
+    `run_batch` and `run_mix_batch`."""
+    target = _next_pow2(n_seeds) if pad_seeds else n_seeds
+    if target % n_shards:
+        target = n_shards * -(-target // n_shards)
+    if target != n_seeds:
+        batch_state = EngineState(*(_pad_rows(getattr(batch_state, f),
+                                              target)
+                                    for f in EngineState._fields))
+        xs = dict(xs, kills=_pad_rows(xs["kills"], target))
+    return batch_state, xs
+
+
+def _prep_batch(low: "_Lowered", specs, n_ticks: int, task_speed_override):
     prepped = [low.prepare(spec, n_ticks, task_speed_override)
                for spec in specs]
     states = [p[0] for p in prepped]
@@ -498,14 +622,116 @@ def run_batch(graph: LogicalGraph, seeds, *, duration_s: float,
     xs = {"t": prepped[0][1]["t"],                 # identical across seeds
           "kills": np.stack([p[1]["kills"] for p in prepped]),
           "ckpt": prepped[0][1]["ckpt"]}           # static schedule
-    _, batch_fn = get_cached_run_fns(low.desc)
+    return batch_state, xs, tls
+
+
+def run_batch(graph: LogicalGraph | PackedArena, seeds, *,
+              duration_s: float,
+              base_spec: ChaosSpec | None = None, n_hosts: int = 8,
+              dt: float = 0.5, queue_cap: float = 256.0,
+              failover: FailoverConfig | None = None,
+              ckpt: CheckpointConfig | None = None,
+              task_speed_override: dict[int, float] | None = None,
+              seed: int = 0, pad_seeds: bool = True,
+              devices: int | str | None = None) -> JaxBatchMetrics:
+    """Run a ``(S,)`` batch of chaos scenarios as ONE vmapped `jit` call
+    (one call *per device shard* when `devices` is set).
+
+    `seeds` is a sequence of ints (merged into `base_spec` via
+    ``dataclasses.replace(spec, seed=s)``) or of full `ChaosSpec`s.
+    `graph` may be a `PackedArena` — the whole co-located fleet then
+    simulates in the same device call with per-job metric segments.
+
+    Retrace-free batching: with ``pad_seeds=True`` the seed axis is
+    padded to the next power of two (and to a multiple of the shard
+    count) by replicating scenario 0, so varying S reuses one jit trace
+    per pow2 bucket instead of recompiling per batch size; pad rows are
+    sliced off before the metrics object is built, so no aggregate ever
+    sees them. ``devices`` splits the padded batch across local devices
+    through the version-gated `repro.dist.sharding` shim (``"auto"`` =
+    all local devices).
+    """
+    specs = [dataclasses.replace(base_spec or ChaosSpec(), seed=int(s))
+             if isinstance(s, (int, np.integer)) else s for s in seeds]
+    if not specs:
+        raise ValueError("run_batch requires at least one seed/spec")
+    low = _Lowered(graph, n_hosts=n_hosts, dt=dt, queue_cap=queue_cap,
+                   failover=failover, ckpt=ckpt, seed=seed)
+    n_ticks = int(round(duration_s / low.dt))
+    batch_state, xs, tls = _prep_batch(low, specs, n_ticks,
+                                       task_speed_override)
+    n_seeds = len(specs)
+    n_shards = local_shard_count(devices)
+    batch_state, xs = _pad_batch(batch_state, xs, n_seeds, pad_seeds,
+                                 n_shards)
+    if devices is not None:
+        batch_fn = get_sharded_run_fn(low.desc, n_shards)
+    else:
+        _, batch_fn = get_cached_run_fns(low.desc)
     with _enable_x64():
         final, ys = batch_fn(low.arrays, batch_state, xs)
-        qps = np.asarray(ys["qps"])
-        backlog = np.asarray(ys["backlog"])
-        lag = np.asarray(ys["lag"])
-        emitted = np.asarray(final.emitted)
-        dropped = np.asarray(final.dropped)
-        ckpt_epoch = np.asarray(final.ckpt_epoch)
+        qps = np.asarray(ys["qps"])[:n_seeds]
+        backlog = np.asarray(ys["backlog"])[:n_seeds]
+        lag = np.asarray(ys["lag"])[:n_seeds]
+        emitted = np.asarray(final.emitted)[:n_seeds]
+        dropped = np.asarray(final.dropped)[:n_seeds]
+        ckpt_epoch = np.asarray(final.ckpt_epoch)[:n_seeds]
     return JaxBatchMetrics(low.op_names, tls[0].ts, lag, qps, backlog,
-                           emitted, dropped, tls, ckpt_epoch=ckpt_epoch)
+                           emitted, dropped, tls, ckpt_epoch=ckpt_epoch,
+                           jobs=(low.arena.jobs if low.arena is not None
+                                 else None))
+
+
+def run_mix_batch(graph: LogicalGraph | PackedArena, mixes, seeds, *,
+                  duration_s: float,
+                  base_spec: ChaosSpec | None = None, n_hosts: int = 8,
+                  dt: float = 0.5, queue_cap: float = 256.0,
+                  failover: FailoverConfig | None = None,
+                  ckpt: CheckpointConfig | None = None,
+                  task_speed_override: dict[int, float] | None = None,
+                  seed: int = 0,
+                  pad_seeds: bool = True) -> list[JaxBatchMetrics]:
+    """Sweep an ``(M, S)`` grid of job-mix × chaos-seed scenarios in ONE
+    doubly-vmapped `jit` call (the second vmap axis over job-mix configs).
+
+    `mixes` is an ``(M, n_jobs)`` array of per-job source-rate
+    multipliers (n_jobs = 1 for a plain graph): row m scales every job
+    j's source emission by ``mixes[m, j]``. Rates are traced, not baked,
+    so the whole grid shares one trace with the plan shape; chaos
+    timelines are rate-independent and shared across mixes. Returns one
+    `JaxBatchMetrics` per mix row.
+    """
+    specs = [dataclasses.replace(base_spec or ChaosSpec(), seed=int(s))
+             if isinstance(s, (int, np.integer)) else s for s in seeds]
+    if not specs:
+        raise ValueError("run_mix_batch requires at least one seed/spec")
+    low = _Lowered(graph, n_hosts=n_hosts, dt=dt, queue_cap=queue_cap,
+                   failover=failover, ckpt=ckpt, seed=seed)
+    mixes = np.atleast_2d(np.asarray(mixes, dtype=np.float64))
+    if mixes.shape[1] != low.n_jobs:
+        raise ValueError(
+            f"mix rows must have one multiplier per job "
+            f"({mixes.shape[1]} != {low.n_jobs})")
+    n_ticks = int(round(duration_s / low.dt))
+    batch_state, xs, tls = _prep_batch(low, specs, n_ticks,
+                                       task_speed_override)
+    n_seeds = len(specs)
+    batch_state, xs = _pad_batch(batch_state, xs, n_seeds, pad_seeds)
+    job_of_task = (low.job_of_task if low.job_of_task is not None
+                   else np.zeros(low.plan.n_tasks, dtype=int))
+    src_rows = low.arrays["src_row"][None, :] * mixes[:, job_of_task]
+    pa = dict(low.arrays, src_row=src_rows)
+    mix_fn = get_cached_mix_fn(low.desc)
+    with _enable_x64():
+        final, ys = mix_fn(pa, batch_state, xs)
+        qps = np.asarray(ys["qps"])[:, :n_seeds]
+        backlog = np.asarray(ys["backlog"])[:, :n_seeds]
+        lag = np.asarray(ys["lag"])[:, :n_seeds]
+        emitted = np.asarray(final.emitted)[:, :n_seeds]
+        dropped = np.asarray(final.dropped)[:, :n_seeds]
+        ckpt_epoch = np.asarray(final.ckpt_epoch)[:, :n_seeds]
+    jobs = low.arena.jobs if low.arena is not None else None
+    return [JaxBatchMetrics(low.op_names, tls[0].ts, lag[m], qps[m],
+                            backlog[m], emitted[m], dropped[m], tls,
+                            ckpt_epoch=ckpt_epoch[m], jobs=jobs)
+            for m in range(len(mixes))]

@@ -181,6 +181,35 @@ def test_jit_cache_one_trace_per_plan_shape():
     assert fn3 is not fn1
 
 
+def test_padded_batches_reuse_one_trace_across_sizes():
+    """Retrace-free batching: the seed axis pads to the next power of
+    two, so S ∈ {7, 8} share ONE trace of the vmapped run fn and
+    S ∈ {200, 256} share ONE more — varying batch sizes never recompile
+    within a pow2 bucket, and results still carry exactly S rows."""
+    g = nexmark.q2(parallelism=4, partitioner="weakhash", n_groups=2)
+    spec = ChaosSpec(host_kill_prob_per_s=0.003)
+    from repro.streams.jax_engine import _Lowered
+    low = _Lowered(g, n_hosts=4, dt=0.5, queue_cap=256.0, failover=None,
+                   ckpt=None, seed=0)
+    _, batch_fn = get_cached_run_fns(low.desc)
+    before = batch_fn._cache_size()
+    sizes = (7, 8, 200, 256)
+    for s in sizes:
+        bm = run_batch(g, range(s), base_spec=spec, duration_s=20,
+                       n_hosts=4)
+        assert bm.source_lag.shape[0] == s       # pad rows sliced off
+    assert batch_fn._cache_size() - before == 2  # {7,8} and {200,256}
+    # opting out of padding traces per exact size (the old behavior)
+    run_batch(g, range(5), base_spec=spec, duration_s=20, n_hosts=4,
+              pad_seeds=False)
+    assert batch_fn._cache_size() - before == 3
+    # padded row values match the unpadded run bit-for-bit
+    a = run_batch(g, range(5), base_spec=spec, duration_s=20, n_hosts=4)
+    b = run_batch(g, range(5), base_spec=spec, duration_s=20, n_hosts=4,
+                  pad_seeds=False)
+    np.testing.assert_allclose(a.source_lag, b.source_lag, rtol=0, atol=0)
+
+
 def test_run_batch_rejects_empty_seed_batch():
     with pytest.raises(ValueError, match="at least one"):
         run_batch(nexmark.q2(parallelism=4), [], duration_s=10,

@@ -164,6 +164,39 @@ print("localsgd ok")
     assert_ok(run_multidevice(code, 8))
 
 
+def test_sharded_chaos_sweep_matches_unsharded():
+    """Seed-batch device sharding (repro.dist.sharding shim — pmap on
+    this jax, shard_map on >= 0.6): a 16-seed sweep split across 4
+    forced host devices must reproduce the single-device vmapped sweep
+    to reassociation tolerance, on a packed 2-job arena."""
+    code = """
+import numpy as np
+from repro.core.chaos import ChaosSpec
+from repro.dist.sharding import local_shard_count
+from repro.streams import nexmark
+from repro.streams.engine import FailoverConfig, pack_arena
+from repro.streams.jax_engine import run_batch
+
+assert local_shard_count("auto") == 4
+arena = pack_arena([nexmark.q2(parallelism=8, partitioner="weakhash",
+                               n_groups=4),
+                    nexmark.q12(parallelism=8)], "shared", n_hosts=8)
+spec = ChaosSpec(host_kill_prob_per_s=0.004, straggler_frac=0.2)
+fo = FailoverConfig(mode="region", region_restart_s=20.0)
+a = run_batch(arena, range(16), base_spec=spec, duration_s=60,
+              failover=fo)
+b = run_batch(arena, range(16), base_spec=spec, duration_s=60,
+              failover=fo, devices="auto")
+np.testing.assert_allclose(a.source_lag, b.source_lag, rtol=1e-12,
+                           atol=1e-9)
+np.testing.assert_allclose(a.emitted_by_job, b.emitted_by_job,
+                           rtol=1e-12)
+np.testing.assert_allclose(a.backlog, b.backlog, rtol=1e-9, atol=1e-6)
+print("sharded sweep ok", b.source_lag.shape)
+"""
+    assert_ok(run_multidevice(code, 4))
+
+
 def test_pipeline_parallel_matches_sequential():
     code = """
 import jax, jax.numpy as jnp, numpy as np
