@@ -33,6 +33,7 @@ MODULES = [
     "benchmarks.bench_engine",              # stream-engine hot path
     "benchmarks.bench_chaos_sweep",         # vmapped jit chaos sweeps
     "benchmarks.bench_colocation",          # multi-job mega-arena sweeps
+    "benchmarks.bench_compile",             # tensorized-tick compile cost
     "benchmarks.bench_kernels",             # §V-C micro benchmarking
 ]
 
@@ -40,6 +41,7 @@ QUICK_MODULES = [
     "benchmarks.bench_engine",              # vectorized vs reference engine
     "benchmarks.bench_chaos_sweep",         # vmapped jit chaos sweeps
     "benchmarks.bench_colocation",          # multi-job mega-arena sweeps
+    "benchmarks.bench_compile",             # tensorized-tick compile cost
     "benchmarks.bench_weakhash",            # WeakHash assignment path
     "benchmarks.bench_hotupdate",           # pure-python, fast
 ]

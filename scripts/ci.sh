@@ -5,6 +5,7 @@
 #   scripts/ci.sh --full              # include the slow multi-device subprocess tests
 #   scripts/ci.sh --sweep-smoke       # also run a 16-seed chaos sweep (vmapped jit, CPU)
 #   scripts/ci.sh --colocation-smoke  # also run a 4-job 16-seed sharded co-location sweep
+#   scripts/ci.sh --config-smoke      # also run a small (seeds × configs) resiliency grid
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -28,6 +29,11 @@ fi
 if [[ "${1:-}" == "--colocation-smoke" ]]; then
   echo "== co-location smoke: 4 jobs, 16 seeds, 2 device shards =="
   python examples/colocation_sweep.py --jobs 4 --seeds 16 --duration 60 --devices 2
+fi
+
+if [[ "${1:-}" == "--config-smoke" ]]; then
+  echo "== config-grid smoke: 2x2 resiliency grid x 8 seeds, one (C,S) jit call =="
+  python examples/config_sweep.py --restarts 2 --intervals 2 --seeds 8 --duration 60
 fi
 
 echo "CI OK"

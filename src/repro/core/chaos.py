@@ -108,7 +108,7 @@ class ChaosEngine:
 
 
 def failover_recovery_entries(t: float, mode: str, hit: np.ndarray,
-                              downtime: float,
+                              downtime,
                               job_of_task: np.ndarray | None = None
                               ) -> list[dict]:
     """Recovery-event dicts for one failover action over `hit` tasks.
@@ -117,15 +117,101 @@ def failover_recovery_entries(t: float, mode: str, hit: np.ndarray,
     format. Packed multi-job arenas (`streams.engine.pack_arena`) emit one
     entry per affected job — ascending job id, with a ``"job"`` key — so a
     shared-host kill that downs tasks of several co-located jobs is
-    attributable per job. Used by both the live `StreamEngine` and the
-    pregenerated timeline so the two stay comparable with ``==``."""
+    attributable per job. `downtime` may be a scalar or a per-task vector
+    (per-job failover configs): each job's entry reports the downtime of
+    its own hit tasks, which per-job configs keep uniform within a job.
+    Used by both the live `StreamEngine` and the pregenerated timeline so
+    the two stay comparable with ``==``."""
+    dt_arr = np.asarray(downtime, dtype=float)
     if job_of_task is None:
+        d = float(dt_arr.flat[0]) if dt_arr.ndim else float(dt_arr)
         return [{"t": t, "mode": mode, "tasks": int(hit.sum()),
-                 "downtime": downtime}]
+                 "downtime": d}]
+
+    def _dt(j):
+        if dt_arr.ndim == 0:
+            return float(dt_arr)
+        return float(dt_arr[hit & (job_of_task == j)][0])
+
     return [{"t": t, "mode": mode,
              "tasks": int((hit & (job_of_task == j)).sum()),
-             "downtime": downtime, "job": int(j)}
+             "downtime": _dt(j), "job": int(j)}
             for j in np.unique(job_of_task[hit])]
+
+
+_MODE_CODE = {"none": 0, "region": 1, "single_task": 2}
+
+
+def failover_mode_codes(failover_mode, n_tasks: int) -> np.ndarray:
+    """Normalize a failover mode (name string or per-task int-code vector)
+    to an ``(n_tasks,)`` int8 code vector: 0 none, 1 region, 2
+    single_task. Per-task codes are how per-job `FailoverConfig`s reach
+    the chaos timeline and the engines without `core` importing
+    `streams`."""
+    if isinstance(failover_mode, str):
+        return np.full(n_tasks, _MODE_CODE[failover_mode], np.int8)
+    codes = np.asarray(failover_mode, dtype=np.int8)
+    if codes.shape != (n_tasks,):
+        raise ValueError(f"mode codes must be (n_tasks,)={n_tasks}, "
+                         f"got {codes.shape}")
+    return codes
+
+
+def _per_task(v, n_tasks: int) -> np.ndarray:
+    return np.broadcast_to(np.asarray(v, dtype=float), (n_tasks,))
+
+
+def _resolve_failover_tick(t, host, task_host, task_region, mode_codes,
+                           down_s, down_r, down, recoveries, job_of_task):
+    """One host kill → failover response (shared by the pregenerated
+    timeline, `refit_failover` and — semantically — the live engine's
+    `_fail_host`): region-mode victims expand to their regions, then
+    single_task-mode victims restart alone. Region entries precede
+    single_task entries when one shared-host kill hits jobs of both
+    modes."""
+    victims = task_host == host
+    vr = victims & (mode_codes == 1)
+    if vr.any():
+        hit = np.isin(task_region, task_region[vr])
+        down[hit] = t + down_r[hit]
+        recoveries.extend(failover_recovery_entries(
+            t, "region", hit, down_r, job_of_task))
+    vs = victims & (mode_codes == 2)
+    if vs.any():
+        down[vs] = t + down_s[vs]
+        recoveries.extend(failover_recovery_entries(
+            t, "single_task", vs, down_s, job_of_task))
+
+
+def run_checkpoint_attempt(eng: ChaosEngine, alive: np.ndarray, *,
+                           interval_s: float, mode: str, upload_s: float,
+                           retry: bool, regions, task_lo: int = 0) -> bool:
+    """One checkpoint attempt over the tasks covered by `alive` (their
+    liveness at attempt time): per-task upload-factor draws against the
+    interval timeout, then global abort-on-any-failure or per-region
+    evaluation with one short-circuiting retry of a failed region.
+
+    THE single definition of the attempt's rng consumption — shared by
+    the live `StreamEngine` coordinators (whole-arena and per-job) and
+    the pregenerated timeline replay, so the draw stream cannot
+    desynchronize between them. `regions` hold global task ids;
+    `task_lo` maps them into `alive` for per-job slices."""
+    factors = eng.storage_latency_factors(len(alive))
+    task_fail = (upload_s * factors > interval_s) | ~alive
+    if mode == "global":
+        return bool(not task_fail.any())
+    for region in regions:
+        bad = any(task_fail[tid - task_lo] for tid in region)
+        if bad and retry:
+            # one in-attempt retry of the region's uploads
+            # (short-circuits on the first slow draw, exactly like the
+            # engine's any(...) generator)
+            bad = any(upload_s * eng.storage_latency_factor() > interval_s
+                      for _ in region)
+        if bad:
+            return False  # region keeps previous snapshot; attempt
+            # counted failed by the caller, job continues (no abort)
+    return True
 
 
 # ----------------------------------------------------------------------
@@ -150,22 +236,26 @@ class ChaosTimeline:
     ts: np.ndarray             # (n_ticks,) tick-start times (accumulated)
     task_speed: np.ndarray     # (n_tasks,) chaos straggler speed factors
     kills: np.ndarray          # (n_ticks, n_hosts) bool host killed in tick
-    ckpt_at: np.ndarray        # (n_ticks,) bool checkpoint attempted
-    ckpt_ok: np.ndarray        # (n_ticks,) bool checkpoint succeeded
+    ckpt_at: np.ndarray        # (n_ticks,) i16 checkpoint attempts in tick
+    ckpt_ok: np.ndarray        # (n_ticks,) i16 successes in tick
     ckpt_attempts: int
     ckpt_success: int
     ckpt_failed: int
     recoveries: list[dict]     # same dict layout as EngineMetrics.recoveries
+    # per-job checkpoint counters — populated only when per-job
+    # CheckpointConfigs drive the replay ((n_jobs, 3) attempts/success/
+    # failed); None for a single shared coordinator
+    ckpt_by_job: np.ndarray | None = None
 
 
 def build_chaos_timeline(
         spec: ChaosSpec, *, n_ticks: int, dt: float, n_hosts: int,
         task_host: np.ndarray, task_region: np.ndarray | None = None,
         regions: list | None = None,
-        failover_mode: str = "region", detect_s: float = 1.0,
-        region_restart_s: float = 45.0, single_restart_s: float = 3.0,
-        ckpt_interval_s: float | None = None, ckpt_mode: str = "region",
-        ckpt_upload_s: float = 4.0, ckpt_retry: bool = True,
+        failover_mode="region", detect_s=1.0,
+        region_restart_s=45.0, single_restart_s=3.0,
+        ckpt_interval_s=None, ckpt_mode="region",
+        ckpt_upload_s=4.0, ckpt_retry=True,
         job_of_task: np.ndarray | None = None) -> ChaosTimeline:
     """Replay the engine's chaos rng consumption for `n_ticks` ticks.
 
@@ -177,16 +267,42 @@ def build_chaos_timeline(
     `PhysicalGraph`); failover/checkpoint parameters mirror
     `FailoverConfig`/`CheckpointConfig` field-for-field (passed as plain
     scalars to keep `core` free of a `streams` import).
+
+    Per-job configs ride the same scalar contract as vectors/sequences:
+
+    * `failover_mode` may be a per-task int8 code vector (see
+      `failover_mode_codes`) and `detect_s` / `*_restart_s` per-task
+      float vectors — how `streams.engine.per_task_failover` lowers a
+      per-job `FailoverConfig` list.
+    * `ckpt_interval_s` / `ckpt_mode` / `ckpt_upload_s` / `ckpt_retry`
+      may be length-``n_jobs`` sequences (requires `job_of_task`; a None
+      interval disables job j's coordinator): each job then runs its own
+      coordinator drawing upload factors for its OWN tasks only, jobs in
+      ascending id order within a tick — the stream contract mirrored by
+      `StreamEngine._run_checkpoint_job`. `ckpt_at` counts attempts per
+      tick (all jobs), and `ckpt_by_job` carries the per-job counters.
     """
     eng = ChaosEngine(spec)
     task_host = np.asarray(task_host)
     n_tasks = len(task_host)
+    mode_codes = failover_mode_codes(failover_mode, n_tasks)
+    down_s = _per_task(detect_s, n_tasks) + _per_task(single_restart_s,
+                                                      n_tasks)
+    down_r = _per_task(detect_s, n_tasks) + _per_task(region_restart_s,
+                                                      n_tasks)
     kills_possible = bool(spec.host_kill_at or spec.host_kill_prob_per_s)
-    if kills_possible and failover_mode == "region" and task_region is None:
+    if kills_possible and (mode_codes == 1).any() and task_region is None:
         raise ValueError(
             "failover_mode='region' with kills enabled requires task_region")
-    if ckpt_interval_s is not None and ckpt_mode != "global" \
-            and regions is None:
+    per_job_ckpt = isinstance(ckpt_interval_s, (list, tuple, np.ndarray))
+    if per_job_ckpt and job_of_task is None:
+        raise ValueError("per-job ckpt_interval_s requires job_of_task")
+    any_ckpt = (any(iv is not None for iv in ckpt_interval_s)
+                if per_job_ckpt else ckpt_interval_s is not None)
+    region_ckpt = (any(m != "global" for m in ckpt_mode)
+                   if isinstance(ckpt_mode, (list, tuple, np.ndarray))
+                   else ckpt_mode != "global")
+    if any_ckpt and region_ckpt and regions is None:
         raise ValueError(
             "region checkpoint mode requires regions (the retry draws "
             "consume the rng stream — omitting them would desynchronize "
@@ -197,12 +313,21 @@ def build_chaos_timeline(
 
     ts = np.zeros(n_ticks)
     kills = np.zeros((n_ticks, n_hosts), bool)
-    ckpt_at = np.zeros(n_ticks, bool)
-    ckpt_ok = np.zeros(n_ticks, bool)
+    ckpt_at = np.zeros(n_ticks, np.int16)
+    ckpt_ok = np.zeros(n_ticks, np.int16)
     down = np.zeros(n_tasks)
     recoveries: list[dict] = []
     attempts = success = failed = 0
-    next_ckpt = ckpt_interval_s if ckpt_interval_s is not None else math.inf
+    if per_job_ckpt:
+        n_jobs = int(np.max(job_of_task)) + 1
+        jobs = _JobCkpt.from_seq(n_jobs, ckpt_interval_s, ckpt_mode,
+                                 ckpt_upload_s, ckpt_retry, job_of_task,
+                                 regions)
+        ckpt_by_job = np.zeros((n_jobs, 3), int)
+    else:
+        next_ckpt = (ckpt_interval_s if ckpt_interval_s is not None
+                     else math.inf)
+        ckpt_by_job = None
     t = 0.0
     for i in range(n_ticks):
         ts[i] = t
@@ -212,45 +337,120 @@ def build_chaos_timeline(
                     # scheduled kills are unbounded by n_hosts; a kill of
                     # a hostless id is a no-op (the engine just revives)
                     kills[i, host] = True
-                victims = task_host == host
-                if victims.any() and failover_mode != "none":
-                    if failover_mode == "single_task":
-                        hit = victims
-                        downtime = detect_s + single_restart_s
-                    else:
-                        hit = np.isin(task_region, task_region[victims])
-                        downtime = detect_s + region_restart_s
-                    down[hit] = t + downtime
-                    recoveries.extend(failover_recovery_entries(
-                        t, failover_mode, hit, downtime, job_of_task))
+                _resolve_failover_tick(t, host, task_host, task_region,
+                                       mode_codes, down_s, down_r, down,
+                                       recoveries, job_of_task)
                 eng.revive(host)   # replacement host, as in _fail_host
-        if t + dt >= next_ckpt:
-            ckpt_at[i] = True
+        if per_job_ckpt:
+            for jc in jobs:
+                if t + dt < jc.next_at:
+                    continue
+                ok = jc.attempt(eng, down, t)
+                ckpt_at[i] += 1
+                ckpt_ok[i] += int(ok)
+                attempts += 1
+                success += int(ok)
+                failed += int(not ok)
+                ckpt_by_job[jc.job] += (1, int(ok), int(not ok))
+        elif t + dt >= next_ckpt:
+            ckpt_at[i] = 1
             attempts += 1
-            timeout = ckpt_interval_s
-            factors = eng.storage_latency_factors(n_tasks)
-            alive = down <= t
-            task_fail = (ckpt_upload_s * factors > timeout) | ~alive
-            if ckpt_mode == "global":
-                ok = bool(not task_fail.any())
-            else:
-                ok = True
-                for region in (regions or ()):
-                    bad = any(task_fail[tid] for tid in region)
-                    if bad and ckpt_retry:
-                        # one in-attempt retry of the region's uploads
-                        # (short-circuits on the first slow draw, exactly
-                        # like the engine's any(...) generator)
-                        bad = any(
-                            ckpt_upload_s * eng.storage_latency_factor()
-                            > timeout for _ in region)
-                    if bad:
-                        ok = False
-                        break
-            ckpt_ok[i] = ok
+            ok = run_checkpoint_attempt(
+                eng, down <= t, interval_s=ckpt_interval_s,
+                mode=ckpt_mode, upload_s=ckpt_upload_s, retry=ckpt_retry,
+                regions=regions or ())
+            ckpt_ok[i] = int(ok)
             success += int(ok)
             failed += int(not ok)
             next_ckpt += ckpt_interval_s
         t = t + dt
     return ChaosTimeline(dt, n_ticks, ts, task_speed, kills, ckpt_at,
-                         ckpt_ok, attempts, success, failed, recoveries)
+                         ckpt_ok, attempts, success, failed, recoveries,
+                         ckpt_by_job=ckpt_by_job)
+
+
+class _JobCkpt:
+    """Per-job checkpoint coordinator state for the timeline replay —
+    draws upload factors for the job's own task slice only, mirroring
+    `StreamEngine._run_checkpoint_job` draw-for-draw."""
+
+    def __init__(self, job, interval, mode, upload, retry, lo, hi, regions):
+        self.job, self.interval, self.mode = job, interval, mode
+        self.upload, self.retry = upload, retry
+        self.lo, self.hi, self.regions = lo, hi, regions
+        self.next_at = interval if interval is not None else math.inf
+
+    @classmethod
+    def from_seq(cls, n_jobs, intervals, modes, uploads, retries,
+                 job_of_task, regions):
+        def seq(v, default):
+            if isinstance(v, (list, tuple, np.ndarray)):
+                if len(v) != n_jobs:
+                    raise ValueError(
+                        f"per-job ckpt params need one entry per job "
+                        f"({len(v)} != {n_jobs})")
+                return list(v)
+            return [v if v is not None else default] * n_jobs
+
+        intervals = seq(intervals, None)
+        modes = seq(modes, "region")
+        uploads = seq(uploads, 4.0)
+        retries = seq(retries, True)
+        out = []
+        for j in range(n_jobs):
+            mask = np.asarray(job_of_task) == j
+            lo = int(np.nonzero(mask)[0][0])
+            hi = int(np.nonzero(mask)[0][-1]) + 1
+            if int(mask.sum()) != hi - lo:
+                raise ValueError("per-job ckpt needs contiguous job "
+                                 "task slices")
+            regs = [r for r in (regions or ())
+                    if lo <= min(r) < hi]
+            out.append(cls(j, intervals[j], modes[j], uploads[j],
+                           retries[j], lo, hi, regs))
+        return out
+
+    def attempt(self, eng: ChaosEngine, down: np.ndarray, t: float) -> bool:
+        self.next_at += self.interval
+        return run_checkpoint_attempt(
+            eng, down[self.lo:self.hi] <= t, interval_s=self.interval,
+            mode=self.mode, upload_s=self.upload, retry=self.retry,
+            regions=self.regions, task_lo=self.lo)
+
+
+def refit_failover(tl: ChaosTimeline, *, task_host: np.ndarray,
+                   task_region: np.ndarray | None = None,
+                   failover_mode="region", detect_s=1.0,
+                   region_restart_s=45.0, single_restart_s=3.0,
+                   job_of_task: np.ndarray | None = None) -> ChaosTimeline:
+    """Re-resolve a pregenerated timeline's failover metadata (recovery
+    events) under different failover parameters WITHOUT consuming any rng
+    — the cheap path that lets config sweeps share one set of chaos draws
+    across a whole restart-budget grid.
+
+    Only valid for timelines with no checkpoint activity: checkpoint
+    storage draws interleave with kill draws and their count depends on
+    task liveness (hence on the failover config), so a ckpt-bearing
+    timeline is config-specific and must be rebuilt per config."""
+    if tl.ckpt_attempts:
+        raise ValueError(
+            "refit_failover needs a checkpoint-free timeline (storage "
+            "draws are failover-config-dependent — rebuild per config)")
+    task_host = np.asarray(task_host)
+    n_tasks = len(task_host)
+    mode_codes = failover_mode_codes(failover_mode, n_tasks)
+    down_s = _per_task(detect_s, n_tasks) + _per_task(single_restart_s,
+                                                      n_tasks)
+    down_r = _per_task(detect_s, n_tasks) + _per_task(region_restart_s,
+                                                      n_tasks)
+    if (mode_codes == 1).any() and tl.kills.any() and task_region is None:
+        raise ValueError("region failover refit requires task_region")
+    down = np.zeros(n_tasks)
+    recoveries: list[dict] = []
+    for i in np.nonzero(tl.kills.any(axis=1))[0]:
+        t = float(tl.ts[i])
+        for host in np.nonzero(tl.kills[i])[0]:
+            _resolve_failover_tick(t, int(host), task_host, task_region,
+                                   mode_codes, down_s, down_r, down,
+                                   recoveries, job_of_task)
+    return dataclasses.replace(tl, recoveries=recoveries)

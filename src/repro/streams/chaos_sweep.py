@@ -40,7 +40,8 @@ from repro.core.chaos import ChaosSpec
 from repro.streams.engine import (CheckpointConfig, FailoverConfig,
                                   PackedArena)
 from repro.streams.graph import LogicalGraph
-from repro.streams.jax_engine import JaxBatchMetrics, run_batch
+from repro.streams.jax_engine import (JaxBatchMetrics, normalize_config,
+                                      run_batch, run_config_batch)
 
 
 @dataclasses.dataclass
@@ -264,3 +265,106 @@ def _numpy_check(graph, seeds, batch: JaxBatchMetrics, *, base_spec,
         checked.append(int(getattr(s, "seed", s)))
     return {"seeds_checked": checked, "max_rel_lag_dev": max_dev,
             "wall_s": time.perf_counter() - t0}
+
+
+# ----------------------------------------------------------------------
+# resiliency-config grid sweeps (recovery-time-vs-budget surfaces)
+# ----------------------------------------------------------------------
+@dataclasses.dataclass
+class ConfigSweepResult:
+    """A ``(C, S)`` resiliency-config × chaos-seed sweep, one device
+    call: per-config `SweepResult`s plus the dense surfaces the paper's
+    tuning methodology wants (recovery time vs restart budget, SLO
+    violation vs checkpoint interval)."""
+    graph_name: str
+    duration_s: float
+    configs: list[dict]            # normalized grid entries
+    labels: list[str]
+    results: list[SweepResult]     # one per config row
+    recovery_surface: np.ndarray   # (C, S) recovery_time_s
+    slo_surface: np.ndarray        # (C, S) slo_violation_frac
+    backlog_surface: np.ndarray    # (C, S) max_backlog
+    wall_s: float
+
+    @property
+    def scenarios_per_s(self) -> float:
+        n = self.recovery_surface.size
+        return n / self.wall_s if self.wall_s else 0.0
+
+    def rows(self) -> list[dict]:
+        """Per-config aggregate rows (label + fleet percentiles) — the
+        recovery-time-vs-config curve in tabular form."""
+        out = []
+        for lbl, res in zip(self.labels, self.results):
+            agg = res.aggregate()
+            agg["label"] = lbl
+            out.append(agg)
+        return out
+
+
+def _config_label(i: int, cfg: dict) -> str:
+    if cfg.get("label"):
+        return str(cfg["label"])
+    bits = []
+    fo, ck = cfg.get("failover"), cfg.get("ckpt")
+    if isinstance(fo, FailoverConfig):
+        bits.append(f"{fo.mode}:restart="
+                    f"{fo.single_restart_s if fo.mode == 'single_task' else fo.region_restart_s:g}s")
+    elif fo is not None:
+        bits.append(f"per-job[{len(list(fo))}]")
+    if isinstance(ck, CheckpointConfig):
+        bits.append(f"ckpt={ck.interval_s:g}s")
+    elif ck is not None:
+        bits.append("ckpt=per-job")
+    if cfg.get("qcap_scale", 1.0) != 1.0:
+        bits.append(f"qcap×{cfg['qcap_scale']:g}")
+    if cfg.get("sel_scale", 1.0) != 1.0:
+        bits.append(f"sel×{cfg['sel_scale']:g}")
+    return " ".join(bits) if bits else f"cfg{i}"
+
+
+def sweep_configs(graph: LogicalGraph | PackedArena, configs, seeds, *,
+                  base_spec: ChaosSpec,
+                  duration_s: float, n_hosts: int = 8, dt: float = 0.5,
+                  queue_cap: float = 256.0,
+                  slo_lag: float | None = None,
+                  task_speed_override: dict[int, float] | None = None,
+                  seed: int = 0,
+                  pad_seeds: bool = True) -> ConfigSweepResult:
+    """Sweep a ``(C, S)`` grid of resiliency configs × chaos seeds over
+    `graph` in ONE doubly-vmapped jit call (`jax_engine.run_config_batch`
+    — the engine's third vmap axis) and summarize each config row.
+
+    `configs` entries follow `jax_engine.normalize_config`: a
+    `FailoverConfig`, a `CheckpointConfig`, a ``(failover, ckpt)`` pair,
+    a per-job `FailoverConfig` list (packed arenas), or a dict with
+    ``failover`` / ``ckpt`` / ``qcap_scale`` / ``sel_scale`` / ``label``.
+    The result's `recovery_surface` / `slo_surface` are the dense (C, S)
+    curves — recovery time vs restart budget, SLO violation vs
+    checkpoint interval — that StreamShield-style release gating and
+    Khaos-style checkpoint-interval optimization read off directly."""
+    seeds = list(seeds)
+    norm = [normalize_config(c) for c in configs]
+    logical = graph.graph if isinstance(graph, PackedArena) else graph
+    t0 = time.perf_counter()
+    batches = run_config_batch(graph, norm, seeds, base_spec=base_spec,
+                               duration_s=duration_s, n_hosts=n_hosts,
+                               dt=dt, queue_cap=queue_cap,
+                               task_speed_override=task_speed_override,
+                               seed=seed, pad_seeds=pad_seeds)
+    wall = time.perf_counter() - t0
+    # each config row gets its share of the one-call wall time, so a
+    # row's scenarios_per_s stays comparable with a standalone sweep()
+    results = [summarize(bm, seeds, graph=logical, slo_lag=slo_lag,
+                         wall_s=wall / len(norm),
+                         graph_name=logical.name, duration_s=duration_s)
+               for bm in batches]
+    rec = np.array([[s.recovery_time_s for s in r.summaries]
+                    for r in results])
+    slo = np.array([[s.slo_violation_frac for s in r.summaries]
+                    for r in results])
+    bkl = np.array([[s.max_backlog for s in r.summaries]
+                    for r in results])
+    labels = [_config_label(i, c) for i, c in enumerate(norm)]
+    return ConfigSweepResult(logical.name, duration_s, norm, labels,
+                             results, rec, slo, bkl, wall)

@@ -71,7 +71,8 @@ import math
 
 import numpy as np
 
-from repro.core.chaos import ChaosEngine, failover_recovery_entries
+from repro.core.chaos import (ChaosEngine, failover_recovery_entries,
+                              run_checkpoint_attempt)
 from repro.streams.graph import (LogicalGraph, PhysicalGraph, Task, expand,
                                  namespaced)
 
@@ -125,6 +126,10 @@ class EngineMetrics:
         self.ckpt_attempts = 0
         self.ckpt_success = 0
         self.ckpt_failed = 0
+        # (n_jobs, 3) attempts/success/failed — filled only by per-job
+        # checkpoint coordinators (per-job CheckpointConfig lists)
+        self.ckpt_by_job = (np.zeros((n_jobs, 3), int)
+                            if n_jobs is not None else None)
         self.recoveries: list[dict] = []
 
     @property
@@ -352,6 +357,303 @@ def _plan_edge(e, src: _OpPlan, dst: _OpPlan, dst_qcap: float) -> _EdgePlan:
 
 
 # ----------------------------------------------------------------------
+# Per-task failover normalization (per-job configs, paper §III-B)
+# ----------------------------------------------------------------------
+def per_task_failover(failover, n_tasks: int,
+                      job_of_task: np.ndarray | None = None):
+    """Normalize a `FailoverConfig` — or a per-job sequence of them — into
+    per-task vectors ``(mode_codes i8, detect, restart_single,
+    restart_region)``.
+
+    Mode codes follow `core.chaos.failover_mode_codes` (0 none, 1 region,
+    2 single_task). A sequence means one config per job of a packed arena
+    (`job_of_task` maps tasks to jobs; `None` entries fall back to the
+    default config), which is how per-job failover policies reach both
+    engines and the chaos timeline: everything downstream consumes only
+    the per-task vectors, so a shared config is just the constant
+    vector."""
+    from repro.core.chaos import failover_mode_codes
+
+    if failover is None:
+        failover = FailoverConfig()
+    if isinstance(failover, FailoverConfig):
+        return (failover_mode_codes(failover.mode, n_tasks),
+                np.full(n_tasks, float(failover.detect_s)),
+                np.full(n_tasks, float(failover.single_restart_s)),
+                np.full(n_tasks, float(failover.region_restart_s)))
+    cfgs = [c if c is not None else FailoverConfig() for c in failover]
+    if job_of_task is None:
+        if len(cfgs) != 1:
+            raise ValueError(
+                "a per-job failover list needs a packed arena "
+                f"(got {len(cfgs)} configs for a single-job graph)")
+        job_of_task = np.zeros(n_tasks, dtype=int)
+    job_of_task = np.asarray(job_of_task)
+    n_jobs = int(job_of_task.max()) + 1
+    if len(cfgs) != n_jobs:
+        raise ValueError(f"per-job failover list must have one entry per "
+                         f"job ({len(cfgs)} != {n_jobs})")
+    code_of_job = np.concatenate(
+        [failover_mode_codes(c.mode, 1) for c in cfgs])
+    return (code_of_job[job_of_task].astype(np.int8),
+            np.array([c.detect_s for c in cfgs])[job_of_task],
+            np.array([c.single_restart_s for c in cfgs])[job_of_task],
+            np.array([c.region_restart_s for c in cfgs])[job_of_task])
+
+
+# ----------------------------------------------------------------------
+# Tensorized plan lowering (flat edge tensors for the JAX segment-sum
+# tick — see streams/jax_engine.py for the consuming kernel)
+# ----------------------------------------------------------------------
+@dataclasses.dataclass(eq=False)
+class PhaseTensors:
+    """Flat routing tensors of one tick *phase*.
+
+    A phase is one slot of the tick's static schedule: every op consumes
+    (and produces) in exactly one phase, every edge routes in exactly one
+    phase, and all of a phase's edges execute as ONE batch of gathers +
+    segment reductions over the concatenated destination-channel axis
+    (``D`` entries = sum of the phase's edges' dst parallelisms). Blocks
+    (rescale families) and key-groups (weakhash) are numbered globally
+    within the phase with one trailing dummy segment each, so one
+    `segment_sum` covers every edge's blocks/groups at once. `share` /
+    `mass` are float routing constants — the JAX engine passes them as
+    traced parameters, NOT compile-time constants, so they are excluded
+    from the trace-cache key."""
+    cons_mask: np.ndarray          # (n_tasks,) f64: ops consuming here
+    consumes: bool
+    n_edges: int                   # E
+    D: int                         # flat dst-channel entries
+    dst_task: np.ndarray           # (D,) i32 arena task id per entry
+    edge_of: np.ndarray            # (D,) i32 phase-local edge index
+    job_of_entry: np.ndarray       # (D,) i32 job of the dst op
+    src_op_of_edge: np.ndarray     # (E,) i32 topo op index of the source
+    is_fwd: np.ndarray             # (D,) bool  forward
+    is_blk: np.ndarray             # (D,) bool  rescale / group_rescale
+    is_hash: np.ndarray            # (D,) bool  hash
+    is_weakhash: np.ndarray        # (D,) bool
+    is_backlog: np.ndarray         # (D,) bool
+    is_norm: np.ndarray            # (D,) f64   rebalance|weakhash|backlog
+    acc_static: np.ndarray         # (D,) bool  head-of-line accept family
+    acc_block: np.ndarray          # (D,) bool  per-block accept
+    fwd_src: np.ndarray            # (D,) i32   src task for forward
+    B: int                         # blocks in phase (dummy slot = B)
+    blk_of: np.ndarray             # (D,) i32
+    dst_in_blk: np.ndarray         # (D,) f64
+    bsrc_task: np.ndarray          # (Sb,) i32  blocky edges' src tasks
+    bsrc_blk: np.ndarray           # (Sb,) i32
+    G: int                         # weakhash groups (dummy slot = G)
+    grp_of: np.ndarray             # (D,) i32
+    share: np.ndarray              # (D,) f64  hash key-mass share (traced)
+    mass: np.ndarray               # (D,) f64  weakhash group mass (traced)
+
+
+@dataclasses.dataclass(eq=False)
+class TensorPlan:
+    """Phase-scheduled flat-tensor lowering of a `RoutingPlan`.
+
+    Equality / hashing go through `key` — a digest of every static
+    (integer/structure) array — so two same-shaped graphs share one
+    compiled trace while float parameters stay traced. The *number of
+    phases* is bounded by the longest in-tick pipeline chain of a single
+    job (plus head-of-line ordering between same-destination edges), NOT
+    by the number of ops/edges: packing K jobs into one arena leaves it
+    unchanged, which is what makes the jitted tick O(1) in graph size."""
+    n_tasks: int
+    n_ops: int
+    n_jobs: int
+    n_phases: int
+    op_of_task: np.ndarray         # (n_tasks,) i32 topo op index
+    is_src_task: np.ndarray        # (n_tasks,) f64
+    job_of_task: np.ndarray        # (n_tasks,) i32
+    par_of_op: np.ndarray          # (n_ops,) f64  max(parallelism, 1)
+    src_mask_ops: np.ndarray       # (n_ops,) f64  1.0 at source columns
+    phases: list[PhaseTensors]
+    key: tuple = ()
+
+    def __hash__(self):
+        return hash(self.key)
+
+    def __eq__(self, other):
+        return isinstance(other, TensorPlan) and self.key == other.key
+
+
+def _phase_schedule(plan: RoutingPlan):
+    """Assign every op a consumption phase and every edge a routing phase
+    such that executing each phase as one parallel batch reproduces the
+    sequential numpy tick exactly:
+
+    * an op consumes only after every in-edge has deposited
+      (``cphase(op) > phase(e)`` for in-edges ``e``);
+    * an edge routes no earlier than its source op produces
+      (``phase(e) >= cphase(src)`` — same phase is fine, consumption runs
+      before routing inside a phase, as in the numpy op turn);
+    * edges sharing a destination op serialize in their numpy order
+      (free-credit reads/writes on the shared destination queue must nest
+      exactly), which also guarantees each dst op receives at most ONE
+      edge per phase — deposits within a phase are scatter-unique.
+    """
+    ops = plan.ops
+    topo_idx = {p.name: i for i, p in enumerate(ops)}
+    in_waves: list[list[int]] = [[] for _ in ops]
+    last_wave_into: dict[int, int] = {}
+    cphase = [0] * len(ops)
+    edges = []                               # (src_oi, dst_oi, ep, phase)
+    for oi, p in enumerate(ops):
+        cphase[oi] = max((w + 1 for w in in_waves[oi]), default=0)
+        for ep in p.out_edges:
+            di = topo_idx[ep.dst.name]
+            w = cphase[oi]
+            if di in last_wave_into:
+                w = max(w, last_wave_into[di] + 1)
+            last_wave_into[di] = w
+            in_waves[di].append(w)
+            edges.append((oi, di, ep, w))
+    n_phases = max(cphase + [e[3] for e in edges], default=0) + 1
+    return cphase, edges, n_phases
+
+
+def lower_tensor_plan(plan: RoutingPlan,
+                      job_of_op: np.ndarray | None = None) -> TensorPlan:
+    """Lower a `RoutingPlan` into the flat per-phase tensors consumed by
+    the JAX segment-sum tick (`streams/jax_engine.py`)."""
+    import hashlib
+
+    ops = plan.ops
+    n_ops = len(ops)
+    n_tasks = plan.n_tasks
+    if job_of_op is None:
+        job_of_op = np.zeros(n_ops, dtype=int)
+    job_of_op = np.asarray(job_of_op)
+    n_jobs = int(job_of_op.max()) + 1 if n_ops else 1
+
+    op_of_task = np.zeros(n_tasks, np.int32)
+    is_src_task = np.zeros(n_tasks)
+    job_of_task = np.zeros(n_tasks, np.int32)
+    for oi, p in enumerate(ops):
+        op_of_task[p.lo:p.hi] = oi
+        job_of_task[p.lo:p.hi] = job_of_op[oi]
+        if p.is_source:
+            is_src_task[p.lo:p.hi] = 1.0
+    par_of_op = np.array([max(p.par, 1) for p in ops], float)
+    src_mask_ops = np.array([1.0 if p.is_source else 0.0 for p in ops])
+
+    cphase, edges, n_phases = _phase_schedule(plan)
+    phases: list[PhaseTensors] = []
+    h = hashlib.sha1()
+
+    def feed(*arrays):
+        for a in arrays:
+            h.update(np.ascontiguousarray(a).tobytes())
+
+    feed(op_of_task, is_src_task.astype(np.int8), job_of_task,
+         np.asarray(cphase, np.int32))
+    for f in range(n_phases):
+        cons = np.zeros(n_tasks)
+        for oi, p in enumerate(ops):
+            if cphase[oi] == f:
+                cons[p.lo:p.hi] = 1.0
+        mine = [(oi, di, ep) for (oi, di, ep, w) in edges if w == f]
+        assert len({di for _, di, _ in mine}) == len(mine), \
+            "phase schedule must keep destination ops unique per phase"
+        E = len(mine)
+        cols = {k: [] for k in
+                ("dst_task", "edge_of", "job_of_entry", "is_fwd", "is_blk",
+                 "is_hash", "is_weakhash", "is_backlog", "acc_static",
+                 "acc_block", "fwd_src", "blk_of", "dst_in_blk", "grp_of",
+                 "share", "mass")}
+        src_op_of_edge = np.array([oi for oi, _, _ in mine], np.int32)
+        bsrc_task, bsrc_blk = [], []
+        blk_base = grp_base = 0
+        n_blocks_total = sum(ep.n_blocks for _, _, ep in mine)
+        n_groups_total = sum(len(ep.grp_starts)
+                             if ep.kind == "weakhash" else 0
+                             for _, _, ep in mine)
+        for ei, (oi, di, ep) in enumerate(mine):
+            nd = ep.dst.hi - ep.dst.lo
+            kind = ep.kind
+            blocky = kind in ("rescale", "group_rescale")
+            cols["dst_task"].append(np.arange(ep.dst.lo, ep.dst.hi,
+                                              dtype=np.int32))
+            cols["edge_of"].append(np.full(nd, ei, np.int32))
+            cols["job_of_entry"].append(
+                np.full(nd, int(job_of_op[di]), np.int32))
+            cols["is_fwd"].append(np.full(nd, kind == "forward"))
+            cols["is_blk"].append(np.full(nd, blocky))
+            cols["is_hash"].append(np.full(nd, kind == "hash"))
+            cols["is_weakhash"].append(np.full(nd, kind == "weakhash"))
+            cols["is_backlog"].append(np.full(nd, kind == "backlog"))
+            cols["acc_static"].append(np.full(nd, ep.static))
+            cols["acc_block"].append(np.full(nd, kind == "group_rescale"))
+            cols["fwd_src"].append(
+                np.arange(ep.src.lo, ep.src.hi, dtype=np.int32)
+                if kind == "forward" else np.zeros(nd, np.int32))
+            if blocky:
+                cols["blk_of"].append(
+                    (blk_base + ep.blk_idx).astype(np.int32))
+                cols["dst_in_blk"].append(ep.dst_in_blk.astype(float))
+                bsrc_task.append(np.arange(ep.src.lo, ep.src.hi,
+                                           dtype=np.int32))
+                bsrc_blk.append((blk_base + ep.blk_of_src)
+                                .astype(np.int32))
+                blk_base += ep.n_blocks
+            else:
+                cols["blk_of"].append(np.full(nd, n_blocks_total, np.int32))
+                cols["dst_in_blk"].append(np.zeros(nd))
+            if kind == "weakhash":
+                cols["grp_of"].append(
+                    (grp_base + ep.grp_of_dst).astype(np.int32))
+                cols["mass"].append(ep.mass_of_dst.astype(float))
+                grp_base += len(ep.grp_starts)
+            else:
+                cols["grp_of"].append(np.full(nd, n_groups_total, np.int32))
+                cols["mass"].append(np.zeros(nd))
+            cols["share"].append(ep.share.astype(float)
+                                 if kind == "hash" else np.zeros(nd))
+        cat = {k: (np.concatenate(v) if v else
+                   np.zeros(0, np.int32 if k in
+                            ("dst_task", "edge_of", "job_of_entry",
+                             "fwd_src", "blk_of", "grp_of") else float))
+               for k, v in cols.items()}
+        ph = PhaseTensors(
+            cons_mask=cons, consumes=bool(cons.any()), n_edges=E,
+            D=len(cat["dst_task"]), dst_task=cat["dst_task"],
+            edge_of=cat["edge_of"], job_of_entry=cat["job_of_entry"],
+            src_op_of_edge=src_op_of_edge,
+            is_fwd=cat["is_fwd"].astype(bool),
+            is_blk=cat["is_blk"].astype(bool),
+            is_hash=cat["is_hash"].astype(bool),
+            is_weakhash=cat["is_weakhash"].astype(bool),
+            is_backlog=cat["is_backlog"].astype(bool),
+            is_norm=(cat["is_weakhash"].astype(bool)
+                     | cat["is_backlog"].astype(bool)
+                     | ~(cat["is_fwd"].astype(bool)
+                         | cat["is_blk"].astype(bool)
+                         | cat["is_hash"].astype(bool))).astype(float),
+            acc_static=cat["acc_static"].astype(bool),
+            acc_block=cat["acc_block"].astype(bool),
+            fwd_src=cat["fwd_src"], B=n_blocks_total,
+            blk_of=cat["blk_of"], dst_in_blk=cat["dst_in_blk"],
+            bsrc_task=(np.concatenate(bsrc_task) if bsrc_task
+                       else np.zeros(0, np.int32)),
+            bsrc_blk=(np.concatenate(bsrc_blk) if bsrc_blk
+                      else np.zeros(0, np.int32)),
+            G=n_groups_total, grp_of=cat["grp_of"],
+            share=cat["share"], mass=cat["mass"])
+        phases.append(ph)
+        feed(np.int64([f, E, ph.D, ph.B, ph.G]), cons.astype(np.int8),
+             ph.dst_task, ph.edge_of, ph.job_of_entry, ph.src_op_of_edge,
+             ph.is_fwd, ph.is_blk, ph.is_hash, ph.is_weakhash,
+             ph.is_backlog, ph.acc_static, ph.acc_block, ph.fwd_src,
+             ph.blk_of, ph.dst_in_blk.astype(np.int8), ph.bsrc_task,
+             ph.bsrc_blk, ph.grp_of)
+    key = (n_tasks, n_ops, n_jobs, n_phases, h.hexdigest())
+    return TensorPlan(n_tasks, n_ops, n_jobs, n_phases, op_of_task,
+                      is_src_task, job_of_task, par_of_op, src_mask_ops,
+                      phases, key)
+
+
+# ----------------------------------------------------------------------
 # Multi-job mega-arena (cluster-perspective co-location, paper §V)
 # ----------------------------------------------------------------------
 @dataclasses.dataclass
@@ -551,11 +853,11 @@ class StreamEngine:
         self.dt = dt
         self.queue_cap = queue_cap
         self.chaos = chaos or ChaosEngine()
-        self.failover = failover or FailoverConfig()
+        self.failover = (failover if failover is not None
+                         else FailoverConfig())
         self.ckpt_cfg = ckpt
         self.rng = np.random.default_rng(seed)
         self.t = 0.0
-        self._next_ckpt = (self.ckpt_cfg.interval_s if ckpt else math.inf)
 
         # ---- task arena + routing plan --------------------------------
         self.plan = (self.arena.plan if self.arena is not None
@@ -590,6 +892,32 @@ class StreamEngine:
             self._job_of_task = self.arena.job_of_task
         else:
             self._job_of_op = self._job_of_task = None
+
+        # per-task failover vectors (uniform configs are constant vectors;
+        # per-job FailoverConfig lists vary by job slice)
+        codes, det, rst_s, rst_r = per_task_failover(
+            failover, n_tasks, self._job_of_task)
+        self._mode_single = codes == 2
+        self._mode_region = codes == 1
+        self._any_single = bool(self._mode_single.any())
+        self._downtime_single = det + rst_s
+        self._downtime_region = det + rst_r
+
+        # checkpoint coordinators: one shared (historical semantics, incl.
+        # the cross-region short-circuit) or one per job (per-job configs)
+        if ckpt is None or isinstance(ckpt, CheckpointConfig):
+            self._ckpt_list = None
+            self._next_ckpt = (ckpt.interval_s if ckpt else math.inf)
+        else:
+            cfgs = list(ckpt)
+            if self.arena is None or len(cfgs) != self.arena.n_jobs:
+                raise ValueError("per-job ckpt list needs a packed arena "
+                                 "with one entry per job")
+            self._ckpt_list = cfgs
+            self._next_ckpt = math.inf
+            self._next_ckpt_j = np.array(
+                [c.interval_s if c is not None else math.inf
+                 for c in cfgs])
 
         # compat: per-op dict views aliasing the arena (tests / tooling)
         self.par = {n: ops[n].parallelism for n in ops}
@@ -731,7 +1059,7 @@ class StreamEngine:
         qps_row = self._qps_buf
         qps_row.fill(0.0)
         drop_tick = 0.0
-        single_task = self.failover.mode == "single_task"
+        any_single = self._any_single
         emitted = 0.0
 
         jobs = self._job_of_op          # per-job segments (packed arenas)
@@ -757,11 +1085,11 @@ class StreamEngine:
             for ep in op.out_edges:
                 dsl = slice(ep.dst.lo, ep.dst.hi)
                 arriving = self._route(ep, produced, free[dsl], alive_f[dsl])
-                if single_task and not all_alive:
-                    alive_d = alive_all[dsl]
-                    if not alive_d.all():
-                        # records routed to a dead task drop (γ=partial)
-                        dead = ~alive_d
+                if any_single and not all_alive:
+                    # records routed to a dead single_task-mode task drop
+                    # (γ=partial); per-job configs scope the mode per dst
+                    dead = ~alive_all[dsl] & self._mode_single[dsl]
+                    if dead.any():
                         d_edge = arriving[dead].sum()
                         drop_tick += d_edge
                         if jobs is not None:   # edges never cross jobs
@@ -784,10 +1112,14 @@ class StreamEngine:
             for host in kills:
                 self._fail_host(host)
 
-        # checkpoint coordinator
+        # checkpoint coordinator(s): one shared, or one per job
         if t + dt >= self._next_ckpt:
             self._run_checkpoint()
             self._next_ckpt += self.ckpt_cfg.interval_s
+        elif self._ckpt_list is not None:
+            for j in np.nonzero(t + dt >= self._next_ckpt_j)[0]:
+                self._run_checkpoint_job(int(j))
+                self._next_ckpt_j[j] += self._ckpt_list[j].interval_s
 
         backlog_row = np.add.reduceat(q, self._arena_starts)[
             self._backlog_perm]
@@ -806,50 +1138,69 @@ class StreamEngine:
 
     # ------------------------------------------------------------------
     def _fail_host(self, host: int) -> None:
-        fo = self.failover
+        """Failover response to one host kill: region-mode victims expand
+        to their failure regions, single_task-mode victims restart alone
+        (region entries precede single_task entries when a shared-host
+        kill hits jobs of both modes — the order the chaos timeline
+        replays)."""
+        t = self.t
         victims = self._task_host == host
-        if not victims.any() or fo.mode == "none":
-            self.chaos.revive(host)
-            return
-        if fo.mode == "single_task":
-            hit = victims
-            downtime = fo.detect_s + fo.single_restart_s
-        else:
-            hit = np.isin(self._task_region, self._task_region[victims])
-            downtime = fo.detect_s + fo.region_restart_s
-        until = self.t + downtime
-        self._max_down = max(self._max_down, until)
+        vr = victims & self._mode_region
+        if vr.any():
+            hit = np.isin(self._task_region, self._task_region[vr])
+            self._apply_failover(t, "region", hit, self._downtime_region)
+        vs = victims & self._mode_single
+        if vs.any():
+            self._apply_failover(t, "single_task", vs,
+                                 self._downtime_single)
+        self.chaos.revive(host)  # replacement host
+
+    def _apply_failover(self, t, mode, hit, downtime) -> None:
+        until = t + downtime[hit]
+        self._max_down = max(self._max_down, float(until.max()))
         self._down_until[hit] = until
         self._queue[hit] = 0.0   # incomplete output / state discarded
         # packed arenas attribute the event per co-located job hit
         self.metrics.recoveries.extend(failover_recovery_entries(
-            self.t, fo.mode, hit, downtime, self._job_of_task))
-        self.chaos.revive(host)  # replacement host
+            t, mode, hit, downtime, self._job_of_task))
 
     # ------------------------------------------------------------------
     def _run_checkpoint(self) -> None:
+        """Whole-arena coordinator — the rng consumption (vectorized
+        per-task upload draws, stream-identical to per-task scalar draws
+        in task-id order, plus region retries) is the shared
+        `core.chaos.run_checkpoint_attempt`, so the pregenerated timeline
+        replays it draw-for-draw."""
         cfg = self.ckpt_cfg
         m = self.metrics
         m.ckpt_attempts += 1
-        timeout = cfg.interval_s
-        # vectorized per-task upload draws (stream-identical to per-task
-        # scalar draws in task-id order)
-        factors = self.chaos.storage_latency_factors(len(self._task_host))
-        alive = self._down_until <= self.t
-        task_fail = (cfg.upload_s * factors > timeout) | ~alive
-        if cfg.mode == "global":
-            ok = bool(not task_fail.any())
-        else:
-            ok = True
-            for region in self.phys.regions:
-                bad = any(task_fail[tid] for tid in region)
-                if bad and cfg.retry_failed_region:
-                    # one in-attempt retry of the region's uploads
-                    bad = any(
-                        cfg.upload_s * self.chaos.storage_latency_factor()
-                        > timeout for _ in region)
-                if bad:
-                    ok = False  # region keeps previous snapshot; attempt
-                    break       # counted failed, job continues (no abort)
+        ok = run_checkpoint_attempt(
+            self.chaos, self._down_until <= self.t,
+            interval_s=cfg.interval_s, mode=cfg.mode,
+            upload_s=cfg.upload_s, retry=cfg.retry_failed_region,
+            regions=self.phys.regions)
         m.ckpt_success += int(ok)
         m.ckpt_failed += int(not ok)
+
+    def _run_checkpoint_job(self, j: int) -> None:
+        """Per-job coordinator (per-job `CheckpointConfig`s): draws upload
+        factors for job j's task slice only and evaluates only its own
+        regions, so co-located jobs checkpoint on independent schedules
+        and a failing job never short-circuits another job's attempt.
+        Shares `core.chaos.run_checkpoint_attempt` with the timeline
+        replay (`core.chaos._JobCkpt`), keeping the two draw-for-draw."""
+        cfg = self._ckpt_list[j]
+        job = self.arena.jobs[j]
+        m = self.metrics
+        m.ckpt_attempts += 1
+        m.ckpt_by_job[j, 0] += 1
+        lo = job.task_lo
+        ok = run_checkpoint_attempt(
+            self.chaos, self._down_until[lo:job.task_hi] <= self.t,
+            interval_s=cfg.interval_s, mode=cfg.mode,
+            upload_s=cfg.upload_s, retry=cfg.retry_failed_region,
+            regions=self.phys.regions[job.region_lo:job.region_hi],
+            task_lo=lo)
+        m.ckpt_success += int(ok)
+        m.ckpt_failed += int(not ok)
+        m.ckpt_by_job[j, 1 if ok else 2] += 1

@@ -9,13 +9,47 @@ twin threads a single pytree of arena state through a pure
 of failure seeds so thousands of chaos scenarios execute in a single
 device call.
 
+Lowering pipeline (plan → padded tensors → segment-sum tick)
+------------------------------------------------------------
+The jitted tick is O(1) in graph size. The pipeline has three stages:
+
+1. `streams.engine.build_plan` lowers the logical graph into the
+   `RoutingPlan` both engines share (arena slices, per-op scalars,
+   per-edge routing constants).
+2. `streams.engine.lower_tensor_plan` flattens the plan into per-*phase*
+   edge tensors: src/dst task index vectors, per-entry partitioner
+   masks, globally-numbered block/group tables (one trailing dummy
+   segment each, so ragged fan-outs become shape-padded segment ids).
+   A phase is one slot of a static schedule that reproduces the numpy
+   tick's sequential op order exactly: ops consume after all upstream
+   deposits, and edges sharing a destination op serialize across phases
+   (the head-of-line `free`-credit reads must nest). The number of
+   phases is bounded by the longest in-tick pipeline chain of a single
+   job — NOT by op/edge count — so packing hundreds of jobs into one
+   arena leaves the trace size unchanged.
+3. `_build_run` emits, per phase, a constant number of gathers +
+   `segment_sum`/`segment_min`/`segment_max` passes over ALL of the
+   phase's edges at once (consume → route → accept → deposit), replacing
+   the old per-op/per-edge Python loop whose trace grew O(ops + edges).
+   The old unrolled tick survives as `build_unrolled_run` purely as the
+   benchmark baseline (benchmarks/bench_compile.py).
+
+All resiliency floats are *traced leaves* of the params pytree, never
+compile-time constants: per-task failover vectors (detect / restart
+budgets / mode masks — per-job `FailoverConfig` lists lower to per-task
+vectors via `streams.engine.per_task_failover`), queue capacities,
+selectivities, source rates, and the per-phase hash-share / weakhash-
+mass tables. Sweeping any of them reuses the compiled trace; only the
+integer structure tensors (digested into `TensorPlan.key`) key the
+trace cache.
+
 State-pytree layout (`EngineState`, one leaf per arena variable; under
 `vmap` every leaf gains a leading ``(S,)`` seed axis):
 
     queue      (n_tasks,) f64  bounded input queues (records)
     down_until (n_tasks,) f64  failover downtime horizon per task
     speed      (n_tasks,) f64  static host speed (overrides × stragglers)
-    ckpt_epoch ()         i32  checkpoints attempted so far
+    ckpt_epoch ()         i32  checkpoint attempts so far
     emitted    (n_jobs,)  f64  source records emitted, per job segment
     dropped    (n_jobs,)  f64  single_task failover drops, per job segment
 
@@ -24,33 +58,34 @@ engine's *mechanism*, not its numbers): a `jit`-ted scan cannot consume
 sequential numpy rng draws, so all chaos is materialized up front by
 `core.chaos.build_chaos_timeline` — draw-for-draw in the engine's rng
 consumption order — into per-tick event tensors (host-kill masks,
-checkpoint flags/outcomes, straggler speeds). Event times are thereby
+checkpoint attempt counts, straggler speeds). Event times are thereby
 quantized to tick boundaries, which is exactly the resolution at which
 the tick-driven numpy engine observes them, so metrics stay pinned to
 `StreamEngine` at 1e-5 over full runs (`tests/test_jax_engine.py`);
 checkpoint outcomes and recovery events ride along as host-side
 metadata because they never feed back into queue dynamics.
 
-Compiled `run` functions are cached per *plan shape* (op slices, edge
-kinds, segment counts, failover mode, per-op job segments — never float
-parameters, which are traced), so two engines over same-shaped graphs
-share one trace; `get_cached_run_fns` exposes the cache for tests. The
-state argument is donated, so each call's arena buffers are reused in
-place.
+Compiled `run` functions are cached per *plan shape* (the `TensorPlan`
+digest + region count — never float parameters, which are traced), so
+two engines over same-shaped graphs share one trace; `get_cached_run_fns`
+exposes the cache for tests. The state argument is donated, so each
+call's arena buffers are reused in place.
 
 Mega-arena sweeps: a `streams.engine.PackedArena` drops in for the
-graph everywhere (`JaxStreamEngine`, `run_batch`, `run_mix_batch`) — K
-co-located jobs then scan as one arena with per-job emitted/dropped
-segment sums (a static job index per op) and per-job recovery
-attribution riding the shared-host chaos timeline. `run_batch` pads the
-seed axis to the next power of two (retrace-free batching: one trace
-per pow2 bucket, pad rows sliced off before metrics) and can split the
-padded batch across local devices (``devices=``) through the
-version-gated `repro.dist.sharding` shim — `pmap` on jax 0.4.x,
-`jax.shard_map` on >= 0.6. `run_mix_batch` adds a second vmap axis over
-job-mix configs (per-job source-rate multipliers): rates are traced,
-not baked, so an (M, S) mix × seed grid runs as one device call on the
-same trace.
+graph everywhere (`JaxStreamEngine`, `run_batch`, `run_mix_batch`,
+`run_config_batch`) — K co-located jobs then scan as one arena with
+per-job emitted/dropped segment sums (a static job index per op) and
+per-job recovery attribution riding the shared-host chaos timeline.
+`run_batch` pads the seed axis to the next power of two (retrace-free
+batching: one trace per pow2 bucket, pad rows sliced off before
+metrics) and can split the padded batch across local devices
+(``devices=``) through the version-gated `repro.dist.sharding` shim —
+`pmap` on jax 0.4.x, `jax.shard_map` on >= 0.6. `run_mix_batch` adds a
+second vmap axis over job-mix configs (per-job source-rate
+multipliers); `run_config_batch` adds a third over resiliency-config
+grids (`FailoverConfig`/`CheckpointConfig` per grid row, optionally
+per job), so a (mixes × configs × seeds) scenario cube runs as one
+device call on one trace.
 
 Everything runs in float64 (scoped `jax.experimental.enable_x64`, no
 global config flip) to hold parity with the float64 numpy engine.
@@ -66,10 +101,12 @@ import numpy as np
 from jax import lax
 
 from repro.core.chaos import (ChaosEngine, ChaosSpec, ChaosTimeline,
-                              build_chaos_timeline)
+                              build_chaos_timeline, refit_failover)
 from repro.dist.sharding import local_shard_count, sharded_seed_fn
 from repro.streams.engine import (CheckpointConfig, FailoverConfig,
-                                  JobSlice, PackedArena, build_plan)
+                                  JobSlice, PackedArena, TensorPlan,
+                                  build_plan, lower_tensor_plan,
+                                  per_task_failover)
 from repro.streams.graph import LogicalGraph, PhysicalGraph, expand
 
 try:  # scoped x64 — keeps the rest of the process on default f32
@@ -98,6 +135,168 @@ class EngineState(NamedTuple):
     dropped: jax.Array
 
 
+class TickDesc(NamedTuple):
+    """Static trace-cache key of a compiled tick: the tensor-plan digest
+    plus the placement-level region count (a static `segment_max` size).
+    Float parameters — including failover mode masks — are traced, so
+    descs are mode- and config-independent."""
+    tensor: TensorPlan
+    n_regions: int
+
+
+# ----------------------------------------------------------------------
+# tensorized tick: constant number of segment passes per phase
+# ----------------------------------------------------------------------
+def _build_run(desc: TickDesc):
+    tp, n_regions = desc.tensor, desc.n_regions
+    n_ops, n_jobs = tp.n_ops, tp.n_jobs
+    op_of_task = tp.op_of_task
+    job_of_task = tp.job_of_task
+    is_src = tp.is_src_task
+    par_of_op = tp.par_of_op
+    src_mask_ops = tp.src_mask_ops
+    seg = jax.ops.segment_sum
+
+    def tick(pa, state: EngineState, x):
+        t = x["t"]
+        q = state.queue
+        alive_f = (state.down_until <= t).astype(q.dtype)
+        free = jnp.maximum(pa["qcap"] - q, 0.0)
+        sel_t = pa["sel"][op_of_task]
+        cap_t = pa["cap_base"] * state.speed * alive_f
+        emitted, dropped = state.emitted, state.dropped
+        produced = jnp.zeros_like(q)
+        qps_acc = jnp.zeros((n_ops,), q.dtype)
+
+        for fi, ph in enumerate(tp.phases):
+            if ph.consumes:
+                take = jnp.minimum(q, cap_t * ph.cons_mask)
+                q = q - take
+                src_emit = pa["src_row"] * alive_f * ph.cons_mask * is_src
+                produced = produced + (src_emit + take * sel_t)
+                emitted = emitted + seg(src_emit, job_of_task,
+                                        num_segments=n_jobs)
+                qps_acc = qps_acc + seg(take, op_of_task,
+                                        num_segments=n_ops)
+            if not ph.D:
+                continue
+            eph = pa["edges"][fi]
+            dst = ph.dst_task
+            alive_d = alive_f[dst]
+            free_d = free[dst]
+            tot_op = seg(produced, op_of_task, num_segments=n_ops)
+            tot_e = tot_op[ph.src_op_of_edge]
+            tot_d = tot_e[ph.edge_of]
+            # forward: pointwise src task → dst task
+            arr_fwd = produced[ph.fwd_src] * alive_d
+            # rescale family: per-block rate = block production over the
+            # block's alive destinations
+            prod_blk = seg(produced[ph.bsrc_task], ph.bsrc_blk,
+                           num_segments=ph.B + 1)
+            alive_blk = seg(alive_d * ph.dst_in_blk, ph.blk_of,
+                            num_segments=ph.B + 1)
+            has = alive_blk > 0.0
+            rate_blk = jnp.where(has,
+                                 prod_blk / jnp.where(has, alive_blk, 1.0),
+                                 0.0)
+            arr_blk = jnp.where(ph.dst_in_blk > 0.0,
+                                rate_blk[ph.blk_of] * alive_d, 0.0)
+            # weakhash: key-group mass spread ∝ free capacity; groups with
+            # zero capacity fall back to alive-uniform spread
+            cap_w = jnp.maximum(free_d, 1e-9) * alive_d
+            alive_eps = alive_d + 1e-9
+            capsum = seg(jnp.where(ph.is_weakhash, cap_w, 0.0), ph.grp_of,
+                         num_segments=ph.G + 1)
+            capsum_fb = seg(jnp.where(ph.is_weakhash, alive_eps, 0.0),
+                            ph.grp_of, num_segments=ph.G + 1)
+            fall = capsum <= 0.0
+            cap2 = jnp.where(fall[ph.grp_of], alive_eps, cap_w) * alive_d
+            capsum2 = jnp.where(fall, capsum_fb, capsum)
+            val_wh = cap2 * eph["mass"] / capsum2[ph.grp_of]
+            # backlog: divert away from congested channels
+            open_ = (free_d > pa["qcap"][dst] * 0.25).astype(q.dtype)
+            val_bk = (jnp.maximum(free_d, 1e-9) * alive_d
+                      * jnp.maximum(open_, 0.05))
+            # normalized all-to-all family (rebalance/weakhash/backlog):
+            # identical weight rows → scale one row to the edge total
+            val_nrm = jnp.where(ph.is_weakhash, val_wh,
+                                jnp.where(ph.is_backlog, val_bk,
+                                          alive_d)) * ph.is_norm
+            rs = seg(val_nrm, ph.edge_of, num_segments=ph.n_edges)
+            ratio_e = jnp.where(rs > 0.0, tot_e / rs, 0.0)
+            arr_nrm = val_nrm * ratio_e[ph.edge_of]
+            arriving = jnp.where(
+                ph.is_fwd, arr_fwd,
+                jnp.where(ph.is_blk, arr_blk,
+                          jnp.where(ph.is_hash, tot_d * eph["share"],
+                                    arr_nrm)))
+            # records routed to a dead single_task-mode task drop
+            # (γ=partial); edges never cross jobs, so the dst job segment
+            # owns the drop
+            dead_s = (alive_d <= 0.0) & (pa["mode_single"][dst] > 0.0)
+            dropped = dropped + seg(jnp.where(dead_s, arriving, 0.0),
+                                    ph.job_of_entry, num_segments=n_jobs)
+            arriving = jnp.where(dead_s, 0.0, arriving)
+            # acceptance: head-of-line (per edge), per block
+            # (group_rescale), or adaptive credits (weakhash/backlog)
+            live = arriving > 1e-9
+            ratio = jnp.where(live,
+                              free_d / jnp.maximum(arriving, 1e-300),
+                              jnp.inf)
+            lam_e = jnp.minimum(
+                jax.ops.segment_min(ratio, ph.edge_of,
+                                    num_segments=ph.n_edges), 1.0)
+            lam_b = jnp.minimum(
+                jax.ops.segment_min(ratio, ph.blk_of,
+                                    num_segments=ph.B + 1), 1.0)
+            accepted = jnp.where(
+                ph.acc_static, arriving * lam_e[ph.edge_of],
+                jnp.where(ph.acc_block, arriving * lam_b[ph.blk_of],
+                          jnp.minimum(arriving, free_d)))
+            # overflow re-queues uniformly at the source op
+            ovf_e = seg(arriving - accepted, ph.edge_of,
+                        num_segments=ph.n_edges)
+            ovf_op = seg(ovf_e, ph.src_op_of_edge, num_segments=n_ops)
+            q = q + (ovf_op / par_of_op)[op_of_task]
+            q = q.at[dst].add(accepted)
+            free = jnp.maximum(free.at[dst].add(-accepted), 0.0)
+
+        # pregenerated chaos host kills → failover (per-task mode masks:
+        # region-mode victims expand to their regions via segment_max,
+        # single_task-mode victims restart alone)
+        vict = x["kills"][pa["task_host"]]
+        hit_s = (vict > 0.0).astype(q.dtype) * pa["mode_single"]
+        reg_hit = jax.ops.segment_max(vict * pa["mode_region"],
+                                      pa["task_region"],
+                                      num_segments=n_regions)
+        hit_r = (reg_hit[pa["task_region"]] > 0.0).astype(q.dtype)
+        until_s = t + (pa["detect"] + pa["restart_single"])
+        until_r = t + (pa["detect"] + pa["restart_region"])
+        down_until = jnp.where(hit_r > 0.0, until_r,
+                               jnp.where(hit_s > 0.0, until_s,
+                                         state.down_until))
+        hit_any = jnp.maximum(hit_r, hit_s)
+        q = jnp.where(hit_any > 0.0, 0.0, q)
+
+        ckpt_epoch = state.ckpt_epoch + x["ckpt"].astype(jnp.int32)
+
+        backlog_row = seg(q, op_of_task, num_segments=n_ops)
+        qps_row = qps_acc / pa["dt"]
+        lag = jnp.dot(backlog_row, src_mask_ops)
+        new_state = EngineState(q, down_until, state.speed, ckpt_epoch,
+                                emitted, dropped)
+        return new_state, {"qps": qps_row, "backlog": backlog_row,
+                           "lag": lag}
+
+    def run(pa, state, xs):
+        return lax.scan(lambda st, x: tick(pa, st, x), state, xs)
+
+    return run
+
+
+# ----------------------------------------------------------------------
+# legacy unrolled tick (pre-tensorized; benchmark baseline ONLY)
+# ----------------------------------------------------------------------
 class _OpDesc(NamedTuple):
     lo: int
     hi: int
@@ -116,9 +315,6 @@ class _EdgeDesc(NamedTuple):
     any_unblocked: bool
 
 
-# ----------------------------------------------------------------------
-# pure routing (mirrors StreamEngine._route / _accept op-for-op)
-# ----------------------------------------------------------------------
 def _route(ed: _EdgeDesc, ea: dict, produced, free_down, alive_d):
     kind = ed.kind
     if kind == "forward":
@@ -136,7 +332,6 @@ def _route(ed: _EdgeDesc, ea: dict, produced, free_down, alive_d):
         if ed.any_unblocked:
             arriving = jnp.where(ea["dst_in_blk"] > 0.0, arriving, 0.0)
         return arriving
-    # all-to-all family: identical weight rows → scale a single row
     total = produced.sum()
     if kind == "rebalance":
         val = alive_d
@@ -146,8 +341,6 @@ def _route(ed: _EdgeDesc, ea: dict, produced, free_down, alive_d):
         cap = jnp.maximum(free_down, 1e-9) * alive_d
         capsum = jax.ops.segment_sum(cap, ea["grp_of_dst"],
                                      num_segments=ed.n_groups)
-        # groups with zero capacity fall back to alive-uniform spread
-        # (jit evaluates both branches; numpy branches — values match)
         alive_eps = alive_d + 1e-9
         capsum_fb = jax.ops.segment_sum(alive_eps, ea["grp_of_dst"],
                                         num_segments=ed.n_groups)
@@ -172,7 +365,6 @@ def _hol_ratio(arriving, room):
 
 def _accept(ed: _EdgeDesc, ea: dict, arriving, room):
     if ed.static:
-        # head-of-line blocking: most congested live channel throttles all
         lam = jnp.minimum(_hol_ratio(arriving, room).min(), 1.0)
         return arriving * lam
     if ed.kind == "group_rescale":
@@ -181,16 +373,17 @@ def _accept(ed: _EdgeDesc, ea: dict, arriving, room):
             jax.ops.segment_min(ratio, ea["blk_idx"],
                                 num_segments=ed.n_blocks), 1.0)
         return arriving * lam_g[ea["blk_idx"]]
-    # adaptive routing: channels accept up to their credits
     return jnp.minimum(arriving, room)
 
 
-# ----------------------------------------------------------------------
-# tick/run construction + per-plan-shape trace cache
-# ----------------------------------------------------------------------
-def _build_run(desc):
+def build_unrolled_run(legacy_desc):
+    """The pre-tensorized tick: one Python-level loop over ops and edges
+    per tick, `.at[sl]` scatter per op, one `_route`/`_accept` call per
+    edge — trace size O(ops + edges). Kept verbatim as the old-vs-new
+    baseline for benchmarks/bench_compile.py; the production path is
+    `_build_run`. Consumes `_Lowered.legacy()` descriptors."""
     (op_descs, edge_descs, edges_of_op, src_cols, n_tasks, n_hosts,
-     n_regions, failover_mode, job_of_op, n_jobs) = desc
+     n_regions, failover_mode, job_of_op, n_jobs) = legacy_desc
     single_task = failover_mode == "single_task"
 
     def tick(pa, state: EngineState, x):
@@ -206,7 +399,6 @@ def _build_run(desc):
             sl = slice(od.lo, od.hi)
             if od.is_source:
                 produced = pa["src_row"][sl] * alive_f[sl]
-                # static per-op job index → per-job segment sum for free
                 emitted = emitted.at[job_of_op[oi]].add(produced.sum())
                 qps_cols.append(backlog_zero)
             else:
@@ -220,9 +412,6 @@ def _build_run(desc):
                 dsl = slice(ed.dst_lo, ed.dst_hi)
                 arriving = _route(ed, ea, produced, free[dsl], alive_f[dsl])
                 if single_task:
-                    # records routed to a dead task drop (γ=partial);
-                    # edges never cross jobs, so the op's job segment owns
-                    # the drop
                     dead = alive_f[dsl] <= 0.0
                     dropped = dropped.at[job_of_op[oi]].add(
                         jnp.where(dead, arriving, 0.0).sum())
@@ -234,7 +423,6 @@ def _build_run(desc):
                 free = free.at[dsl].set(
                     jnp.maximum(free[dsl] - accepted, 0.0))
 
-        # pregenerated chaos host kills → failover
         down_until = state.down_until
         if failover_mode != "none":
             vict = x["kills"][pa["task_host"]]
@@ -265,11 +453,17 @@ def _build_run(desc):
     return run
 
 
+# ----------------------------------------------------------------------
+# per-plan-shape trace caches
+# ----------------------------------------------------------------------
 _FN_CACHE: dict = {}
 _SHARD_CACHE: dict = {}
 _MIX_CACHE: dict = {}
+_CFG_CACHE: dict = {}
+_CFG_MIX_CACHE: dict = {}
 
 _XS_AXES = {"t": None, "kills": 0, "ckpt": None}
+_XS_CFG_AXES = {"t": None, "kills": 0, "ckpt": 0}
 
 # job-mix vmap axis: only the per-task source emission row varies with a
 # job mix (service capacity / selectivity are per-job constants the mix
@@ -277,16 +471,25 @@ _XS_AXES = {"t": None, "kills": 0, "ckpt": None}
 _PA_MIX_AXES = {"qcap": None, "src_row": 0, "cap_base": None, "sel": None,
                 "dt": None, "task_host": None, "task_region": None,
                 "detect": None, "restart_region": None,
-                "restart_single": None, "edges": None}
+                "restart_single": None, "mode_single": None,
+                "mode_region": None, "edges": None}
+
+# resiliency-config vmap axis: the traced failover/queue/selectivity
+# leaves vary per grid row; placement and routing constants are broadcast
+_PA_CFG_AXES = {"qcap": 0, "src_row": None, "cap_base": None, "sel": 0,
+                "dt": None, "task_host": None, "task_region": None,
+                "detect": 0, "restart_region": 0, "restart_single": 0,
+                "mode_single": 0, "mode_region": 0, "edges": None}
 
 
-def get_cached_run_fns(desc):
+def get_cached_run_fns(desc: TickDesc):
     """(jitted run, jitted vmapped run) for a static plan descriptor.
 
     One entry — hence one trace per call signature — per plan *shape*;
-    float parameters (rates, selectivities, restart times, …) are traced
-    arguments, so sweeping them never re-traces. The state argument is
-    donated: arena state buffers are consumed in place every call."""
+    float parameters (rates, selectivities, restart times, queue caps,
+    failover mode masks, …) are traced arguments, so sweeping them never
+    re-traces. The state argument is donated: arena state buffers are
+    consumed in place every call."""
     if desc not in _FN_CACHE:
         run = _build_run(desc)
         _FN_CACHE[desc] = (
@@ -296,7 +499,7 @@ def get_cached_run_fns(desc):
     return _FN_CACHE[desc]
 
 
-def get_sharded_run_fn(desc, n_shards: int):
+def get_sharded_run_fn(desc: TickDesc, n_shards: int):
     """Device-sharded batch run fn (flat seed axis, a multiple of
     `n_shards`) — `pmap` on jax 0.4.x, `jax.shard_map` on >= 0.6 via the
     version-gated `repro.dist.sharding` shim. Cached per (plan shape,
@@ -308,10 +511,10 @@ def get_sharded_run_fn(desc, n_shards: int):
     return _SHARD_CACHE[key]
 
 
-def get_cached_mix_fn(desc):
+def get_cached_mix_fn(desc: TickDesc):
     """Doubly-vmapped run fn: outer axis over job-mix configs (per-task
     source-rate rows), inner axis over chaos seeds — one trace sweeps an
-    (M, S) grid of scenario × mix in a single device call."""
+    (M, S) grid of mix × scenario in a single device call."""
     if desc not in _MIX_CACHE:
         run = _build_run(desc)
         _MIX_CACHE[desc] = jax.jit(
@@ -320,21 +523,63 @@ def get_cached_mix_fn(desc):
     return _MIX_CACHE[desc]
 
 
+def _cfg_xs_axes(shared_kills: bool) -> dict:
+    # checkpoint-free grids share one (S, T, H) kill tensor across every
+    # config (kill draws are failover-independent), so the config axis
+    # broadcasts it instead of materializing C copies on device;
+    # ckpt-bearing grids carry genuinely per-config kills (axis 0)
+    return {"t": None, "kills": None if shared_kills else 0, "ckpt": 0}
+
+
+def get_cached_config_fn(desc: TickDesc, shared_kills: bool = False):
+    """Doubly-vmapped run fn for resiliency-config grids: outer axis over
+    configs (per-task detect/restart/mode/qcap/sel leaves + per-config
+    ckpt schedules), inner axis over chaos seeds — a (C, S) grid of
+    config × scenario in one device call, one trace per grid shape.
+    `shared_kills` selects the broadcast-kills variant (see
+    `_cfg_xs_axes`)."""
+    key = (desc, shared_kills)
+    if key not in _CFG_CACHE:
+        run = _build_run(desc)
+        _CFG_CACHE[key] = jax.jit(
+            jax.vmap(jax.vmap(run, in_axes=(None, 0, _XS_AXES)),
+                     in_axes=(_PA_CFG_AXES, None,
+                              _cfg_xs_axes(shared_kills))))
+    return _CFG_CACHE[key]
+
+
+def get_cached_config_mix_fn(desc: TickDesc, shared_kills: bool = False):
+    """Triply-vmapped run fn: mixes × configs × seeds in one call (the
+    mix axis varies only the source-rate row on top of the config
+    axes)."""
+    key = (desc, shared_kills)
+    if key not in _CFG_MIX_CACHE:
+        run = _build_run(desc)
+        mix_top = dict.fromkeys(_PA_CFG_AXES, None)
+        mix_top["src_row"] = 0
+        _CFG_MIX_CACHE[key] = jax.jit(
+            jax.vmap(
+                jax.vmap(jax.vmap(run, in_axes=(None, 0, _XS_AXES)),
+                         in_axes=(_PA_CFG_AXES, None,
+                                  _cfg_xs_axes(shared_kills))),
+                in_axes=(mix_top, None, None)))
+    return _CFG_MIX_CACHE[key]
+
+
 # ----------------------------------------------------------------------
-# lowering: LogicalGraph + configs → static desc + plan arrays
+# lowering: LogicalGraph + configs → static desc + traced param arrays
 # ----------------------------------------------------------------------
 class _Lowered:
     def __init__(self, graph: LogicalGraph | PackedArena, *, n_hosts: int,
                  dt: float,
-                 queue_cap: float, failover: FailoverConfig | None,
-                 ckpt: CheckpointConfig | None, seed: int):
+                 queue_cap: float, failover, ckpt, seed: int):
         self.arena = graph if isinstance(graph, PackedArena) else None
         if self.arena is not None:
             graph = self.arena.graph
             dt, queue_cap = self.arena.dt, self.arena.queue_cap
         self.graph = graph
         self.dt = dt
-        self.failover = failover or FailoverConfig()
+        self.failover = failover
         self.ckpt_cfg = ckpt
         self.phys: PhysicalGraph = (
             self.arena.phys if self.arena is not None
@@ -350,22 +595,133 @@ class _Lowered:
         self.n_jobs = self.arena.n_jobs if self.arena is not None else 1
         self.job_of_task = (self.arena.job_of_task
                             if self.arena is not None else None)
-        job_of_op = (self.arena.job_of_op if self.arena is not None
-                     else np.zeros(len(self.plan.ops), dtype=int))
+        self.job_of_op = (self.arena.job_of_op if self.arena is not None
+                          else np.zeros(len(self.plan.ops), dtype=int))
 
         plan = self.plan
         n_tasks = plan.n_tasks
         src_row = np.zeros(n_tasks)
         cap_base = np.zeros(n_tasks)
         sel = np.zeros(len(plan.ops))
-        op_descs, edge_descs, edge_arrays, edges_of_op = [], [], [], []
         for oi, p in enumerate(plan.ops):
-            op_descs.append(_OpDesc(p.lo, p.hi, p.is_source))
             sel[oi] = p.selectivity
             if p.is_source:
                 src_row[p.lo:p.hi] = p.src_row
             else:
                 cap_base[p.lo:p.hi] = p.service_rate * dt
+
+        # per-task failover vectors (per-job config lists lower here)
+        codes, det, rst_s, rst_r = per_task_failover(
+            failover, n_tasks, self.job_of_task)
+        self.fo_codes = codes
+        self.fo_detect, self.fo_rs, self.fo_rr = det, rst_s, rst_r
+        if isinstance(ckpt, (list, tuple)) and (
+                self.arena is None or len(list(ckpt)) != self.n_jobs):
+            raise ValueError("per-job ckpt list needs a packed arena "
+                             "with one entry per job")
+
+        self.tensor = lower_tensor_plan(plan, self.job_of_op)
+        self.desc = TickDesc(self.tensor, self.n_regions)
+        self.arrays = self._params(plan.qcap, sel, det, rst_s, rst_r,
+                                   codes, src_row, cap_base)
+        self.op_names = [p.name for p in plan.ops]
+        self._src_row, self._cap_base, self._sel = src_row, cap_base, sel
+
+    def _params(self, qcap, sel, det, rst_s, rst_r, codes, src_row=None,
+                cap_base=None) -> dict:
+        """Traced-parameter pytree for one resiliency configuration —
+        `run_config_batch` stacks one of these per grid row."""
+        return {
+            "qcap": np.asarray(qcap, float),
+            "src_row": (src_row if src_row is not None
+                        else self._src_row),
+            "cap_base": (cap_base if cap_base is not None
+                         else self._cap_base),
+            "sel": np.asarray(sel, float),
+            "dt": np.float64(self.dt),
+            "task_host": self.task_host.astype(np.int32),
+            "task_region": self.task_region.astype(np.int32),
+            "detect": np.asarray(det, float),
+            "restart_region": np.asarray(rst_r, float),
+            "restart_single": np.asarray(rst_s, float),
+            "mode_single": (codes == 2).astype(np.float64),
+            "mode_region": (codes == 1).astype(np.float64),
+            "edges": [{"share": ph.share, "mass": ph.mass}
+                      for ph in self.tensor.phases],
+        }
+
+    # ------------------------------------------------------------------
+    def _ckpt_timeline_kw(self, ckpt) -> dict:
+        if ckpt is None:
+            return dict(ckpt_interval_s=None)
+        if isinstance(ckpt, CheckpointConfig):
+            return dict(ckpt_interval_s=ckpt.interval_s,
+                        ckpt_mode=ckpt.mode, ckpt_upload_s=ckpt.upload_s,
+                        ckpt_retry=ckpt.retry_failed_region)
+        cfgs = list(ckpt)
+        return dict(
+            ckpt_interval_s=[c.interval_s if c else None for c in cfgs],
+            ckpt_mode=[c.mode if c else "region" for c in cfgs],
+            ckpt_upload_s=[c.upload_s if c else 4.0 for c in cfgs],
+            ckpt_retry=[c.retry_failed_region if c else True
+                        for c in cfgs])
+
+    def timeline(self, spec: ChaosSpec, n_ticks: int, *,
+                 fo_codes=None, detect=None, rst_s=None, rst_r=None,
+                 ckpt="default") -> ChaosTimeline:
+        """Pregenerate one seed's chaos timeline, optionally under
+        override failover/ckpt parameters (the config-axis path)."""
+        return build_chaos_timeline(
+            spec, n_ticks=n_ticks, dt=self.dt, n_hosts=self.n_hosts,
+            task_host=self.task_host, task_region=self.task_region,
+            regions=self.phys.regions,
+            failover_mode=(fo_codes if fo_codes is not None
+                           else self.fo_codes),
+            detect_s=(detect if detect is not None else self.fo_detect),
+            region_restart_s=(rst_r if rst_r is not None else self.fo_rr),
+            single_restart_s=(rst_s if rst_s is not None else self.fo_rs),
+            job_of_task=self.job_of_task,
+            **self._ckpt_timeline_kw(self.ckpt_cfg if ckpt == "default"
+                                     else ckpt))
+
+    def state0(self, tl: ChaosTimeline,
+               task_speed_override: dict[int, float] | None
+               ) -> EngineState:
+        n_tasks = self.plan.n_tasks
+        speed = np.ones(n_tasks)
+        if task_speed_override:
+            for tid, s in task_speed_override.items():
+                speed[tid] = s
+        speed *= tl.task_speed
+        return EngineState(
+            queue=np.zeros(n_tasks), down_until=np.zeros(n_tasks),
+            speed=speed, ckpt_epoch=np.int32(0),
+            emitted=np.zeros(self.n_jobs), dropped=np.zeros(self.n_jobs))
+
+    def prepare(self, spec: ChaosSpec, n_ticks: int,
+                task_speed_override: dict[int, float] | None = None
+                ) -> tuple[EngineState, dict, ChaosTimeline]:
+        """Pregenerate one seed's chaos timeline → (state0, scan xs)."""
+        tl = self.timeline(spec, n_ticks)
+        state = self.state0(tl, task_speed_override)
+        xs = {"t": tl.ts, "kills": tl.kills.astype(np.float64),
+              "ckpt": tl.ckpt_at}
+        return state, xs, tl
+
+    # ------------------------------------------------------------------
+    def legacy(self):
+        """(desc, arrays) of the pre-tensorized unrolled tick — only for
+        the old-vs-new compile benchmark (`build_unrolled_run`). Requires
+        a uniform (non-per-job) failover config."""
+        modes = np.unique(self.fo_codes)
+        if len(modes) != 1:
+            raise ValueError("legacy unrolled tick supports uniform "
+                             "failover configs only")
+        mode = {0: "none", 1: "region", 2: "single_task"}[int(modes[0])]
+        plan = self.plan
+        op_descs, edge_descs, edge_arrays, edges_of_op = [], [], [], []
+        for p in plan.ops:
+            op_descs.append(_OpDesc(p.lo, p.hi, p.is_source))
         for oi, p in enumerate(plan.ops):
             mine = []
             for ep in p.out_edges:
@@ -389,58 +745,18 @@ class _Lowered:
                     ea["dst_in_blk"] = ep.dst_in_blk.astype(np.float64)
                 edge_arrays.append(ea)
             edges_of_op.append(tuple(mine))
-
-        fo = self.failover
-        self.desc = (tuple(op_descs), tuple(edge_descs),
-                     tuple(edges_of_op), tuple(int(j) for j in
-                                               plan.src_cols),
-                     n_tasks, self.n_hosts, self.n_regions, fo.mode,
-                     tuple(int(j) for j in job_of_op), self.n_jobs)
-        self.arrays = {
-            "qcap": plan.qcap,
-            "src_row": src_row,
-            "cap_base": cap_base,
-            "sel": sel,
-            "dt": np.float64(dt),
-            "task_host": self.task_host.astype(np.int32),
-            "task_region": self.task_region.astype(np.int32),
-            "detect": np.float64(fo.detect_s),
-            "restart_region": np.float64(fo.region_restart_s),
-            "restart_single": np.float64(fo.single_restart_s),
-            "edges": edge_arrays,
-        }
-        self.op_names = [p.name for p in plan.ops]
-
-    # ------------------------------------------------------------------
-    def prepare(self, spec: ChaosSpec, n_ticks: int,
-                task_speed_override: dict[int, float] | None = None
-                ) -> tuple[EngineState, dict, ChaosTimeline]:
-        """Pregenerate one seed's chaos timeline → (state0, scan xs)."""
-        fo, ck = self.failover, self.ckpt_cfg
-        tl = build_chaos_timeline(
-            spec, n_ticks=n_ticks, dt=self.dt, n_hosts=self.n_hosts,
-            task_host=self.task_host, task_region=self.task_region,
-            regions=self.phys.regions, failover_mode=fo.mode,
-            detect_s=fo.detect_s, region_restart_s=fo.region_restart_s,
-            single_restart_s=fo.single_restart_s,
-            ckpt_interval_s=(ck.interval_s if ck else None),
-            ckpt_mode=(ck.mode if ck else "region"),
-            ckpt_upload_s=(ck.upload_s if ck else 4.0),
-            ckpt_retry=(ck.retry_failed_region if ck else True),
-            job_of_task=self.job_of_task)
-        n_tasks = self.plan.n_tasks
-        speed = np.ones(n_tasks)
-        if task_speed_override:
-            for tid, s in task_speed_override.items():
-                speed[tid] = s
-        speed *= tl.task_speed
-        state = EngineState(
-            queue=np.zeros(n_tasks), down_until=np.zeros(n_tasks),
-            speed=speed, ckpt_epoch=np.int32(0),
-            emitted=np.zeros(self.n_jobs), dropped=np.zeros(self.n_jobs))
-        xs = {"t": tl.ts, "kills": tl.kills.astype(np.float64),
-              "ckpt": tl.ckpt_at}
-        return state, xs, tl
+        desc = (tuple(op_descs), tuple(edge_descs), tuple(edges_of_op),
+                tuple(int(j) for j in plan.src_cols), plan.n_tasks,
+                self.n_hosts, self.n_regions, mode,
+                tuple(int(j) for j in self.job_of_op), self.n_jobs)
+        arrays = dict(self.arrays)
+        arrays.pop("mode_single")
+        arrays.pop("mode_region")
+        arrays["detect"] = np.float64(self.fo_detect[0])
+        arrays["restart_region"] = np.float64(self.fo_rr[0])
+        arrays["restart_single"] = np.float64(self.fo_rs[0])
+        arrays["edges"] = edge_arrays
+        return desc, arrays
 
 
 # ----------------------------------------------------------------------
@@ -461,6 +777,7 @@ class JaxEngineMetrics:
         self.ckpt_attempts = timeline.ckpt_attempts
         self.ckpt_success = timeline.ckpt_success
         self.ckpt_failed = timeline.ckpt_failed
+        self.ckpt_by_job = timeline.ckpt_by_job
         # device-side attempt counter (scan state) — must agree with the
         # host-side timeline; pinned in tests/test_jax_engine.py
         self.ckpt_epoch = (timeline.ckpt_attempts if ckpt_epoch is None
@@ -536,14 +853,16 @@ class JaxBatchMetrics:
 class JaxStreamEngine:
     """Drop-in (single-seed) twin of `StreamEngine`: same constructor
     signature, `run(duration_s)` returns `JaxEngineMetrics` with the
-    numpy engine's metric names/values (1e-5)."""
+    numpy engine's metric names/values (1e-5). `failover` / `ckpt` may be
+    per-job config lists for packed arenas, exactly as in the numpy
+    engine."""
 
     def __init__(self, graph: LogicalGraph | PackedArena, *,
                  n_hosts: int = 8,
                  dt: float = 0.5, queue_cap: float = 256.0,
                  chaos: ChaosEngine | ChaosSpec | None = None,
-                 failover: FailoverConfig | None = None,
-                 ckpt: CheckpointConfig | None = None,
+                 failover=None,
+                 ckpt=None,
                  task_speed_override: dict[int, float] | None = None,
                  seed: int = 0):
         if isinstance(chaos, ChaosEngine):
@@ -586,21 +905,23 @@ def _next_pow2(n: int) -> int:
     return 1 << max(n - 1, 0).bit_length() if n > 1 else 1
 
 
-def _pad_rows(a: np.ndarray, target: int) -> np.ndarray:
-    """Pad the leading axis to `target` by replicating row 0 (pad rows
+def _pad_rows(a: np.ndarray, target: int, axis: int = 0) -> np.ndarray:
+    """Pad `axis` to `target` by replicating its first slice (pad rows
     simulate a real scenario, so no NaNs/branches — they are sliced off
     before any aggregate sees them)."""
-    if len(a) == target:
+    if a.shape[axis] == target:
         return a
-    reps = np.broadcast_to(a[:1], (target - len(a),) + a.shape[1:])
-    return np.concatenate([a, reps])
+    first = np.take(a, [0], axis=axis)
+    shape = list(a.shape)
+    shape[axis] = target - a.shape[axis]
+    return np.concatenate([a, np.broadcast_to(first, shape)], axis=axis)
 
 
 def _pad_batch(batch_state: EngineState, xs: dict, n_seeds: int,
-               pad_seeds: bool, n_shards: int = 1):
+               pad_seeds: bool, n_shards: int = 1, kills_axis: int = 0):
     """Pad the seed axis to the next power of two (and to a multiple of
     the shard count) — the retrace-free batching contract shared by
-    `run_batch` and `run_mix_batch`."""
+    `run_batch`, `run_mix_batch` and `run_config_batch`."""
     target = _next_pow2(n_seeds) if pad_seeds else n_seeds
     if target % n_shards:
         target = n_shards * -(-target // n_shards)
@@ -608,7 +929,8 @@ def _pad_batch(batch_state: EngineState, xs: dict, n_seeds: int,
         batch_state = EngineState(*(_pad_rows(getattr(batch_state, f),
                                               target)
                                     for f in EngineState._fields))
-        xs = dict(xs, kills=_pad_rows(xs["kills"], target))
+        xs = dict(xs, kills=_pad_rows(xs["kills"], target,
+                                      axis=kills_axis))
     return batch_state, xs
 
 
@@ -625,12 +947,17 @@ def _prep_batch(low: "_Lowered", specs, n_ticks: int, task_speed_override):
     return batch_state, xs, tls
 
 
+def _as_specs(seeds, base_spec) -> list[ChaosSpec]:
+    return [dataclasses.replace(base_spec or ChaosSpec(), seed=int(s))
+            if isinstance(s, (int, np.integer)) else s for s in seeds]
+
+
 def run_batch(graph: LogicalGraph | PackedArena, seeds, *,
               duration_s: float,
               base_spec: ChaosSpec | None = None, n_hosts: int = 8,
               dt: float = 0.5, queue_cap: float = 256.0,
-              failover: FailoverConfig | None = None,
-              ckpt: CheckpointConfig | None = None,
+              failover=None,
+              ckpt=None,
               task_speed_override: dict[int, float] | None = None,
               seed: int = 0, pad_seeds: bool = True,
               devices: int | str | None = None) -> JaxBatchMetrics:
@@ -640,7 +967,8 @@ def run_batch(graph: LogicalGraph | PackedArena, seeds, *,
     `seeds` is a sequence of ints (merged into `base_spec` via
     ``dataclasses.replace(spec, seed=s)``) or of full `ChaosSpec`s.
     `graph` may be a `PackedArena` — the whole co-located fleet then
-    simulates in the same device call with per-job metric segments.
+    simulates in the same device call with per-job metric segments, and
+    `failover` / `ckpt` may be per-job config lists.
 
     Retrace-free batching: with ``pad_seeds=True`` the seed axis is
     padded to the next power of two (and to a multiple of the shard
@@ -651,8 +979,7 @@ def run_batch(graph: LogicalGraph | PackedArena, seeds, *,
     through the version-gated `repro.dist.sharding` shim (``"auto"`` =
     all local devices).
     """
-    specs = [dataclasses.replace(base_spec or ChaosSpec(), seed=int(s))
-             if isinstance(s, (int, np.integer)) else s for s in seeds]
+    specs = _as_specs(seeds, base_spec)
     if not specs:
         raise ValueError("run_batch requires at least one seed/spec")
     low = _Lowered(graph, n_hosts=n_hosts, dt=dt, queue_cap=queue_cap,
@@ -686,8 +1013,8 @@ def run_mix_batch(graph: LogicalGraph | PackedArena, mixes, seeds, *,
                   duration_s: float,
                   base_spec: ChaosSpec | None = None, n_hosts: int = 8,
                   dt: float = 0.5, queue_cap: float = 256.0,
-                  failover: FailoverConfig | None = None,
-                  ckpt: CheckpointConfig | None = None,
+                  failover=None,
+                  ckpt=None,
                   task_speed_override: dict[int, float] | None = None,
                   seed: int = 0,
                   pad_seeds: bool = True) -> list[JaxBatchMetrics]:
@@ -701,8 +1028,7 @@ def run_mix_batch(graph: LogicalGraph | PackedArena, mixes, seeds, *,
     timelines are rate-independent and shared across mixes. Returns one
     `JaxBatchMetrics` per mix row.
     """
-    specs = [dataclasses.replace(base_spec or ChaosSpec(), seed=int(s))
-             if isinstance(s, (int, np.integer)) else s for s in seeds]
+    specs = _as_specs(seeds, base_spec)
     if not specs:
         raise ValueError("run_mix_batch requires at least one seed/spec")
     low = _Lowered(graph, n_hosts=n_hosts, dt=dt, queue_cap=queue_cap,
@@ -734,4 +1060,169 @@ def run_mix_batch(graph: LogicalGraph | PackedArena, mixes, seeds, *,
     return [JaxBatchMetrics(low.op_names, tls[0].ts, lag[m], qps[m],
                             backlog[m], emitted[m], dropped[m], tls,
                             ckpt_epoch=ckpt_epoch[m], jobs=jobs)
+            for m in range(len(mixes))]
+
+
+# ----------------------------------------------------------------------
+# resiliency-config grid axis
+# ----------------------------------------------------------------------
+def normalize_config(c) -> dict:
+    """Normalize one resiliency-config grid entry into
+    ``{"failover", "ckpt", "qcap_scale", "sel_scale", "label"}``.
+
+    Accepted forms: a `FailoverConfig`, a `CheckpointConfig`, a
+    ``(failover, ckpt)`` TUPLE, a per-job `FailoverConfig` LIST (packed
+    arenas; ``None`` entries fall back to the default config — the
+    tuple/list distinction is what disambiguates a 2-job list from a
+    pair), or a dict with any of the keys above (the fully explicit
+    spelling, and the only way to combine per-job failover lists with
+    ckpt/scales)."""
+    out = {"failover": None, "ckpt": None, "qcap_scale": 1.0,
+           "sel_scale": 1.0, "label": None}
+    if c is None:
+        return out
+    if isinstance(c, dict):
+        unknown = set(c) - set(out)
+        if unknown:
+            raise ValueError(f"unknown config keys: {sorted(unknown)}")
+        out.update(c)
+        return out
+    if isinstance(c, FailoverConfig):
+        out["failover"] = c
+        return out
+    if isinstance(c, CheckpointConfig):
+        out["ckpt"] = c
+        return out
+    if isinstance(c, tuple):
+        if len(c) != 2:
+            raise ValueError("tuple config entries must be "
+                             "(failover, ckpt) pairs")
+        out["failover"], out["ckpt"] = c
+        return out
+    if isinstance(c, list):        # per-job FailoverConfig sequence
+        out["failover"] = c
+        return out
+    raise ValueError(f"unsupported config entry: {c!r}")
+
+
+def run_config_batch(graph: LogicalGraph | PackedArena, configs, seeds, *,
+                     duration_s: float,
+                     base_spec: ChaosSpec | None = None,
+                     mixes=None, n_hosts: int = 8,
+                     dt: float = 0.5, queue_cap: float = 256.0,
+                     task_speed_override: dict[int, float] | None = None,
+                     seed: int = 0, pad_seeds: bool = True):
+    """Sweep a ``(C, S)`` grid of resiliency-config × chaos-seed
+    scenarios in ONE doubly-vmapped `jit` call — the third vmap axis of
+    the engine, over `FailoverConfig`/`CheckpointConfig` grids.
+
+    Every resiliency float is a traced leaf (per-task detect / restart
+    budgets / mode masks, queue capacities, selectivities), so the whole
+    grid shares one compiled trace per grid *shape*; kill tensors are
+    shared across configs whenever no config checkpoints (checkpoint
+    storage draws are config-dependent, so ckpt-bearing grids rebuild
+    per-config timelines). `configs` entries go through
+    `normalize_config` — per-job config lists are supported inside a
+    `PackedArena`. With `mixes` (an ``(M, n_jobs)`` source-rate grid) the
+    call becomes a triply-vmapped ``(M, C, S)`` cube on the same trace.
+
+    Returns one `JaxBatchMetrics` per config row — or, with `mixes`, a
+    list over mixes of lists over configs.
+    """
+    specs = _as_specs(seeds, base_spec)
+    if not specs:
+        raise ValueError("run_config_batch requires at least one seed")
+    norm = [normalize_config(c) for c in configs]
+    if not norm:
+        raise ValueError("run_config_batch requires at least one config")
+    low = _Lowered(graph, n_hosts=n_hosts, dt=dt, queue_cap=queue_cap,
+                   failover=norm[0]["failover"], ckpt=norm[0]["ckpt"],
+                   seed=seed)
+    n_ticks = int(round(duration_s / low.dt))
+    n_seeds, n_cfg = len(specs), len(norm)
+    jot = (low.job_of_task if low.job_of_task is not None
+           else np.zeros(low.plan.n_tasks, dtype=int))
+
+    # per-config traced params
+    pa_rows, fo_vecs = [], []
+    for cfg in norm:
+        codes, det, rst_s, rst_r = per_task_failover(
+            cfg["failover"], low.plan.n_tasks, low.job_of_task)
+        fo_vecs.append((codes, det, rst_s, rst_r))
+        pa_rows.append(low._params(
+            low.plan.qcap * float(cfg["qcap_scale"]),
+            low._sel * float(cfg["sel_scale"]), det, rst_s, rst_r, codes))
+    pa = dict(pa_rows[0])
+    for k in ("qcap", "sel", "detect", "restart_region", "restart_single",
+              "mode_single", "mode_region"):
+        pa[k] = np.stack([row[k] for row in pa_rows])
+
+    # timelines: shared across configs when nothing checkpoints
+    # (kill/straggler draws are failover-independent); rebuilt per config
+    # otherwise (storage draws interleave with kill draws)
+    no_ckpt = all(cfg["ckpt"] is None for cfg in norm)
+    if no_ckpt:
+        c0, d0, s0, r0 = fo_vecs[0]
+        base_tls = [low.timeline(sp, n_ticks, fo_codes=c0, detect=d0,
+                                 rst_s=s0, rst_r=r0, ckpt=None)
+                    for sp in specs]
+        tls = [[refit_failover(tl, task_host=low.task_host,
+                               task_region=low.task_region,
+                               failover_mode=codes, detect_s=det,
+                               single_restart_s=rst_s,
+                               region_restart_s=rst_r,
+                               job_of_task=low.job_of_task)
+                for tl in base_tls]
+               for (codes, det, rst_s, rst_r) in fo_vecs]
+        # one (S, T, H) tensor broadcast over the config axis in-trace
+        kills = np.stack([tl.kills for tl in base_tls]).astype(np.float64)
+        ckpt_xs = np.zeros((n_cfg, n_ticks), np.int16)
+    else:
+        tls = [[low.timeline(sp, n_ticks, fo_codes=codes, detect=det,
+                             rst_s=rst_s, rst_r=rst_r, ckpt=cfg["ckpt"])
+                for sp in specs]
+               for cfg, (codes, det, rst_s, rst_r) in zip(norm, fo_vecs)]
+        kills = np.stack([[tl.kills for tl in row]
+                          for row in tls]).astype(np.float64)
+        ckpt_xs = np.stack([row[0].ckpt_at for row in tls])
+
+    states = [low.state0(tl, task_speed_override) for tl in tls[0]]
+    batch_state = EngineState(*(np.stack([getattr(s, f) for s in states])
+                                for f in EngineState._fields))
+    xs = {"t": tls[0][0].ts, "kills": kills, "ckpt": ckpt_xs}
+    batch_state, xs = _pad_batch(batch_state, xs, n_seeds, pad_seeds,
+                                 kills_axis=0 if no_ckpt else 1)
+    jobs = low.arena.jobs if low.arena is not None else None
+
+    if mixes is None:
+        fn = get_cached_config_fn(low.desc, shared_kills=no_ckpt)
+    else:
+        mixes = np.atleast_2d(np.asarray(mixes, dtype=np.float64))
+        if mixes.shape[1] != low.n_jobs:
+            raise ValueError(
+                f"mix rows must have one multiplier per job "
+                f"({mixes.shape[1]} != {low.n_jobs})")
+        pa["src_row"] = pa["src_row"][None, :] * mixes[:, jot]
+        fn = get_cached_config_mix_fn(low.desc, shared_kills=no_ckpt)
+    with _enable_x64():
+        final, ys = fn(pa, batch_state, xs)
+        sl = (slice(None),) * (1 if mixes is None else 2)
+        qps = np.asarray(ys["qps"])[sl + (slice(None, n_seeds),)]
+        backlog = np.asarray(ys["backlog"])[sl + (slice(None, n_seeds),)]
+        lag = np.asarray(ys["lag"])[sl + (slice(None, n_seeds),)]
+        emitted = np.asarray(final.emitted)[sl + (slice(None, n_seeds),)]
+        dropped = np.asarray(final.dropped)[sl + (slice(None, n_seeds),)]
+        ckpt_ep = np.asarray(final.ckpt_epoch)[sl + (slice(None,
+                                                          n_seeds),)]
+
+    def _metrics(c, pre=()):
+        ix = pre + (c,)
+        return JaxBatchMetrics(low.op_names, tls[0][0].ts,
+                               lag[ix], qps[ix], backlog[ix],
+                               emitted[ix], dropped[ix], tls[c],
+                               ckpt_epoch=ckpt_ep[ix], jobs=jobs)
+
+    if mixes is None:
+        return [_metrics(c) for c in range(n_cfg)]
+    return [[_metrics(c, (m,)) for c in range(n_cfg)]
             for m in range(len(mixes))]

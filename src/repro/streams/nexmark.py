@@ -85,6 +85,32 @@ def ss(parallelism: int = 8, feature_rate: float = 25e3,
                LogicalEdge("stitch", "sink", "forward")))
 
 
+def q12_arena(n_tasks: int = 10_000, parallelism: int = 8,
+              n_hosts: int = 64, source_rate: float = 0.8e6,
+              service_rate: float = 1.2e5, dt: float = 0.5,
+              queue_cap: float = 256.0, host_map: str = "shared"):
+    """10k-task-scale Q12 mega-arena (ROADMAP's large-Nexmark item): K
+    co-located Q12 jobs — ``K = n_tasks // (3 * parallelism)`` — packed
+    into ONE flat arena over a shared host pool via
+    `streams.engine.pack_arena`.
+
+    At the default ``n_tasks=10_000`` that is 416 windowed-state jobs /
+    1248 ops / 832 edges in one `RoutingPlan`: the workload whose
+    per-op/per-edge unrolled jit trace was unbuildable, and which the
+    tensorized phase-scheduled tick compiles in constant trace size
+    (benchmarks/bench_compile.py). Returns a `PackedArena`; both engines
+    and every sweep axis (seeds × mixes × configs) accept it directly.
+    """
+    from repro.streams.engine import pack_arena
+
+    per_job = 3 * parallelism
+    n_jobs = max(1, n_tasks // per_job)
+    jobs = [q12(parallelism=parallelism, source_rate=source_rate,
+                service_rate=service_rate) for _ in range(n_jobs)]
+    return pack_arena(jobs, host_map, n_hosts=n_hosts, dt=dt,
+                      queue_cap=queue_cap)
+
+
 # ----------------------------------------------------------------------
 # Record-level vectorized operator kernels (correctness oracle + micro bench)
 # ----------------------------------------------------------------------
