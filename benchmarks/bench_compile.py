@@ -75,8 +75,12 @@ def _measure(run_fn, arrays, state, xs) -> dict:
 
 def compile_study(n_tasks: int, n_ticks: int = 4) -> dict:
     arena = nexmark.q12_arena(n_tasks=n_tasks, parallelism=8, n_hosts=64)
+    # pinned to the DENSE lowering: this benchmark's record is the
+    # tensorized-vs-unrolled comparison; the compact (sparse-phase)
+    # lowering is measured by benchmarks/bench_sweep_scale.py
     low = _Lowered(arena, n_hosts=64, dt=0.5, queue_cap=256.0,
-                   failover=FAILOVER, ckpt=None, seed=0)
+                   failover=FAILOVER, ckpt=None, seed=0,
+                   phase_mode="dense")
     state, xs, _ = low.prepare(ChaosSpec(seed=0), n_ticks)
     rec = {"n_tasks": arena.plan.n_tasks, "n_jobs": arena.n_jobs,
            "n_ops": len(arena.plan.ops), "n_phases": low.tensor.n_phases,

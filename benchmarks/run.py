@@ -34,6 +34,7 @@ MODULES = [
     "benchmarks.bench_chaos_sweep",         # vmapped jit chaos sweeps
     "benchmarks.bench_colocation",          # multi-job mega-arena sweeps
     "benchmarks.bench_compile",             # tensorized-tick compile cost
+    "benchmarks.bench_sweep_scale",         # sparse-phase + sharded grids
     "benchmarks.bench_kernels",             # §V-C micro benchmarking
 ]
 
@@ -42,6 +43,7 @@ QUICK_MODULES = [
     "benchmarks.bench_chaos_sweep",         # vmapped jit chaos sweeps
     "benchmarks.bench_colocation",          # multi-job mega-arena sweeps
     "benchmarks.bench_compile",             # tensorized-tick compile cost
+    "benchmarks.bench_sweep_scale",         # sparse-phase + sharded grids
     "benchmarks.bench_weakhash",            # WeakHash assignment path
     "benchmarks.bench_hotupdate",           # pure-python, fast
 ]

@@ -6,6 +6,13 @@
 #   scripts/ci.sh --sweep-smoke       # also run a 16-seed chaos sweep (vmapped jit, CPU)
 #   scripts/ci.sh --colocation-smoke  # also run a 4-job 16-seed sharded co-location sweep
 #   scripts/ci.sh --config-smoke      # also run a small (seeds × configs) resiliency grid
+#   scripts/ci.sh --sparse-smoke      # also run a sharded config grid through the COMPACT
+#                                     # (sparse-phase) tick over a deep-pipeline arena
+#
+# Smoke targets fail LOUDLY on silent lowering fallbacks: the sparse
+# smoke exports REPRO_REQUIRE_PHASE_MODE=compact (the engine refuses to
+# lower dense under it) and examples/sparse_sweep.py exits non-zero if
+# the auto selector or the ckpt-grid refit degrade.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -34,6 +41,13 @@ fi
 if [[ "${1:-}" == "--config-smoke" ]]; then
   echo "== config-grid smoke: 2x2 resiliency grid x 8 seeds, one (C,S) jit call =="
   python examples/config_sweep.py --restarts 2 --intervals 2 --seeds 8 --duration 60
+fi
+
+if [[ "${1:-}" == "--sparse-smoke" ]]; then
+  echo "== sparse smoke: compact-phase ckpt grid x 8 seeds, 2 device shards =="
+  REPRO_REQUIRE_PHASE_MODE=compact \
+    python examples/sparse_sweep.py --jobs 18 --configs 2 --seeds 8 \
+      --duration 60 --devices 2 --ckpt
 fi
 
 echo "CI OK"

@@ -214,6 +214,19 @@ def run_checkpoint_attempt(eng: ChaosEngine, alive: np.ndarray, *,
     return True
 
 
+# host-replay accounting: every build_chaos_timeline call is one full
+# per-tick host replay. Config-grid sweeps must NOT scale this with the
+# grid (`build_grid_timelines` replays per seed, then refits per config
+# with vectorized draws) — benchmarks read the counter to prove it.
+_TIMELINE_STATS = {"builds": 0, "grid_replays": 0}
+
+
+def timeline_build_count() -> int:
+    """Number of per-tick host timeline replays (`build_chaos_timeline`
+    calls) so far in this process."""
+    return _TIMELINE_STATS["builds"]
+
+
 # ----------------------------------------------------------------------
 # Pregenerated event tensors (accelerator backends / chaos sweeps)
 # ----------------------------------------------------------------------
@@ -282,6 +295,7 @@ def build_chaos_timeline(
       `StreamEngine._run_checkpoint_job`. `ckpt_at` counts attempts per
       tick (all jobs), and `ckpt_by_job` carries the per-job counters.
     """
+    _TIMELINE_STATS["builds"] += 1
     eng = ChaosEngine(spec)
     task_host = np.asarray(task_host)
     n_tasks = len(task_host)
@@ -454,3 +468,359 @@ def refit_failover(tl: ChaosTimeline, *, task_host: np.ndarray,
                                    mode_codes, down_s, down_r, down,
                                    recoveries, job_of_task)
     return dataclasses.replace(tl, recoveries=recoveries)
+
+
+# ----------------------------------------------------------------------
+# Batched (config × seed) timeline refit — checkpoint-bearing grids
+# ----------------------------------------------------------------------
+class _SeedStream:
+    """All uniform draws of one `ChaosSpec` seed, materialized lazily as
+    one indexable prefix array.
+
+    numpy Generators produce the same double stream for ``random(n)`` as
+    for ``n`` scalar ``random()`` calls, so ANY interleaving of the
+    engine's straggler / kill / checkpoint-storage draws is replayable
+    by plain offset indexing into this buffer — drawn ONCE per seed and
+    shared read-only by every config of a grid. The straggler draws
+    (first-seen hosts in task order, exactly `ChaosEngine.host_speed`)
+    are resolved eagerly; `base` is the stream offset after them."""
+
+    def __init__(self, spec: ChaosSpec, task_host: np.ndarray):
+        self.spec = spec
+        self._rng = np.random.default_rng(spec.seed)
+        self._buf = np.zeros(0)
+        n_tasks = len(task_host)
+        if spec.straggler_frac:
+            # first-seen host order == per-task host_speed query order
+            _, first = np.unique(task_host, return_index=True)
+            seen = task_host[np.sort(first)]
+            draws = self.at(0, len(seen))
+            slow = draws < spec.straggler_frac
+            speed = {int(h): (1.0 / spec.straggler_factor if s else 1.0)
+                     for h, s in zip(seen, slow)}
+            self.task_speed = np.array([speed[int(h)] for h in task_host])
+            self.base = len(seen)
+        else:
+            self.task_speed = np.ones(n_tasks)
+            self.base = 0
+
+    def at(self, lo: int, hi: int) -> np.ndarray:
+        """Stream doubles [lo, hi) (grows the buffer on demand — the
+        generator keeps producing the same stream across growths)."""
+        if hi > len(self._buf):
+            grow = max(hi - len(self._buf), 4096, len(self._buf) // 2)
+            self._buf = np.concatenate([self._buf,
+                                        self._rng.random(grow)])
+        return self._buf[lo:hi]
+
+
+def _attempt_schedule(ts: np.ndarray, dt: float, interval) -> tuple:
+    """(attempt tick indices, per-tick attempt counts) of a single
+    checkpoint coordinator — the exact ``t + dt >= next_ckpt`` walk of
+    `build_chaos_timeline` (one attempt per tick max)."""
+    n_ticks = len(ts)
+    ckpt_at = np.zeros(n_ticks, np.int16)
+    att = []
+    if interval is not None:
+        nxt = interval
+        for i in range(n_ticks):
+            if ts[i] + dt >= nxt:
+                att.append(i)
+                ckpt_at[i] = 1
+                nxt += interval
+    return att, ckpt_at
+
+
+def _grid_kill_segment(st: _SeedStream, off: int, lo: int, hi: int,
+                       n_hosts: int, ts: np.ndarray, dt: float,
+                       sched: dict) -> tuple:
+    """Replay the kill draws of ticks [lo, hi] for one seed from stream
+    offset `off` (storage draws never interleave inside a segment).
+    Returns (new offset, {tick: sorted kill host list})."""
+    spec = st.spec
+    nt = hi - lo + 1
+    events: dict[int, list] = {}
+    if spec.host_kill_prob_per_s:
+        blk = st.at(off, off + nt * n_hosts).reshape(nt, n_hosts)
+        off += nt * n_hosts
+        # per-tick kill probability, float-faithful to step_kills
+        p = 1.0 - np.exp(-spec.host_kill_prob_per_s
+                         * ((ts[lo:hi + 1] + dt) - ts[lo:hi + 1]))
+        hit_t, hit_h = np.nonzero(blk < p[:, None])
+        for i, h in zip(hit_t, hit_h):
+            events.setdefault(lo + int(i), []).append(int(h))
+    for i in range(lo, hi + 1):
+        if i in sched:
+            events.setdefault(i, []).extend(sched[i])
+    return off, {i: sorted(set(hs)) for i, hs in sorted(events.items())}
+
+
+def build_grid_timelines(specs, configs, *, n_ticks: int, dt: float,
+                         n_hosts: int, task_host: np.ndarray,
+                         task_region: np.ndarray | None = None,
+                         regions: list | None = None,
+                         job_of_task: np.ndarray | None = None) -> list:
+    """Timelines for a (config × seed) grid WITHOUT per-(config, seed)
+    host replays: the chaos draw streams are materialized once per seed
+    (`_SeedStream`), then each config's checkpoint attempt schedule is
+    refitted onto them with vectorized offset indexing — kill blocks
+    between attempts land as one reshape+compare, storage draws as one
+    batched gather per attempt, and only the rare kill events and bad
+    checkpoint regions walk host loops.
+
+    `specs` is one `ChaosSpec` per seed. `configs` is one dict per grid
+    row with keys ``failover_mode`` (name or per-task code vector),
+    ``detect_s`` / ``region_restart_s`` / ``single_restart_s`` (scalars
+    or per-task vectors) and ``ckpt_interval_s`` / ``ckpt_mode`` /
+    ``ckpt_upload_s`` / ``ckpt_retry`` (single-coordinator checkpoint
+    parameters; a None interval disables checkpointing for that row —
+    per-job coordinator sequences are NOT supported here, callers fall
+    back to per-config `build_chaos_timeline`).
+
+    Returns ``[C][S]`` `ChaosTimeline`s bit-identical to
+    ``build_chaos_timeline(specs[s], **configs[c])`` — pinned by
+    tests/test_sparse_sweep.py — while `timeline_build_count()` stays
+    flat."""
+    task_host = np.asarray(task_host)
+    n_tasks = len(task_host)
+    streams = [_SeedStream(sp, task_host) for sp in specs]
+    _TIMELINE_STATS["grid_replays"] += len(configs)
+
+    # tick-start times via the same float accumulation as the replay
+    ts = np.zeros(n_ticks)
+    t = 0.0
+    for i in range(n_ticks):
+        ts[i] = t
+        t = t + dt
+
+    # per-seed scheduled kills, bucketed by tick (window t0 < t <= t1)
+    scheds = []
+    for sp in specs:
+        sched: dict[int, list] = {}
+        for (tk, h) in sp.host_kill_at:
+            w = np.nonzero((ts < tk) & (tk <= ts + dt))[0]
+            if len(w):
+                sched.setdefault(int(w[0]), []).append(int(h))
+        scheds.append(sched)
+
+    # region row-tables for the vectorized bad-region test
+    regions = list(regions or ())
+    reg_arrs = [np.fromiter(sorted(r), int, len(r)) for r in regions]
+
+    # seed-static storage-draw parameters (shared by every config row)
+    probs = np.array([st.spec.storage_slow_prob for st in streams])
+    facs = np.array([st.spec.storage_slow_factor for st in streams])
+
+    out = []
+    for cfg in configs:
+        mode_codes = failover_mode_codes(cfg.get("failover_mode",
+                                                 "region"), n_tasks)
+        down_s = (_per_task(cfg.get("detect_s", 1.0), n_tasks)
+                  + _per_task(cfg.get("single_restart_s", 3.0), n_tasks))
+        down_r = (_per_task(cfg.get("detect_s", 1.0), n_tasks)
+                  + _per_task(cfg.get("region_restart_s", 45.0), n_tasks))
+        interval = cfg.get("ckpt_interval_s")
+        ck_mode = cfg.get("ckpt_mode", "region")
+        upload = cfg.get("ckpt_upload_s", 4.0)
+        retry = cfg.get("ckpt_retry", True)
+        att, ckpt_at = _attempt_schedule(ts, dt, interval)
+
+        S = len(streams)
+        off = np.array([st.base for st in streams])
+        down = np.zeros((S, n_tasks))
+        kills = np.zeros((S, n_ticks, n_hosts), bool)
+        recs: list[list] = [[] for _ in range(S)]
+        ok_by_seed = np.zeros((S, n_ticks), np.int16)
+
+        bounds = att + ([n_ticks - 1] if (not att or att[-1]
+                                          != n_ticks - 1) else [])
+        prev = 0
+        for bi, b in enumerate(bounds):
+            # kill draws for ticks [prev, b] — contiguous per seed
+            for s, st in enumerate(streams):
+                if not (st.spec.host_kill_prob_per_s or scheds[s]):
+                    continue
+                off[s], events = _grid_kill_segment(
+                    st, int(off[s]), prev, b, n_hosts, ts, dt, scheds[s])
+                for i, hosts in events.items():
+                    for host in hosts:
+                        if host < n_hosts:
+                            kills[s, i, host] = True
+                        _resolve_failover_tick(
+                            float(ts[i]), host, task_host, task_region,
+                            mode_codes, down_s, down_r, down[s], recs[s],
+                            job_of_task)
+            prev = b + 1
+            if bi >= len(att):
+                continue
+            # checkpoint attempt at tick b (time ts[b]), all seeds
+            i_att = b
+            t_att = float(ts[i_att])
+            alive = down <= t_att
+            factors = np.ones((S, n_tasks))
+            for s, st in enumerate(streams):
+                if probs[s]:
+                    u = st.at(int(off[s]), int(off[s]) + n_tasks)
+                    off[s] += n_tasks
+                    factors[s] = np.where(u < probs[s], facs[s], 1.0)
+            task_fail = (upload * factors > interval) | ~alive
+            if ck_mode == "global":
+                ok = ~task_fail.any(axis=1)
+            else:
+                ok = np.ones(S, bool)
+                active = np.ones(S, bool)
+                for r, rtasks in enumerate(reg_arrs):
+                    if not active.any():
+                        break
+                    bad = task_fail[:, rtasks].any(axis=1) & active
+                    if not bad.any():
+                        continue
+                    if retry:
+                        for s in np.nonzero(bad)[0]:
+                            st = streams[s]
+                            if not probs[s]:
+                                bad[s] = upload > interval
+                            elif upload > interval:
+                                off[s] += 1          # first draw decides
+                            elif upload * facs[s] <= interval:
+                                off[s] += len(rtasks)   # all draws pass
+                                bad[s] = False
+                            else:
+                                u = st.at(int(off[s]),
+                                          int(off[s]) + len(rtasks))
+                                slow = u < probs[s]
+                                if slow.any():
+                                    off[s] += int(slow.argmax()) + 1
+                                else:
+                                    off[s] += len(rtasks)
+                                    bad[s] = False
+                    ok[bad] = False
+                    active &= ~bad
+            ok_by_seed[:, i_att] = ok
+
+        n_att = len(att)
+        row = []
+        for s in range(S):
+            succ = int(ok_by_seed[s].sum())
+            row.append(ChaosTimeline(
+                dt, n_ticks, ts, streams[s].task_speed, kills[s],
+                ckpt_at.copy(), ok_by_seed[s], n_att, succ,
+                n_att - succ, recs[s], ckpt_by_job=None))
+        out.append(row)
+    return out
+
+
+# ----------------------------------------------------------------------
+# Per-job chaos specs (one ChaosSpec per co-located job)
+# ----------------------------------------------------------------------
+def build_perjob_chaos_timeline(
+        specs, *, n_ticks: int, dt: float, n_hosts: int,
+        task_host: np.ndarray, job_hosts, task_local_host: np.ndarray,
+        job_of_task: np.ndarray,
+        task_region: np.ndarray | None = None, regions: list | None = None,
+        failover_mode="region", detect_s=1.0,
+        region_restart_s=45.0, single_restart_s=3.0,
+        ckpt_interval_s=None, ckpt_mode="region",
+        ckpt_upload_s=4.0, ckpt_retry=True) -> ChaosTimeline:
+    """Per-job chaos replay: job ``j`` runs its own `ChaosEngine` seeded
+    from ``specs[j]``, drawing stragglers and host kills in its *local*
+    host domain (``len(job_hosts[j])`` hosts, the same domain an
+    independent run of that job would draw in) and lifting kill targets
+    into the shared pool through ``job_hosts[j]`` — so different kill
+    rates / straggler intensities / drill schedules per co-located job
+    share one arena while a lifted kill still downs EVERY job placed on
+    that pool host.
+
+    Draw-order contract (mirrored by `streams.engine.StreamEngine` with
+    a per-job ``chaos=`` list): per-job straggler draws happen at first
+    sight of each local host in task order (tasks of job j are
+    contiguous, so engine j's draws batch together); per tick, jobs draw
+    kills in ascending job order, then per-job checkpoint coordinators
+    attempt in ascending job order, each drawing ONLY from its own
+    engine. A pool host killed by several jobs' processes in one tick
+    resolves once (first-killing job wins the recovery entry).
+
+    Checkpoint parameters may be scalars (every job gets the same
+    config, on its own coordinator and stream) or length-``n_jobs``
+    sequences, as in `build_chaos_timeline`'s per-job coordinators —
+    with per-job chaos there is no shared-coordinator mode, because
+    there is no single engine to draw a whole-arena attempt from.
+    """
+    _TIMELINE_STATS["builds"] += 1
+    specs = list(specs)
+    n_jobs = len(specs)
+    task_host = np.asarray(task_host)
+    job_of_task = np.asarray(job_of_task)
+    task_local_host = np.asarray(task_local_host)
+    n_tasks = len(task_host)
+    engines = [ChaosEngine(sp) for sp in specs]
+    mode_codes = failover_mode_codes(failover_mode, n_tasks)
+    down_s = _per_task(detect_s, n_tasks) + _per_task(single_restart_s,
+                                                      n_tasks)
+    down_r = _per_task(detect_s, n_tasks) + _per_task(region_restart_s,
+                                                      n_tasks)
+    kills_possible = [bool(sp.host_kill_at or sp.host_kill_prob_per_s)
+                      for sp in specs]
+    if any(kills_possible) and (mode_codes == 1).any() \
+            and task_region is None:
+        raise ValueError(
+            "failover_mode='region' with kills enabled requires task_region")
+    # straggler draws: first sight of each local host, in task order —
+    # job slices are contiguous, so each engine consumes exactly the
+    # stream an independent run of its job would
+    task_speed = np.array([
+        engines[int(job_of_task[tid])].host_speed(
+            int(task_local_host[tid])) for tid in range(n_tasks)])
+
+    any_ckpt = (any(iv is not None for iv in ckpt_interval_s)
+                if isinstance(ckpt_interval_s, (list, tuple, np.ndarray))
+                else ckpt_interval_s is not None)
+    if any_ckpt:
+        jobs_ck = _JobCkpt.from_seq(n_jobs, ckpt_interval_s, ckpt_mode,
+                                    ckpt_upload_s, ckpt_retry,
+                                    job_of_task, regions)
+        ckpt_by_job = np.zeros((n_jobs, 3), int)
+    else:
+        jobs_ck = []
+        ckpt_by_job = None
+
+    ts = np.zeros(n_ticks)
+    kills = np.zeros((n_ticks, n_hosts), bool)
+    ckpt_at = np.zeros(n_ticks, np.int16)
+    ckpt_ok = np.zeros(n_ticks, np.int16)
+    down = np.zeros(n_tasks)
+    recoveries: list[dict] = []
+    attempts = success = failed = 0
+    t = 0.0
+    for i in range(n_ticks):
+        ts[i] = t
+        failed_pool: set[int] = set()
+        for j, eng in enumerate(engines):
+            if not kills_possible[j]:
+                continue
+            local_map = np.asarray(job_hosts[j])
+            for lh in eng.step_kills(t, t + dt, n_hosts=len(local_map)):
+                if lh < len(local_map):
+                    pool = int(local_map[lh])
+                    if pool not in failed_pool:
+                        failed_pool.add(pool)
+                        if pool < n_hosts:
+                            kills[i, pool] = True
+                        _resolve_failover_tick(
+                            t, pool, task_host, task_region, mode_codes,
+                            down_s, down_r, down, recoveries, job_of_task)
+                eng.revive(lh)
+        for jc in jobs_ck:
+            if t + dt < jc.next_at:
+                continue
+            ok = jc.attempt(engines[jc.job], down, t)
+            ckpt_at[i] += 1
+            ckpt_ok[i] += int(ok)
+            attempts += 1
+            success += int(ok)
+            failed += int(not ok)
+            ckpt_by_job[jc.job] += (1, int(ok), int(not ok))
+        t = t + dt
+    return ChaosTimeline(dt, n_ticks, ts, task_speed, kills, ckpt_at,
+                         ckpt_ok, attempts, success, failed, recoveries,
+                         ckpt_by_job=ckpt_by_job)

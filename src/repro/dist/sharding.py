@@ -222,6 +222,71 @@ def sharded_seed_fn(run, *, xs_axes, n_shards: int, donate_state=True):
     return call
 
 
+def sharded_grid_fn(run, *, pa_axes, xs_axes, cfg_xs_axes, seed_axes,
+                    n_shards: int):
+    """Device-sharded twin of the doubly-vmapped ``(C, S)`` config-grid
+    run (`jax_engine.get_cached_config_fn`), split over the SEED axis.
+
+    ``run(pa, state, xs)`` is the per-seed scan. The inner function
+    vmaps seeds (``xs_axes``) then configs (``pa_axes`` over the traced
+    resiliency leaves, ``cfg_xs_axes`` over the per-config xs leaves);
+    the outer layer splits the flat seed axis — ``state`` leaves on axis
+    0, each xs leaf on ``seed_axes[k]`` (None = replicated: the tick
+    times, and the per-config ckpt schedules which carry no seed axis)
+    — across local devices. Each (config, seed) chain is embarrassingly
+    parallel, so outputs merge back to ``(C, S, ...)`` bit-for-bit with
+    the single-device grid. `pmap` on jax 0.4.x, `jax.shard_map` on
+    >= 0.6. State is NOT donated: grid outputs carry an extra config
+    axis, so the per-shard input buffers are never reusable."""
+    inner = jax.vmap(jax.vmap(run, in_axes=(None, 0, xs_axes)),
+                     in_axes=(pa_axes, None, cfg_xs_axes))
+    seed_axis = dict(seed_axes)
+
+    if shard_map_available():  # pragma: no cover - requires jax >= 0.6
+        import numpy as np
+        from jax.sharding import Mesh
+
+        mesh = Mesh(np.array(jax.local_devices()[:n_shards]), ("seeds",))
+
+        def spec_of(ax):
+            if ax is None:
+                return P()
+            return P(*((None,) * ax + ("seeds",)))
+
+        fn = jax.shard_map(
+            inner, mesh=mesh,
+            in_specs=(P(), P("seeds"),
+                      {k: spec_of(a) for k, a in seed_axis.items()}),
+            out_specs=P(None, "seeds"))
+        return jax.jit(fn)
+
+    pfn = jax.pmap(inner,
+                   in_axes=(None, 0, {k: (None if a is None else 0)
+                                      for k, a in seed_axis.items()}))
+
+    def call(pa, state, xs):
+        def split(x, axis):
+            x = jnp.asarray(x)
+            shp = x.shape
+            x = x.reshape(shp[:axis]
+                          + (n_shards, shp[axis] // n_shards)
+                          + shp[axis + 1:])
+            return jnp.moveaxis(x, axis, 0)
+
+        state_s = jax.tree.map(lambda v: split(v, 0), state)
+        xs_s = {k: (v if seed_axis[k] is None
+                    else split(v, seed_axis[k]))
+                for k, v in xs.items()}
+        out = pfn(pa, state_s, xs_s)
+        # (shard, C, S_local, ...) -> (C, shard*S_local, ...)
+        return jax.tree.map(
+            lambda x: jnp.moveaxis(x, 0, 1).reshape(
+                (x.shape[1], x.shape[0] * x.shape[2]) + x.shape[3:]),
+            out)
+
+    return call
+
+
 def batch_axes_for(mesh, batch: int) -> tuple[str, ...]:
     """Data-parallel mesh axes whose product divides `batch` (longest
     prefix of ("pod", "data") present in the mesh)."""

@@ -190,6 +190,7 @@ def sweep(graph: LogicalGraph | PackedArena, seeds, *,
           task_speed_override: dict[int, float] | None = None,
           seed: int = 0, pad_seeds: bool = True,
           devices: int | str | None = None,
+          phase_mode: str = "auto",
           compare_numpy: bool = False) -> SweepResult:
     """Sweep `seeds` chaos scenarios over `graph` in one vmapped jit call
     (one call per device shard when `devices` is set).
@@ -212,7 +213,8 @@ def sweep(graph: LogicalGraph | PackedArena, seeds, *,
                       duration_s=duration_s, n_hosts=n_hosts, dt=dt,
                       queue_cap=queue_cap, failover=failover, ckpt=ckpt,
                       task_speed_override=task_speed_override, seed=seed,
-                      pad_seeds=pad_seeds, devices=devices)
+                      pad_seeds=pad_seeds, devices=devices,
+                      phase_mode=phase_mode)
     wall = time.perf_counter() - t0
     res = summarize(batch, seeds, graph=logical, slo_lag=slo_lag,
                     wall_s=wall, graph_name=logical.name,
@@ -329,8 +331,9 @@ def sweep_configs(graph: LogicalGraph | PackedArena, configs, seeds, *,
                   queue_cap: float = 256.0,
                   slo_lag: float | None = None,
                   task_speed_override: dict[int, float] | None = None,
-                  seed: int = 0,
-                  pad_seeds: bool = True) -> ConfigSweepResult:
+                  seed: int = 0, pad_seeds: bool = True,
+                  devices: int | str | None = None,
+                  phase_mode: str = "auto") -> ConfigSweepResult:
     """Sweep a ``(C, S)`` grid of resiliency configs × chaos seeds over
     `graph` in ONE doubly-vmapped jit call (`jax_engine.run_config_batch`
     — the engine's third vmap axis) and summarize each config row.
@@ -342,7 +345,12 @@ def sweep_configs(graph: LogicalGraph | PackedArena, configs, seeds, *,
     The result's `recovery_surface` / `slo_surface` are the dense (C, S)
     curves — recovery time vs restart budget, SLO violation vs
     checkpoint interval — that StreamShield-style release gating and
-    Khaos-style checkpoint-interval optimization read off directly."""
+    Khaos-style checkpoint-interval optimization read off directly.
+
+    ``devices=`` splits the flat seed axis of the (C, S) grid across
+    local devices (`jax_engine.get_sharded_config_fn`; rows stay
+    bit-identical to the single-device grid); ``phase_mode`` selects the
+    dense vs compact (sparse-phase) tick lowering, default auto."""
     seeds = list(seeds)
     norm = [normalize_config(c) for c in configs]
     logical = graph.graph if isinstance(graph, PackedArena) else graph
@@ -351,7 +359,8 @@ def sweep_configs(graph: LogicalGraph | PackedArena, configs, seeds, *,
                                duration_s=duration_s, n_hosts=n_hosts,
                                dt=dt, queue_cap=queue_cap,
                                task_speed_override=task_speed_override,
-                               seed=seed, pad_seeds=pad_seeds)
+                               seed=seed, pad_seeds=pad_seeds,
+                               devices=devices, phase_mode=phase_mode)
     wall = time.perf_counter() - t0
     # each config row gets its share of the one-call wall time, so a
     # row's scenarios_per_s stays comparable with a standalone sweep()

@@ -449,6 +449,94 @@ class PhaseTensors:
 
 
 @dataclasses.dataclass(eq=False)
+class CompactPhase:
+    """Sparse twin of `PhaseTensors`: per-phase *active* index sets in
+    row-table form.
+
+    Every segment reduction of the dense tick (per-op totals, per-edge
+    normalizers, per-group capacities, per-block rates, head-of-line
+    minima, per-job metric sums) becomes a small **row table** here: one
+    row per segment, holding the segment's member indices padded to a
+    pow2 row length with a 0.0 mask column. The JAX tick then reduces
+    ``values[idx] * mask`` along the row axis — a vectorized
+    gather+reduce whose cost scales with the phase's live entries — in
+    place of XLA scatter-based `segment_sum`/`segment_min` over the
+    whole arena (the dense tick's dominant cost on deep pipelines).
+
+    Everything except the array *shapes* is a traced parameter of the
+    tick (`streams.jax_engine._build_compact_run`), the same pow2
+    bucketing discipline as seed-batch padding: the trace-cache key is
+    only the shape signature (`sig`), so two plans whose index sets land
+    in the same buckets — e.g. same-shape graphs with different
+    partitioners, placements or routing tables — share one compiled
+    trace."""
+    consumes: bool
+    D: int                         # flat dst-channel entries (exact)
+    E: int                         # edges (exact)
+    B: int                         # blocks (+1 dummy row in br/bs)
+    G: int                         # weakhash groups (+1 dummy row)
+    # consumption (arena-wide elementwise, mask traced)
+    cons_mask: np.ndarray          # (n_tasks,) f64
+    # qps rows: one row per consuming op (arena indices)
+    q_idx: np.ndarray              # (Rq, Lq) i32
+    q_mask: np.ndarray             # (Rq, Lq) f64
+    q_ops: np.ndarray              # (Rq,) i32 topo op index
+    # emitted rows: one row per job with active sources (arena indices)
+    e_idx: np.ndarray              # (Re, Le) i32
+    e_mask: np.ndarray             # (Re, Le) f64
+    e_jobs: np.ndarray             # (Re,) i32
+    # per-source-op slots of the phase's edges (arena indices)
+    s_idx: np.ndarray              # (Rs, Ls) i32
+    s_mask: np.ndarray             # (Rs, Ls) f64
+    slot_of_edge: np.ndarray       # (E,) i32
+    slot_ops: np.ndarray           # (Rs,) i32 topo op index
+    # dst-channel entry arrays (exact D, as in the dense phase)
+    dst_task: np.ndarray           # (D,) i32
+    fwd_src: np.ndarray            # (D,) i32
+    edge_of: np.ndarray            # (D,) i32
+    grp_of: np.ndarray             # (D,) i32 (dummy = G)
+    blk_of: np.ndarray             # (D,) i32 (dummy = B)
+    m_fwd: np.ndarray              # (D,) f64 partitioner masks (traced —
+    m_blk: np.ndarray              # (D,) f64  unlike the dense bools,
+    m_hash: np.ndarray             # (D,) f64  these are runtime params)
+    m_weakhash: np.ndarray         # (D,) f64
+    m_backlog: np.ndarray          # (D,) f64
+    is_norm: np.ndarray            # (D,) f64
+    m_acc_static: np.ndarray       # (D,) f64
+    m_acc_block: np.ndarray        # (D,) f64
+    dst_in_blk: np.ndarray         # (D,) f64
+    share: np.ndarray              # (D,) f64
+    mass: np.ndarray               # (D,) f64
+    # edge / group / block rows (indices into the D axis)
+    er_idx: np.ndarray             # (E, Le2) i32
+    er_mask: np.ndarray            # (E, Le2) f64
+    gr_idx: np.ndarray             # (G+1, Lg) i32 (last row all-pad)
+    gr_mask: np.ndarray            # (G+1, Lg) f64
+    br_idx: np.ndarray             # (B+1, Lb) i32 (last row all-pad)
+    br_mask: np.ndarray            # (B+1, Lb) f64
+    # block-source rows (arena indices of the blocky edges' src tasks)
+    bs_idx: np.ndarray             # (B+1, Lbs) i32 (last row all-pad)
+    bs_mask: np.ndarray            # (B+1, Lbs) f64
+    # dropped rows: one row per dst job (indices into the D axis)
+    dj_idx: np.ndarray             # (Rd, Ld) i32
+    dj_mask: np.ndarray            # (Rd, Ld) f64
+    dj_jobs: np.ndarray            # (Rd,) i32
+
+    @property
+    def sig(self) -> tuple:
+        shapes = tuple(getattr(self, f.name).shape
+                       for f in dataclasses.fields(self)
+                       if isinstance(getattr(self, f.name), np.ndarray))
+        return (self.consumes, self.D, self.E, self.B, self.G) + shapes
+
+    def traced(self) -> dict:
+        """The per-phase traced-parameter dict (everything but `sig`)."""
+        return {f.name: getattr(self, f.name)
+                for f in dataclasses.fields(self)
+                if isinstance(getattr(self, f.name), np.ndarray)}
+
+
+@dataclasses.dataclass(eq=False)
 class TensorPlan:
     """Phase-scheduled flat-tensor lowering of a `RoutingPlan`.
 
@@ -458,7 +546,14 @@ class TensorPlan:
     phases* is bounded by the longest in-tick pipeline chain of a single
     job (plus head-of-line ordering between same-destination edges), NOT
     by the number of ops/edges: packing K jobs into one arena leaves it
-    unchanged, which is what makes the jitted tick O(1) in graph size."""
+    unchanged, which is what makes the jitted tick O(1) in graph size.
+
+    ``mode`` selects the lowering flavor: ``"dense"`` phases are
+    `PhaseTensors` (arena-wide masks, index structure baked into the
+    trace), ``"compact"`` phases are `CompactPhase` (pow2-bucketed
+    active index sets passed as traced parameters — per-tick compute
+    scales with the live edges/tasks of each phase, and the trace key is
+    only the bucket signature)."""
     n_tasks: int
     n_ops: int
     n_jobs: int
@@ -468,8 +563,9 @@ class TensorPlan:
     job_of_task: np.ndarray        # (n_tasks,) i32
     par_of_op: np.ndarray          # (n_ops,) f64  max(parallelism, 1)
     src_mask_ops: np.ndarray       # (n_ops,) f64  1.0 at source columns
-    phases: list[PhaseTensors]
+    phases: list
     key: tuple = ()
+    mode: str = "dense"
 
     def __hash__(self):
         return hash(self.key)
@@ -513,12 +609,62 @@ def _phase_schedule(plan: RoutingPlan):
     return cphase, edges, n_phases
 
 
+def _bucket(n: int) -> int:
+    """Pow2 bucket size for a compact index set (0 stays 0)."""
+    return 1 << (n - 1).bit_length() if n > 1 else n
+
+
+def _phase_work_estimate(plan: RoutingPlan, cphase, edges, n_phases):
+    """(dense_work, compact_work) rough per-tick reduction-element counts
+    of the two lowerings — the auto-mode selector. The dense tick pays
+    arena-sized scatter-based segment reductions per phase (per-job
+    emitted + per-op qps when the phase consumes, per-op totals when it
+    routes); the compact tick pays row gathers over just the phase's
+    active / source tasks. Costs the two modes share (elementwise arena
+    passes, dst-axis work, deposits) are left out of both sides."""
+    ops = plan.ops
+    n_tasks = plan.n_tasks
+    dense = compact = 0
+    for f in range(n_phases):
+        act = sum(p.hi - p.lo for oi, p in enumerate(ops)
+                  if cphase[oi] == f)
+        src_ops = {oi for (oi, _, _, w) in edges if w == f}
+        s = sum(ops[oi].par for oi in src_ops)
+        dense += (2 * n_tasks if act else 0) + (n_tasks if src_ops else 0)
+        compact += 2 * act + s
+    return dense, compact
+
+
+def select_phase_mode(plan: RoutingPlan, mode: str = "auto") -> str:
+    """Resolve a ``"auto"`` phase-lowering request: compact when the
+    arena-sized segment reductions the sparse lowering eliminates
+    clearly dominate its row-gather cost (deep pipelines / big
+    multi-job arenas where each phase touches a small slice of the
+    arena), dense otherwise."""
+    if mode in ("dense", "compact"):
+        return mode
+    if mode != "auto":
+        raise ValueError(f"phase mode must be dense|compact|auto: {mode!r}")
+    if plan.n_tasks < 256:
+        return "dense"
+    cphase, edges, n_phases = _phase_schedule(plan)
+    dense, compact = _phase_work_estimate(plan, cphase, edges, n_phases)
+    return "compact" if dense >= 2.5 * compact else "dense"
+
+
 def lower_tensor_plan(plan: RoutingPlan,
-                      job_of_op: np.ndarray | None = None) -> TensorPlan:
+                      job_of_op: np.ndarray | None = None,
+                      mode: str = "dense") -> TensorPlan:
     """Lower a `RoutingPlan` into the flat per-phase tensors consumed by
-    the JAX segment-sum tick (`streams/jax_engine.py`)."""
+    the JAX segment-sum tick (`streams/jax_engine.py`).
+
+    ``mode`` is ``"dense"`` (arena-wide `PhaseTensors`, the parity
+    baseline), ``"compact"`` (pow2-bucketed `CompactPhase` index sets —
+    per-tick compute scales with the live edges per phase) or ``"auto"``
+    (`select_phase_mode` picks whichever the work estimate favors)."""
     import hashlib
 
+    mode = select_phase_mode(plan, mode)
     ops = plan.ops
     n_ops = len(ops)
     n_tasks = plan.n_tasks
@@ -640,17 +786,111 @@ def lower_tensor_plan(plan: RoutingPlan,
                       else np.zeros(0, np.int32)),
             G=n_groups_total, grp_of=cat["grp_of"],
             share=cat["share"], mass=cat["mass"])
-        phases.append(ph)
-        feed(np.int64([f, E, ph.D, ph.B, ph.G]), cons.astype(np.int8),
-             ph.dst_task, ph.edge_of, ph.job_of_entry, ph.src_op_of_edge,
-             ph.is_fwd, ph.is_blk, ph.is_hash, ph.is_weakhash,
-             ph.is_backlog, ph.acc_static, ph.acc_block, ph.fwd_src,
-             ph.blk_of, ph.dst_in_blk.astype(np.int8), ph.bsrc_task,
-             ph.bsrc_blk, ph.grp_of)
-    key = (n_tasks, n_ops, n_jobs, n_phases, h.hexdigest())
+        if mode == "compact":
+            phases.append(_compact_phase(ph, ops, cphase, f, mine,
+                                         job_of_op))
+        else:
+            phases.append(ph)
+            feed(np.int64([f, E, ph.D, ph.B, ph.G]), cons.astype(np.int8),
+                 ph.dst_task, ph.edge_of, ph.job_of_entry,
+                 ph.src_op_of_edge,
+                 ph.is_fwd, ph.is_blk, ph.is_hash, ph.is_weakhash,
+                 ph.is_backlog, ph.acc_static, ph.acc_block, ph.fwd_src,
+                 ph.blk_of, ph.dst_in_blk.astype(np.int8), ph.bsrc_task,
+                 ph.bsrc_blk, ph.grp_of)
+    if mode == "compact":
+        # only the bucket signature keys the trace: the index contents
+        # are traced parameters, so same-bucket plans share one trace
+        key = ("compact", n_tasks, n_ops, n_jobs, n_phases,
+               tuple(p.sig for p in phases))
+    else:
+        key = (n_tasks, n_ops, n_jobs, n_phases, h.hexdigest())
     return TensorPlan(n_tasks, n_ops, n_jobs, n_phases, op_of_task,
                       is_src_task, job_of_task, par_of_op, src_mask_ops,
-                      phases, key)
+                      phases, key, mode=mode)
+
+
+def _rows(groups, n_rows=None, dtype=np.int32):
+    """Row-table builder: `groups` is a list of 1-D index arrays, one
+    per segment. Returns ``(idx, mask)`` of shape ``(R, L)`` with ``L``
+    the pow2 bucket of the longest group — pads gather index 0 under a
+    0.0 mask. `n_rows` appends all-pad rows up to a fixed row count
+    (the +1 dummy rows of block/group tables)."""
+    R = n_rows if n_rows is not None else len(groups)
+    L = _bucket(max((len(g) for g in groups), default=0)) or 1
+    idx = np.zeros((R, L), dtype)
+    mask = np.zeros((R, L))
+    for r, g in enumerate(groups):
+        idx[r, :len(g)] = g
+        mask[r, :len(g)] = 1.0
+    return idx, mask
+
+
+def _compact_phase(ph: PhaseTensors, ops, cphase, f, mine,
+                   job_of_op) -> CompactPhase:
+    """Convert one dense phase into its row-table sparse twin. The
+    numerics contract vs the dense phase is exact up to the reduction
+    order inside a row: rows preserve the dst-axis/arena order of each
+    segment's members and pads contribute exact +0.0 (sums) or +inf
+    (minima), so compact == dense at 1e-12 over full runs."""
+    cons_ops = [(oi, p) for oi, p in enumerate(ops) if cphase[oi] == f]
+    q_idx, q_mask = _rows([np.arange(p.lo, p.hi) for _, p in cons_ops])
+    q_ops = np.array([oi for oi, _ in cons_ops], np.int32)
+    by_job: dict[int, list] = {}
+    for oi, p in enumerate(ops):
+        if cphase[oi] == f and p.is_source:
+            by_job.setdefault(int(job_of_op[oi]), []).append(
+                np.arange(p.lo, p.hi))
+    e_jobs = sorted(by_job)
+    e_idx, e_mask = _rows([np.concatenate(by_job[j]) for j in e_jobs])
+
+    # one slot per distinct source op of the phase's edges
+    slot_index: dict[int, int] = {}
+    slot_of_edge = np.zeros(ph.n_edges, np.int32)
+    for ei, (oi, _, _) in enumerate(mine):
+        if oi not in slot_index:
+            slot_index[oi] = len(slot_index)
+        slot_of_edge[ei] = slot_index[oi]
+    slots = sorted(slot_index, key=slot_index.get)
+    s_idx, s_mask = _rows([np.arange(ops[oi].lo, ops[oi].hi)
+                           for oi in slots])
+
+    # edge / group / block rows index into the D axis; block-source rows
+    # index the arena. Dummy rows (B / G) stay all-pad: their sums are
+    # 0.0 and their minima inf, matching the dense dummy segments.
+    d_pos = np.arange(ph.D)
+    er_idx, er_mask = _rows([d_pos[ph.edge_of == ei]
+                             for ei in range(ph.n_edges)])
+    gr_idx, gr_mask = _rows([d_pos[ph.grp_of == g] for g in range(ph.G)],
+                            n_rows=ph.G + 1)
+    br_idx, br_mask = _rows([d_pos[ph.blk_of == b] for b in range(ph.B)],
+                            n_rows=ph.B + 1)
+    bs_idx, bs_mask = _rows([ph.bsrc_task[ph.bsrc_blk == b]
+                             for b in range(ph.B)], n_rows=ph.B + 1)
+    dj = sorted(set(int(j) for j in ph.job_of_entry))
+    dj_idx, dj_mask = _rows([d_pos[ph.job_of_entry == j] for j in dj])
+
+    return CompactPhase(
+        consumes=ph.consumes, D=ph.D, E=ph.n_edges, B=ph.B, G=ph.G,
+        cons_mask=ph.cons_mask,
+        q_idx=q_idx, q_mask=q_mask, q_ops=q_ops,
+        e_idx=e_idx, e_mask=e_mask,
+        e_jobs=np.array(e_jobs, np.int32),
+        s_idx=s_idx, s_mask=s_mask, slot_of_edge=slot_of_edge,
+        slot_ops=np.array(slots, np.int32),
+        dst_task=ph.dst_task, fwd_src=ph.fwd_src, edge_of=ph.edge_of,
+        grp_of=ph.grp_of, blk_of=ph.blk_of,
+        m_fwd=ph.is_fwd.astype(float), m_blk=ph.is_blk.astype(float),
+        m_hash=ph.is_hash.astype(float),
+        m_weakhash=ph.is_weakhash.astype(float),
+        m_backlog=ph.is_backlog.astype(float), is_norm=ph.is_norm,
+        m_acc_static=ph.acc_static.astype(float),
+        m_acc_block=ph.acc_block.astype(float),
+        dst_in_blk=ph.dst_in_blk, share=ph.share, mass=ph.mass,
+        er_idx=er_idx, er_mask=er_mask, gr_idx=gr_idx, gr_mask=gr_mask,
+        br_idx=br_idx, br_mask=br_mask, bs_idx=bs_idx, bs_mask=bs_mask,
+        dj_idx=dj_idx, dj_mask=dj_mask,
+        dj_jobs=np.array(dj, np.int32))
 
 
 # ----------------------------------------------------------------------
@@ -678,6 +918,10 @@ class JobSlice:
     hosts: np.ndarray              # local host id -> global host id
     region_lo: int = 0
     region_hi: int = 0
+    # job-local host id per job-local task index (the placement BEFORE
+    # lifting through `hosts`) — per-job ChaosSpecs draw stragglers and
+    # kills in this local domain, exactly like an independent run
+    local_host: np.ndarray | None = None
 
 
 @dataclasses.dataclass
@@ -822,7 +1066,8 @@ def pack_arena(graphs, host_map="shared", *, n_hosts: int = 8,
             op_names=[plan.ops[c].name[len(pre):] for c in op_cols],
             src_cols=np.array([c for c in op_cols
                                if plan.ops[c].is_source]),
-            hosts=maps[j], region_lo=region_lo, region_hi=len(regions)))
+            hosts=maps[j], region_lo=region_lo, region_hi=len(regions),
+            local_host=np.array([tk.host for tk in local.tasks])))
         task_off += n_local
     assert task_off == plan.n_tasks
     phys = PhysicalGraph(combined, tasks, channels, regions, task_region)
@@ -852,7 +1097,26 @@ class StreamEngine:
             else expand(graph, n_hosts=n_hosts, seed=seed))
         self.dt = dt
         self.queue_cap = queue_cap
-        self.chaos = chaos or ChaosEngine()
+        # per-job chaos: one ChaosEngine per co-located job, each drawing
+        # in its job's LOCAL host domain and lifted through the job's
+        # host map (see build_perjob_chaos_timeline for the contract)
+        if isinstance(chaos, (list, tuple)):
+            if self.arena is None or len(chaos) != self.arena.n_jobs:
+                raise ValueError("a per-job chaos list needs a packed "
+                                 "arena with one entry per job")
+            self._chaos_list = [
+                c if isinstance(c, ChaosEngine)
+                else ChaosEngine(c)       # ChaosSpec or None
+                for c in chaos]
+            self.chaos = self._chaos_list[0]
+            # a shared CheckpointConfig has no shared engine to draw
+            # from under per-job chaos — lower it onto per-job
+            # coordinators, one per job, each on its own stream
+            if isinstance(ckpt, CheckpointConfig):
+                ckpt = [ckpt] * self.arena.n_jobs
+        else:
+            self._chaos_list = None
+            self.chaos = chaos or ChaosEngine()
         self.failover = (failover if failover is not None
                          else FailoverConfig())
         self.ckpt_cfg = ckpt
@@ -876,9 +1140,19 @@ class StreamEngine:
                 if tk.task_id in task_speed_override:
                     self._speed[tk.task_id] = task_speed_override[tk.task_id]
         # chaos host stragglers (queried in task order — keeps the chaos rng
-        # stream identical to the reference engine)
-        for tk in self.phys.tasks:
-            self._speed[tk.task_id] *= self.chaos.host_speed(tk.host)
+        # stream identical to the reference engine). Per-job chaos draws
+        # in the job's LOCAL host domain, like an independent run.
+        if self._chaos_list is not None:
+            jobs_ = self.arena.jobs
+            jot = self.arena.job_of_task
+            for tk in self.phys.tasks:
+                job = jobs_[int(jot[tk.task_id])]
+                lh = int(job.local_host[tk.task_id - job.task_lo])
+                self._speed[tk.task_id] *= \
+                    self._chaos_list[job.index].host_speed(lh)
+        else:
+            for tk in self.phys.tasks:
+                self._speed[tk.task_id] *= self.chaos.host_speed(tk.host)
 
         self._task_host = np.array([tk.host for tk in self.phys.tasks])
         self._task_region = np.array(
@@ -947,9 +1221,14 @@ class StreamEngine:
         self._true_buf = np.ones(n_tasks, bool)
         self._ones_buf = np.ones(n_tasks)
         self._max_down = 0.0          # latest down_until across the arena
-        spec = self.chaos.spec
-        self._chaos_kills_possible = bool(
-            spec.host_kill_at or spec.host_kill_prob_per_s)
+        if self._chaos_list is not None:
+            self._chaos_kills_possible = any(
+                bool(e.spec.host_kill_at or e.spec.host_kill_prob_per_s)
+                for e in self._chaos_list)
+        else:
+            spec = self.chaos.spec
+            self._chaos_kills_possible = bool(
+                spec.host_kill_at or spec.host_kill_prob_per_s)
 
         self.metrics = EngineMetrics(
             [p.name for p in self._ops],
@@ -1108,9 +1387,30 @@ class StreamEngine:
         # chaos host kills → failover (skip entirely when the chaos spec
         # cannot produce kills — step_kills would draw nothing and return [])
         if self._chaos_kills_possible:
-            kills = self.chaos.step_kills(t, t + dt, n_hosts=self._n_hosts)
-            for host in kills:
-                self._fail_host(host)
+            if self._chaos_list is not None:
+                # per-job kill processes: jobs draw in ascending job
+                # order over their LOCAL host domains, lifted through
+                # the job's host map; a pool host killed by several
+                # jobs' processes this tick resolves once
+                failed_pool: set[int] = set()
+                for job in self.arena.jobs:
+                    eng = self._chaos_list[job.index]
+                    spec = eng.spec
+                    if not (spec.host_kill_at or spec.host_kill_prob_per_s):
+                        continue
+                    m = job.hosts
+                    for lh in eng.step_kills(t, t + dt, n_hosts=len(m)):
+                        if lh < len(m):
+                            pool = int(m[lh])
+                            if pool not in failed_pool:
+                                failed_pool.add(pool)
+                                self._fail_host(pool, revive=False)
+                        eng.revive(lh)
+            else:
+                kills = self.chaos.step_kills(t, t + dt,
+                                              n_hosts=self._n_hosts)
+                for host in kills:
+                    self._fail_host(host)
 
         # checkpoint coordinator(s): one shared, or one per job
         if t + dt >= self._next_ckpt:
@@ -1137,7 +1437,7 @@ class StreamEngine:
         return self.metrics
 
     # ------------------------------------------------------------------
-    def _fail_host(self, host: int) -> None:
+    def _fail_host(self, host: int, revive: bool = True) -> None:
         """Failover response to one host kill: region-mode victims expand
         to their failure regions, single_task-mode victims restart alone
         (region entries precede single_task entries when a shared-host
@@ -1153,7 +1453,8 @@ class StreamEngine:
         if vs.any():
             self._apply_failover(t, "single_task", vs,
                                  self._downtime_single)
-        self.chaos.revive(host)  # replacement host
+        if revive:
+            self.chaos.revive(host)  # replacement host
 
     def _apply_failover(self, t, mode, hit, downtime) -> None:
         until = t + downtime[hit]
@@ -1195,8 +1496,10 @@ class StreamEngine:
         m.ckpt_attempts += 1
         m.ckpt_by_job[j, 0] += 1
         lo = job.task_lo
+        eng = (self._chaos_list[j] if self._chaos_list is not None
+               else self.chaos)
         ok = run_checkpoint_attempt(
-            self.chaos, self._down_until[lo:job.task_hi] <= self.t,
+            eng, self._down_until[lo:job.task_hi] <= self.t,
             interval_s=cfg.interval_s, mode=cfg.mode,
             upload_s=cfg.upload_s, retry=cfg.retry_failed_region,
             regions=self.phys.regions[job.region_lo:job.region_hi],

@@ -34,6 +34,39 @@ The jitted tick is O(1) in graph size. The pipeline has three stages:
    The old unrolled tick survives as `build_unrolled_run` purely as the
    benchmark baseline (benchmarks/bench_compile.py).
 
+Dense vs compact lowering contract (``phase_mode``)
+---------------------------------------------------
+`lower_tensor_plan` has two flavors sharing the phase schedule; every
+engine/sweep entry point takes ``phase_mode`` ("dense" | "compact" |
+"auto", default auto via `engine.select_phase_mode`):
+
+* **dense** (`engine.PhaseTensors`, `_build_run`) — the parity
+  baseline. Per phase it multiplies arena-wide masks and runs
+  arena-sized segment reductions; the integer structure (index vectors,
+  partitioner masks, segment tables) is BAKED into the trace and
+  digested into `TensorPlan.key`, floats are traced. Work per tick is
+  O(n_phases × n_tasks) regardless of how few tasks a phase touches.
+* **compact** (`engine.CompactPhase`, `_build_compact_run`) — the
+  sparse-phase path. Every arena-sized segment reduction becomes a
+  row-table gather+reduce over just the phase's active tasks / source
+  ops / dst entries (rows pow2-padded with mask columns — the same
+  bucketing discipline as seed padding), and ALL index/mask tables ride
+  the params pytree as traced leaves: the trace key is only the bucket
+  shape signature, so same-bucket plans (e.g. same-shape graphs with
+  different partitioner kinds, placements or routing tables) share ONE
+  compiled trace. Consumption stays arena-wide elementwise
+  (bit-identical to dense); row reductions preserve each segment's
+  member order, so compact == dense at 1e-12 over full runs
+  (tests/test_sparse_phase.py). On deep pipelines (SS-style, 6 phases)
+  at 10k tasks the compact warm tick is 2–4x the dense one
+  (benchmarks/bench_sweep_scale.py → results/bench_sweep_scale.json).
+
+"auto" picks compact exactly when the eliminated arena-wide reductions
+dominate the row-gather cost (deep packed arenas); small or shallow
+graphs stay dense. Setting ``REPRO_REQUIRE_PHASE_MODE=compact`` (or
+``dense``) turns a silent fallback into a hard error — scripts/ci.sh's
+smoke targets use it.
+
 All resiliency floats are *traced leaves* of the params pytree, never
 compile-time constants: per-task failover vectors (detect / restart
 budgets / mode masks — per-job `FailoverConfig` lists lower to per-task
@@ -85,7 +118,16 @@ second vmap axis over job-mix configs (per-job source-rate
 multipliers); `run_config_batch` adds a third over resiliency-config
 grids (`FailoverConfig`/`CheckpointConfig` per grid row, optionally
 per job), so a (mixes × configs × seeds) scenario cube runs as one
-device call on one trace.
+device call on one trace. `run_config_batch(devices=...)` splits the
+grid's flat seed axis across local devices too
+(`dist.sharding.sharded_grid_fn`, rows bit-identical to the
+single-device grid), and checkpoint-bearing grids refit each config's
+attempt schedule onto per-seed draw streams
+(`core.chaos.build_grid_timelines`) instead of replaying a host
+timeline per (config, seed). ``chaos=`` / ``base_spec=`` accept
+per-job `ChaosSpec` lists for packed arenas (per-job kill rates /
+straggler intensities drawn in each job's local host domain and lifted
+onto the shared pool — `core.chaos.build_perjob_chaos_timeline`).
 
 Everything runs in float64 (scoped `jax.experimental.enable_x64`, no
 global config flip) to hold parity with the float64 numpy engine.
@@ -93,6 +135,7 @@ global config flip) to hold parity with the float64 numpy engine.
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import NamedTuple
 
 import jax
@@ -101,8 +144,10 @@ import numpy as np
 from jax import lax
 
 from repro.core.chaos import (ChaosEngine, ChaosSpec, ChaosTimeline,
-                              build_chaos_timeline, refit_failover)
-from repro.dist.sharding import local_shard_count, sharded_seed_fn
+                              build_chaos_timeline, build_grid_timelines,
+                              build_perjob_chaos_timeline, refit_failover)
+from repro.dist.sharding import (local_shard_count, sharded_grid_fn,
+                                 sharded_seed_fn)
 from repro.streams.engine import (CheckpointConfig, FailoverConfig,
                                   JobSlice, PackedArena, TensorPlan,
                                   build_plan, lower_tensor_plan,
@@ -147,14 +192,189 @@ class TickDesc(NamedTuple):
 # ----------------------------------------------------------------------
 # tensorized tick: constant number of segment passes per phase
 # ----------------------------------------------------------------------
+def _build_compact_run(desc: TickDesc):
+    """Sparse-phase twin of `_build_run`: every arena-sized segment
+    reduction of the dense tick becomes a row-table gather+reduce over
+    just the phase's active entries (`engine.CompactPhase`), and all
+    index/mask tables are *traced* parameters (`pa["edges"][fi]`), so
+    the trace key is only the pow2 bucket signature — same-bucket plans
+    share one compiled trace. Numerics are pinned to the dense tick:
+    consumption stays arena-wide elementwise (bit-identical), rows
+    preserve each segment's member order, and pads contribute exact
+    +0.0 to sums and +inf to head-of-line minima."""
+    tp, n_regions = desc.tensor, desc.n_regions
+    n_ops, n_jobs = tp.n_ops, tp.n_jobs
+
+    def rsum(vals, idx, mask):
+        return (vals[idx] * mask).sum(-1)
+
+    def rmin(vals, idx, mask):
+        return jnp.where(mask > 0.5, vals[idx], jnp.inf).min(-1)
+
+    def tick(pa, state: EngineState, x):
+        t = x["t"]
+        q = state.queue
+        alive_f = (state.down_until <= t).astype(q.dtype)
+        free = jnp.maximum(pa["qcap"] - q, 0.0)
+        sel_t = pa["sel"][pa["op_of_task"]]
+        cap_t = pa["cap_base"] * state.speed * alive_f
+        emitted, dropped = state.emitted, state.dropped
+        produced = jnp.zeros_like(q)
+        qps_acc = jnp.zeros((n_ops,), q.dtype)
+
+        for fi, ph in enumerate(tp.phases):
+            eph = pa["edges"][fi]
+            if ph.consumes:
+                take = jnp.minimum(q, cap_t * eph["cons_mask"])
+                q = q - take
+                src_emit = pa["src_row"] * alive_f * eph["cons_mask"]
+                produced = produced + (src_emit + take * sel_t)
+                if len(ph.e_jobs):
+                    emitted = emitted.at[eph["e_jobs"]].add(
+                        rsum(src_emit, eph["e_idx"], eph["e_mask"]))
+                qps_acc = qps_acc.at[eph["q_ops"]].add(
+                    rsum(take, eph["q_idx"], eph["q_mask"]))
+            if not ph.D:
+                continue
+            dst = eph["dst_task"]
+            edge_of = eph["edge_of"]
+            alive_d = alive_f[dst]
+            free_d = free[dst]
+            # per-source-op slot totals — O(live src tasks)
+            tot_slot = rsum(produced, eph["s_idx"], eph["s_mask"])
+            tot_e = tot_slot[eph["slot_of_edge"]]
+            tot_d = tot_e[edge_of]
+            # forward: pointwise src task → dst task
+            arr_fwd = produced[eph["fwd_src"]] * alive_d
+            # rescale family: per-block rate over alive destinations
+            if ph.B:
+                prod_blk = rsum(produced, eph["bs_idx"], eph["bs_mask"])
+                alive_blk = rsum(alive_d * eph["dst_in_blk"],
+                                 eph["br_idx"], eph["br_mask"])
+                has = alive_blk > 0.0
+                rate_blk = jnp.where(
+                    has, prod_blk / jnp.where(has, alive_blk, 1.0), 0.0)
+                arr_blk = jnp.where(eph["dst_in_blk"] > 0.0,
+                                    rate_blk[eph["blk_of"]] * alive_d,
+                                    0.0)
+            else:
+                arr_blk = jnp.zeros_like(alive_d)
+            # weakhash: group mass spread ∝ free capacity (fallback to
+            # alive-uniform when a whole group is down)
+            if ph.G:
+                wh = eph["m_weakhash"] > 0.5
+                grp_of = eph["grp_of"]
+                cap_w = jnp.maximum(free_d, 1e-9) * alive_d
+                alive_eps = alive_d + 1e-9
+                capsum = rsum(jnp.where(wh, cap_w, 0.0), eph["gr_idx"],
+                              eph["gr_mask"])
+                capsum_fb = rsum(jnp.where(wh, alive_eps, 0.0),
+                                 eph["gr_idx"], eph["gr_mask"])
+                fall = capsum <= 0.0
+                cap2 = jnp.where(fall[grp_of], alive_eps, cap_w) * alive_d
+                capsum2 = jnp.where(fall, capsum_fb, capsum)
+                val_wh = cap2 * eph["mass"] / capsum2[grp_of]
+            else:
+                val_wh = jnp.zeros_like(alive_d)
+            # backlog: divert away from congested channels
+            open_ = (free_d > pa["qcap"][dst] * 0.25).astype(q.dtype)
+            val_bk = (jnp.maximum(free_d, 1e-9) * alive_d
+                      * jnp.maximum(open_, 0.05))
+            val_nrm = jnp.where(eph["m_weakhash"] > 0.5, val_wh,
+                                jnp.where(eph["m_backlog"] > 0.5, val_bk,
+                                          alive_d)) * eph["is_norm"]
+            rs = rsum(val_nrm, eph["er_idx"], eph["er_mask"])
+            ratio_e = jnp.where(rs > 0.0, tot_e / rs, 0.0)
+            arr_nrm = val_nrm * ratio_e[edge_of]
+            arriving = jnp.where(
+                eph["m_fwd"] > 0.5, arr_fwd,
+                jnp.where(eph["m_blk"] > 0.5, arr_blk,
+                          jnp.where(eph["m_hash"] > 0.5,
+                                    tot_d * eph["share"], arr_nrm)))
+            dead_s = (alive_d <= 0.0) & (pa["mode_single"][dst] > 0.0)
+            dropped = dropped.at[eph["dj_jobs"]].add(
+                rsum(jnp.where(dead_s, arriving, 0.0), eph["dj_idx"],
+                     eph["dj_mask"]))
+            arriving = jnp.where(dead_s, 0.0, arriving)
+            # acceptance: head-of-line / per-block / adaptive credits
+            live = arriving > 1e-9
+            ratio = jnp.where(live,
+                              free_d / jnp.maximum(arriving, 1e-300),
+                              jnp.inf)
+            lam_e = jnp.minimum(rmin(ratio, eph["er_idx"],
+                                     eph["er_mask"]), 1.0)
+            if ph.B:
+                lam_b = jnp.minimum(rmin(ratio, eph["br_idx"],
+                                         eph["br_mask"]), 1.0)
+                acc_blk = arriving * lam_b[eph["blk_of"]]
+            else:
+                acc_blk = arriving
+            accepted = jnp.where(
+                eph["m_acc_static"] > 0.5, arriving * lam_e[edge_of],
+                jnp.where(eph["m_acc_block"] > 0.5, acc_blk,
+                          jnp.minimum(arriving, free_d)))
+            # overflow re-queues uniformly at each source op (dense-style
+            # broadcast through a small per-slot scatter)
+            ovf_e = rsum(arriving - accepted, eph["er_idx"],
+                         eph["er_mask"])
+            ovf_slot = jax.ops.segment_sum(ovf_e, eph["slot_of_edge"],
+                                           num_segments=len(ph.slot_ops))
+            ovf_op = jnp.zeros((n_ops,), q.dtype).at[eph["slot_ops"]].add(
+                ovf_slot)
+            q = q + (ovf_op / pa["par_of_op"])[pa["op_of_task"]]
+            q = q.at[dst].add(accepted)
+            free = jnp.maximum(free.at[dst].add(-accepted), 0.0)
+
+        return _finish_tick(pa, state, x, q, emitted, dropped,
+                            qps_acc, n_regions, n_ops)
+
+    def run(pa, state, xs):
+        return lax.scan(lambda st, x: tick(pa, st, x), state, xs)
+
+    return run
+
+
+def _finish_tick(pa, state, x, q, emitted, dropped, qps_acc,
+                 n_regions, n_ops):
+    """Shared end-of-tick block of the dense and compact ticks: chaos
+    host kills → failover (per-task mode masks), checkpoint attempt
+    counter, per-op metric rows."""
+    t = x["t"]
+    vict = x["kills"][pa["task_host"]]
+    hit_s = (vict > 0.0).astype(q.dtype) * pa["mode_single"]
+    reg_hit = jax.ops.segment_max(vict * pa["mode_region"],
+                                  pa["task_region"],
+                                  num_segments=n_regions)
+    hit_r = (reg_hit[pa["task_region"]] > 0.0).astype(q.dtype)
+    until_s = t + (pa["detect"] + pa["restart_single"])
+    until_r = t + (pa["detect"] + pa["restart_region"])
+    down_until = jnp.where(hit_r > 0.0, until_r,
+                           jnp.where(hit_s > 0.0, until_s,
+                                     state.down_until))
+    hit_any = jnp.maximum(hit_r, hit_s)
+    q = jnp.where(hit_any > 0.0, 0.0, q)
+
+    ckpt_epoch = state.ckpt_epoch + x["ckpt"].astype(jnp.int32)
+
+    backlog_row = jax.ops.segment_sum(q, pa["op_of_task"],
+                                      num_segments=n_ops)
+    qps_row = qps_acc / pa["dt"]
+    lag = jnp.dot(backlog_row, pa["src_mask_ops"])
+    new_state = EngineState(q, down_until, state.speed, ckpt_epoch,
+                            emitted, dropped)
+    return new_state, {"qps": qps_row, "backlog": backlog_row,
+                       "lag": lag}
+
+
 def _build_run(desc: TickDesc):
+    if desc.tensor.mode == "compact":
+        return _build_compact_run(desc)
     tp, n_regions = desc.tensor, desc.n_regions
     n_ops, n_jobs = tp.n_ops, tp.n_jobs
     op_of_task = tp.op_of_task
     job_of_task = tp.job_of_task
     is_src = tp.is_src_task
     par_of_op = tp.par_of_op
-    src_mask_ops = tp.src_mask_ops
     seg = jax.ops.segment_sum
 
     def tick(pa, state: EngineState, x):
@@ -261,32 +481,10 @@ def _build_run(desc: TickDesc):
             q = q.at[dst].add(accepted)
             free = jnp.maximum(free.at[dst].add(-accepted), 0.0)
 
-        # pregenerated chaos host kills → failover (per-task mode masks:
-        # region-mode victims expand to their regions via segment_max,
-        # single_task-mode victims restart alone)
-        vict = x["kills"][pa["task_host"]]
-        hit_s = (vict > 0.0).astype(q.dtype) * pa["mode_single"]
-        reg_hit = jax.ops.segment_max(vict * pa["mode_region"],
-                                      pa["task_region"],
-                                      num_segments=n_regions)
-        hit_r = (reg_hit[pa["task_region"]] > 0.0).astype(q.dtype)
-        until_s = t + (pa["detect"] + pa["restart_single"])
-        until_r = t + (pa["detect"] + pa["restart_region"])
-        down_until = jnp.where(hit_r > 0.0, until_r,
-                               jnp.where(hit_s > 0.0, until_s,
-                                         state.down_until))
-        hit_any = jnp.maximum(hit_r, hit_s)
-        q = jnp.where(hit_any > 0.0, 0.0, q)
-
-        ckpt_epoch = state.ckpt_epoch + x["ckpt"].astype(jnp.int32)
-
-        backlog_row = seg(q, op_of_task, num_segments=n_ops)
-        qps_row = qps_acc / pa["dt"]
-        lag = jnp.dot(backlog_row, src_mask_ops)
-        new_state = EngineState(q, down_until, state.speed, ckpt_epoch,
-                                emitted, dropped)
-        return new_state, {"qps": qps_row, "backlog": backlog_row,
-                           "lag": lag}
+        # pregenerated chaos host kills → failover, ckpt counter, metric
+        # rows (shared with the compact tick)
+        return _finish_tick(pa, state, x, q, emitted, dropped,
+                            qps_acc, n_regions, n_ops)
 
     def run(pa, state, xs):
         return lax.scan(lambda st, x: tick(pa, st, x), state, xs)
@@ -458,6 +656,7 @@ def build_unrolled_run(legacy_desc):
 # ----------------------------------------------------------------------
 _FN_CACHE: dict = {}
 _SHARD_CACHE: dict = {}
+_CFG_SHARD_CACHE: dict = {}
 _MIX_CACHE: dict = {}
 _CFG_CACHE: dict = {}
 _CFG_MIX_CACHE: dict = {}
@@ -472,14 +671,16 @@ _PA_MIX_AXES = {"qcap": None, "src_row": 0, "cap_base": None, "sel": None,
                 "dt": None, "task_host": None, "task_region": None,
                 "detect": None, "restart_region": None,
                 "restart_single": None, "mode_single": None,
-                "mode_region": None, "edges": None}
+                "mode_region": None, "op_of_task": None,
+                "par_of_op": None, "src_mask_ops": None, "edges": None}
 
 # resiliency-config vmap axis: the traced failover/queue/selectivity
 # leaves vary per grid row; placement and routing constants are broadcast
 _PA_CFG_AXES = {"qcap": 0, "src_row": None, "cap_base": None, "sel": 0,
                 "dt": None, "task_host": None, "task_region": None,
                 "detect": 0, "restart_region": 0, "restart_single": 0,
-                "mode_single": 0, "mode_region": 0, "edges": None}
+                "mode_single": 0, "mode_region": 0, "op_of_task": None,
+                "par_of_op": None, "src_mask_ops": None, "edges": None}
 
 
 def get_cached_run_fns(desc: TickDesc):
@@ -548,6 +749,24 @@ def get_cached_config_fn(desc: TickDesc, shared_kills: bool = False):
     return _CFG_CACHE[key]
 
 
+def get_sharded_config_fn(desc: TickDesc, n_shards: int,
+                          shared_kills: bool = False):
+    """Device-sharded twin of `get_cached_config_fn`: the flat seed axis
+    of the (C, S) grid (a multiple of `n_shards`) splits across local
+    devices through `repro.dist.sharding.sharded_grid_fn`, the config
+    axis rides inside each shard. Cached per (plan shape, shard count,
+    kills layout)."""
+    key = (desc, n_shards, shared_kills)
+    if key not in _CFG_SHARD_CACHE:
+        seed_axes = {"t": None, "kills": 0 if shared_kills else 1,
+                     "ckpt": None}
+        _CFG_SHARD_CACHE[key] = sharded_grid_fn(
+            _build_run(desc), pa_axes=_PA_CFG_AXES, xs_axes=_XS_AXES,
+            cfg_xs_axes=_cfg_xs_axes(shared_kills),
+            seed_axes=seed_axes, n_shards=n_shards)
+    return _CFG_SHARD_CACHE[key]
+
+
 def get_cached_config_mix_fn(desc: TickDesc, shared_kills: bool = False):
     """Triply-vmapped run fn: mixes × configs × seeds in one call (the
     mix axis varies only the source-rate row on top of the config
@@ -572,7 +791,8 @@ def get_cached_config_mix_fn(desc: TickDesc, shared_kills: bool = False):
 class _Lowered:
     def __init__(self, graph: LogicalGraph | PackedArena, *, n_hosts: int,
                  dt: float,
-                 queue_cap: float, failover, ckpt, seed: int):
+                 queue_cap: float, failover, ckpt, seed: int,
+                 phase_mode: str = "auto"):
         self.arena = graph if isinstance(graph, PackedArena) else None
         if self.arena is not None:
             graph = self.arena.graph
@@ -597,6 +817,10 @@ class _Lowered:
                             if self.arena is not None else None)
         self.job_of_op = (self.arena.job_of_op if self.arena is not None
                           else np.zeros(len(self.plan.ops), dtype=int))
+        # job-local placements (per-job ChaosSpec lists draw in these)
+        self.task_local_host = (
+            np.concatenate([j.local_host for j in self.arena.jobs])
+            if self.arena is not None else None)
 
         plan = self.plan
         n_tasks = plan.n_tasks
@@ -620,7 +844,14 @@ class _Lowered:
             raise ValueError("per-job ckpt list needs a packed arena "
                              "with one entry per job")
 
-        self.tensor = lower_tensor_plan(plan, self.job_of_op)
+        self.tensor = lower_tensor_plan(plan, self.job_of_op,
+                                        mode=phase_mode)
+        required = os.environ.get("REPRO_REQUIRE_PHASE_MODE")
+        if required and self.tensor.mode != required:
+            raise RuntimeError(
+                f"REPRO_REQUIRE_PHASE_MODE={required} but the lowering "
+                f"selected the {self.tensor.mode} path (phase_mode="
+                f"{phase_mode!r}) — refusing to fall back silently")
         self.desc = TickDesc(self.tensor, self.n_regions)
         self.arrays = self._params(plan.qcap, sel, det, rst_s, rst_r,
                                    codes, src_row, cap_base)
@@ -646,7 +877,14 @@ class _Lowered:
             "restart_single": np.asarray(rst_s, float),
             "mode_single": (codes == 2).astype(np.float64),
             "mode_region": (codes == 1).astype(np.float64),
-            "edges": [{"share": ph.share, "mass": ph.mass}
+            "op_of_task": self.tensor.op_of_task.astype(np.int32),
+            "par_of_op": np.asarray(self.tensor.par_of_op, float),
+            "src_mask_ops": np.asarray(self.tensor.src_mask_ops, float),
+            # per-phase traced routing parameters: share/mass tables in
+            # dense mode, the full pow2-bucketed index/mask sets in
+            # compact mode (the trace key carries only the bucket sizes)
+            "edges": [ph.traced() if self.tensor.mode == "compact"
+                      else {"share": ph.share, "mass": ph.mass}
                       for ph in self.tensor.phases],
         }
 
@@ -670,7 +908,39 @@ class _Lowered:
                  fo_codes=None, detect=None, rst_s=None, rst_r=None,
                  ckpt="default") -> ChaosTimeline:
         """Pregenerate one seed's chaos timeline, optionally under
-        override failover/ckpt parameters (the config-axis path)."""
+        override failover/ckpt parameters (the config-axis path).
+
+        `spec` may be a per-job `ChaosSpec` list (packed arenas): each
+        job then runs its own chaos process in its local host domain,
+        lifted through the job's host map
+        (`core.chaos.build_perjob_chaos_timeline`)."""
+        if isinstance(spec, (list, tuple)):
+            if self.arena is None:
+                raise ValueError("a per-job chaos list needs a packed "
+                                 "arena with one entry per job")
+            specs = [sp.spec if isinstance(sp, ChaosEngine)
+                     else (sp or ChaosSpec()) for sp in spec]
+            if len(specs) != self.n_jobs:
+                raise ValueError(f"per-job chaos list must have one "
+                                 f"entry per job ({len(specs)} != "
+                                 f"{self.n_jobs})")
+            return build_perjob_chaos_timeline(
+                specs, n_ticks=n_ticks, dt=self.dt, n_hosts=self.n_hosts,
+                task_host=self.task_host,
+                job_hosts=[j.hosts for j in self.arena.jobs],
+                task_local_host=self.task_local_host,
+                job_of_task=self.job_of_task,
+                task_region=self.task_region, regions=self.phys.regions,
+                failover_mode=(fo_codes if fo_codes is not None
+                               else self.fo_codes),
+                detect_s=(detect if detect is not None
+                          else self.fo_detect),
+                region_restart_s=(rst_r if rst_r is not None
+                                  else self.fo_rr),
+                single_restart_s=(rst_s if rst_s is not None
+                                  else self.fo_rs),
+                **self._ckpt_timeline_kw(self.ckpt_cfg
+                                         if ckpt == "default" else ckpt))
         return build_chaos_timeline(
             spec, n_ticks=n_ticks, dt=self.dt, n_hosts=self.n_hosts,
             task_host=self.task_host, task_region=self.task_region,
@@ -864,10 +1134,13 @@ class JaxStreamEngine:
                  failover=None,
                  ckpt=None,
                  task_speed_override: dict[int, float] | None = None,
-                 seed: int = 0):
+                 seed: int = 0, phase_mode: str = "auto"):
         if isinstance(chaos, ChaosEngine):
             chaos = chaos.spec
-        self.spec = chaos or ChaosSpec()
+        elif isinstance(chaos, (list, tuple)):
+            chaos = [c.spec if isinstance(c, ChaosEngine)
+                     else (c or ChaosSpec()) for c in chaos]
+        self.spec = chaos if chaos is not None else ChaosSpec()
         self.g = graph.graph if isinstance(graph, PackedArena) else graph
         if isinstance(graph, PackedArena):
             dt = graph.dt
@@ -875,7 +1148,7 @@ class JaxStreamEngine:
         self._override = task_speed_override
         self._low = _Lowered(graph, n_hosts=n_hosts, dt=dt,
                              queue_cap=queue_cap, failover=failover,
-                             ckpt=ckpt, seed=seed)
+                             ckpt=ckpt, seed=seed, phase_mode=phase_mode)
         self.metrics: JaxEngineMetrics | None = None
 
     @property
@@ -947,7 +1220,29 @@ def _prep_batch(low: "_Lowered", specs, n_ticks: int, task_speed_override):
     return batch_state, xs, tls
 
 
-def _as_specs(seeds, base_spec) -> list[ChaosSpec]:
+def perjob_sweep_seed(base_seed: int, sweep_seed: int, job: int) -> int:
+    """Collision-free derived seed for job `job` of sweep seed
+    `sweep_seed` under a per-job base spec (SeedSequence entropy mix —
+    distinct cells cannot share a stream)."""
+    return int(np.random.SeedSequence(
+        (int(base_seed), int(sweep_seed), int(job))).generate_state(1)[0])
+
+
+def _as_specs(seeds, base_spec) -> list:
+    """Merge sweep seeds into the base spec. A per-job `base_spec` LIST
+    (packed arenas) yields one per-job spec list per seed: job j of
+    sweep seed s draws from ``perjob_sweep_seed(base[j].seed, s, j)`` —
+    a `np.random.SeedSequence` mix of (base seed, sweep seed, job), so
+    every (seed, job) cell gets a distinct, reproducible stream even
+    when base seeds are heterogeneous (plain ``base.seed + s*K + j``
+    arithmetic can collide across cells). Entries of `seeds` that are
+    already specs (or per-job spec lists) pass through untouched."""
+    if isinstance(base_spec, (list, tuple)):
+        base = [b or ChaosSpec() for b in base_spec]
+        return [[dataclasses.replace(b, seed=perjob_sweep_seed(
+                    b.seed, int(s), j)) for j, b in enumerate(base)]
+                if isinstance(s, (int, np.integer)) else s
+                for s in seeds]
     return [dataclasses.replace(base_spec or ChaosSpec(), seed=int(s))
             if isinstance(s, (int, np.integer)) else s for s in seeds]
 
@@ -960,7 +1255,8 @@ def run_batch(graph: LogicalGraph | PackedArena, seeds, *,
               ckpt=None,
               task_speed_override: dict[int, float] | None = None,
               seed: int = 0, pad_seeds: bool = True,
-              devices: int | str | None = None) -> JaxBatchMetrics:
+              devices: int | str | None = None,
+              phase_mode: str = "auto") -> JaxBatchMetrics:
     """Run a ``(S,)`` batch of chaos scenarios as ONE vmapped `jit` call
     (one call *per device shard* when `devices` is set).
 
@@ -983,7 +1279,8 @@ def run_batch(graph: LogicalGraph | PackedArena, seeds, *,
     if not specs:
         raise ValueError("run_batch requires at least one seed/spec")
     low = _Lowered(graph, n_hosts=n_hosts, dt=dt, queue_cap=queue_cap,
-                   failover=failover, ckpt=ckpt, seed=seed)
+                   failover=failover, ckpt=ckpt, seed=seed,
+                   phase_mode=phase_mode)
     n_ticks = int(round(duration_s / low.dt))
     batch_state, xs, tls = _prep_batch(low, specs, n_ticks,
                                        task_speed_override)
@@ -1016,8 +1313,8 @@ def run_mix_batch(graph: LogicalGraph | PackedArena, mixes, seeds, *,
                   failover=None,
                   ckpt=None,
                   task_speed_override: dict[int, float] | None = None,
-                  seed: int = 0,
-                  pad_seeds: bool = True) -> list[JaxBatchMetrics]:
+                  seed: int = 0, pad_seeds: bool = True,
+                  phase_mode: str = "auto") -> list[JaxBatchMetrics]:
     """Sweep an ``(M, S)`` grid of job-mix × chaos-seed scenarios in ONE
     doubly-vmapped `jit` call (the second vmap axis over job-mix configs).
 
@@ -1032,7 +1329,8 @@ def run_mix_batch(graph: LogicalGraph | PackedArena, mixes, seeds, *,
     if not specs:
         raise ValueError("run_mix_batch requires at least one seed/spec")
     low = _Lowered(graph, n_hosts=n_hosts, dt=dt, queue_cap=queue_cap,
-                   failover=failover, ckpt=ckpt, seed=seed)
+                   failover=failover, ckpt=ckpt, seed=seed,
+                   phase_mode=phase_mode)
     mixes = np.atleast_2d(np.asarray(mixes, dtype=np.float64))
     if mixes.shape[1] != low.n_jobs:
         raise ValueError(
@@ -1111,7 +1409,9 @@ def run_config_batch(graph: LogicalGraph | PackedArena, configs, seeds, *,
                      mixes=None, n_hosts: int = 8,
                      dt: float = 0.5, queue_cap: float = 256.0,
                      task_speed_override: dict[int, float] | None = None,
-                     seed: int = 0, pad_seeds: bool = True):
+                     seed: int = 0, pad_seeds: bool = True,
+                     devices: int | str | None = None,
+                     phase_mode: str = "auto"):
     """Sweep a ``(C, S)`` grid of resiliency-config × chaos-seed
     scenarios in ONE doubly-vmapped `jit` call — the third vmap axis of
     the engine, over `FailoverConfig`/`CheckpointConfig` grids.
@@ -1137,7 +1437,7 @@ def run_config_batch(graph: LogicalGraph | PackedArena, configs, seeds, *,
         raise ValueError("run_config_batch requires at least one config")
     low = _Lowered(graph, n_hosts=n_hosts, dt=dt, queue_cap=queue_cap,
                    failover=norm[0]["failover"], ckpt=norm[0]["ckpt"],
-                   seed=seed)
+                   seed=seed, phase_mode=phase_mode)
     n_ticks = int(round(duration_s / low.dt))
     n_seeds, n_cfg = len(specs), len(norm)
     jot = (low.job_of_task if low.job_of_task is not None
@@ -1177,7 +1477,37 @@ def run_config_batch(graph: LogicalGraph | PackedArena, configs, seeds, *,
         # one (S, T, H) tensor broadcast over the config axis in-trace
         kills = np.stack([tl.kills for tl in base_tls]).astype(np.float64)
         ckpt_xs = np.zeros((n_cfg, n_ticks), np.int16)
+    elif all(cfg["ckpt"] is None or isinstance(cfg["ckpt"],
+                                               CheckpointConfig)
+             for cfg in norm) and all(isinstance(sp, ChaosSpec)
+                                      for sp in specs):
+        # ckpt-bearing grid, single coordinators: the chaos draw streams
+        # are materialized ONCE per seed and every config's checkpoint
+        # attempt schedule is refitted onto them as vectorized offset
+        # indexing — zero per-(config, seed) host timeline replays
+        # (core.chaos.build_grid_timelines; timeline_build_count stays
+        # flat, pinned by tests/test_sparse_sweep.py)
+        cfg_rows = []
+        for cfg, (codes, det, rst_s, rst_r) in zip(norm, fo_vecs):
+            ck = cfg["ckpt"]
+            cfg_rows.append(dict(
+                failover_mode=codes, detect_s=det,
+                region_restart_s=rst_r, single_restart_s=rst_s,
+                ckpt_interval_s=(ck.interval_s if ck else None),
+                ckpt_mode=(ck.mode if ck else "region"),
+                ckpt_upload_s=(ck.upload_s if ck else 4.0),
+                ckpt_retry=(ck.retry_failed_region if ck else True)))
+        tls = build_grid_timelines(
+            specs, cfg_rows, n_ticks=n_ticks, dt=low.dt,
+            n_hosts=low.n_hosts, task_host=low.task_host,
+            task_region=low.task_region, regions=low.phys.regions,
+            job_of_task=low.job_of_task)
+        kills = np.stack([[tl.kills for tl in row]
+                          for row in tls]).astype(np.float64)
+        ckpt_xs = np.stack([row[0].ckpt_at for row in tls])
     else:
+        # exotic rows (per-job coordinator lists / per-job chaos specs):
+        # config-specific draw interleavings force per-config rebuilds
         tls = [[low.timeline(sp, n_ticks, fo_codes=codes, detect=det,
                              rst_s=rst_s, rst_r=rst_r, ckpt=cfg["ckpt"])
                 for sp in specs]
@@ -1190,12 +1520,20 @@ def run_config_batch(graph: LogicalGraph | PackedArena, configs, seeds, *,
     batch_state = EngineState(*(np.stack([getattr(s, f) for s in states])
                                 for f in EngineState._fields))
     xs = {"t": tls[0][0].ts, "kills": kills, "ckpt": ckpt_xs}
+    if devices is not None and mixes is not None:
+        raise ValueError("devices= does not compose with mixes= "
+                         "(shard the config grid without a mix axis)")
+    n_shards = local_shard_count(devices)
     batch_state, xs = _pad_batch(batch_state, xs, n_seeds, pad_seeds,
-                                 kills_axis=0 if no_ckpt else 1)
+                                 n_shards, kills_axis=0 if no_ckpt else 1)
     jobs = low.arena.jobs if low.arena is not None else None
 
     if mixes is None:
-        fn = get_cached_config_fn(low.desc, shared_kills=no_ckpt)
+        if devices is not None:
+            fn = get_sharded_config_fn(low.desc, n_shards,
+                                       shared_kills=no_ckpt)
+        else:
+            fn = get_cached_config_fn(low.desc, shared_kills=no_ckpt)
     else:
         mixes = np.atleast_2d(np.asarray(mixes, dtype=np.float64))
         if mixes.shape[1] != low.n_jobs:

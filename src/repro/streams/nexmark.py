@@ -111,6 +111,29 @@ def q12_arena(n_tasks: int = 10_000, parallelism: int = 8,
                       queue_cap=queue_cap)
 
 
+def ss_arena(n_tasks: int = 10_000, parallelism: int = 8,
+             n_hosts: int = 64, dt: float = 0.5,
+             queue_cap: float = 256.0, host_map: str = "shared"):
+    """10k-task-scale *deep-pipeline* mega-arena: K co-located Sample
+    Stitching jobs — ``K = n_tasks // (7 * parallelism)`` — packed into
+    ONE flat arena over a shared host pool.
+
+    SS is the deepest paper workload (7 ops, dual sources, a serialized
+    two-in-edge join): its packed arena schedules SIX tick phases, each
+    touching only 1–2 ops of every job — the workload class where the
+    compact (sparse-phase) lowering's per-phase active index sets beat
+    the dense arena-wide tick (`engine.lower_tensor_plan(mode=...)`,
+    benchmarks/bench_sweep_scale.py). Returns a `PackedArena`.
+    """
+    from repro.streams.engine import pack_arena
+
+    per_job = 7 * parallelism
+    n_jobs = max(1, n_tasks // per_job)
+    jobs = [ss(parallelism=parallelism) for _ in range(n_jobs)]
+    return pack_arena(jobs, host_map, n_hosts=n_hosts, dt=dt,
+                      queue_cap=queue_cap)
+
+
 # ----------------------------------------------------------------------
 # Record-level vectorized operator kernels (correctness oracle + micro bench)
 # ----------------------------------------------------------------------
