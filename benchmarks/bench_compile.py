@@ -8,6 +8,13 @@ keeps a constant op count (the acceptance bar for ISSUE 4). Also runs a
 10k-task Q12 (configs × seeds) resiliency sweep through
 `chaos_sweep.sweep_configs` to record end-to-end throughput at scale.
 
+Each compiled lowering's record now also carries its XLA cost model —
+per-run HLO FLOP/byte estimates through `launch.roofline.kernel_roofline`
+(arithmetic intensity + compute/memory bound) and the
+`launch.hlo_stats.hlo_op_counts` opcode histogram — alongside the jaxpr
+eqn counts, so trace size, emitted op mix, and roofline position travel
+together in one record.
+
 Emits the usual CSV rows through benchmarks/run.py and writes
 ``results/bench_compile.json`` for the perf trajectory. Quick mode
 (REPRO_BENCH_QUICK=1) shrinks to one small arena and skips the JSON.
@@ -59,7 +66,15 @@ def count_eqns(jaxpr) -> int:
 
 
 def _measure(run_fn, arrays, state, xs) -> dict:
-    """Trace + cold-compile one run fn AOT; report eqns and seconds."""
+    """Trace + cold-compile one run fn AOT; report eqns, seconds, and
+    the compiled artifact's cost model: HLO FLOP/byte estimates
+    (`launch.hlo_stats.cost_stats`) fed through the chip roofline
+    (`launch.roofline.kernel_roofline`) plus the HLO opcode histogram
+    (`hlo_op_counts`) — so each lowering's record carries *what XLA
+    actually emitted*, not just how long it took."""
+    from repro.launch.hlo_stats import cost_stats, hlo_op_counts
+    from repro.launch.roofline import kernel_roofline
+
     with _enable_x64():
         t0 = time.perf_counter()
         jaxpr = jax.make_jaxpr(run_fn)(arrays, state, xs)
@@ -67,10 +82,21 @@ def _measure(run_fn, arrays, state, xs) -> dict:
         t0 = time.perf_counter()
         compiled = jax.jit(run_fn).lower(arrays, state, xs).compile()
         compile_s = time.perf_counter() - t0
+        cost = cost_stats(compiled)
+        roof = kernel_roofline(cost["flops"], cost["bytes_accessed"])
+        ops = hlo_op_counts(compiled.as_text())
         del compiled
+    top_ops = dict(sorted(ops.items(), key=lambda kv: -kv[1])[:12])
     return {"eqns": count_eqns(jaxpr.jaxpr),
             "trace_s": round(trace_s, 3),
-            "compile_s": round(compile_s, 3)}
+            "compile_s": round(compile_s, 3),
+            "hlo_flops": cost["flops"],
+            "hlo_bytes": cost["bytes_accessed"],
+            "intensity_flops_per_byte":
+                round(roof["intensity_flops_per_byte"], 4),
+            "roofline_bound": roof["bound"],
+            "hlo_op_total": sum(ops.values()),
+            "hlo_top_ops": top_ops}
 
 
 def compile_study(n_tasks: int, n_ticks: int = 4) -> dict:
@@ -119,10 +145,14 @@ def run():
         records.append(rec)
         yield (f"compile_new_{rec['n_tasks']}t",
                rec["new"]["compile_s"] * 1e6,
-               f"eqns={rec['new']['eqns']}")
+               f"eqns={rec['new']['eqns']};"
+               f"hlo_ops={rec['new']['hlo_op_total']};"
+               f"{rec['new']['roofline_bound']}-bound@"
+               f"{rec['new']['intensity_flops_per_byte']}f/B")
         yield (f"compile_old_{rec['n_tasks']}t",
                rec["old"]["compile_s"] * 1e6,
                f"eqns={rec['old']['eqns']};"
+               f"hlo_ops={rec['old']['hlo_op_total']};"
                f"speedup={rec['compile_speedup']}x")
     sw = sweep_study(sizes[-1] if quick else 9984,
                      n_seeds=4 if quick else 8,

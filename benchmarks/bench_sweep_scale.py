@@ -249,6 +249,13 @@ def write_summary() -> dict:
     if isinstance(col, dict) and "speedup_vs_separate" in col:
         heads["colocation_speedup"] = col["speedup_vs_separate"]
         heads["colocation_scenarios_per_s"] = col.get("scenarios_per_s")
+    tk = summary.get("bench_tick_kernel", {})
+    if tk.get("engine"):
+        heads["pallas_tick_speedup"] = tk["engine"].get(
+            "pallas_vs_compact_speedup")
+    if tk.get("mega"):
+        heads["mega_job_scenarios_per_pass"] = tk["mega"].get(
+            "job_scenarios")
     payload = {"headlines": heads, "sources": sorted(summary)}
     (RESULTS / "bench_summary.json").write_text(
         json.dumps(payload, indent=2))

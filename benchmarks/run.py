@@ -35,6 +35,7 @@ MODULES = [
     "benchmarks.bench_colocation",          # multi-job mega-arena sweeps
     "benchmarks.bench_compile",             # tensorized-tick compile cost
     "benchmarks.bench_sweep_scale",         # sparse-phase + sharded grids
+    "benchmarks.bench_tick_kernel",         # fused Pallas tick phases
     "benchmarks.bench_kernels",             # §V-C micro benchmarking
 ]
 
@@ -44,6 +45,7 @@ QUICK_MODULES = [
     "benchmarks.bench_colocation",          # multi-job mega-arena sweeps
     "benchmarks.bench_compile",             # tensorized-tick compile cost
     "benchmarks.bench_sweep_scale",         # sparse-phase + sharded grids
+    "benchmarks.bench_tick_kernel",         # fused Pallas tick phases
     "benchmarks.bench_weakhash",            # WeakHash assignment path
     "benchmarks.bench_hotupdate",           # pure-python, fast
 ]
@@ -56,17 +58,37 @@ def main() -> None:
     if quick:
         os.environ["REPRO_BENCH_QUICK"] = "1"
     print("name,us_per_call,derived")
-    failures = 0
+    failed: list[tuple[str, str, str]] = []
     for mod_name in (QUICK_MODULES if quick else MODULES):
+        # step the generator explicitly: a bench that dies mid-module
+        # keeps the rows it already produced, the failure row names the
+        # exact bench (module + last completed row), and the remaining
+        # modules still run
+        last = "<import>"
         try:
-            mod = importlib.import_module(mod_name)
-            for name, us, derived in mod.run():
-                print(f"{name},{us:.1f},{derived}", flush=True)
+            it = iter(importlib.import_module(mod_name).run())
         except Exception:
-            failures += 1
-            print(f"{mod_name},ERROR,{traceback.format_exc(limit=2)!r}",
-                  flush=True)
-    if failures:
+            failed.append((mod_name, last, traceback.format_exc(limit=2)))
+            print(f"{mod_name},ERROR,import/setup failed", flush=True)
+            continue
+        while True:
+            try:
+                name, us, derived = next(it)
+            except StopIteration:
+                break
+            except Exception:
+                failed.append((mod_name, last,
+                               traceback.format_exc(limit=2)))
+                print(f"{mod_name},ERROR,failed after row {last!r}",
+                      flush=True)
+                break
+            print(f"{name},{us:.1f},{derived}", flush=True)
+            last = name
+    if failed:
+        print(f"\n{len(failed)} bench module(s) FAILED:", file=sys.stderr)
+        for mod_name, last, tb in failed:
+            print(f"--- {mod_name} (after row {last!r})\n{tb}",
+                  file=sys.stderr)
         sys.exit(1)
 
 

@@ -8,6 +8,8 @@
 #   scripts/ci.sh --config-smoke      # also run a small (seeds × configs) resiliency grid
 #   scripts/ci.sh --sparse-smoke      # also run a sharded config grid through the COMPACT
 #                                     # (sparse-phase) tick over a deep-pipeline arena
+#   scripts/ci.sh --pallas-smoke      # also run a 16-seed sweep through the fused PALLAS
+#                                     # tick (interpreter impl, native kernel-grid batch)
 #
 # Smoke targets fail LOUDLY on silent lowering fallbacks: the sparse
 # smoke exports REPRO_REQUIRE_PHASE_MODE=compact (the engine refuses to
@@ -48,6 +50,12 @@ if [[ "${1:-}" == "--sparse-smoke" ]]; then
   REPRO_REQUIRE_PHASE_MODE=compact \
     python examples/sparse_sweep.py --jobs 18 --configs 2 --seeds 8 \
       --duration 60 --devices 2 --ckpt
+fi
+
+if [[ "${1:-}" == "--pallas-smoke" ]]; then
+  echo "== pallas smoke: fused-kernel tick, 16 seeds, interpreter impl =="
+  REPRO_REQUIRE_PHASE_MODE=pallas REPRO_KERNEL_IMPL=interpret \
+    python examples/pallas_sweep.py --jobs 6 --seeds 16 --duration 60
 fi
 
 echo "CI OK"

@@ -1,0 +1,19 @@
+"""Fused tick-phase kernel: one launch per `engine.CompactPhase`.
+
+The entire routing phase of the tensorized tick — task-state gather,
+per-edge normalization, head-of-line ``segment_min``, per-group /
+per-block ``segment_sum`` reduces and the accept-mask application —
+runs as ONE fused ``pallas_call`` with the seed (scenario) axis as the
+Pallas grid dimension and the pow2 row-table buckets as block shapes
+(`kernel.py`). `ref.py` is the seed-batched jnp oracle (also the
+non-TPU lowering); `ops.py` packs the `CompactPhase` tables and
+dispatches pallas / interpret / ref. Consumed by
+`streams.jax_engine._build_pallas_run` (``phase_mode="pallas"``).
+"""
+from repro.kernels.tick_phase.ops import (DF_ROWS, DI_ROWS, TABLE_KEYS,
+                                          choose_seed_block,
+                                          pack_phase_tables, table_bytes,
+                                          tick_phase)
+
+__all__ = ["DF_ROWS", "DI_ROWS", "TABLE_KEYS", "choose_seed_block",
+           "pack_phase_tables", "table_bytes", "tick_phase"]

@@ -1,0 +1,166 @@
+"""Pallas kernel: one fused launch per `engine.CompactPhase` phase.
+
+Grid ``(S // sb,)`` — the seed (scenario) axis is the Pallas grid
+dimension; each program owns an ``(sb, n_tasks)`` seed block of the
+three task-state inputs and the full pow2 row-table bucket set (the
+PR 5 compact tables ride along as full-block inputs, so block shapes
+ARE the bucket signature). The whole routing phase fuses into the one
+launch:
+
+  stage 1 (gather + route): task-state gathers, per-source-op slot
+     totals, forward / per-block rescale / weakhash group-capacity /
+     backlog normalization — the ``(sb, D)`` arriving accumulator lands
+     in a VMEM scratch shared with the later stages (it never
+     round-trips through HBM between the route, drop and accept
+     stages, which is the entire point of the fusion).
+  stage 2 (dead-single drop): single_task-mode drops split off the
+     arriving scratch; the head-of-line free/arriving ratio lands in
+     the second shared scratch.
+  stage 3 (accept + overflow): per-edge / per-block row minima over the
+     ratio scratch, accept-mask application, per-edge overflow rows.
+
+Numerics mirror `jax_engine._build_compact_run` term for term (pads
++0.0 into sums / +inf into minima, every epsilon and fallback select
+identical) so the fused phase holds 1e-12 parity with the dense and
+compact lowerings. ``interpret=True`` runs the same kernel through the
+Pallas interpreter on CPU — jit/vmap/scan-traceable, used by CI.
+
+Seed-block sizing comes from `launch.roofline.choose_block_rows`
+against the VMEM budget (see `ops.choose_seed_block`), not guesswork.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.flash_attention.kernel import pltpu_scratch
+from repro.kernels.tick_phase.ops import TABLE_KEYS
+
+
+def _phase_kernel(p_ref, alive_ref, free_ref, di_ref, df_ref, sidx_ref,
+                  smask_ref, soe_ref, eri_ref, erm_ref, gri_ref, grm_ref,
+                  bri_ref, brm_ref, bsi_ref, bsm_ref,
+                  acc_ref, drop_ref, ovf_ref, arr_scr, ratio_scr, *,
+                  has_blk, has_grp):
+    def rsum(vals, idx, mask):
+        return (vals[:, idx] * mask).sum(-1)
+
+    def rmin(vals, idx, mask):
+        return jnp.where(mask > 0.5, vals[:, idx], jnp.inf).min(-1)
+
+    produced = p_ref[...]                                # (sb, n_tasks)
+    alive = alive_ref[...]
+    free = free_ref[...]
+    dst, fwd_src, edge_of, grp_of, blk_of = di_ref[...]
+    (m_fwd, m_blk, m_hash, m_wh, m_bk, is_norm, m_acc_s, m_acc_b,
+     dinb, share, mass, qcap_d, mode_s_d) = df_ref[...]
+    eri, erm = eri_ref[...], erm_ref[...]
+    alive_d = alive[:, dst]                              # (sb, D)
+    free_d = free[:, dst]
+
+    # ---- stage 1: gather + route → arriving lands in shared scratch
+    tot_slot = rsum(produced, sidx_ref[...], smask_ref[...])
+    tot_e = tot_slot[:, soe_ref[...][0]]
+    tot_d = tot_e[:, edge_of]
+    arr_fwd = produced[:, fwd_src] * alive_d
+    if has_blk:
+        prod_blk = rsum(produced, bsi_ref[...], bsm_ref[...])
+        alive_blk = rsum(alive_d * dinb, bri_ref[...], brm_ref[...])
+        has = alive_blk > 0.0
+        rate_blk = jnp.where(has,
+                             prod_blk / jnp.where(has, alive_blk, 1.0),
+                             0.0)
+        arr_blk = jnp.where(dinb > 0.0, rate_blk[:, blk_of] * alive_d,
+                            0.0)
+    else:
+        arr_blk = jnp.zeros_like(alive_d)
+    if has_grp:
+        wh = m_wh > 0.5
+        cap_w = jnp.maximum(free_d, 1e-9) * alive_d
+        alive_eps = alive_d + 1e-9
+        gri, grm = gri_ref[...], grm_ref[...]
+        capsum = rsum(jnp.where(wh, cap_w, 0.0), gri, grm)
+        capsum_fb = rsum(jnp.where(wh, alive_eps, 0.0), gri, grm)
+        fall = capsum <= 0.0
+        cap2 = jnp.where(fall[:, grp_of], alive_eps, cap_w) * alive_d
+        capsum2 = jnp.where(fall, capsum_fb, capsum)
+        val_wh = cap2 * mass / capsum2[:, grp_of]
+    else:
+        val_wh = jnp.zeros_like(alive_d)
+    open_ = (free_d > qcap_d * 0.25).astype(produced.dtype)
+    val_bk = (jnp.maximum(free_d, 1e-9) * alive_d
+              * jnp.maximum(open_, 0.05))
+    val_nrm = jnp.where(m_wh > 0.5, val_wh,
+                        jnp.where(m_bk > 0.5, val_bk,
+                                  alive_d)) * is_norm
+    rs = rsum(val_nrm, eri, erm)
+    ratio_e = jnp.where(rs > 0.0, tot_e / rs, 0.0)
+    arr_nrm = val_nrm * ratio_e[:, edge_of]
+    arr_scr[...] = jnp.where(m_fwd > 0.5, arr_fwd,
+                             jnp.where(m_blk > 0.5, arr_blk,
+                                       jnp.where(m_hash > 0.5,
+                                                 tot_d * share,
+                                                 arr_nrm)))
+
+    # ---- stage 2: dead-single drops + head-of-line ratio scratch
+    arriving = arr_scr[...]
+    dead_s = (alive_d <= 0.0) & (mode_s_d > 0.0)
+    drop_ref[...] = jnp.where(dead_s, arriving, 0.0)
+    arriving = jnp.where(dead_s, 0.0, arriving)
+    live = arriving > 1e-9
+    ratio_scr[...] = jnp.where(live,
+                               free_d / jnp.maximum(arriving, 1e-300),
+                               jnp.inf)
+
+    # ---- stage 3: row minima over the ratio scratch → accept + overflow
+    ratio = ratio_scr[...]
+    lam_e = jnp.minimum(rmin(ratio, eri, erm), 1.0)
+    if has_blk:
+        lam_b = jnp.minimum(rmin(ratio, bri_ref[...], brm_ref[...]), 1.0)
+        acc_blk = arriving * lam_b[:, blk_of]
+    else:
+        acc_blk = arriving
+    accepted = jnp.where(m_acc_s > 0.5, arriving * lam_e[:, edge_of],
+                         jnp.where(m_acc_b > 0.5, acc_blk,
+                                   jnp.minimum(arriving, free_d)))
+    acc_ref[...] = accepted
+    ovf_ref[...] = rsum(arriving - accepted, eri, erm)
+
+
+def fused_phase(produced, alive, free, tb, *, has_blk, has_grp,
+                seed_block=None, interpret=False):
+    """One fused ``pallas_call`` over the seed-block grid; same contract
+    as `ref.tick_phase_ref`."""
+    S, n_tasks = produced.shape
+    D = tb["di"].shape[1]
+    E = tb["er_idx"].shape[0]
+    sb = min(seed_block or S, S)
+    while S % sb:
+        sb //= 2
+    sb = max(sb, 1)
+
+    def seed_spec(cols):
+        return pl.BlockSpec((sb, cols), lambda s: (s, 0))
+
+    def full_spec(shape):
+        return pl.BlockSpec(shape, lambda s: (0,) * len(shape))
+
+    dt = produced.dtype
+    acc, drop, ovf = pl.pallas_call(
+        functools.partial(_phase_kernel, has_blk=has_blk,
+                          has_grp=has_grp),
+        grid=(S // sb,),
+        in_specs=([seed_spec(n_tasks)] * 3
+                  + [full_spec(tb[k].shape) for k in TABLE_KEYS]),
+        out_specs=[seed_spec(D), seed_spec(D), seed_spec(E)],
+        out_shape=[jax.ShapeDtypeStruct((S, D), dt),
+                   jax.ShapeDtypeStruct((S, D), dt),
+                   jax.ShapeDtypeStruct((S, E), dt)],
+        scratch_shapes=[pltpu_scratch((sb, D), dt),
+                        pltpu_scratch((sb, D), dt)],
+        interpret=interpret,
+    )(produced, alive, free, *(tb[k] for k in TABLE_KEYS))
+    return acc, drop, ovf

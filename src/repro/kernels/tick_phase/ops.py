@@ -1,0 +1,97 @@
+"""jit-level wrapper for the fused tick-phase kernel with impl dispatch.
+
+`pack_phase_tables` stacks a traced `engine.CompactPhase` edge dict
+(``pa["edges"][fi]``) into the kernel's input layout — two packed
+row-major tables (int structure + float masks/params, one ref each
+inside the kernel instead of ~20) plus the pow2 row buckets.
+`tick_phase` dispatches pallas / interpret / ref via
+`repro.kernels.common.resolve_impl`; the seed-block grid size comes
+from `launch.roofline.choose_block_rows` against the VMEM budget.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.common import resolve_impl
+from repro.kernels.tick_phase import ref
+from repro.launch.roofline import choose_block_rows
+
+# di/df packed-table row layouts (keep in sync with ref.tick_phase_ref
+# and kernel._phase_kernel unpacking)
+DI_ROWS = ("dst_task", "fwd_src", "edge_of", "grp_of", "blk_of")
+DF_ROWS = ("m_fwd", "m_blk", "m_hash", "m_weakhash", "m_backlog",
+           "is_norm", "m_acc_static", "m_acc_block", "dst_in_blk",
+           "share", "mass", "qcap_d", "mode_single_d")
+# kernel input order after the three task-state blocks
+TABLE_KEYS = ("di", "df", "s_idx", "s_mask", "soe", "er_idx", "er_mask",
+              "gr_idx", "gr_mask", "br_idx", "br_mask", "bs_idx",
+              "bs_mask")
+
+
+def pack_phase_tables(eph: dict, qcap, mode_single) -> dict:
+    """Pack one phase's traced `CompactPhase` dict into the kernel
+    table layout. ``qcap_d`` / ``mode_single_d`` are pre-gathered onto
+    the dst axis here (once per run, outside the scan) so the kernel
+    never touches the arena-sized config rows."""
+    dst = jnp.asarray(eph["dst_task"], jnp.int32)
+    di = jnp.stack([dst] + [jnp.asarray(eph[k], jnp.int32)
+                            for k in DI_ROWS[1:]])
+    df = jnp.stack([jnp.asarray(eph[k]) for k in DF_ROWS[:-2]]
+                   + [jnp.asarray(qcap)[dst],
+                      jnp.asarray(mode_single)[dst]])
+    return {
+        "di": di, "df": df,
+        "s_idx": jnp.asarray(eph["s_idx"], jnp.int32),
+        "s_mask": jnp.asarray(eph["s_mask"]),
+        "soe": jnp.asarray(eph["slot_of_edge"], jnp.int32)[None, :],
+        "er_idx": jnp.asarray(eph["er_idx"], jnp.int32),
+        "er_mask": jnp.asarray(eph["er_mask"]),
+        "gr_idx": jnp.asarray(eph["gr_idx"], jnp.int32),
+        "gr_mask": jnp.asarray(eph["gr_mask"]),
+        "br_idx": jnp.asarray(eph["br_idx"], jnp.int32),
+        "br_mask": jnp.asarray(eph["br_mask"]),
+        "bs_idx": jnp.asarray(eph["bs_idx"], jnp.int32),
+        "bs_mask": jnp.asarray(eph["bs_mask"]),
+    }
+
+
+def table_bytes(tb: dict) -> int:
+    """Static VMEM footprint of one phase's packed tables."""
+    return int(sum(np.prod(v.shape) * v.dtype.itemsize
+                   for v in tb.values()))
+
+
+def choose_seed_block(n_seeds: int, n_tasks: int, D: int, E: int,
+                      tbytes: int) -> int:
+    """Seed-block rows for the phase grid, sized against the VMEM
+    budget: per-seed working set = the three (n_tasks,) task-state
+    rows + ~8 (D,) stage intermediates (the two shared scratch
+    accumulators, the three outputs, routing temps) + 2 (E,) edge
+    rows, all f64; the packed tables are grid-invariant residents."""
+    row_bytes = (3 * n_tasks + 8 * D + 2 * E) * 8
+    sb = min(choose_block_rows(row_bytes, fixed_bytes=tbytes), n_seeds)
+    while n_seeds % sb:
+        sb //= 2
+    return max(sb, 1)
+
+
+def tick_phase(produced, alive, free, tb, *, has_blk: bool,
+               has_grp: bool, impl: str | None = None,
+               seed_block: int | None = None):
+    """(accepted, dropped_d, overflow_e) of one fused routing phase
+    over a ``(S, n_tasks)`` seed batch — see `ref.tick_phase_ref` for
+    the contract, `kernel.fused_phase` for the launch."""
+    impl = resolve_impl(impl)
+    if impl == "ref":
+        return ref.tick_phase_ref(produced, alive, free, tb,
+                                  has_blk=has_blk, has_grp=has_grp)
+    from repro.kernels.tick_phase import kernel
+    if seed_block is None:
+        seed_block = choose_seed_block(
+            produced.shape[0], produced.shape[1], tb["di"].shape[1],
+            tb["er_idx"].shape[0], table_bytes(tb))
+    return kernel.fused_phase(produced, alive, free, tb,
+                              has_blk=has_blk, has_grp=has_grp,
+                              seed_block=seed_block,
+                              interpret=(impl == "interpret"))

@@ -1,0 +1,105 @@
+"""jnp oracle of the fused tick-phase kernel (also the non-TPU path).
+
+Exactly the row-table math of `jax_engine._build_compact_run`'s routing
+block, natively batched over a leading ``(S,)`` seed axis: row gathers
+become 2D column gathers, pads keep contributing exact +0.0 to sums and
++inf to head-of-line minima, and every epsilon / fallback select is
+byte-for-byte the compact tick's (including the weakhash dummy-entry
+0/0 that the fallback ``where`` selects away), so pallas == compact ==
+dense at 1e-12 (tests/test_pallas_tick.py).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _rsum(vals, idx, mask):
+    return (vals[:, idx] * mask).sum(-1)
+
+
+def _rmin(vals, idx, mask):
+    return jnp.where(mask > 0.5, vals[:, idx], jnp.inf).min(-1)
+
+
+def tick_phase_ref(produced, alive, free, tb, *, has_blk: bool,
+                   has_grp: bool):
+    """One routing phase over a seed batch.
+
+    ``produced`` / ``alive`` / ``free`` are ``(S, n_tasks)``; ``tb`` is
+    the packed table dict from `ops.pack_phase_tables`. Returns
+    ``(accepted, dropped_d, overflow_e)`` of shapes ``(S, D)`` /
+    ``(S, D)`` / ``(S, E)`` — the caller deposits, attributes drops to
+    job segments and re-queues edge overflow exactly as the compact
+    tick does."""
+    dst, fwd_src, edge_of, grp_of, blk_of = tb["di"]
+    (m_fwd, m_blk, m_hash, m_wh, m_bk, is_norm, m_acc_s, m_acc_b,
+     dinb, share, mass, qcap_d, mode_s_d) = tb["df"]
+    alive_d = alive[:, dst]
+    free_d = free[:, dst]
+    # per-source-op slot totals — O(live src tasks)
+    tot_slot = _rsum(produced, tb["s_idx"], tb["s_mask"])
+    tot_e = tot_slot[:, tb["soe"][0]]
+    tot_d = tot_e[:, edge_of]
+    # forward: pointwise src task → dst task
+    arr_fwd = produced[:, fwd_src] * alive_d
+    # rescale family: per-block rate over alive destinations
+    if has_blk:
+        prod_blk = _rsum(produced, tb["bs_idx"], tb["bs_mask"])
+        alive_blk = _rsum(alive_d * dinb, tb["br_idx"], tb["br_mask"])
+        has = alive_blk > 0.0
+        rate_blk = jnp.where(has,
+                             prod_blk / jnp.where(has, alive_blk, 1.0),
+                             0.0)
+        arr_blk = jnp.where(dinb > 0.0, rate_blk[:, blk_of] * alive_d,
+                            0.0)
+    else:
+        arr_blk = jnp.zeros_like(alive_d)
+    # weakhash: group mass spread ∝ free capacity (fallback to
+    # alive-uniform when a whole group is down)
+    if has_grp:
+        wh = m_wh > 0.5
+        cap_w = jnp.maximum(free_d, 1e-9) * alive_d
+        alive_eps = alive_d + 1e-9
+        capsum = _rsum(jnp.where(wh, cap_w, 0.0), tb["gr_idx"],
+                       tb["gr_mask"])
+        capsum_fb = _rsum(jnp.where(wh, alive_eps, 0.0), tb["gr_idx"],
+                          tb["gr_mask"])
+        fall = capsum <= 0.0
+        cap2 = jnp.where(fall[:, grp_of], alive_eps, cap_w) * alive_d
+        capsum2 = jnp.where(fall, capsum_fb, capsum)
+        val_wh = cap2 * mass / capsum2[:, grp_of]
+    else:
+        val_wh = jnp.zeros_like(alive_d)
+    # backlog: divert away from congested channels
+    open_ = (free_d > qcap_d * 0.25).astype(produced.dtype)
+    val_bk = (jnp.maximum(free_d, 1e-9) * alive_d
+              * jnp.maximum(open_, 0.05))
+    val_nrm = jnp.where(m_wh > 0.5, val_wh,
+                        jnp.where(m_bk > 0.5, val_bk,
+                                  alive_d)) * is_norm
+    rs = _rsum(val_nrm, tb["er_idx"], tb["er_mask"])
+    ratio_e = jnp.where(rs > 0.0, tot_e / rs, 0.0)
+    arr_nrm = val_nrm * ratio_e[:, edge_of]
+    arriving = jnp.where(m_fwd > 0.5, arr_fwd,
+                         jnp.where(m_blk > 0.5, arr_blk,
+                                   jnp.where(m_hash > 0.5,
+                                             tot_d * share, arr_nrm)))
+    dead_s = (alive_d <= 0.0) & (mode_s_d > 0.0)
+    dropped_d = jnp.where(dead_s, arriving, 0.0)
+    arriving = jnp.where(dead_s, 0.0, arriving)
+    # acceptance: head-of-line / per-block / adaptive credits
+    live = arriving > 1e-9
+    ratio = jnp.where(live, free_d / jnp.maximum(arriving, 1e-300),
+                      jnp.inf)
+    lam_e = jnp.minimum(_rmin(ratio, tb["er_idx"], tb["er_mask"]), 1.0)
+    if has_blk:
+        lam_b = jnp.minimum(_rmin(ratio, tb["br_idx"], tb["br_mask"]),
+                            1.0)
+        acc_blk = arriving * lam_b[:, blk_of]
+    else:
+        acc_blk = arriving
+    accepted = jnp.where(m_acc_s > 0.5, arriving * lam_e[:, edge_of],
+                         jnp.where(m_acc_b > 0.5, acc_blk,
+                                   jnp.minimum(arriving, free_d)))
+    overflow_e = _rsum(arriving - accepted, tb["er_idx"], tb["er_mask"])
+    return accepted, dropped_d, overflow_e

@@ -105,6 +105,24 @@ def memory_stats(compiled) -> dict:
 
 def cost_stats(compiled) -> dict:
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):   # older jax: [dict] per device
+        ca = ca[0] if ca else {}
     return {"flops": float(ca.get("flops", 0.0)),
             "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
             "transcendentals": float(ca.get("transcendentals", 0.0))}
+
+
+_HLO_ANY_OP_RE = re.compile(r"=\s*(?:\([^)]*\)|\S+)\s+([a-z][\w-]*)\(")
+
+
+def hlo_op_counts(hlo_text: str) -> dict:
+    """Instruction-name histogram of compiled HLO text — the op-mix
+    companion to `cost_stats` (how many fusions / gathers / scatters /
+    reduces the lowering actually emitted). Keys are HLO opcode names,
+    values are instruction counts."""
+    counts: dict = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _HLO_ANY_OP_RE.search(line)
+        if m:
+            counts[m.group(1)] += 1
+    return dict(counts)

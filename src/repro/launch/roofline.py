@@ -30,6 +30,37 @@ PEAK_FLOPS = 197e12      # bf16 / chip
 HBM_BW = 819e9           # bytes/s
 ICI_BW = 50e9            # bytes/s/link
 CHIPS = 256              # single pod
+VMEM_BYTES = 16 * 2**20  # usable VMEM per core (conservative)
+
+
+def choose_block_rows(row_bytes: float, fixed_bytes: float = 0.0,
+                      budget: int = VMEM_BYTES,
+                      max_rows: int = 256) -> int:
+    """Largest pow2 block row count whose VMEM working set
+    (``fixed_bytes + rows × row_bytes``) fits the budget — the generic
+    grid-block sizer for hand-fused kernels (`repro.kernels.tick_phase`
+    sizes its seed-axis blocks with it; the grid-invariant row tables
+    are the fixed residents)."""
+    rows = max_rows
+    while rows > 1 and fixed_bytes + rows * row_bytes > budget:
+        rows //= 2
+    return rows
+
+
+def kernel_roofline(flops: float, hbm_bytes: float) -> dict:
+    """Roofline terms of one compiled function / kernel launch from its
+    HLO cost analysis (`launch.hlo_stats.cost_stats`): compute and
+    memory seconds under the chip constants above, arithmetic
+    intensity vs the machine balance, and which side bounds it. Used by
+    benchmarks/bench_compile.py and bench_tick_kernel.py to report
+    per-lowering FLOP/byte alongside jaxpr eqn counts."""
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm_bytes / HBM_BW
+    return {"flops": flops, "hbm_bytes": hbm_bytes,
+            "compute_s": compute_s, "memory_s": memory_s,
+            "intensity_flops_per_byte": flops / max(hbm_bytes, 1.0),
+            "machine_balance": PEAK_FLOPS / HBM_BW,
+            "bound": "compute" if compute_s >= memory_s else "memory"}
 
 
 def attn_flops(cfg: ModelConfig, shape: ShapeConfig, *, fwd_mult: float) -> float:

@@ -635,36 +635,57 @@ def _phase_work_estimate(plan: RoutingPlan, cphase, edges, n_phases):
     return dense, compact
 
 
-def select_phase_mode(plan: RoutingPlan, mode: str = "auto") -> str:
+def select_phase_mode(plan: RoutingPlan, mode: str = "auto",
+                      seed_width: int = 1) -> str:
     """Resolve a ``"auto"`` phase-lowering request: compact when the
     arena-sized segment reductions the sparse lowering eliminates
     clearly dominate its row-gather cost (deep pipelines / big
     multi-job arenas where each phase touches a small slice of the
-    arena), dense otherwise."""
-    if mode in ("dense", "compact"):
+    arena), dense otherwise. ``"pallas"`` (the fused-kernel lowering)
+    is never auto-selected — request it explicitly.
+
+    ``seed_width`` is the seed-axis batch width the tick will run
+    under (S, or S·C for config grids). The work estimate scores one
+    tick, but two compact costs amortize across the vmap width: the
+    fixed per-tick overhead (index-table loads are shared, not
+    batched) and the absolute-size floor (a 256-wide batch over a
+    56-task graph is real work even though one tick isn't). So the
+    floor scales with ``n_tasks · width`` and the dense-favoring
+    margin decays from 2.5x at width 1 (the single-seed calibration)
+    toward the asymptotic ~2.1x row-gather penalty — wide batches
+    over small deep-pipeline graphs now pick compact, while shallow
+    graphs (estimate ratio ≈ 2) stay dense at any width."""
+    if mode in ("dense", "compact", "pallas"):
         return mode
     if mode != "auto":
-        raise ValueError(f"phase mode must be dense|compact|auto: {mode!r}")
-    if plan.n_tasks < 256:
+        raise ValueError(
+            f"phase mode must be dense|compact|pallas|auto: {mode!r}")
+    w = max(int(seed_width), 1)
+    if plan.n_tasks * w < 256:
         return "dense"
     cphase, edges, n_phases = _phase_schedule(plan)
     dense, compact = _phase_work_estimate(plan, cphase, edges, n_phases)
-    return "compact" if dense >= 2.5 * compact else "dense"
+    margin = 2.125 + 0.375 / w
+    return "compact" if dense >= margin * compact else "dense"
 
 
 def lower_tensor_plan(plan: RoutingPlan,
                       job_of_op: np.ndarray | None = None,
-                      mode: str = "dense") -> TensorPlan:
+                      mode: str = "dense",
+                      seed_width: int = 1) -> TensorPlan:
     """Lower a `RoutingPlan` into the flat per-phase tensors consumed by
     the JAX segment-sum tick (`streams/jax_engine.py`).
 
     ``mode`` is ``"dense"`` (arena-wide `PhaseTensors`, the parity
     baseline), ``"compact"`` (pow2-bucketed `CompactPhase` index sets —
-    per-tick compute scales with the live edges per phase) or ``"auto"``
-    (`select_phase_mode` picks whichever the work estimate favors)."""
+    per-tick compute scales with the live edges per phase), ``"pallas"``
+    (the SAME `CompactPhase` tables, lowered through the fused per-phase
+    kernel `repro.kernels.tick_phase` by `jax_engine._build_pallas_run`)
+    or ``"auto"`` (`select_phase_mode` picks dense/compact by the work
+    estimate at the given ``seed_width``; pallas is explicit-only)."""
     import hashlib
 
-    mode = select_phase_mode(plan, mode)
+    mode = select_phase_mode(plan, mode, seed_width)
     ops = plan.ops
     n_ops = len(ops)
     n_tasks = plan.n_tasks
@@ -786,7 +807,7 @@ def lower_tensor_plan(plan: RoutingPlan,
                       else np.zeros(0, np.int32)),
             G=n_groups_total, grp_of=cat["grp_of"],
             share=cat["share"], mass=cat["mass"])
-        if mode == "compact":
+        if mode in ("compact", "pallas"):
             phases.append(_compact_phase(ph, ops, cphase, f, mine,
                                          job_of_op))
         else:
@@ -798,10 +819,11 @@ def lower_tensor_plan(plan: RoutingPlan,
                  ph.is_backlog, ph.acc_static, ph.acc_block, ph.fwd_src,
                  ph.blk_of, ph.dst_in_blk.astype(np.int8), ph.bsrc_task,
                  ph.bsrc_blk, ph.grp_of)
-    if mode == "compact":
+    if mode in ("compact", "pallas"):
         # only the bucket signature keys the trace: the index contents
         # are traced parameters, so same-bucket plans share one trace
-        key = ("compact", n_tasks, n_ops, n_jobs, n_phases,
+        # (the mode tag keeps compact and pallas traces apart)
+        key = (mode, n_tasks, n_ops, n_jobs, n_phases,
                tuple(p.sig for p in phases))
     else:
         key = (n_tasks, n_ops, n_jobs, n_phases, h.hexdigest())

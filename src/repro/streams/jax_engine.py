@@ -34,11 +34,11 @@ The jitted tick is O(1) in graph size. The pipeline has three stages:
    The old unrolled tick survives as `build_unrolled_run` purely as the
    benchmark baseline (benchmarks/bench_compile.py).
 
-Dense vs compact lowering contract (``phase_mode``)
----------------------------------------------------
-`lower_tensor_plan` has two flavors sharing the phase schedule; every
+Dense / compact / pallas lowering contract (``phase_mode``)
+-----------------------------------------------------------
+`lower_tensor_plan` has three flavors sharing the phase schedule; every
 engine/sweep entry point takes ``phase_mode`` ("dense" | "compact" |
-"auto", default auto via `engine.select_phase_mode`):
+"pallas" | "auto", default auto via `engine.select_phase_mode`):
 
 * **dense** (`engine.PhaseTensors`, `_build_run`) — the parity
   baseline. Per phase it multiplies arena-wide masks and runs
@@ -60,12 +60,33 @@ engine/sweep entry point takes ``phase_mode`` ("dense" | "compact" |
   (tests/test_sparse_phase.py). On deep pipelines (SS-style, 6 phases)
   at 10k tasks the compact warm tick is 2–4x the dense one
   (benchmarks/bench_sweep_scale.py → results/bench_sweep_scale.json).
+* **pallas** (the same `engine.CompactPhase` tables,
+  `_build_pallas_run` + `repro.kernels.tick_phase`) — the fused-kernel
+  path. The run is NATIVELY seed-batched: every state leaf carries a
+  leading ``(S,)`` scenario axis instead of an outer seed vmap, and
+  each routing phase executes as ONE fused ``pallas_call`` (task-state
+  gather → per-edge normalization → head-of-line row-min → per-group /
+  per-block row-sum → accept mask, sharing VMEM scratch across the
+  fused stages) with the seed axis as the Pallas grid dimension and
+  the pow2 row buckets as block shapes. Config/mix grid axes vmap over
+  the native run (one vmap level fewer than compact). Kernel dispatch
+  follows `repro.kernels.common.resolve_impl`: compiled Pallas on TPU,
+  the jnp reference lowering on CPU by default, and
+  ``REPRO_KERNEL_IMPL=interpret`` forces the actual kernel through the
+  Pallas interpreter (jit/scan/vmap-traceable — CI's pallas smoke runs
+  it). The trace cache keys on (bucket signature, resolved impl).
+  Parity with dense/compact holds at 1e-12 (tests/test_pallas_tick.py);
+  ``devices=`` sharding is not wired for this mode.
 
 "auto" picks compact exactly when the eliminated arena-wide reductions
-dominate the row-gather cost (deep packed arenas); small or shallow
-graphs stay dense. Setting ``REPRO_REQUIRE_PHASE_MODE=compact`` (or
-``dense``) turns a silent fallback into a hard error — scripts/ci.sh's
-smoke targets use it.
+dominate the row-gather cost (deep packed arenas), scaled by the
+seed-axis width of the requesting sweep (`select_phase_mode`'s
+``seed_width``: wide batches amortize the row-table overhead, so
+shallow-but-wide sweeps go compact too); small single-seed graphs stay
+dense, and pallas is never auto-selected. Setting
+``REPRO_REQUIRE_PHASE_MODE=compact`` (or ``dense`` / ``pallas``) turns
+a silent fallback into a hard error — scripts/ci.sh's smoke targets
+use it.
 
 All resiliency floats are *traced leaves* of the params pytree, never
 compile-time constants: per-task failover vectors (detect / restart
@@ -366,7 +387,127 @@ def _finish_tick(pa, state, x, q, emitted, dropped, qps_acc,
                        "lag": lag}
 
 
+def _finish_tick_batched(pa, state, x, q, emitted, dropped, qps_acc,
+                         n_regions, n_ops):
+    """Seed-batched twin of `_finish_tick` for the native ``(S, ...)``
+    pallas run: same math, with the task axis transposed to leading for
+    the segment reductions (segment ops reduce over axis 0)."""
+    t = x["t"]
+    vict = x["kills"][:, pa["task_host"]]
+    hit_s = (vict > 0.0).astype(q.dtype) * pa["mode_single"]
+    reg_hit = jax.ops.segment_max((vict * pa["mode_region"]).T,
+                                  pa["task_region"],
+                                  num_segments=n_regions)
+    hit_r = (reg_hit[pa["task_region"]].T > 0.0).astype(q.dtype)
+    until_s = t + (pa["detect"] + pa["restart_single"])
+    until_r = t + (pa["detect"] + pa["restart_region"])
+    down_until = jnp.where(hit_r > 0.0, until_r,
+                           jnp.where(hit_s > 0.0, until_s,
+                                     state.down_until))
+    hit_any = jnp.maximum(hit_r, hit_s)
+    q = jnp.where(hit_any > 0.0, 0.0, q)
+
+    ckpt_epoch = state.ckpt_epoch + x["ckpt"].astype(jnp.int32)
+
+    backlog_row = jax.ops.segment_sum(q.T, pa["op_of_task"],
+                                      num_segments=n_ops).T
+    qps_row = qps_acc / pa["dt"]
+    lag = backlog_row @ pa["src_mask_ops"]
+    new_state = EngineState(q, down_until, state.speed, ckpt_epoch,
+                            emitted, dropped)
+    return new_state, {"qps": qps_row, "backlog": backlog_row,
+                       "lag": lag}
+
+
+def _build_pallas_run(desc: TickDesc, impl: str | None = None):
+    """Fused-kernel twin of `_build_compact_run`: the run is NATIVELY
+    seed-batched — every `EngineState` leaf carries a leading ``(S,)``
+    scenario axis, ``xs["kills"]`` arrives ``(S, T, H)``, and there is
+    no outer seed vmap — and each routing phase executes as ONE fused
+    `repro.kernels.tick_phase` launch (gather → normalize →
+    head-of-line row-min → group/block row-sum → accept, sharing VMEM
+    scratch across the stages) with the seed axis as the Pallas grid
+    dimension. Everything around the phase core (consumption, per-job
+    emit/drop segments, overflow requeue, deposits, `_finish_tick`) is
+    the compact tick's math batched over the leading axis, so
+    pallas == compact == dense at 1e-12.
+
+    ``impl`` resolves through `repro.kernels.common.resolve_impl`:
+    compiled Pallas on TPU, the jnp reference on CPU by default,
+    ``REPRO_KERNEL_IMPL=interpret`` forces the kernel through the
+    Pallas interpreter (CI's pallas smoke). The per-phase kernel tables
+    are packed ONCE per run, outside the `lax.scan` (dst-gathered
+    qcap/mode rows included), so the scan body carries no re-packing.
+    Returned ``ys`` rows are swapped back to the vmapped ``(S, T, ·)``
+    layout the batch entry points expect."""
+    from repro.kernels.tick_phase import pack_phase_tables, tick_phase
+
+    tp, n_regions = desc.tensor, desc.n_regions
+    n_ops, n_jobs = tp.n_ops, tp.n_jobs
+
+    def rsum(vals, idx, mask):
+        return (vals[:, idx] * mask).sum(-1)
+
+    def tick(pa, aux, state: EngineState, x):
+        t = x["t"]
+        q = state.queue
+        alive_f = (state.down_until <= t).astype(q.dtype)
+        free = jnp.maximum(pa["qcap"] - q, 0.0)
+        sel_t = pa["sel"][pa["op_of_task"]]
+        cap_t = pa["cap_base"] * state.speed * alive_f
+        emitted, dropped = state.emitted, state.dropped
+        produced = jnp.zeros_like(q)
+        qps_acc = jnp.zeros((q.shape[0], n_ops), q.dtype)
+
+        for fi, ph in enumerate(tp.phases):
+            eph = pa["edges"][fi]
+            if ph.consumes:
+                take = jnp.minimum(q, cap_t * eph["cons_mask"])
+                q = q - take
+                src_emit = pa["src_row"] * alive_f * eph["cons_mask"]
+                produced = produced + (src_emit + take * sel_t)
+                if len(ph.e_jobs):
+                    emitted = emitted.at[:, eph["e_jobs"]].add(
+                        rsum(src_emit, eph["e_idx"], eph["e_mask"]))
+                qps_acc = qps_acc.at[:, eph["q_ops"]].add(
+                    rsum(take, eph["q_idx"], eph["q_mask"]))
+            if not ph.D:
+                continue
+            # the entire routing phase: ONE fused kernel launch
+            accepted, drop_d, ovf_e = tick_phase(
+                produced, alive_f, free, aux[fi],
+                has_blk=ph.B > 0, has_grp=ph.G > 0, impl=impl)
+            dropped = dropped.at[:, eph["dj_jobs"]].add(
+                rsum(drop_d, eph["dj_idx"], eph["dj_mask"]))
+            ovf_slot = jax.ops.segment_sum(
+                ovf_e.T, eph["slot_of_edge"],
+                num_segments=len(ph.slot_ops)).T
+            ovf_op = jnp.zeros((q.shape[0], n_ops),
+                               q.dtype).at[:, eph["slot_ops"]].add(
+                                   ovf_slot)
+            q = q + (ovf_op / pa["par_of_op"])[:, pa["op_of_task"]]
+            dst = eph["dst_task"]
+            q = q.at[:, dst].add(accepted)
+            free = jnp.maximum(free.at[:, dst].add(-accepted), 0.0)
+
+        return _finish_tick_batched(pa, state, x, q, emitted, dropped,
+                                    qps_acc, n_regions, n_ops)
+
+    def run(pa, state, xs):
+        aux = [pack_phase_tables(pa["edges"][fi], pa["qcap"],
+                                 pa["mode_single"]) if ph.D else None
+               for fi, ph in enumerate(tp.phases)]
+        xs_t = dict(xs, kills=jnp.swapaxes(xs["kills"], 0, 1))
+        final, ys = lax.scan(lambda st, x: tick(pa, aux, st, x), state,
+                             xs_t)
+        return final, {k: jnp.swapaxes(v, 0, 1) for k, v in ys.items()}
+
+    return run
+
+
 def _build_run(desc: TickDesc):
+    if desc.tensor.mode == "pallas":
+        return _build_pallas_run(desc)
     if desc.tensor.mode == "compact":
         return _build_compact_run(desc)
     tp, n_regions = desc.tensor, desc.n_regions
@@ -683,6 +824,30 @@ _PA_CFG_AXES = {"qcap": 0, "src_row": None, "cap_base": None, "sel": 0,
                 "par_of_op": None, "src_mask_ops": None, "edges": None}
 
 
+def _tick_impl() -> str:
+    """Resolved fused-kernel impl for pallas-mode traces. It is part of
+    every pallas cache key: flipping ``REPRO_KERNEL_IMPL`` changes the
+    lowering (compiled kernel / interpreter / jnp reference), so a
+    cached trace must never outlive the impl it was built with."""
+    from repro.kernels.common import resolve_impl
+    return resolve_impl(None)
+
+
+def _lift_single(run_batched):
+    """Single-seed façade over a natively seed-batched run: expand every
+    state leaf (and the kill tensor) to a width-1 batch, strip the axis
+    from the results — same call contract as the dense/compact single
+    fns."""
+    def run1(pa, state, xs):
+        st = EngineState(*(jnp.asarray(l)[None]
+                           for l in state))
+        xs1 = dict(xs, kills=jnp.asarray(xs["kills"])[None])
+        final, ys = run_batched(pa, st, xs1)
+        return (EngineState(*(l[0] for l in final)),
+                {k: v[0] for k, v in ys.items()})
+    return run1
+
+
 def get_cached_run_fns(desc: TickDesc):
     """(jitted run, jitted vmapped run) for a static plan descriptor.
 
@@ -690,7 +855,20 @@ def get_cached_run_fns(desc: TickDesc):
     float parameters (rates, selectivities, restart times, queue caps,
     failover mode masks, …) are traced arguments, so sweeping them never
     re-traces. The state argument is donated: arena state buffers are
-    consumed in place every call."""
+    consumed in place every call.
+
+    Pallas-mode descs key on (desc, resolved kernel impl) and return
+    (single-seed façade, the native seed-batched run) — the batch fn has
+    the exact layout of the vmapped dense/compact one."""
+    if desc.tensor.mode == "pallas":
+        impl = _tick_impl()
+        key = (desc, impl)
+        if key not in _FN_CACHE:
+            runb = _build_pallas_run(desc, impl)
+            _FN_CACHE[key] = (
+                jax.jit(_lift_single(runb)),
+                jax.jit(runb, donate_argnums=(1,)))
+        return _FN_CACHE[key]
     if desc not in _FN_CACHE:
         run = _build_run(desc)
         _FN_CACHE[desc] = (
@@ -705,6 +883,11 @@ def get_sharded_run_fn(desc: TickDesc, n_shards: int):
     `n_shards`) — `pmap` on jax 0.4.x, `jax.shard_map` on >= 0.6 via the
     version-gated `repro.dist.sharding` shim. Cached per (plan shape,
     shard count)."""
+    if desc.tensor.mode == "pallas":
+        raise NotImplementedError(
+            "devices= sharding is not wired for the pallas phase mode "
+            "(the native seed-batched run owns the seed axis); run "
+            "unsharded or use phase_mode='compact'")
     key = (desc, n_shards)
     if key not in _SHARD_CACHE:
         _SHARD_CACHE[key] = sharded_seed_fn(
@@ -716,6 +899,15 @@ def get_cached_mix_fn(desc: TickDesc):
     """Doubly-vmapped run fn: outer axis over job-mix configs (per-task
     source-rate rows), inner axis over chaos seeds — one trace sweeps an
     (M, S) grid of mix × scenario in a single device call."""
+    if desc.tensor.mode == "pallas":
+        # the native run already owns the seed axis: ONE vmap level
+        # (over mixes) instead of two
+        key = (desc, _tick_impl())
+        if key not in _MIX_CACHE:
+            runb = _build_pallas_run(desc, key[1])
+            _MIX_CACHE[key] = jax.jit(
+                jax.vmap(runb, in_axes=(_PA_MIX_AXES, None, None)))
+        return _MIX_CACHE[key]
     if desc not in _MIX_CACHE:
         run = _build_run(desc)
         _MIX_CACHE[desc] = jax.jit(
@@ -739,6 +931,18 @@ def get_cached_config_fn(desc: TickDesc, shared_kills: bool = False):
     config × scenario in one device call, one trace per grid shape.
     `shared_kills` selects the broadcast-kills variant (see
     `_cfg_xs_axes`)."""
+    if desc.tensor.mode == "pallas":
+        key = (desc, shared_kills, _tick_impl())
+        if key not in _CFG_CACHE:
+            runb = _build_pallas_run(desc, key[2])
+            # seed axis is native; the config vmap broadcasts the
+            # (S, ...) state and rides the same xs layout (the pallas
+            # run reads kills as (S, T, H), so the per-config kills
+            # axis is the same axis 0 the vmapped path uses)
+            _CFG_CACHE[key] = jax.jit(
+                jax.vmap(runb, in_axes=(_PA_CFG_AXES, None,
+                                        _cfg_xs_axes(shared_kills))))
+        return _CFG_CACHE[key]
     key = (desc, shared_kills)
     if key not in _CFG_CACHE:
         run = _build_run(desc)
@@ -756,6 +960,11 @@ def get_sharded_config_fn(desc: TickDesc, n_shards: int,
     devices through `repro.dist.sharding.sharded_grid_fn`, the config
     axis rides inside each shard. Cached per (plan shape, shard count,
     kills layout)."""
+    if desc.tensor.mode == "pallas":
+        raise NotImplementedError(
+            "devices= sharding is not wired for the pallas phase mode "
+            "(the native seed-batched run owns the seed axis); run "
+            "unsharded or use phase_mode='compact'")
     key = (desc, n_shards, shared_kills)
     if key not in _CFG_SHARD_CACHE:
         seed_axes = {"t": None, "kills": 0 if shared_kills else 1,
@@ -771,11 +980,21 @@ def get_cached_config_mix_fn(desc: TickDesc, shared_kills: bool = False):
     """Triply-vmapped run fn: mixes × configs × seeds in one call (the
     mix axis varies only the source-rate row on top of the config
     axes)."""
+    mix_top = dict.fromkeys(_PA_CFG_AXES, None)
+    mix_top["src_row"] = 0
+    if desc.tensor.mode == "pallas":
+        key = (desc, shared_kills, _tick_impl())
+        if key not in _CFG_MIX_CACHE:
+            runb = _build_pallas_run(desc, key[2])
+            _CFG_MIX_CACHE[key] = jax.jit(
+                jax.vmap(
+                    jax.vmap(runb, in_axes=(_PA_CFG_AXES, None,
+                                            _cfg_xs_axes(shared_kills))),
+                    in_axes=(mix_top, None, None)))
+        return _CFG_MIX_CACHE[key]
     key = (desc, shared_kills)
     if key not in _CFG_MIX_CACHE:
         run = _build_run(desc)
-        mix_top = dict.fromkeys(_PA_CFG_AXES, None)
-        mix_top["src_row"] = 0
         _CFG_MIX_CACHE[key] = jax.jit(
             jax.vmap(
                 jax.vmap(jax.vmap(run, in_axes=(None, 0, _XS_AXES)),
@@ -792,7 +1011,7 @@ class _Lowered:
     def __init__(self, graph: LogicalGraph | PackedArena, *, n_hosts: int,
                  dt: float,
                  queue_cap: float, failover, ckpt, seed: int,
-                 phase_mode: str = "auto"):
+                 phase_mode: str = "auto", seed_width: int = 1):
         self.arena = graph if isinstance(graph, PackedArena) else None
         if self.arena is not None:
             graph = self.arena.graph
@@ -845,7 +1064,8 @@ class _Lowered:
                              "with one entry per job")
 
         self.tensor = lower_tensor_plan(plan, self.job_of_op,
-                                        mode=phase_mode)
+                                        mode=phase_mode,
+                                        seed_width=seed_width)
         required = os.environ.get("REPRO_REQUIRE_PHASE_MODE")
         if required and self.tensor.mode != required:
             raise RuntimeError(
@@ -882,8 +1102,10 @@ class _Lowered:
             "src_mask_ops": np.asarray(self.tensor.src_mask_ops, float),
             # per-phase traced routing parameters: share/mass tables in
             # dense mode, the full pow2-bucketed index/mask sets in
-            # compact mode (the trace key carries only the bucket sizes)
-            "edges": [ph.traced() if self.tensor.mode == "compact"
+            # compact/pallas mode (the trace key carries only the
+            # bucket sizes)
+            "edges": [ph.traced()
+                      if self.tensor.mode in ("compact", "pallas")
                       else {"share": ph.share, "mass": ph.mass}
                       for ph in self.tensor.phases],
         }
@@ -1280,7 +1502,7 @@ def run_batch(graph: LogicalGraph | PackedArena, seeds, *,
         raise ValueError("run_batch requires at least one seed/spec")
     low = _Lowered(graph, n_hosts=n_hosts, dt=dt, queue_cap=queue_cap,
                    failover=failover, ckpt=ckpt, seed=seed,
-                   phase_mode=phase_mode)
+                   phase_mode=phase_mode, seed_width=len(specs))
     n_ticks = int(round(duration_s / low.dt))
     batch_state, xs, tls = _prep_batch(low, specs, n_ticks,
                                        task_speed_override)
@@ -1330,7 +1552,7 @@ def run_mix_batch(graph: LogicalGraph | PackedArena, mixes, seeds, *,
         raise ValueError("run_mix_batch requires at least one seed/spec")
     low = _Lowered(graph, n_hosts=n_hosts, dt=dt, queue_cap=queue_cap,
                    failover=failover, ckpt=ckpt, seed=seed,
-                   phase_mode=phase_mode)
+                   phase_mode=phase_mode, seed_width=len(specs))
     mixes = np.atleast_2d(np.asarray(mixes, dtype=np.float64))
     if mixes.shape[1] != low.n_jobs:
         raise ValueError(
@@ -1437,7 +1659,8 @@ def run_config_batch(graph: LogicalGraph | PackedArena, configs, seeds, *,
         raise ValueError("run_config_batch requires at least one config")
     low = _Lowered(graph, n_hosts=n_hosts, dt=dt, queue_cap=queue_cap,
                    failover=norm[0]["failover"], ckpt=norm[0]["ckpt"],
-                   seed=seed, phase_mode=phase_mode)
+                   seed=seed, phase_mode=phase_mode,
+                   seed_width=len(specs) * len(norm))
     n_ticks = int(round(duration_s / low.dt))
     n_seeds, n_cfg = len(specs), len(norm)
     jot = (low.job_of_task if low.job_of_task is not None

@@ -134,6 +134,46 @@ def ss_arena(n_tasks: int = 10_000, parallelism: int = 8,
                       queue_cap=queue_cap)
 
 
+def mega_arena(n_tasks: int = 100_000, workload: str = "q12",
+               parallelism: int = 8, n_hosts: int = 256, dt: float = 0.5,
+               queue_cap: float = 256.0, host_map: str = "shared"):
+    """100k-task-scale mega-arena — the fused-Pallas-tick target size
+    (10× `q12_arena` / `ss_arena`). ``workload`` picks the job template:
+
+    * ``"q12"``  — K = n_tasks // (3·parallelism) windowed-count jobs
+      (≈ 4166 jobs / 12498 ops at the default 100k).
+    * ``"ss"``   — K = n_tasks // (7·parallelism) deep stitching
+      pipelines (six tick phases, the compact/pallas showcase).
+    * ``"mixed"``— alternating q12 + ss jobs until the task budget is
+      spent, exercising ragged pow2 row buckets across phases.
+
+    All jobs share one host pool, so one `ChaosSpec` kill stream fans
+    out across every job — a (configs × seeds) grid over this arena in
+    ``phase_mode="pallas"`` covers ≥1e6 job-scenarios in a single
+    device pass (benchmarks/bench_tick_kernel.py). Returns a
+    `PackedArena`.
+    """
+    from repro.streams.engine import pack_arena
+
+    if workload == "q12":
+        mk = [(3 * parallelism, lambda: q12(parallelism=parallelism))]
+    elif workload == "ss":
+        mk = [(7 * parallelism, lambda: ss(parallelism=parallelism))]
+    elif workload == "mixed":
+        mk = [(3 * parallelism, lambda: q12(parallelism=parallelism)),
+              (7 * parallelism, lambda: ss(parallelism=parallelism))]
+    else:
+        raise ValueError("workload must be q12|ss|mixed")
+    jobs, total, i = [], 0, 0
+    while total + mk[i % len(mk)][0] <= n_tasks or not jobs:
+        per_job, ctor = mk[i % len(mk)]
+        jobs.append(ctor())
+        total += per_job
+        i += 1
+    return pack_arena(jobs, host_map, n_hosts=n_hosts, dt=dt,
+                      queue_cap=queue_cap)
+
+
 # ----------------------------------------------------------------------
 # Record-level vectorized operator kernels (correctness oracle + micro bench)
 # ----------------------------------------------------------------------
