@@ -1,0 +1,132 @@
+"""Hybrid-replication tradeoff cube (paper §IV-A): recovery time / SLO
+violation / lost work over replication-mode × checkpoint-interval ×
+storage-brownout-severity, produced by ONE `sweep_configs` device call
+(`streams.chaos_sweep.replication_tradeoff`).
+
+Emits the usual CSV rows through benchmarks/run.py and writes
+``results/bench_replication.json`` for the perf trajectory. Quick mode
+(REPRO_BENCH_QUICK=1) shrinks the cube and horizon so the module runs in
+a few seconds on CPU — and, per the harness contract, skips the JSON
+write.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import time
+
+import numpy as np
+
+try:
+    from benchmarks.run import quick_mode
+except ImportError:      # standalone: sys.path[0] is benchmarks/
+    from run import quick_mode
+from repro.core.chaos import ChaosSpec, timeline_build_count
+from repro.core.replication import TimingModel
+from repro.streams import nexmark
+from repro.streams.chaos_sweep import replication_tradeoff
+from repro.streams.engine import FailoverConfig
+
+# the deterministic region burst guarantees every seed sees ≥1 recovery
+# (otherwise empty-scenario recovery times are inf and the cube means
+# degenerate); the Poisson kill stream adds seed-to-seed variance on top
+BASE_SPEC = ChaosSpec(host_kill_prob_per_s=0.004, straggler_frac=0.1,
+                      burst_at=((20.0, 0),))
+STATE_BYTES = 8 << 30            # 8 GiB of keyed window state per job
+TIMING = TimingModel()
+
+
+def _failovers() -> dict[str, FailoverConfig]:
+    # single_task passive restore (γ=partial: records routed to the dead
+    # task are dropped → lost work) vs region passive with lazy-load
+    # ready stagger vs hot standby. The 5s region redeploy keeps that
+    # row's downtime dominated by the brownout-inflated restore +
+    # ckpt-age replay terms the cube sweeps.
+    return {
+        "hot_standby": FailoverConfig.from_replication(
+            TIMING, mode="hot_standby"),
+        "passive": FailoverConfig.from_replication(
+            TIMING, mode="single_task", state_bytes=STATE_BYTES),
+        "passive_lazy": dataclasses.replace(
+            FailoverConfig.from_replication(TIMING, mode="region",
+                                            state_bytes=STATE_BYTES),
+            region_restart_s=5.0, lazyload_stagger_s=1.0),
+    }
+
+
+def run():
+    quick = quick_mode()
+    n_seeds = 8 if quick else 64
+    duration = 60.0 if quick else 180.0
+    graph = nexmark.q12(parallelism=4 if quick else 8)
+    failovers = _failovers()
+    intervals = (None, 10.0) if quick else (None, 10.0, 30.0, 60.0)
+    # tent ramps centered on the burst (t=20) so the severity axis
+    # actually inflates the restores the burst triggers
+    bros = ((), ((5.0, 35.0, 2.0),)) if quick else \
+        ((), ((5.0, 35.0, 2.0),), ((5.0, 35.0, 4.0),),
+         ((5.0, 35.0, 8.0),))
+
+    c0 = timeline_build_count()
+    cold_t0 = time.perf_counter()
+    replication_tradeoff(graph, range(n_seeds), base_spec=BASE_SPEC,
+                         duration_s=duration, failovers=failovers,
+                         ckpt_intervals=intervals, brownouts=bros,
+                         n_hosts=8)
+    cold_wall = time.perf_counter() - cold_t0
+    cube = replication_tradeoff(graph, range(n_seeds), base_spec=BASE_SPEC,
+                                duration_s=duration, failovers=failovers,
+                                ckpt_intervals=intervals, brownouts=bros,
+                                n_hosts=8)
+    builds = timeline_build_count() - c0
+
+    n_cells = cube.recovery.size
+
+    def _fmean(a):
+        a = np.asarray(a, float)
+        f = np.isfinite(a)
+        return float(a[f].mean()) if f.any() else float("inf")
+
+    # headline: both tradeoff axes at the harshest brownout — recovery
+    # time (hot vs best passive ckpt interval) AND lost work (hot drains
+    # its retained backlog and loses nothing; passive restores drop the
+    # in-flight queues, so its lost-work column is the price of the
+    # cheaper drain)
+    hot = _fmean(cube.recovery[0, :, -1])
+    passive_best = min(_fmean(cube.recovery[1, iv, -1])
+                       for iv in range(len(cube.ckpt_intervals)))
+    hot_lost = float(np.asarray(cube.lost)[0, :, -1].mean())
+    passive_lost = float(np.asarray(cube.lost)[1, :, -1].mean())
+    rows = [(f"replication/q12/{n_cells}cells",
+             1e6 * cube.grid.wall_s / n_cells,
+             f"cells={n_cells};cells_s={n_cells / cube.grid.wall_s:.0f};"
+             f"hot_recovery_s={hot:.2f};passive_best_s={passive_best:.2f};"
+             f"hot_lost={hot_lost:.0f};passive_lost={passive_lost:.0f};"
+             f"timeline_builds={builds}")]
+    if not quick:   # quick smoke must not overwrite the tracked record
+        record = {
+            "n_seeds": n_seeds, "duration_s": duration,
+            "modes": cube.modes,
+            "ckpt_intervals": [iv for iv in cube.ckpt_intervals],
+            "brownout_peaks": cube.brownout_peaks,
+            "cold_wall_s": cold_wall, "warm_wall_s": cube.grid.wall_s,
+            "cells_per_s": n_cells / cube.grid.wall_s,
+            "timeline_builds": builds,
+            "hot_recovery_s": hot, "passive_best_s": passive_best,
+            "hot_lost": hot_lost, "passive_lost": passive_lost,
+            "recovery_mean": np.apply_along_axis(
+                _fmean, -1, np.asarray(cube.recovery)).tolist(),
+            "slo_mean": np.asarray(cube.slo).mean(-1).tolist(),
+            "lost_mean": np.asarray(cube.lost).mean(-1).tolist(),
+        }
+        out = pathlib.Path("results")
+        out.mkdir(parents=True, exist_ok=True)
+        (out / "bench_replication.json").write_text(
+            json.dumps(record, indent=1))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

@@ -36,6 +36,7 @@ MODULES = [
     "benchmarks.bench_compile",             # tensorized-tick compile cost
     "benchmarks.bench_sweep_scale",         # sparse-phase + sharded grids
     "benchmarks.bench_tick_kernel",         # fused Pallas tick phases
+    "benchmarks.bench_replication",         # §IV-A hybrid replication cube
     "benchmarks.bench_kernels",             # §V-C micro benchmarking
 ]
 
@@ -46,6 +47,7 @@ QUICK_MODULES = [
     "benchmarks.bench_compile",             # tensorized-tick compile cost
     "benchmarks.bench_sweep_scale",         # sparse-phase + sharded grids
     "benchmarks.bench_tick_kernel",         # fused Pallas tick phases
+    "benchmarks.bench_replication",         # hybrid replication cube
     "benchmarks.bench_weakhash",            # WeakHash assignment path
     "benchmarks.bench_hotupdate",           # pure-python, fast
 ]

@@ -10,6 +10,9 @@
 #                                     # (sparse-phase) tick over a deep-pipeline arena
 #   scripts/ci.sh --pallas-smoke      # also run a 16-seed sweep through the fused PALLAS
 #                                     # tick (interpreter impl, native kernel-grid batch)
+#   scripts/ci.sh --ha-smoke          # also run the hybrid-replication-vs-checkpoint cube
+#                                     # (brownouts + MQ outage + region burst, compact tick,
+#                                     # non-zero exit on any timeline-rebuild fallback)
 #
 # Smoke targets fail LOUDLY on silent lowering fallbacks: the sparse
 # smoke exports REPRO_REQUIRE_PHASE_MODE=compact (the engine refuses to
@@ -56,6 +59,13 @@ if [[ "${1:-}" == "--pallas-smoke" ]]; then
   echo "== pallas smoke: fused-kernel tick, 16 seeds, interpreter impl =="
   REPRO_REQUIRE_PHASE_MODE=pallas REPRO_KERNEL_IMPL=interpret \
     python examples/pallas_sweep.py --jobs 6 --seeds 16 --duration 60
+fi
+
+if [[ "${1:-}" == "--ha-smoke" ]]; then
+  echo "== HA smoke: replication-vs-checkpoint cube with brownouts, compact tick =="
+  REPRO_REQUIRE_PHASE_MODE=compact \
+    python examples/replication_sweep.py --seeds 8 --intervals 2 \
+      --brownouts 2 --duration 60
 fi
 
 echo "CI OK"

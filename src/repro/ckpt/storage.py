@@ -91,12 +91,19 @@ class SimHDFS:
         self.available = True  # namenode availability (HA drills)
         self.put_count = 0
         self.slow_puts = 0
+        self.slow_gets = 0
 
-    def _charge(self, nbytes: int) -> float:
-        factor = self.chaos.storage_latency_factor()
+    def _charge(self, nbytes: int, kind: str = "put") -> float:
+        # rng slow-factor draw × deterministic brownout ramp at wall time
+        # (brownout-stretched ops count as slow: factor > 1 either way)
+        factor = (self.chaos.storage_latency_factor()
+                  * self.chaos.brownout_factor(self.clock.now()))
         dur = (self.base_latency_s + nbytes / self.bandwidth_bps) * factor
         if factor > 1.0:
-            self.slow_puts += 1
+            if kind == "put":
+                self.slow_puts += 1
+            else:
+                self.slow_gets += 1
         self.clock.sleep(dur)
         return dur
 
@@ -104,7 +111,7 @@ class SimHDFS:
         if not self.available:
             raise StorageUnavailable("namenode down")
         self.put_count += 1
-        self._charge(len(data))
+        self._charge(len(data), kind="put")
         if self.chaos.storage_fails():
             raise StorageUnavailable("datanode write failed")
         return self.fs.put(key, data)
@@ -113,7 +120,7 @@ class SimHDFS:
         if not self.available:
             raise StorageUnavailable("namenode down")
         data = self.fs.get(key)
-        self._charge(len(data))
+        self._charge(len(data), kind="get")
         return data
 
     def exists(self, key: str) -> bool:

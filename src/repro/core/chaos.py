@@ -28,6 +28,17 @@ class ChaosSpec:
     # coordination (ZK-sim) outage windows
     zk_down: tuple[tuple[float, float], ...] = ()
     hdfs_down: tuple[tuple[float, float], ...] = ()
+    # external systems (paper §IV): storage brownouts as latency-factor
+    # *ramps* (t0, t1, peak) — the multiplier climbs 1→peak→1 over
+    # [t0, t1) and stretches storage ops / checkpoint-attempt durations —
+    # MQ/coordinator outage windows that gate source operators, and
+    # region-correlated failure bursts (time, region_id) downing every
+    # host that serves the region. All three are deterministic: they
+    # consume NO rng draws, so they can never desynchronize the replayed
+    # draw stream between the live engines and the pregenerated timelines.
+    brownout_at: tuple[tuple[float, float, float], ...] = ()
+    mq_down: tuple[tuple[float, float], ...] = ()
+    burst_at: tuple[tuple[float, int], ...] = ()
 
 
 class ChaosEngine:
@@ -36,6 +47,7 @@ class ChaosEngine:
         self._rng = np.random.default_rng(self.spec.seed)
         self._killed: set[int] = set()
         self._stragglers: dict[int, bool] = {}
+        self._extra_kill_at: list[tuple[float, int]] = []
 
     # -- storage -------------------------------------------------------
     def storage_latency_factor(self) -> float:
@@ -78,7 +90,8 @@ class ChaosEngine:
         guarantee is the same stream as n_alive sequential scalar draws —
         so large host pools (multi-job arenas) don't pay per-host Python
         rng calls every tick."""
-        kills = [h for (t, h) in self.spec.host_kill_at
+        kills = [h for (t, h) in (tuple(self.spec.host_kill_at)
+                                  + tuple(self._extra_kill_at))
                  if t0 < t <= t1 and h not in self._killed]
         if self.spec.host_kill_prob_per_s:
             p = 1.0 - np.exp(-self.spec.host_kill_prob_per_s * (t1 - t0))
@@ -99,12 +112,101 @@ class ChaosEngine:
     def alive(self, host_id: int) -> bool:
         return host_id not in self._killed
 
+    def schedule_kills(self, events) -> None:
+        """Register extra deterministic (time, host) kill events, consumed
+        by `step_kills` exactly like `spec.host_kill_at` (no rng drawn).
+        Used to expand region-correlated failure bursts once task→host
+        placement is known."""
+        self._extra_kill_at.extend((float(t), int(h)) for t, h in events)
+
     # -- coordination services -------------------------------------------
     def zk_available(self, t: float) -> bool:
         return not any(a <= t < b for a, b in self.spec.zk_down)
 
     def hdfs_available(self, t: float) -> bool:
         return not any(a <= t < b for a, b in self.spec.hdfs_down)
+
+    # -- external systems -------------------------------------------------
+    def brownout_factor(self, t: float) -> float:
+        """Deterministic storage-brownout latency multiplier at time t."""
+        return brownout_factor_at(self.spec.brownout_at, t)
+
+    def mq_available(self, t: float) -> bool:
+        """MQ/coordinator availability — gates source operators."""
+        return not any(a <= t < b for a, b in self.spec.mq_down)
+
+
+def brownout_factor_at(ramps, t: float) -> float:
+    """Storage-brownout multiplier at time `t`: each (t0, t1, peak) ramp
+    climbs linearly 1→peak over the first half of [t0, t1) and falls back
+    peak→1 over the second half; overlapping ramps multiply (so merging
+    two ramp tuples composes their factors)."""
+    f = 1.0
+    for (a, b, peak) in ramps:
+        if a <= t < b:
+            frac = 1.0 - abs(2.0 * (t - a) / (b - a) - 1.0)
+            f *= 1.0 + (peak - 1.0) * frac
+    return f
+
+
+def brownout_curve(ramps, ts) -> np.ndarray:
+    """Vectorized `brownout_factor_at` over an array of times."""
+    ts = np.asarray(ts, dtype=float)
+    out = np.ones(ts.shape)
+    for (a, b, peak) in ramps:
+        inside = (ts >= a) & (ts < b)
+        if not inside.any():
+            continue
+        frac = 1.0 - np.abs(2.0 * (ts - a) / (b - a) - 1.0)
+        out = np.where(inside, out * (1.0 + (peak - 1.0) * frac), out)
+    return out
+
+
+def mq_gate_curve(windows, ts) -> np.ndarray:
+    """1.0/0.0 source gate per time (1 = MQ available, sources emit)."""
+    ts = np.asarray(ts, dtype=float)
+    gate = np.ones(ts.shape)
+    for (a, b) in windows:
+        gate[(ts >= a) & (ts < b)] = 0.0
+    return gate
+
+
+def burst_kill_schedule(burst_at, task_host, task_region):
+    """Expand region-correlated failure bursts into deterministic
+    (time, host) kill events: a (t, region) burst downs every host
+    serving >= 1 task of that region, under the same ``t0 < t <= t1``
+    tick-window convention as `host_kill_at`. Pass local task/host views
+    for per-job chaos domains."""
+    if not burst_at:
+        return ()
+    if task_region is None:
+        raise ValueError("burst_at requires task_region placement")
+    task_host = np.asarray(task_host)
+    task_region = np.asarray(task_region)
+    out = []
+    for (tb, reg) in burst_at:
+        hosts = np.unique(task_host[task_region == int(reg)])
+        out.extend((float(tb), int(h)) for h in hosts)
+    return tuple(out)
+
+
+def ckpt_age_curve(ts, ok, n_jobs: int) -> np.ndarray:
+    """(n_ticks, n_jobs) checkpoint age at each tick start: ts[i] minus
+    the tick-start time of the latest success STRICTLY before tick i
+    (kills precede the tick's own attempt in every replay), with a 0.0
+    start-of-run baseline — age = t until the first success, i.e. a
+    passive restore replays from the beginning of the run. `ok` is the
+    per-tick success count, (n_ticks,) for a shared coordinator
+    (broadcast over jobs) or (n_ticks, n_jobs) for per-job ones."""
+    ts = np.asarray(ts, dtype=float)
+    ok = np.asarray(ok)
+    ok2 = ok[:, None] if ok.ndim == 1 else ok
+    ok2 = np.broadcast_to(ok2 > 0, (len(ts), n_jobs))
+    last = np.zeros((len(ts), n_jobs))
+    if len(ts) > 1:
+        succ = np.where(ok2[:-1], ts[:-1, None], 0.0)
+        last[1:] = np.maximum.accumulate(succ, axis=0)
+    return ts[:, None] - last
 
 
 def failover_recovery_entries(t: float, mode: str, hit: np.ndarray,
@@ -139,15 +241,15 @@ def failover_recovery_entries(t: float, mode: str, hit: np.ndarray,
             for j in np.unique(job_of_task[hit])]
 
 
-_MODE_CODE = {"none": 0, "region": 1, "single_task": 2}
+_MODE_CODE = {"none": 0, "region": 1, "single_task": 2, "hot_standby": 3}
 
 
 def failover_mode_codes(failover_mode, n_tasks: int) -> np.ndarray:
     """Normalize a failover mode (name string or per-task int-code vector)
     to an ``(n_tasks,)`` int8 code vector: 0 none, 1 region, 2
-    single_task. Per-task codes are how per-job `FailoverConfig`s reach
-    the chaos timeline and the engines without `core` importing
-    `streams`."""
+    single_task, 3 hot_standby. Per-task codes are how per-job
+    `FailoverConfig`s reach the chaos timeline and the engines without
+    `core` importing `streams`."""
     if isinstance(failover_mode, str):
         return np.full(n_tasks, _MODE_CODE[failover_mode], np.int8)
     codes = np.asarray(failover_mode, dtype=np.int8)
@@ -162,30 +264,45 @@ def _per_task(v, n_tasks: int) -> np.ndarray:
 
 
 def _resolve_failover_tick(t, host, task_host, task_region, mode_codes,
-                           down_s, down_r, down, recoveries, job_of_task):
+                           down_s, down_r, down, recoveries, job_of_task,
+                           down_h=None, extra=None):
     """One host kill → failover response (shared by the pregenerated
     timeline, `refit_failover` and — semantically — the live engine's
     `_fail_host`): region-mode victims expand to their regions, then
-    single_task-mode victims restart alone. Region entries precede
-    single_task entries when one shared-host kill hits jobs of both
-    modes."""
+    single_task-mode victims restart alone, then hot_standby victims
+    switch to their standby replica. Entries keep that order when one
+    shared-host kill hits jobs of several modes.
+
+    `extra` is the per-task passive-restore surcharge at kill time —
+    ``restore_base * brownout + ckpt_age * replay_rate + lazy_extra`` —
+    added to region/single downtimes (restores re-read the checkpoint);
+    hot_standby pays `down_h` (detect + switch + staleness replay) only,
+    since the standby never touches checkpoint storage."""
     victims = task_host == host
     vr = victims & (mode_codes == 1)
     if vr.any():
         hit = np.isin(task_region, task_region[vr])
-        down[hit] = t + down_r[hit]
+        d = down_r if extra is None else down_r + extra
+        down[hit] = t + d[hit]
         recoveries.extend(failover_recovery_entries(
-            t, "region", hit, down_r, job_of_task))
+            t, "region", hit, d, job_of_task))
     vs = victims & (mode_codes == 2)
     if vs.any():
-        down[vs] = t + down_s[vs]
+        d = down_s if extra is None else down_s + extra
+        down[vs] = t + d[vs]
         recoveries.extend(failover_recovery_entries(
-            t, "single_task", vs, down_s, job_of_task))
+            t, "single_task", vs, d, job_of_task))
+    vh = victims & (mode_codes == 3)
+    if vh.any() and down_h is not None:
+        down[vh] = t + down_h[vh]
+        recoveries.extend(failover_recovery_entries(
+            t, "hot_standby", vh, down_h, job_of_task))
 
 
 def run_checkpoint_attempt(eng: ChaosEngine, alive: np.ndarray, *,
                            interval_s: float, mode: str, upload_s: float,
-                           retry: bool, regions, task_lo: int = 0) -> bool:
+                           retry: bool, regions, task_lo: int = 0,
+                           t: float = 0.0) -> bool:
     """One checkpoint attempt over the tasks covered by `alive` (their
     liveness at attempt time): per-task upload-factor draws against the
     interval timeout, then global abort-on-any-failure or per-region
@@ -195,9 +312,15 @@ def run_checkpoint_attempt(eng: ChaosEngine, alive: np.ndarray, *,
     the live `StreamEngine` coordinators (whole-arena and per-job) and
     the pregenerated timeline replay, so the draw stream cannot
     desynchronize between them. `regions` hold global task ids;
-    `task_lo` maps them into `alive` for per-job slices."""
+    `task_lo` maps them into `alive` for per-job slices. `t` is the
+    attempt time: a storage brownout active at `t` stretches every
+    upload by the (deterministic) ramp factor, so a brownout-inflated
+    attempt can never ack early — it fails the interval timeout
+    instead. The brownout multiplier consumes no rng, so the draw
+    stream is unchanged."""
+    bf = eng.brownout_factor(t)
     factors = eng.storage_latency_factors(len(alive))
-    task_fail = (upload_s * factors > interval_s) | ~alive
+    task_fail = (upload_s * factors * bf > interval_s) | ~alive
     if mode == "global":
         return bool(not task_fail.any())
     for region in regions:
@@ -206,8 +329,8 @@ def run_checkpoint_attempt(eng: ChaosEngine, alive: np.ndarray, *,
             # one in-attempt retry of the region's uploads
             # (short-circuits on the first slow draw, exactly like the
             # engine's any(...) generator)
-            bad = any(upload_s * eng.storage_latency_factor() > interval_s
-                      for _ in region)
+            bad = any(upload_s * eng.storage_latency_factor() * bf
+                      > interval_s for _ in region)
         if bad:
             return False  # region keeps previous snapshot; attempt
             # counted failed by the caller, job continues (no abort)
@@ -259,6 +382,11 @@ class ChaosTimeline:
     # CheckpointConfigs drive the replay ((n_jobs, 3) attempts/success/
     # failed); None for a single shared coordinator
     ckpt_by_job: np.ndarray | None = None
+    # per-tick per-job success counts ((n_ticks, n_jobs) i16) — populated
+    # by per-job coordinator replays so checkpoint-AGE tensors (hot-standby
+    # vs passive restore cost) can be derived per job; None for a shared
+    # coordinator (broadcast `ckpt_ok` instead, see `ckpt_age_curve`)
+    ckpt_ok_by_job: np.ndarray | None = None
 
 
 def build_chaos_timeline(
@@ -269,7 +397,10 @@ def build_chaos_timeline(
         region_restart_s=45.0, single_restart_s=3.0,
         ckpt_interval_s=None, ckpt_mode="region",
         ckpt_upload_s=4.0, ckpt_retry=True,
-        job_of_task: np.ndarray | None = None) -> ChaosTimeline:
+        job_of_task: np.ndarray | None = None,
+        standby_switch_s=0.05, standby_staleness_s=0.5,
+        restore_base_s=0.0, replay_rate=0.0,
+        lazy_extra_s=0.0) -> ChaosTimeline:
     """Replay the engine's chaos rng consumption for `n_ticks` ticks.
 
     Host kills, checkpoint outcomes and failover downtimes are all
@@ -294,6 +425,15 @@ def build_chaos_timeline(
       ascending id order within a tick — the stream contract mirrored by
       `StreamEngine._run_checkpoint_job`. `ckpt_at` counts attempts per
       tick (all jobs), and `ckpt_by_job` carries the per-job counters.
+
+    Hybrid-replication parameters (all scalars or per-task vectors, 0/
+    defaults keep historical numbers bit-identical): `standby_switch_s` /
+    `standby_staleness_s` price a `hot_standby` (code 3) failover as
+    detect + switch + staleness replay, with NO checkpoint-restore
+    surcharge; `restore_base_s` (scaled by the brownout factor at kill
+    time), `replay_rate` (seconds of replay per second of checkpoint
+    age) and `lazy_extra_s` (lazy-load region ready-time offset) form
+    the passive-restore surcharge added to region/single downtimes.
     """
     _TIMELINE_STATS["builds"] += 1
     eng = ChaosEngine(spec)
@@ -304,7 +444,18 @@ def build_chaos_timeline(
                                                       n_tasks)
     down_r = _per_task(detect_s, n_tasks) + _per_task(region_restart_s,
                                                       n_tasks)
-    kills_possible = bool(spec.host_kill_at or spec.host_kill_prob_per_s)
+    down_h = (_per_task(detect_s, n_tasks)
+              + _per_task(standby_switch_s, n_tasks)
+              + _per_task(standby_staleness_s, n_tasks))
+    restore_base = _per_task(restore_base_s, n_tasks)
+    replay = _per_task(replay_rate, n_tasks)
+    lazy_extra = _per_task(lazy_extra_s, n_tasks)
+    has_extra = bool(restore_base.any() or replay.any() or lazy_extra.any())
+    if spec.burst_at:
+        eng.schedule_kills(burst_kill_schedule(spec.burst_at, task_host,
+                                               task_region))
+    kills_possible = bool(spec.host_kill_at or spec.host_kill_prob_per_s
+                          or spec.burst_at)
     if kills_possible and (mode_codes == 1).any() and task_region is None:
         raise ValueError(
             "failover_mode='region' with kills enabled requires task_region")
@@ -338,22 +489,34 @@ def build_chaos_timeline(
                                  ckpt_upload_s, ckpt_retry, job_of_task,
                                  regions)
         ckpt_by_job = np.zeros((n_jobs, 3), int)
+        ckpt_ok_job = np.zeros((n_ticks, n_jobs), np.int16)
+        last_ok = np.zeros(n_jobs)
     else:
         next_ckpt = (ckpt_interval_s if ckpt_interval_s is not None
                      else math.inf)
         ckpt_by_job = None
+        ckpt_ok_job = None
+        last_ok = 0.0
     t = 0.0
     for i in range(n_ticks):
         ts[i] = t
         if kills_possible:
-            for host in eng.step_kills(t, t + dt, n_hosts=n_hosts):
+            hosts = eng.step_kills(t, t + dt, n_hosts=n_hosts)
+            extra = None
+            if hosts and has_extra:
+                bf = eng.brownout_factor(t)
+                age = (t - last_ok[job_of_task] if per_job_ckpt
+                       else t - last_ok)
+                extra = restore_base * bf + age * replay + lazy_extra
+            for host in hosts:
                 if host < n_hosts:
                     # scheduled kills are unbounded by n_hosts; a kill of
                     # a hostless id is a no-op (the engine just revives)
                     kills[i, host] = True
                 _resolve_failover_tick(t, host, task_host, task_region,
                                        mode_codes, down_s, down_r, down,
-                                       recoveries, job_of_task)
+                                       recoveries, job_of_task,
+                                       down_h=down_h, extra=extra)
                 eng.revive(host)   # replacement host, as in _fail_host
         if per_job_ckpt:
             for jc in jobs:
@@ -366,21 +529,27 @@ def build_chaos_timeline(
                 success += int(ok)
                 failed += int(not ok)
                 ckpt_by_job[jc.job] += (1, int(ok), int(not ok))
+                ckpt_ok_job[i, jc.job] += int(ok)
+                if ok:
+                    last_ok[jc.job] = t
         elif t + dt >= next_ckpt:
             ckpt_at[i] = 1
             attempts += 1
             ok = run_checkpoint_attempt(
                 eng, down <= t, interval_s=ckpt_interval_s,
                 mode=ckpt_mode, upload_s=ckpt_upload_s, retry=ckpt_retry,
-                regions=regions or ())
+                regions=regions or (), t=t)
             ckpt_ok[i] = int(ok)
             success += int(ok)
             failed += int(not ok)
             next_ckpt += ckpt_interval_s
+            if ok:
+                last_ok = t
         t = t + dt
     return ChaosTimeline(dt, n_ticks, ts, task_speed, kills, ckpt_at,
                          ckpt_ok, attempts, success, failed, recoveries,
-                         ckpt_by_job=ckpt_by_job)
+                         ckpt_by_job=ckpt_by_job,
+                         ckpt_ok_by_job=ckpt_ok_job)
 
 
 class _JobCkpt:
@@ -429,14 +598,17 @@ class _JobCkpt:
         return run_checkpoint_attempt(
             eng, down[self.lo:self.hi] <= t, interval_s=self.interval,
             mode=self.mode, upload_s=self.upload, retry=self.retry,
-            regions=self.regions, task_lo=self.lo)
+            regions=self.regions, task_lo=self.lo, t=t)
 
 
 def refit_failover(tl: ChaosTimeline, *, task_host: np.ndarray,
                    task_region: np.ndarray | None = None,
                    failover_mode="region", detect_s=1.0,
                    region_restart_s=45.0, single_restart_s=3.0,
-                   job_of_task: np.ndarray | None = None) -> ChaosTimeline:
+                   job_of_task: np.ndarray | None = None,
+                   standby_switch_s=0.05, standby_staleness_s=0.5,
+                   restore_base_s=0.0, replay_rate=0.0, lazy_extra_s=0.0,
+                   spec: ChaosSpec | None = None) -> ChaosTimeline:
     """Re-resolve a pregenerated timeline's failover metadata (recovery
     events) under different failover parameters WITHOUT consuming any rng
     — the cheap path that lets config sweeps share one set of chaos draws
@@ -445,7 +617,10 @@ def refit_failover(tl: ChaosTimeline, *, task_host: np.ndarray,
     Only valid for timelines with no checkpoint activity: checkpoint
     storage draws interleave with kill draws and their count depends on
     task liveness (hence on the failover config), so a ckpt-bearing
-    timeline is config-specific and must be rebuilt per config."""
+    timeline is config-specific and must be rebuilt per config. With no
+    checkpoints the checkpoint age at a kill is the kill time itself
+    (full replay since run start); pass `spec` so the brownout ramps can
+    scale `restore_base_s` at each kill time."""
     if tl.ckpt_attempts:
         raise ValueError(
             "refit_failover needs a checkpoint-free timeline (storage "
@@ -457,16 +632,29 @@ def refit_failover(tl: ChaosTimeline, *, task_host: np.ndarray,
                                                       n_tasks)
     down_r = _per_task(detect_s, n_tasks) + _per_task(region_restart_s,
                                                       n_tasks)
+    down_h = (_per_task(detect_s, n_tasks)
+              + _per_task(standby_switch_s, n_tasks)
+              + _per_task(standby_staleness_s, n_tasks))
+    restore_base = _per_task(restore_base_s, n_tasks)
+    replay = _per_task(replay_rate, n_tasks)
+    lazy_extra = _per_task(lazy_extra_s, n_tasks)
+    has_extra = bool(restore_base.any() or replay.any() or lazy_extra.any())
+    ramps = spec.brownout_at if spec is not None else ()
     if (mode_codes == 1).any() and tl.kills.any() and task_region is None:
         raise ValueError("region failover refit requires task_region")
     down = np.zeros(n_tasks)
     recoveries: list[dict] = []
     for i in np.nonzero(tl.kills.any(axis=1))[0]:
         t = float(tl.ts[i])
+        extra = None
+        if has_extra:
+            bf = brownout_factor_at(ramps, t)
+            extra = restore_base * bf + t * replay + lazy_extra
         for host in np.nonzero(tl.kills[i])[0]:
             _resolve_failover_tick(t, int(host), task_host, task_region,
                                    mode_codes, down_s, down_r, down,
-                                   recoveries, job_of_task)
+                                   recoveries, job_of_task,
+                                   down_h=down_h, extra=extra)
     return dataclasses.replace(tl, recoveries=recoveries)
 
 
@@ -570,16 +758,21 @@ def build_grid_timelines(specs, configs, *, n_ticks: int, dt: float,
 
     `specs` is one `ChaosSpec` per seed. `configs` is one dict per grid
     row with keys ``failover_mode`` (name or per-task code vector),
-    ``detect_s`` / ``region_restart_s`` / ``single_restart_s`` (scalars
-    or per-task vectors) and ``ckpt_interval_s`` / ``ckpt_mode`` /
-    ``ckpt_upload_s`` / ``ckpt_retry`` (single-coordinator checkpoint
-    parameters; a None interval disables checkpointing for that row —
-    per-job coordinator sequences are NOT supported here, callers fall
-    back to per-config `build_chaos_timeline`).
+    ``detect_s`` / ``region_restart_s`` / ``single_restart_s`` /
+    ``standby_switch_s`` / ``standby_staleness_s`` / ``restore_base_s``
+    / ``replay_rate`` / ``lazy_extra_s`` (scalars or per-task vectors),
+    ``ckpt_interval_s`` / ``ckpt_mode`` / ``ckpt_upload_s`` /
+    ``ckpt_retry`` (single-coordinator checkpoint parameters; a None
+    interval disables checkpointing for that row — per-job coordinator
+    sequences are NOT supported here, callers fall back to per-config
+    `build_chaos_timeline`), and ``brownout_at`` (config-level brownout
+    ramps APPENDED to each seed spec's own ramps — deterministic, so
+    brownout severity rides the config axis without any extra draws).
 
     Returns ``[C][S]`` `ChaosTimeline`s bit-identical to
-    ``build_chaos_timeline(specs[s], **configs[c])`` — pinned by
-    tests/test_sparse_sweep.py — while `timeline_build_count()` stays
+    ``build_chaos_timeline(replace(specs[s], brownout_at=specs[s]
+    .brownout_at + configs[c]["brownout_at"]), **rest_of_row)`` — pinned
+    by tests/test_sparse_sweep.py — while `timeline_build_count()` stays
     flat."""
     task_host = np.asarray(task_host)
     n_tasks = len(task_host)
@@ -593,11 +786,15 @@ def build_grid_timelines(specs, configs, *, n_ticks: int, dt: float,
         ts[i] = t
         t = t + dt
 
-    # per-seed scheduled kills, bucketed by tick (window t0 < t <= t1)
+    # per-seed scheduled kills, bucketed by tick (window t0 < t <= t1) —
+    # region-correlated bursts expand to host kills and merge right here,
+    # exactly like ChaosEngine.schedule_kills feeds step_kills
     scheds = []
     for sp in specs:
         sched: dict[int, list] = {}
-        for (tk, h) in sp.host_kill_at:
+        for (tk, h) in (tuple(sp.host_kill_at)
+                        + burst_kill_schedule(sp.burst_at, task_host,
+                                              task_region)):
             w = np.nonzero((ts < tk) & (tk <= ts + dt))[0]
             if len(w):
                 sched.setdefault(int(w[0]), []).append(int(h))
@@ -619,6 +816,16 @@ def build_grid_timelines(specs, configs, *, n_ticks: int, dt: float,
                   + _per_task(cfg.get("single_restart_s", 3.0), n_tasks))
         down_r = (_per_task(cfg.get("detect_s", 1.0), n_tasks)
                   + _per_task(cfg.get("region_restart_s", 45.0), n_tasks))
+        down_h = (_per_task(cfg.get("detect_s", 1.0), n_tasks)
+                  + _per_task(cfg.get("standby_switch_s", 0.05), n_tasks)
+                  + _per_task(cfg.get("standby_staleness_s", 0.5),
+                              n_tasks))
+        restore_base = _per_task(cfg.get("restore_base_s", 0.0), n_tasks)
+        replay = _per_task(cfg.get("replay_rate", 0.0), n_tasks)
+        lazy_extra = _per_task(cfg.get("lazy_extra_s", 0.0), n_tasks)
+        has_extra = bool(restore_base.any() or replay.any()
+                         or lazy_extra.any())
+        cfg_ramps = tuple(cfg.get("brownout_at", ()))
         interval = cfg.get("ckpt_interval_s")
         ck_mode = cfg.get("ckpt_mode", "region")
         upload = cfg.get("ckpt_upload_s", 4.0)
@@ -628,6 +835,7 @@ def build_grid_timelines(specs, configs, *, n_ticks: int, dt: float,
         S = len(streams)
         off = np.array([st.base for st in streams])
         down = np.zeros((S, n_tasks))
+        last_ok = np.zeros(S)
         kills = np.zeros((S, n_ticks, n_hosts), bool)
         recs: list[list] = [[] for _ in range(S)]
         ok_by_seed = np.zeros((S, n_ticks), np.int16)
@@ -643,13 +851,22 @@ def build_grid_timelines(specs, configs, *, n_ticks: int, dt: float,
                 off[s], events = _grid_kill_segment(
                     st, int(off[s]), prev, b, n_hosts, ts, dt, scheds[s])
                 for i, hosts in events.items():
+                    tk = float(ts[i])
+                    extra = None
+                    if has_extra:
+                        # last_ok[s] is constant within a kill segment
+                        # (attempts only happen at segment bounds)
+                        bf = brownout_factor_at(
+                            tuple(st.spec.brownout_at) + cfg_ramps, tk)
+                        extra = (restore_base * bf
+                                 + (tk - last_ok[s]) * replay + lazy_extra)
                     for host in hosts:
                         if host < n_hosts:
                             kills[s, i, host] = True
                         _resolve_failover_tick(
-                            float(ts[i]), host, task_host, task_region,
+                            tk, host, task_host, task_region,
                             mode_codes, down_s, down_r, down[s], recs[s],
-                            job_of_task)
+                            job_of_task, down_h=down_h, extra=extra)
             prev = b + 1
             if bi >= len(att):
                 continue
@@ -657,13 +874,19 @@ def build_grid_timelines(specs, configs, *, n_ticks: int, dt: float,
             i_att = b
             t_att = float(ts[i_att])
             alive = down <= t_att
+            # brownout multiplier at attempt time: seed ramps × config
+            # ramps, composed exactly like run_checkpoint_attempt's bf
+            bf_att = np.array([brownout_factor_at(
+                tuple(st.spec.brownout_at) + cfg_ramps, t_att)
+                for st in streams])
             factors = np.ones((S, n_tasks))
             for s, st in enumerate(streams):
                 if probs[s]:
                     u = st.at(int(off[s]), int(off[s]) + n_tasks)
                     off[s] += n_tasks
                     factors[s] = np.where(u < probs[s], facs[s], 1.0)
-            task_fail = (upload * factors > interval) | ~alive
+            task_fail = (upload * factors * bf_att[:, None]
+                         > interval) | ~alive
             if ck_mode == "global":
                 ok = ~task_fail.any(axis=1)
             else:
@@ -679,10 +902,10 @@ def build_grid_timelines(specs, configs, *, n_ticks: int, dt: float,
                         for s in np.nonzero(bad)[0]:
                             st = streams[s]
                             if not probs[s]:
-                                bad[s] = upload > interval
-                            elif upload > interval:
+                                bad[s] = upload * bf_att[s] > interval
+                            elif upload * bf_att[s] > interval:
                                 off[s] += 1          # first draw decides
-                            elif upload * facs[s] <= interval:
+                            elif upload * facs[s] * bf_att[s] <= interval:
                                 off[s] += len(rtasks)   # all draws pass
                                 bad[s] = False
                             else:
@@ -697,6 +920,7 @@ def build_grid_timelines(specs, configs, *, n_ticks: int, dt: float,
                     ok[bad] = False
                     active &= ~bad
             ok_by_seed[:, i_att] = ok
+            last_ok[ok] = t_att
 
         n_att = len(att)
         row = []
@@ -721,7 +945,10 @@ def build_perjob_chaos_timeline(
         failover_mode="region", detect_s=1.0,
         region_restart_s=45.0, single_restart_s=3.0,
         ckpt_interval_s=None, ckpt_mode="region",
-        ckpt_upload_s=4.0, ckpt_retry=True) -> ChaosTimeline:
+        ckpt_upload_s=4.0, ckpt_retry=True,
+        standby_switch_s=0.05, standby_staleness_s=0.5,
+        restore_base_s=0.0, replay_rate=0.0,
+        lazy_extra_s=0.0) -> ChaosTimeline:
     """Per-job chaos replay: job ``j`` runs its own `ChaosEngine` seeded
     from ``specs[j]``, drawing stragglers and host kills in its *local*
     host domain (``len(job_hosts[j])`` hosts, the same domain an
@@ -759,7 +986,23 @@ def build_perjob_chaos_timeline(
                                                       n_tasks)
     down_r = _per_task(detect_s, n_tasks) + _per_task(region_restart_s,
                                                       n_tasks)
-    kills_possible = [bool(sp.host_kill_at or sp.host_kill_prob_per_s)
+    down_h = (_per_task(detect_s, n_tasks)
+              + _per_task(standby_switch_s, n_tasks)
+              + _per_task(standby_staleness_s, n_tasks))
+    restore_base = _per_task(restore_base_s, n_tasks)
+    replay = _per_task(replay_rate, n_tasks)
+    lazy_extra = _per_task(lazy_extra_s, n_tasks)
+    has_extra = bool(restore_base.any() or replay.any() or lazy_extra.any())
+    for j, (sp, eng) in enumerate(zip(specs, engines)):
+        if sp.burst_at:
+            # per-job bursts expand in the job's LOCAL host domain (the
+            # same domain its kills draw in) and lift through job_hosts
+            m = job_of_task == j
+            eng.schedule_kills(burst_kill_schedule(
+                sp.burst_at, task_local_host[m],
+                None if task_region is None else task_region[m]))
+    kills_possible = [bool(sp.host_kill_at or sp.host_kill_prob_per_s
+                           or sp.burst_at)
                       for sp in specs]
     if any(kills_possible) and (mode_codes == 1).any() \
             and task_region is None:
@@ -780,9 +1023,12 @@ def build_perjob_chaos_timeline(
                                     ckpt_upload_s, ckpt_retry,
                                     job_of_task, regions)
         ckpt_by_job = np.zeros((n_jobs, 3), int)
+        ckpt_ok_job = np.zeros((n_ticks, n_jobs), np.int16)
     else:
         jobs_ck = []
         ckpt_by_job = None
+        ckpt_ok_job = None
+    last_ok = np.zeros(n_jobs)
 
     ts = np.zeros(n_ticks)
     kills = np.zeros((n_ticks, n_hosts), bool)
@@ -795,6 +1041,21 @@ def build_perjob_chaos_timeline(
     for i in range(n_ticks):
         ts[i] = t
         failed_pool: set[int] = set()
+        extra_memo: list = [None]
+
+        def kill_extra(t=t):
+            # per-task passive-restore surcharge at this tick, using each
+            # task's OWN job's brownout ramps and checkpoint age
+            if not has_extra:
+                return None
+            if extra_memo[0] is None:
+                bfj = np.array([brownout_factor_at(sp.brownout_at, t)
+                                for sp in specs])
+                extra_memo[0] = (restore_base * bfj[job_of_task]
+                                 + (t - last_ok)[job_of_task] * replay
+                                 + lazy_extra)
+            return extra_memo[0]
+
         for j, eng in enumerate(engines):
             if not kills_possible[j]:
                 continue
@@ -808,7 +1069,8 @@ def build_perjob_chaos_timeline(
                             kills[i, pool] = True
                         _resolve_failover_tick(
                             t, pool, task_host, task_region, mode_codes,
-                            down_s, down_r, down, recoveries, job_of_task)
+                            down_s, down_r, down, recoveries, job_of_task,
+                            down_h=down_h, extra=kill_extra())
                 eng.revive(lh)
         for jc in jobs_ck:
             if t + dt < jc.next_at:
@@ -820,7 +1082,11 @@ def build_perjob_chaos_timeline(
             success += int(ok)
             failed += int(not ok)
             ckpt_by_job[jc.job] += (1, int(ok), int(not ok))
+            ckpt_ok_job[i, jc.job] += int(ok)
+            if ok:
+                last_ok[jc.job] = t
         t = t + dt
     return ChaosTimeline(dt, n_ticks, ts, task_speed, kills, ckpt_at,
                          ckpt_ok, attempts, success, failed, recoveries,
-                         ckpt_by_job=ckpt_by_job)
+                         ckpt_by_job=ckpt_by_job,
+                         ckpt_ok_by_job=ckpt_ok_job)

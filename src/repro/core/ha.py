@@ -69,6 +69,11 @@ class JobTerminated(RuntimeError):
     pass
 
 
+class NoLeader(RuntimeError):
+    """ZK quorum is healthy but no leader has been elected — a normal
+    pre-election state, NOT an outage (no HDFS fallback)."""
+
+
 class LeaderService:
     """Leader metadata with the HDFS redundant copy + fallback semantics."""
 
@@ -91,13 +96,16 @@ class LeaderService:
     def get_leader(self) -> LeaderRecord:
         try:
             return LeaderRecord.from_bytes(self.zk.get("leader"))
-        except (ZKUnavailable, KeyError):
-            pass
+        except ZKUnavailable:
+            pass  # quorum lost → fall back to the HDFS copy below
+        except KeyError:
+            # healthy quorum, no leader znode: pre-election, not an outage
+            raise NoLeader("no leader elected") from None
         # ZK down → fall back to the HDFS copy
         try:
             rec = LeaderRecord.from_bytes(self.hdfs.get("ha/leader"))
             self.fallback_reads += 1
-        except Exception:
+        except (KeyError, TransientError):
             self.terminations += 1
             raise JobTerminated("both ZooKeeper and HDFS leader metadata "
                                 "unavailable") from None

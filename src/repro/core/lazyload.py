@@ -25,36 +25,50 @@ class LazyRestorer:
         order = priority if priority is not None else sorted(self.regions)
         self._ready: dict[int, threading.Event] = {
             rid: threading.Event() for rid in self.regions}
+        self._errors: dict[int, BaseException] = {}
         self._pool = ThreadPoolExecutor(max_workers=max_workers)
         self._lock = threading.Lock()
         self.timeline: dict[int, float] = {}
         self._t0 = checkpointer.clock.now()
         for rid in order:
             self._pool.submit(self._fetch, rid)
+        # all fetches are queued; let the workers exit once they drain
+        self._pool.shutdown(wait=False)
 
     def _fetch(self, rid: int) -> None:
-        region = self.regions[rid]
-        snap = self.view[rid]
-        data = {p: _unpack(self.ckpt.storage.get(k))
-                for p, k in snap.keys.items()}
-        with self._lock:
-            R.insert_region(self.tree, region, data)
-            self.timeline[rid] = self.ckpt.clock.now() - self._t0
-        self._ready[rid].set()
+        try:
+            region = self.regions[rid]
+            snap = self.view[rid]
+            data = {p: _unpack(self.ckpt.storage.get(k))
+                    for p, k in snap.keys.items()}
+            with self._lock:
+                R.insert_region(self.tree, region, data)
+                self.timeline[rid] = self.ckpt.clock.now() - self._t0
+        except BaseException as exc:  # surfaced from wait_region, not lost
+            self._errors[rid] = exc
+        finally:
+            self._ready[rid].set()
 
     # ------------------------------------------------------------------
     def wait_region(self, rid: int, timeout: float | None = 60.0):
         """Block until region rid is materialized (demand-driven access)."""
         if not self._ready[rid].wait(timeout):
             raise TimeoutError(f"region {rid} not restored in {timeout}s")
+        err = self._errors.get(rid)
+        if err is not None:
+            raise err
 
     def wait_all(self, timeout: float | None = 120.0):
         for rid in self.regions:
             self.wait_region(rid, timeout)
         return self.tree
 
+    def close(self) -> None:
+        self._pool.shutdown(wait=True)
+
     def ready_regions(self) -> list[int]:
-        return [rid for rid, ev in self._ready.items() if ev.is_set()]
+        return [rid for rid, ev in self._ready.items()
+                if ev.is_set() and rid not in self._errors]
 
     def run_when_ready(self, rid: int, fn, *args):
         """Execute fn once region rid is present (pipelined serve path)."""

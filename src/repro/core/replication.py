@@ -36,6 +36,20 @@ class TimingModel:
     step_time_s: float = 0.5
     standby_switch_s: float = 0.05    # active failover latency
 
+    def tick_failover_kwargs(self, *, nbytes: float = 0.0) -> dict:
+        """Lower this timing model into tick-engine failover kwargs
+        (`streams.engine.FailoverConfig(mode=..., **kwargs)`). Kept as a
+        plain dict so `core` never imports `streams`. Active replication
+        maps to hot-standby switch + one step of staleness replay;
+        passive restore reads `nbytes` at `restore_bps` (stretched by
+        any storage brownout at kill time) and replays one second of
+        work per second of checkpoint age."""
+        return dict(detect_s=self.detect_s,
+                    standby_switch_s=self.standby_switch_s,
+                    standby_staleness_s=self.step_time_s,
+                    restore_base_s=nbytes / self.restore_bps,
+                    replay_rate=1.0)
+
 
 class ReplicationManager:
     def __init__(self, policy: ResiliencyPolicy, checkpointer, *,

@@ -286,6 +286,7 @@ class ConfigSweepResult:
     recovery_surface: np.ndarray   # (C, S) recovery_time_s
     slo_surface: np.ndarray        # (C, S) slo_violation_frac
     backlog_surface: np.ndarray    # (C, S) max_backlog
+    lost_surface: np.ndarray       # (C, S) dropped records (lost work)
     wall_s: float
 
     @property
@@ -310,8 +311,11 @@ def _config_label(i: int, cfg: dict) -> str:
     bits = []
     fo, ck = cfg.get("failover"), cfg.get("ckpt")
     if isinstance(fo, FailoverConfig):
-        bits.append(f"{fo.mode}:restart="
-                    f"{fo.single_restart_s if fo.mode == 'single_task' else fo.region_restart_s:g}s")
+        if fo.mode == "hot_standby":
+            bits.append(f"hot_standby:switch={fo.standby_switch_s:g}s")
+        else:
+            bits.append(f"{fo.mode}:restart="
+                        f"{fo.single_restart_s if fo.mode == 'single_task' else fo.region_restart_s:g}s")
     elif fo is not None:
         bits.append(f"per-job[{len(list(fo))}]")
     if isinstance(ck, CheckpointConfig):
@@ -322,6 +326,9 @@ def _config_label(i: int, cfg: dict) -> str:
         bits.append(f"qcap×{cfg['qcap_scale']:g}")
     if cfg.get("sel_scale", 1.0) != 1.0:
         bits.append(f"sel×{cfg['sel_scale']:g}")
+    bro = tuple(cfg.get("brownout", ()))
+    if bro:
+        bits.append("brownout×" + "/".join(f"{r[2]:g}" for r in bro))
     return " ".join(bits) if bits else f"cfg{i}"
 
 
@@ -374,6 +381,74 @@ def sweep_configs(graph: LogicalGraph | PackedArena, configs, seeds, *,
                     for r in results])
     bkl = np.array([[s.max_backlog for s in r.summaries]
                     for r in results])
+    lost = np.array([[s.dropped for s in r.summaries]
+                     for r in results])
     labels = [_config_label(i, c) for i, c in enumerate(norm)]
     return ConfigSweepResult(logical.name, duration_s, norm, labels,
-                             results, rec, slo, bkl, wall)
+                             results, rec, slo, bkl, lost, wall)
+
+
+# ----------------------------------------------------------------------
+# replication-vs-checkpoint tradeoff cube (paper §IV-A, Fig 9)
+# ----------------------------------------------------------------------
+@dataclasses.dataclass
+class ReplicationTradeoff:
+    """The hybrid-replication tuning cube: every surface is shaped
+    ``(n_modes, n_intervals, n_brownouts, S)`` — recovery time, SLO
+    violation and lost work over replication-mode × checkpoint-interval
+    × brownout-severity, all from ONE `sweep_configs` device call."""
+    modes: list[str]
+    ckpt_intervals: list
+    brownout_peaks: list[float]
+    recovery: np.ndarray
+    slo: np.ndarray
+    lost: np.ndarray
+    grid: ConfigSweepResult
+
+    def rows(self) -> list[dict]:
+        return self.grid.rows()
+
+
+def replication_tradeoff(graph, seeds, *, base_spec: ChaosSpec,
+                         duration_s: float,
+                         failovers: dict[str, FailoverConfig],
+                         ckpt_intervals=(None, 10.0, 30.0),
+                         brownouts=((), ((0.0, 1e9, 4.0),)),
+                         ckpt_upload_s: float = 4.0,
+                         **sweep_kw) -> ReplicationTradeoff:
+    """Sweep the full replication-vs-checkpoint tradeoff cube in ONE
+    `sweep_configs` call (hence one traced device pass, flat
+    `timeline_build_count`).
+
+    `failovers` maps mode labels (e.g. ``"hot_standby"`` /
+    ``"passive"``) to the `FailoverConfig` representing that replication
+    strategy; `ckpt_intervals` is a sequence of checkpoint intervals
+    (None = no checkpoints → passive restores replay from run start);
+    `brownouts` is a sequence of config-level brownout ramp tuples
+    (appended to `base_spec`'s own ramps, deterministically). The cube
+    axes are ordered (mode, interval, brownout, seed)."""
+    mode_names = list(failovers)
+    intervals = list(ckpt_intervals)
+    bros = [tuple(b) for b in brownouts]
+    configs = []
+    for m in mode_names:
+        for iv in intervals:
+            for b in bros:
+                peak = max((r[2] for r in b), default=1.0)
+                configs.append({
+                    "failover": failovers[m],
+                    "ckpt": (None if iv is None else CheckpointConfig(
+                        interval_s=iv, upload_s=ckpt_upload_s)),
+                    "brownout": b,
+                    "label": (f"{m} ckpt="
+                              f"{'off' if iv is None else f'{iv:g}s'}"
+                              f" brownout={peak:g}x")})
+    grid = sweep_configs(graph, configs, seeds, base_spec=base_spec,
+                         duration_s=duration_s, **sweep_kw)
+    shape = (len(mode_names), len(intervals), len(bros), -1)
+    return ReplicationTradeoff(
+        mode_names, intervals, [max((r[2] for r in b), default=1.0)
+                                for b in bros],
+        grid.recovery_surface.reshape(shape),
+        grid.slo_surface.reshape(shape),
+        grid.lost_surface.reshape(shape), grid)

@@ -71,7 +71,8 @@ import math
 
 import numpy as np
 
-from repro.core.chaos import (ChaosEngine, failover_recovery_entries,
+from repro.core.chaos import (ChaosEngine, burst_kill_schedule,
+                              failover_recovery_entries,
                               run_checkpoint_attempt)
 from repro.streams.graph import (LogicalGraph, PhysicalGraph, Task, expand,
                                  namespaced)
@@ -79,10 +80,37 @@ from repro.streams.graph import (LogicalGraph, PhysicalGraph, Task, expand,
 
 @dataclasses.dataclass
 class FailoverConfig:
-    mode: str = "region"             # "region" | "single_task" | "none"
+    # "region" | "single_task" | "hot_standby" | "none"
+    mode: str = "region"
     detect_s: float = 1.0
     region_restart_s: float = 45.0   # restore state + redeploy the region
     single_restart_s: float = 3.0    # redeploy one task, clean state
+    # hybrid replication (paper §IV-A): hot_standby pays switch latency +
+    # replay of standby staleness INSTEAD of a checkpoint restore
+    standby_switch_s: float = 0.05
+    standby_staleness_s: float = 0.5
+    # passive-restore surcharge (added to region/single downtimes):
+    # restore_base_s is scaled by the storage-brownout factor at kill
+    # time (restore bandwidth degrades with the ramp), replay_rate is
+    # seconds of replay per second of checkpoint age, and
+    # lazyload_stagger_s staggers region ready-times — a task blocks
+    # until its own region is materialized (State LazyLoad, §III-B)
+    restore_base_s: float = 0.0
+    replay_rate: float = 0.0
+    lazyload_stagger_s: float = 0.0
+
+    @classmethod
+    def from_replication(cls, timing, *, mode: str = "hot_standby",
+                         state_bytes: float = 0.0,
+                         detect_s: float | None = None) -> "FailoverConfig":
+        """Lower a `core.replication.TimingModel` into tick-engine
+        failover parameters (active replication → `hot_standby`; passive
+        → checkpoint restore whose cost scales with state size, restore
+        bandwidth, and checkpoint age)."""
+        kw = timing.tick_failover_kwargs(nbytes=state_bytes)
+        if detect_s is not None:
+            kw["detect_s"] = detect_s
+        return cls(mode=mode, **kw)
 
 
 @dataclasses.dataclass
@@ -363,10 +391,15 @@ def per_task_failover(failover, n_tasks: int,
                       job_of_task: np.ndarray | None = None):
     """Normalize a `FailoverConfig` — or a per-job sequence of them — into
     per-task vectors ``(mode_codes i8, detect, restart_single,
-    restart_region)``.
+    restart_region, extras)`` where ``extras`` is a dict of per-task
+    hybrid-replication vectors: ``switch`` / ``stale`` (hot-standby
+    failover latency + staleness replay), ``restore_base`` /
+    ``replay_rate`` (passive-restore cost model; restore_base is scaled
+    by the brownout factor at kill time, replay_rate by checkpoint age)
+    and ``stagger`` (per-rank lazy-load region ready-time spacing).
 
     Mode codes follow `core.chaos.failover_mode_codes` (0 none, 1 region,
-    2 single_task). A sequence means one config per job of a packed arena
+    2 single_task, 3 hot_standby). A sequence means one config per job of a packed arena
     (`job_of_task` maps tasks to jobs; `None` entries fall back to the
     default config), which is how per-job failover policies reach both
     engines and the chaos timeline: everything downstream consumes only
@@ -377,10 +410,14 @@ def per_task_failover(failover, n_tasks: int,
     if failover is None:
         failover = FailoverConfig()
     if isinstance(failover, FailoverConfig):
-        return (failover_mode_codes(failover.mode, n_tasks),
-                np.full(n_tasks, float(failover.detect_s)),
-                np.full(n_tasks, float(failover.single_restart_s)),
-                np.full(n_tasks, float(failover.region_restart_s)))
+        c = failover
+        extras = {k: np.full(n_tasks, float(getattr(c, a))) for k, a in
+                  _EXTRA_FIELDS}
+        return (failover_mode_codes(c.mode, n_tasks),
+                np.full(n_tasks, float(c.detect_s)),
+                np.full(n_tasks, float(c.single_restart_s)),
+                np.full(n_tasks, float(c.region_restart_s)),
+                extras)
     cfgs = [c if c is not None else FailoverConfig() for c in failover]
     if job_of_task is None:
         if len(cfgs) != 1:
@@ -395,10 +432,43 @@ def per_task_failover(failover, n_tasks: int,
                          f"job ({len(cfgs)} != {n_jobs})")
     code_of_job = np.concatenate(
         [failover_mode_codes(c.mode, 1) for c in cfgs])
+    extras = {k: np.array([float(getattr(c, a)) for c in cfgs])[job_of_task]
+              for k, a in _EXTRA_FIELDS}
     return (code_of_job[job_of_task].astype(np.int8),
             np.array([c.detect_s for c in cfgs])[job_of_task],
             np.array([c.single_restart_s for c in cfgs])[job_of_task],
-            np.array([c.region_restart_s for c in cfgs])[job_of_task])
+            np.array([c.region_restart_s for c in cfgs])[job_of_task],
+            extras)
+
+
+# extras-dict key → FailoverConfig attribute
+_EXTRA_FIELDS = (("switch", "standby_switch_s"),
+                 ("stale", "standby_staleness_s"),
+                 ("restore_base", "restore_base_s"),
+                 ("replay_rate", "replay_rate"),
+                 ("stagger", "lazyload_stagger_s"))
+
+
+def lazy_ready_extra(stagger: np.ndarray, task_region: np.ndarray | None,
+                     job_of_task: np.ndarray | None) -> np.ndarray:
+    """Per-task lazy-load restore penalty: region ``rank`` within its job
+    times the stagger. Models the State-LazyLoad ready-time schedule —
+    regions materialize in priority order, and a task blocks only until
+    its OWN region is restored, so later-ranked regions pay
+    ``rank * stagger`` extra downtime. No regions → rank 0 → zero."""
+    stagger = np.asarray(stagger, dtype=float)
+    if task_region is None or not np.any(stagger):
+        return np.zeros_like(stagger)
+    task_region = np.asarray(task_region)
+    if job_of_task is None:
+        first = task_region.min()
+    else:
+        job_of_task = np.asarray(job_of_task)
+        n_jobs = int(job_of_task.max()) + 1
+        first_of_job = np.full(n_jobs, np.iinfo(np.int64).max)
+        np.minimum.at(first_of_job, job_of_task, task_region)
+        first = first_of_job[job_of_task]
+    return (task_region - first).astype(float) * stagger
 
 
 # ----------------------------------------------------------------------
@@ -1191,16 +1261,30 @@ class StreamEngine:
 
         # per-task failover vectors (uniform configs are constant vectors;
         # per-job FailoverConfig lists vary by job slice)
-        codes, det, rst_s, rst_r = per_task_failover(
+        codes, det, rst_s, rst_r, fx = per_task_failover(
             failover, n_tasks, self._job_of_task)
         self._mode_single = codes == 2
         self._mode_region = codes == 1
+        self._mode_hot = codes == 3
         self._any_single = bool(self._mode_single.any())
         self._downtime_single = det + rst_s
         self._downtime_region = det + rst_r
+        # hot-standby pays switch + staleness replay, never a restore
+        self._downtime_hot = det + fx["switch"] + fx["stale"]
+        # passive-restore surcharge inputs (zero by default → no-op):
+        # extra = restore_base*brownout(t) + ckpt_age(t)*replay + lazy
+        self._restore_base = fx["restore_base"]
+        self._replay_rate = fx["replay_rate"]
+        self._lazy_extra = lazy_ready_extra(
+            fx["stagger"], self._task_region, self._job_of_task)
+        self._has_extra = bool(self._restore_base.any()
+                               or self._replay_rate.any()
+                               or self._lazy_extra.any())
 
         # checkpoint coordinators: one shared (historical semantics, incl.
         # the cross-region short-circuit) or one per job (per-job configs)
+        self._last_ckpt_t = 0.0          # shared coordinator
+        self._last_ckpt_vec = None       # per-job coordinators
         if ckpt is None or isinstance(ckpt, CheckpointConfig):
             self._ckpt_list = None
             self._next_ckpt = (ckpt.interval_s if ckpt else math.inf)
@@ -1214,6 +1298,7 @@ class StreamEngine:
             self._next_ckpt_j = np.array(
                 [c.interval_s if c is not None else math.inf
                  for c in cfgs])
+            self._last_ckpt_vec = np.zeros(self.arena.n_jobs)
 
         # compat: per-op dict views aliasing the arena (tests / tooling)
         self.par = {n: ops[n].parallelism for n in ops}
@@ -1245,12 +1330,28 @@ class StreamEngine:
         self._max_down = 0.0          # latest down_until across the arena
         if self._chaos_list is not None:
             self._chaos_kills_possible = any(
-                bool(e.spec.host_kill_at or e.spec.host_kill_prob_per_s)
+                bool(e.spec.host_kill_at or e.spec.host_kill_prob_per_s
+                     or e.spec.burst_at)
                 for e in self._chaos_list)
+            self._gates_possible = any(
+                bool(e.spec.mq_down) for e in self._chaos_list)
+            # region-correlated bursts: lower each job's burst events
+            # into scheduled host kills in the job's LOCAL host domain
+            for job, eng in zip(self.arena.jobs, self._chaos_list):
+                if eng.spec.burst_at:
+                    sl = slice(job.task_lo, job.task_hi)
+                    eng.schedule_kills(burst_kill_schedule(
+                        eng.spec.burst_at, job.local_host,
+                        self._task_region[sl]))
         else:
             spec = self.chaos.spec
             self._chaos_kills_possible = bool(
-                spec.host_kill_at or spec.host_kill_prob_per_s)
+                spec.host_kill_at or spec.host_kill_prob_per_s
+                or spec.burst_at)
+            self._gates_possible = bool(spec.mq_down)
+            if spec.burst_at:
+                self.chaos.schedule_kills(burst_kill_schedule(
+                    spec.burst_at, self._task_host, self._task_region))
 
         self.metrics = EngineMetrics(
             [p.name for p in self._ops],
@@ -1363,6 +1464,21 @@ class StreamEngine:
         any_single = self._any_single
         emitted = 0.0
 
+        # MQ/coordinator outage windows gate sources (deterministic, no
+        # rng): a down message queue means sources emit nothing this tick
+        if self._gates_possible:
+            if self._chaos_list is not None:
+                gate_by_job = np.array(
+                    [1.0 if e.mq_available(t) else 0.0
+                     for e in self._chaos_list])
+                gate0 = 1.0
+            else:
+                gate_by_job = None
+                gate0 = 1.0 if self.chaos.mq_available(t) else 0.0
+        else:
+            gate_by_job = None
+            gate0 = 1.0
+
         jobs = self._job_of_op          # per-job segments (packed arenas)
         for oi, op in enumerate(self._ops):
             sl = slice(op.lo, op.hi)
@@ -1373,6 +1489,11 @@ class StreamEngine:
                 else:
                     produced = op.src_row * alive_f[sl]
                     e_op = produced.sum()
+                gate = (gate0 if gate_by_job is None
+                        else float(gate_by_job[jobs[oi]]))
+                if gate != 1.0:
+                    produced = produced * gate
+                    e_op = e_op * gate
                 emitted += e_op
                 if jobs is not None:
                     self.metrics._emitted_by_job[jobs[oi]] += e_op
@@ -1418,7 +1539,8 @@ class StreamEngine:
                 for job in self.arena.jobs:
                     eng = self._chaos_list[job.index]
                     spec = eng.spec
-                    if not (spec.host_kill_at or spec.host_kill_prob_per_s):
+                    if not (spec.host_kill_at or spec.host_kill_prob_per_s
+                            or spec.burst_at):
                         continue
                     m = job.hosts
                     for lh in eng.step_kills(t, t + dt, n_hosts=len(m)):
@@ -1467,14 +1589,39 @@ class StreamEngine:
         replays)."""
         t = self.t
         victims = self._task_host == host
+        # passive-restore surcharge: brownout-inflated restore bandwidth
+        # + replay of work since the last successful checkpoint + lazy-
+        # load region ready-time (zero vectors → identical old downtimes)
+        if self._has_extra:
+            if self._chaos_list is not None:
+                bfj = np.array([e.brownout_factor(t)
+                                for e in self._chaos_list])
+                bf_t = bfj[self._job_of_task]
+            else:
+                bf_t = self.chaos.brownout_factor(t)
+            age = t - (self._last_ckpt_vec[self._job_of_task]
+                       if self._last_ckpt_vec is not None
+                       else self._last_ckpt_t)
+            extra = (self._restore_base * bf_t + age * self._replay_rate
+                     + self._lazy_extra)
+        else:
+            extra = None
         vr = victims & self._mode_region
         if vr.any():
             hit = np.isin(self._task_region, self._task_region[vr])
-            self._apply_failover(t, "region", hit, self._downtime_region)
+            d = (self._downtime_region if extra is None
+                 else self._downtime_region + extra)
+            self._apply_failover(t, "region", hit, d)
         vs = victims & self._mode_single
         if vs.any():
-            self._apply_failover(t, "single_task", vs,
-                                 self._downtime_single)
+            d = (self._downtime_single if extra is None
+                 else self._downtime_single + extra)
+            self._apply_failover(t, "single_task", vs, d)
+        # hot standby: switch + staleness replay only — no restore, no
+        # checkpoint-age replay, no drops (the standby keeps consuming)
+        vh = victims & self._mode_hot
+        if vh.any():
+            self._apply_failover(t, "hot_standby", vh, self._downtime_hot)
         if revive:
             self.chaos.revive(host)  # replacement host
 
@@ -1501,7 +1648,9 @@ class StreamEngine:
             self.chaos, self._down_until <= self.t,
             interval_s=cfg.interval_s, mode=cfg.mode,
             upload_s=cfg.upload_s, retry=cfg.retry_failed_region,
-            regions=self.phys.regions)
+            regions=self.phys.regions, t=self.t)
+        if ok:
+            self._last_ckpt_t = self.t
         m.ckpt_success += int(ok)
         m.ckpt_failed += int(not ok)
 
@@ -1525,7 +1674,9 @@ class StreamEngine:
             interval_s=cfg.interval_s, mode=cfg.mode,
             upload_s=cfg.upload_s, retry=cfg.retry_failed_region,
             regions=self.phys.regions[job.region_lo:job.region_hi],
-            task_lo=lo)
+            task_lo=lo, t=self.t)
+        if ok:
+            self._last_ckpt_vec[j] = self.t
         m.ckpt_success += int(ok)
         m.ckpt_failed += int(not ok)
         m.ckpt_by_job[j, 1 if ok else 2] += 1

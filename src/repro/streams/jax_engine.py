@@ -119,6 +119,46 @@ the tick-driven numpy engine observes them, so metrics stay pinned to
 checkpoint outcomes and recovery events ride along as host-side
 metadata because they never feed back into queue dynamics.
 
+External-system event tensors + replication recovery modes
+----------------------------------------------------------
+The per-tick ``xs`` stream carries three deterministic (rng-free)
+external-system curves next to the kill masks, always present so the
+pytree structure — and hence the trace — is stable:
+
+    bfac  (n_ticks, n_jobs) f64  storage brownout latency factor
+                                 (`core.chaos.brownout_curve`: tent
+                                 ramps from `ChaosSpec.brownout_at`
+                                 plus any config-axis ramps, composed
+                                 by tuple concatenation so grid rows
+                                 stay bit-identical to rebuilds)
+    gate  (n_ticks, n_jobs) f64  MQ/coordinator availability in {0,1}
+                                 (`mq_gate_curve` over
+                                 `ChaosSpec.mq_down` windows); source
+                                 emission is multiplied by the gate
+    ckage (n_ticks, n_jobs) f64  checkpoint age at tick start
+                                 (`ckpt_age_curve`, tick-exclusive:
+                                 a success at tick i lowers the age
+                                 from tick i+1 on)
+
+All three gather per task through ``pa["job_of_task"]`` inside the
+tick. Region-correlated failure bursts (`ChaosSpec.burst_at`) lower as
+scheduled kills merged into the same kill scan — none of these events
+consume rng draws, preserving the draw-for-draw replay contract.
+
+Failover lowers four recovery modes per task (traced mode masks, so a
+config grid can mix them row by row): ``none`` / ``region`` /
+``single_task`` pay passive-restore cost — downtime =
+``detect + restart + restore_base·bfac(t) + ckage(t)·replay_rate +
+lazy_extra`` where ``lazy_extra`` is the lazy-load per-region ready
+stagger (`streams.engine.lazy_ready_extra`) — while ``hot_standby``
+pays ``detect + standby_switch + standby_staleness`` only (no
+brownout/age/drop exposure; the standby assumes execution). The
+brownout factor thus stretches both checkpoint attempt durations (in
+the timeline build) and passive restores (in the tick), which is what
+makes the replication-vs-checkpoint tradeoff surface
+(`streams.chaos_sweep.replication_tradeoff`) come out of ONE
+`sweep_configs` device pass.
+
 Compiled `run` functions are cached per *plan shape* (the `TensorPlan`
 digest + region count — never float parameters, which are traced), so
 two engines over same-shaped graphs share one trace; `get_cached_run_fns`
@@ -165,14 +205,16 @@ import numpy as np
 from jax import lax
 
 from repro.core.chaos import (ChaosEngine, ChaosSpec, ChaosTimeline,
-                              build_chaos_timeline, build_grid_timelines,
-                              build_perjob_chaos_timeline, refit_failover)
+                              brownout_curve, build_chaos_timeline,
+                              build_grid_timelines,
+                              build_perjob_chaos_timeline, ckpt_age_curve,
+                              mq_gate_curve, refit_failover)
 from repro.dist.sharding import (local_shard_count, sharded_grid_fn,
                                  sharded_seed_fn)
 from repro.streams.engine import (CheckpointConfig, FailoverConfig,
                                   JobSlice, PackedArena, TensorPlan,
-                                  build_plan, lower_tensor_plan,
-                                  per_task_failover)
+                                  build_plan, lazy_ready_extra,
+                                  lower_tensor_plan, per_task_failover)
 from repro.streams.graph import LogicalGraph, PhysicalGraph, expand
 
 try:  # scoped x64 — keeps the rest of the process on default f32
@@ -243,12 +285,14 @@ def _build_compact_run(desc: TickDesc):
         produced = jnp.zeros_like(q)
         qps_acc = jnp.zeros((n_ops,), q.dtype)
 
+        gate_t = x["gate"][pa["job_of_task"]]  # MQ source gate (0/1)
         for fi, ph in enumerate(tp.phases):
             eph = pa["edges"][fi]
             if ph.consumes:
                 take = jnp.minimum(q, cap_t * eph["cons_mask"])
                 q = q - take
-                src_emit = pa["src_row"] * alive_f * eph["cons_mask"]
+                src_emit = (pa["src_row"] * alive_f * eph["cons_mask"]
+                            * gate_t)
                 produced = produced + (src_emit + take * sel_t)
                 if len(ph.e_jobs):
                     emitted = emitted.at[eph["e_jobs"]].add(
@@ -358,8 +402,16 @@ def _build_compact_run(desc: TickDesc):
 def _finish_tick(pa, state, x, q, emitted, dropped, qps_acc,
                  n_regions, n_ops):
     """Shared end-of-tick block of the dense and compact ticks: chaos
-    host kills → failover (per-task mode masks), checkpoint attempt
-    counter, per-op metric rows."""
+    host kills → failover (per-task mode masks + passive-restore
+    surcharge from the external-event tensors), checkpoint attempt
+    counter, per-op metric rows.
+
+    The restore surcharge ``extra = restore_base * brownout(t) +
+    ckpt_age(t) * replay_rate + lazy_extra`` rides the per-tick per-job
+    event rows (``x["bfac"]`` / ``x["ckage"]``) gathered per task;
+    hot-standby victims pay switch + staleness replay instead and never
+    touch checkpoint storage. Zero vectors reduce to the historical
+    region/single downtimes bit-for-bit."""
     t = x["t"]
     vict = x["kills"][pa["task_host"]]
     hit_s = (vict > 0.0).astype(q.dtype) * pa["mode_single"]
@@ -367,12 +419,19 @@ def _finish_tick(pa, state, x, q, emitted, dropped, qps_acc,
                                   pa["task_region"],
                                   num_segments=n_regions)
     hit_r = (reg_hit[pa["task_region"]] > 0.0).astype(q.dtype)
-    until_s = t + (pa["detect"] + pa["restart_single"])
-    until_r = t + (pa["detect"] + pa["restart_region"])
+    hit_h = (vict > 0.0).astype(q.dtype) * pa["mode_hot"]
+    extra = (pa["restore_base"] * x["bfac"][pa["job_of_task"]]
+             + x["ckage"][pa["job_of_task"]] * pa["replay_rate"]
+             + pa["lazy_extra"])
+    until_s = t + (pa["detect"] + pa["restart_single"] + extra)
+    until_r = t + (pa["detect"] + pa["restart_region"] + extra)
+    until_h = t + (pa["detect"] + pa["standby_switch"]
+                   + pa["standby_stale"])
     down_until = jnp.where(hit_r > 0.0, until_r,
                            jnp.where(hit_s > 0.0, until_s,
-                                     state.down_until))
-    hit_any = jnp.maximum(hit_r, hit_s)
+                                     jnp.where(hit_h > 0.0, until_h,
+                                               state.down_until)))
+    hit_any = jnp.maximum(jnp.maximum(hit_r, hit_s), hit_h)
     q = jnp.where(hit_any > 0.0, 0.0, q)
 
     ckpt_epoch = state.ckpt_epoch + x["ckpt"].astype(jnp.int32)
@@ -399,12 +458,19 @@ def _finish_tick_batched(pa, state, x, q, emitted, dropped, qps_acc,
                                   pa["task_region"],
                                   num_segments=n_regions)
     hit_r = (reg_hit[pa["task_region"]].T > 0.0).astype(q.dtype)
-    until_s = t + (pa["detect"] + pa["restart_single"])
-    until_r = t + (pa["detect"] + pa["restart_region"])
+    hit_h = (vict > 0.0).astype(q.dtype) * pa["mode_hot"]
+    extra = (pa["restore_base"] * x["bfac"][:, pa["job_of_task"]]
+             + x["ckage"][:, pa["job_of_task"]] * pa["replay_rate"]
+             + pa["lazy_extra"])
+    until_s = t + (pa["detect"] + pa["restart_single"] + extra)
+    until_r = t + (pa["detect"] + pa["restart_region"] + extra)
+    until_h = t + (pa["detect"] + pa["standby_switch"]
+                   + pa["standby_stale"])
     down_until = jnp.where(hit_r > 0.0, until_r,
                            jnp.where(hit_s > 0.0, until_s,
-                                     state.down_until))
-    hit_any = jnp.maximum(hit_r, hit_s)
+                                     jnp.where(hit_h > 0.0, until_h,
+                                               state.down_until)))
+    hit_any = jnp.maximum(jnp.maximum(hit_r, hit_s), hit_h)
     q = jnp.where(hit_any > 0.0, 0.0, q)
 
     ckpt_epoch = state.ckpt_epoch + x["ckpt"].astype(jnp.int32)
@@ -459,12 +525,14 @@ def _build_pallas_run(desc: TickDesc, impl: str | None = None):
         produced = jnp.zeros_like(q)
         qps_acc = jnp.zeros((q.shape[0], n_ops), q.dtype)
 
+        gate_t = x["gate"][:, pa["job_of_task"]]  # MQ source gate (0/1)
         for fi, ph in enumerate(tp.phases):
             eph = pa["edges"][fi]
             if ph.consumes:
                 take = jnp.minimum(q, cap_t * eph["cons_mask"])
                 q = q - take
-                src_emit = pa["src_row"] * alive_f * eph["cons_mask"]
+                src_emit = (pa["src_row"] * alive_f * eph["cons_mask"]
+                            * gate_t)
                 produced = produced + (src_emit + take * sel_t)
                 if len(ph.e_jobs):
                     emitted = emitted.at[:, eph["e_jobs"]].add(
@@ -497,7 +565,8 @@ def _build_pallas_run(desc: TickDesc, impl: str | None = None):
         aux = [pack_phase_tables(pa["edges"][fi], pa["qcap"],
                                  pa["mode_single"]) if ph.D else None
                for fi, ph in enumerate(tp.phases)]
-        xs_t = dict(xs, kills=jnp.swapaxes(xs["kills"], 0, 1))
+        xs_t = dict(xs, **{k: jnp.swapaxes(xs[k], 0, 1)
+                           for k in ("kills", "bfac", "gate", "ckage")})
         final, ys = lax.scan(lambda st, x: tick(pa, aux, st, x), state,
                              xs_t)
         return final, {k: jnp.swapaxes(v, 0, 1) for k, v in ys.items()}
@@ -529,11 +598,13 @@ def _build_run(desc: TickDesc):
         produced = jnp.zeros_like(q)
         qps_acc = jnp.zeros((n_ops,), q.dtype)
 
+        gate_t = x["gate"][job_of_task]  # MQ source gate (0/1)
         for fi, ph in enumerate(tp.phases):
             if ph.consumes:
                 take = jnp.minimum(q, cap_t * ph.cons_mask)
                 q = q - take
-                src_emit = pa["src_row"] * alive_f * ph.cons_mask * is_src
+                src_emit = (pa["src_row"] * alive_f * ph.cons_mask * is_src
+                            * gate_t)
                 produced = produced + (src_emit + take * sel_t)
                 emitted = emitted + seg(src_emit, job_of_task,
                                         num_segments=n_jobs)
@@ -802,8 +873,8 @@ _MIX_CACHE: dict = {}
 _CFG_CACHE: dict = {}
 _CFG_MIX_CACHE: dict = {}
 
-_XS_AXES = {"t": None, "kills": 0, "ckpt": None}
-_XS_CFG_AXES = {"t": None, "kills": 0, "ckpt": 0}
+_XS_AXES = {"t": None, "kills": 0, "ckpt": None,
+            "bfac": 0, "gate": 0, "ckage": 0}
 
 # job-mix vmap axis: only the per-task source emission row varies with a
 # job mix (service capacity / selectivity are per-job constants the mix
@@ -812,7 +883,11 @@ _PA_MIX_AXES = {"qcap": None, "src_row": 0, "cap_base": None, "sel": None,
                 "dt": None, "task_host": None, "task_region": None,
                 "detect": None, "restart_region": None,
                 "restart_single": None, "mode_single": None,
-                "mode_region": None, "op_of_task": None,
+                "mode_region": None, "mode_hot": None,
+                "standby_switch": None, "standby_stale": None,
+                "restore_base": None, "replay_rate": None,
+                "lazy_extra": None, "job_of_task": None,
+                "op_of_task": None,
                 "par_of_op": None, "src_mask_ops": None, "edges": None}
 
 # resiliency-config vmap axis: the traced failover/queue/selectivity
@@ -820,7 +895,10 @@ _PA_MIX_AXES = {"qcap": None, "src_row": 0, "cap_base": None, "sel": None,
 _PA_CFG_AXES = {"qcap": 0, "src_row": None, "cap_base": None, "sel": 0,
                 "dt": None, "task_host": None, "task_region": None,
                 "detect": 0, "restart_region": 0, "restart_single": 0,
-                "mode_single": 0, "mode_region": 0, "op_of_task": None,
+                "mode_single": 0, "mode_region": 0, "mode_hot": 0,
+                "standby_switch": 0, "standby_stale": 0,
+                "restore_base": 0, "replay_rate": 0, "lazy_extra": 0,
+                "job_of_task": None, "op_of_task": None,
                 "par_of_op": None, "src_mask_ops": None, "edges": None}
 
 
@@ -841,7 +919,8 @@ def _lift_single(run_batched):
     def run1(pa, state, xs):
         st = EngineState(*(jnp.asarray(l)[None]
                            for l in state))
-        xs1 = dict(xs, kills=jnp.asarray(xs["kills"])[None])
+        xs1 = dict(xs, **{k: jnp.asarray(xs[k])[None]
+                          for k in ("kills", "bfac", "gate", "ckage")})
         final, ys = run_batched(pa, st, xs1)
         return (EngineState(*(l[0] for l in final)),
                 {k: v[0] for k, v in ys.items()})
@@ -920,8 +999,12 @@ def _cfg_xs_axes(shared_kills: bool) -> dict:
     # checkpoint-free grids share one (S, T, H) kill tensor across every
     # config (kill draws are failover-independent), so the config axis
     # broadcasts it instead of materializing C copies on device;
-    # ckpt-bearing grids carry genuinely per-config kills (axis 0)
-    return {"t": None, "kills": None if shared_kills else 0, "ckpt": 0}
+    # ckpt-bearing grids carry genuinely per-config kills (axis 0).
+    # bfac/ckage always carry the config axis (config brownout ramps
+    # compose into the factor; ckpt cadence sets the age curve); the MQ
+    # gate is seed-only and broadcasts across configs.
+    return {"t": None, "kills": None if shared_kills else 0, "ckpt": 0,
+            "bfac": 0, "gate": None, "ckage": 0}
 
 
 def get_cached_config_fn(desc: TickDesc, shared_kills: bool = False):
@@ -968,7 +1051,7 @@ def get_sharded_config_fn(desc: TickDesc, n_shards: int,
     key = (desc, n_shards, shared_kills)
     if key not in _CFG_SHARD_CACHE:
         seed_axes = {"t": None, "kills": 0 if shared_kills else 1,
-                     "ckpt": None}
+                     "ckpt": None, "bfac": 1, "gate": 0, "ckage": 1}
         _CFG_SHARD_CACHE[key] = sharded_grid_fn(
             _build_run(desc), pa_axes=_PA_CFG_AXES, xs_axes=_XS_AXES,
             cfg_xs_axes=_cfg_xs_axes(shared_kills),
@@ -1054,10 +1137,13 @@ class _Lowered:
                 cap_base[p.lo:p.hi] = p.service_rate * dt
 
         # per-task failover vectors (per-job config lists lower here)
-        codes, det, rst_s, rst_r = per_task_failover(
+        codes, det, rst_s, rst_r, fx = per_task_failover(
             failover, n_tasks, self.job_of_task)
         self.fo_codes = codes
         self.fo_detect, self.fo_rs, self.fo_rr = det, rst_s, rst_r
+        self.fo_extras = fx
+        self.fo_lazy = lazy_ready_extra(fx["stagger"], self.task_region,
+                                        self.job_of_task)
         if isinstance(ckpt, (list, tuple)) and (
                 self.arena is None or len(list(ckpt)) != self.n_jobs):
             raise ValueError("per-job ckpt list needs a packed arena "
@@ -1079,9 +1165,17 @@ class _Lowered:
         self._src_row, self._cap_base, self._sel = src_row, cap_base, sel
 
     def _params(self, qcap, sel, det, rst_s, rst_r, codes, src_row=None,
-                cap_base=None) -> dict:
+                cap_base=None, fx=None) -> dict:
         """Traced-parameter pytree for one resiliency configuration —
         `run_config_batch` stacks one of these per grid row."""
+        if fx is None:
+            fx = self.fo_extras
+            lazy = self.fo_lazy
+        else:
+            lazy = lazy_ready_extra(fx["stagger"], self.task_region,
+                                    self.job_of_task)
+        jot = (self.job_of_task if self.job_of_task is not None
+               else np.zeros(self.plan.n_tasks, dtype=int))
         return {
             "qcap": np.asarray(qcap, float),
             "src_row": (src_row if src_row is not None
@@ -1097,6 +1191,13 @@ class _Lowered:
             "restart_single": np.asarray(rst_s, float),
             "mode_single": (codes == 2).astype(np.float64),
             "mode_region": (codes == 1).astype(np.float64),
+            "mode_hot": (codes == 3).astype(np.float64),
+            "standby_switch": np.asarray(fx["switch"], float),
+            "standby_stale": np.asarray(fx["stale"], float),
+            "restore_base": np.asarray(fx["restore_base"], float),
+            "replay_rate": np.asarray(fx["replay_rate"], float),
+            "lazy_extra": np.asarray(lazy, float),
+            "job_of_task": np.asarray(jot, np.int32),
             "op_of_task": self.tensor.op_of_task.astype(np.int32),
             "par_of_op": np.asarray(self.tensor.par_of_op, float),
             "src_mask_ops": np.asarray(self.tensor.src_mask_ops, float),
@@ -1128,6 +1229,7 @@ class _Lowered:
 
     def timeline(self, spec: ChaosSpec, n_ticks: int, *,
                  fo_codes=None, detect=None, rst_s=None, rst_r=None,
+                 extras=None, lazy=None,
                  ckpt="default") -> ChaosTimeline:
         """Pregenerate one seed's chaos timeline, optionally under
         override failover/ckpt parameters (the config-axis path).
@@ -1136,6 +1238,17 @@ class _Lowered:
         job then runs its own chaos process in its local host domain,
         lifted through the job's host map
         (`core.chaos.build_perjob_chaos_timeline`)."""
+        ex = extras if extras is not None else self.fo_extras
+        ex_kw = dict(
+            standby_switch_s=ex["switch"],
+            standby_staleness_s=ex["stale"],
+            restore_base_s=ex["restore_base"],
+            replay_rate=ex["replay_rate"],
+            lazy_extra_s=(lazy if lazy is not None else
+                          (self.fo_lazy if extras is None else
+                           lazy_ready_extra(ex["stagger"],
+                                            self.task_region,
+                                            self.job_of_task))))
         if isinstance(spec, (list, tuple)):
             if self.arena is None:
                 raise ValueError("a per-job chaos list needs a packed "
@@ -1161,6 +1274,7 @@ class _Lowered:
                                   else self.fo_rr),
                 single_restart_s=(rst_s if rst_s is not None
                                   else self.fo_rs),
+                **ex_kw,
                 **self._ckpt_timeline_kw(self.ckpt_cfg
                                          if ckpt == "default" else ckpt))
         return build_chaos_timeline(
@@ -1173,6 +1287,7 @@ class _Lowered:
             region_restart_s=(rst_r if rst_r is not None else self.fo_rr),
             single_restart_s=(rst_s if rst_s is not None else self.fo_rs),
             job_of_task=self.job_of_task,
+            **ex_kw,
             **self._ckpt_timeline_kw(self.ckpt_cfg if ckpt == "default"
                                      else ckpt))
 
@@ -1190,14 +1305,44 @@ class _Lowered:
             speed=speed, ckpt_epoch=np.int32(0),
             emitted=np.zeros(self.n_jobs), dropped=np.zeros(self.n_jobs))
 
+    def event_curves(self, spec, tl: ChaosTimeline,
+                     cfg_ramps=()) -> tuple:
+        """Deterministic per-tick external-event tensors for one seed:
+        ``bfac`` storage-brownout factor, ``gate`` MQ source gate and
+        ``ckage`` checkpoint age — each (n_ticks, n_jobs), gathered per
+        task through ``pa["job_of_task"]`` inside the tick. Config-level
+        brownout ramps compose by tuple concatenation (so the factor is
+        op-identical to the numpy engines')."""
+        ts = tl.ts
+        if isinstance(spec, (list, tuple)):
+            specs = [sp.spec if isinstance(sp, ChaosEngine)
+                     else (sp or ChaosSpec()) for sp in spec]
+            bfac = np.stack(
+                [brownout_curve(tuple(sp.brownout_at) + tuple(cfg_ramps),
+                                ts) for sp in specs], axis=1)
+            gate = np.stack([mq_gate_curve(sp.mq_down, ts)
+                             for sp in specs], axis=1)
+        else:
+            bf = brownout_curve(tuple(spec.brownout_at)
+                                + tuple(cfg_ramps), ts)
+            gt = mq_gate_curve(spec.mq_down, ts)
+            bfac = np.repeat(bf[:, None], self.n_jobs, axis=1)
+            gate = np.repeat(gt[:, None], self.n_jobs, axis=1)
+        ok = (tl.ckpt_ok_by_job if tl.ckpt_ok_by_job is not None
+              else tl.ckpt_ok)
+        ckage = ckpt_age_curve(ts, ok, self.n_jobs)
+        return bfac, gate, ckage
+
     def prepare(self, spec: ChaosSpec, n_ticks: int,
                 task_speed_override: dict[int, float] | None = None
                 ) -> tuple[EngineState, dict, ChaosTimeline]:
         """Pregenerate one seed's chaos timeline → (state0, scan xs)."""
         tl = self.timeline(spec, n_ticks)
         state = self.state0(tl, task_speed_override)
+        bfac, gate, ckage = self.event_curves(spec, tl)
         xs = {"t": tl.ts, "kills": tl.kills.astype(np.float64),
-              "ckpt": tl.ckpt_at}
+              "ckpt": tl.ckpt_at, "bfac": bfac, "gate": gate,
+              "ckage": ckage}
         return state, xs, tl
 
     # ------------------------------------------------------------------
@@ -1413,10 +1558,14 @@ def _pad_rows(a: np.ndarray, target: int, axis: int = 0) -> np.ndarray:
 
 
 def _pad_batch(batch_state: EngineState, xs: dict, n_seeds: int,
-               pad_seeds: bool, n_shards: int = 1, kills_axis: int = 0):
+               pad_seeds: bool, n_shards: int = 1,
+               seed_axes: dict | None = None):
     """Pad the seed axis to the next power of two (and to a multiple of
     the shard count) — the retrace-free batching contract shared by
-    `run_batch`, `run_mix_batch` and `run_config_batch`."""
+    `run_batch`, `run_mix_batch` and `run_config_batch`. `seed_axes`
+    names the xs leaves carrying a seed axis (and which axis it is)."""
+    if seed_axes is None:
+        seed_axes = {"kills": 0, "bfac": 0, "gate": 0, "ckage": 0}
     target = _next_pow2(n_seeds) if pad_seeds else n_seeds
     if target % n_shards:
         target = n_shards * -(-target // n_shards)
@@ -1424,8 +1573,8 @@ def _pad_batch(batch_state: EngineState, xs: dict, n_seeds: int,
         batch_state = EngineState(*(_pad_rows(getattr(batch_state, f),
                                               target)
                                     for f in EngineState._fields))
-        xs = dict(xs, kills=_pad_rows(xs["kills"], target,
-                                      axis=kills_axis))
+        xs = dict(xs, **{k: _pad_rows(np.asarray(xs[k]), target, axis=ax)
+                         for k, ax in seed_axes.items()})
     return batch_state, xs
 
 
@@ -1438,7 +1587,12 @@ def _prep_batch(low: "_Lowered", specs, n_ticks: int, task_speed_override):
                                 for f in EngineState._fields))
     xs = {"t": prepped[0][1]["t"],                 # identical across seeds
           "kills": np.stack([p[1]["kills"] for p in prepped]),
-          "ckpt": prepped[0][1]["ckpt"]}           # static schedule
+          "ckpt": prepped[0][1]["ckpt"],           # static schedule
+          # per-seed external-event tensors (ckpt ages vary with each
+          # seed's success draws even under a static attempt schedule)
+          "bfac": np.stack([p[1]["bfac"] for p in prepped]),
+          "gate": np.stack([p[1]["gate"] for p in prepped]),
+          "ckage": np.stack([p[1]["ckage"] for p in prepped])}
     return batch_state, xs, tls
 
 
@@ -1596,9 +1750,12 @@ def normalize_config(c) -> dict:
     tuple/list distinction is what disambiguates a 2-job list from a
     pair), or a dict with any of the keys above (the fully explicit
     spelling, and the only way to combine per-job failover lists with
-    ckpt/scales)."""
+    ckpt/scales). The dict form also accepts ``brownout``: config-level
+    storage-brownout ramps ``((t0, t1, peak), ...)`` APPENDED to each
+    seed spec's own ramps, so brownout severity rides the config axis
+    deterministically (no extra draws)."""
     out = {"failover": None, "ckpt": None, "qcap_scale": 1.0,
-           "sel_scale": 1.0, "label": None}
+           "sel_scale": 1.0, "brownout": (), "label": None}
     if c is None:
         return out
     if isinstance(c, dict):
@@ -1669,23 +1826,58 @@ def run_config_batch(graph: LogicalGraph | PackedArena, configs, seeds, *,
     # per-config traced params
     pa_rows, fo_vecs = [], []
     for cfg in norm:
-        codes, det, rst_s, rst_r = per_task_failover(
+        codes, det, rst_s, rst_r, fx = per_task_failover(
             cfg["failover"], low.plan.n_tasks, low.job_of_task)
-        fo_vecs.append((codes, det, rst_s, rst_r))
+        lazy = lazy_ready_extra(fx["stagger"], low.task_region,
+                                low.job_of_task)
+        fo_vecs.append((codes, det, rst_s, rst_r, fx, lazy))
         pa_rows.append(low._params(
             low.plan.qcap * float(cfg["qcap_scale"]),
-            low._sel * float(cfg["sel_scale"]), det, rst_s, rst_r, codes))
+            low._sel * float(cfg["sel_scale"]), det, rst_s, rst_r, codes,
+            fx=fx))
     pa = dict(pa_rows[0])
     for k in ("qcap", "sel", "detect", "restart_region", "restart_single",
-              "mode_single", "mode_region"):
+              "mode_single", "mode_region", "mode_hot", "standby_switch",
+              "standby_stale", "restore_base", "replay_rate",
+              "lazy_extra"):
         pa[k] = np.stack([row[k] for row in pa_rows])
+    cfg_bros = [tuple(cfg["brownout"]) for cfg in norm]
+
+    def _merge_bro(sp, bro):
+        """Compose config-level brownout ramps into a seed spec by tuple
+        concatenation (op-identical to the numpy engines' factor)."""
+        if not bro:
+            return sp
+        if isinstance(sp, (list, tuple)):
+            return [_merge_bro(x.spec if isinstance(x, ChaosEngine)
+                               else (x or ChaosSpec()), bro) for x in sp]
+        return dataclasses.replace(
+            sp, brownout_at=tuple(sp.brownout_at) + tuple(bro))
 
     # timelines: shared across configs when nothing checkpoints
     # (kill/straggler draws are failover-independent); rebuilt per config
     # otherwise (storage draws interleave with kill draws)
-    no_ckpt = all(cfg["ckpt"] is None for cfg in norm)
+    # per-job seed specs with restore surcharges AND brownout ramps need
+    # per-job brownout factors in the recovery metadata — only the
+    # per-(config, seed) rebuild path models that; everything else rides
+    # the shared-draws fast paths
+    perjob_specs = any(isinstance(sp, (list, tuple)) for sp in specs)
+
+    def _spec_has_ramps(sp):
+        if isinstance(sp, (list, tuple)):
+            return any(
+                bool(tuple((x.spec if isinstance(x, ChaosEngine)
+                            else (x or ChaosSpec())).brownout_at))
+                for x in sp)
+        return bool(tuple(sp.brownout_at))
+
+    bf_varies_by_job = perjob_specs and (
+        any(cfg_bros) or any(_spec_has_ramps(sp) for sp in specs)) and any(
+        np.any(v[4]["restore_base"]) for v in fo_vecs)
+    no_ckpt = (all(cfg["ckpt"] is None for cfg in norm)
+               and not bf_varies_by_job)
     if no_ckpt:
-        c0, d0, s0, r0 = fo_vecs[0]
+        c0, d0, s0, r0 = fo_vecs[0][:4]
         base_tls = [low.timeline(sp, n_ticks, fo_codes=c0, detect=d0,
                                  rst_s=s0, rst_r=r0, ckpt=None)
                     for sp in specs]
@@ -1694,9 +1886,18 @@ def run_config_batch(graph: LogicalGraph | PackedArena, configs, seeds, *,
                                failover_mode=codes, detect_s=det,
                                single_restart_s=rst_s,
                                region_restart_s=rst_r,
-                               job_of_task=low.job_of_task)
-                for tl in base_tls]
-               for (codes, det, rst_s, rst_r) in fo_vecs]
+                               job_of_task=low.job_of_task,
+                               standby_switch_s=fx["switch"],
+                               standby_staleness_s=fx["stale"],
+                               restore_base_s=fx["restore_base"],
+                               replay_rate=fx["replay_rate"],
+                               lazy_extra_s=lazy,
+                               spec=(_merge_bro(sp, bro)
+                                     if isinstance(sp, ChaosSpec)
+                                     else None))
+                for sp, tl in zip(specs, base_tls)]
+               for (codes, det, rst_s, rst_r, fx, lazy), bro
+               in zip(fo_vecs, cfg_bros)]
         # one (S, T, H) tensor broadcast over the config axis in-trace
         kills = np.stack([tl.kills for tl in base_tls]).astype(np.float64)
         ckpt_xs = np.zeros((n_cfg, n_ticks), np.int16)
@@ -1711,11 +1912,17 @@ def run_config_batch(graph: LogicalGraph | PackedArena, configs, seeds, *,
         # (core.chaos.build_grid_timelines; timeline_build_count stays
         # flat, pinned by tests/test_sparse_sweep.py)
         cfg_rows = []
-        for cfg, (codes, det, rst_s, rst_r) in zip(norm, fo_vecs):
+        for cfg, (codes, det, rst_s, rst_r, fx, lazy), bro in zip(
+                norm, fo_vecs, cfg_bros):
             ck = cfg["ckpt"]
             cfg_rows.append(dict(
                 failover_mode=codes, detect_s=det,
                 region_restart_s=rst_r, single_restart_s=rst_s,
+                standby_switch_s=fx["switch"],
+                standby_staleness_s=fx["stale"],
+                restore_base_s=fx["restore_base"],
+                replay_rate=fx["replay_rate"],
+                lazy_extra_s=lazy, brownout_at=bro,
                 ckpt_interval_s=(ck.interval_s if ck else None),
                 ckpt_mode=(ck.mode if ck else "region"),
                 ckpt_upload_s=(ck.upload_s if ck else 4.0),
@@ -1731,10 +1938,13 @@ def run_config_batch(graph: LogicalGraph | PackedArena, configs, seeds, *,
     else:
         # exotic rows (per-job coordinator lists / per-job chaos specs):
         # config-specific draw interleavings force per-config rebuilds
-        tls = [[low.timeline(sp, n_ticks, fo_codes=codes, detect=det,
-                             rst_s=rst_s, rst_r=rst_r, ckpt=cfg["ckpt"])
+        tls = [[low.timeline(_merge_bro(sp, bro), n_ticks,
+                             fo_codes=codes, detect=det,
+                             rst_s=rst_s, rst_r=rst_r,
+                             extras=fx, lazy=lazy, ckpt=cfg["ckpt"])
                 for sp in specs]
-               for cfg, (codes, det, rst_s, rst_r) in zip(norm, fo_vecs)]
+               for cfg, (codes, det, rst_s, rst_r, fx, lazy), bro
+               in zip(norm, fo_vecs, cfg_bros)]
         kills = np.stack([[tl.kills for tl in row]
                           for row in tls]).astype(np.float64)
         ckpt_xs = np.stack([row[0].ckpt_at for row in tls])
@@ -1742,13 +1952,24 @@ def run_config_batch(graph: LogicalGraph | PackedArena, configs, seeds, *,
     states = [low.state0(tl, task_speed_override) for tl in tls[0]]
     batch_state = EngineState(*(np.stack([getattr(s, f) for s in states])
                                 for f in EngineState._fields))
-    xs = {"t": tls[0][0].ts, "kills": kills, "ckpt": ckpt_xs}
+    # external-event tensors: brownout factor and ckpt age ride the
+    # config axis (config ramps / per-config success histories), the MQ
+    # gate is seed-only and broadcasts across configs in-trace
+    ev = [[low.event_curves(sp, tls[c][s], cfg_ramps=cfg_bros[c])
+           for s, sp in enumerate(specs)] for c in range(n_cfg)]
+    xs = {"t": tls[0][0].ts, "kills": kills, "ckpt": ckpt_xs,
+          "bfac": np.stack([[e[0] for e in row] for row in ev]),
+          "gate": np.stack([e[1] for e in ev[0]]),
+          "ckage": np.stack([[e[2] for e in row] for row in ev])}
     if devices is not None and mixes is not None:
         raise ValueError("devices= does not compose with mixes= "
                          "(shard the config grid without a mix axis)")
     n_shards = local_shard_count(devices)
     batch_state, xs = _pad_batch(batch_state, xs, n_seeds, pad_seeds,
-                                 n_shards, kills_axis=0 if no_ckpt else 1)
+                                 n_shards,
+                                 seed_axes={"kills": 0 if no_ckpt else 1,
+                                            "bfac": 1, "gate": 0,
+                                            "ckage": 1})
     jobs = low.arena.jobs if low.arena is not None else None
 
     if mixes is None:

@@ -9,12 +9,33 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.chaos import ChaosSpec
 from repro.streams.graph import LogicalEdge, LogicalGraph, LogicalOp
 
 
 # ----------------------------------------------------------------------
 # Logical graphs (engine workloads)
 # ----------------------------------------------------------------------
+def ha_drill_spec(seed: int = 0, *, burst_t: float = 60.0,
+                  burst_region: int = 0,
+                  brownout=(40.0, 120.0, 6.0),
+                  mq_outage=(150.0, 165.0),
+                  host_kill_prob_per_s: float = 0.0) -> ChaosSpec:
+    """The external-system HA drill the paper's release gate runs on the
+    Nexmark workloads: a region-correlated failure burst mid-run, a
+    storage brownout ramp stretching checkpoint uploads and passive
+    restores around it, and an MQ/coordinator outage window gating the
+    sources — all deterministic (no extra rng draws), so the same seed
+    replays identically across the numpy, dense, compact and pallas
+    engines."""
+    return ChaosSpec(seed=seed,
+                     host_kill_prob_per_s=host_kill_prob_per_s,
+                     burst_at=((burst_t, burst_region),),
+                     brownout_at=(tuple(brownout),),
+                     mq_down=(tuple(mq_outage),))
+
+
+
 def q2(parallelism: int = 8, source_rate: float = 0.8e6,
        service_rate: float = 1.2e5, partitioner: str = "rebalance",
        n_groups: int = 1) -> LogicalGraph:

@@ -14,7 +14,7 @@ from collections import defaultdict
 
 import numpy as np
 
-from repro.core.chaos import ChaosEngine
+from repro.core.chaos import ChaosEngine, burst_kill_schedule
 from repro.streams.engine import CheckpointConfig, FailoverConfig
 from repro.streams.graph import LogicalGraph, PhysicalGraph, expand
 
@@ -70,6 +70,19 @@ class ReferenceStreamEngine:
         # chaos host stragglers
         for t in self.phys.tasks:
             self.speed[t.op][t.index] *= self.chaos.host_speed(t.host)
+        # external-system events: region-correlated failure bursts are
+        # deterministic scheduled kills (no rng), lazy-load restore
+        # staggers a region's ready time by its rank
+        task_host = np.array([t.host for t in self.phys.tasks])
+        task_region = np.array(
+            [self.phys.task_region[t.task_id] for t in self.phys.tasks])
+        if self.chaos.spec.burst_at:
+            self.chaos.schedule_kills(burst_kill_schedule(
+                self.chaos.spec.burst_at, task_host, task_region))
+        first = int(task_region.min()) if len(task_region) else 0
+        self._lazy = ((task_region - first).astype(float)
+                      * self.failover.lazyload_stagger_s)
+        self._last_ckpt_t = 0.0
         # hashed key-mass shares per keyed edge (Zipf skew)
         self._key_share: dict[tuple[str, str], np.ndarray] = {}
         for e in graph.edges:
@@ -137,6 +150,11 @@ class ReferenceStreamEngine:
         qps_tick = {n: 0.0 for n in order}
         drop_tick = 0.0
 
+        # MQ/coordinator outage gate: sources emit nothing while the
+        # message queue is down (multiplying by 1.0 is exact, so the
+        # no-outage path keeps the historical numbers bit-for-bit)
+        gate = 1.0 if self.chaos.mq_available(self.t) else 0.0
+
         for name in order:
             op = g.op(name)
             alive = self._alive(name)
@@ -144,6 +162,8 @@ class ReferenceStreamEngine:
                 produced = np.full(self.par[name],
                                    op.source_rate * dt / self.par[name])
                 produced *= alive
+                if gate != 1.0:
+                    produced = produced * gate
                 self.metrics.emitted += produced.sum()
             else:
                 cap = op.service_rate * dt * self.speed[name] * alive
@@ -232,26 +252,50 @@ class ReferenceStreamEngine:
         if not victims or fo.mode == "none":
             self.chaos.revive(host)
             return
-        if fo.mode == "single_task":
-            until = self.t + fo.detect_s + fo.single_restart_s
+        # passive-restore surcharge at kill time: checkpoint re-read
+        # stretched by the storage brownout, plus replay of work since
+        # the last successful checkpoint, plus the task's own lazy-load
+        # region ready-time (hot_standby never touches the checkpoint,
+        # so it pays none of this)
+        extra = np.zeros(len(self.phys.tasks))
+        if fo.restore_base_s or fo.replay_rate or fo.lazyload_stagger_s:
+            bf = self.chaos.brownout_factor(self.t)
+            age = self.t - self._last_ckpt_t
+            extra = (fo.restore_base_s * bf + age * fo.replay_rate
+                     + self._lazy)
+        if fo.mode == "hot_standby":
+            down = (fo.detect_s + fo.standby_switch_s
+                    + fo.standby_staleness_s)
+            until = self.t + down
             for t in victims:
                 self.down_until[t.op][t.index] = until
-                self.queue[t.op][t.index] = 0.0  # incomplete output discarded
+                self.queue[t.op][t.index] = 0.0
+            self.metrics.recoveries.append(
+                {"t": self.t, "mode": "hot_standby",
+                 "tasks": len(victims), "downtime": down})
+        elif fo.mode == "single_task":
+            base = fo.detect_s + fo.single_restart_s
+            for i, t in enumerate(self.phys.tasks):
+                if t.host == host:
+                    self.down_until[t.op][t.index] = (
+                        self.t + (base + extra[i]))
+                    self.queue[t.op][t.index] = 0.0  # output discarded
             self.metrics.recoveries.append(
                 {"t": self.t, "mode": "single_task", "tasks": len(victims),
-                 "downtime": fo.detect_s + fo.single_restart_s})
+                 "downtime": float(base + extra[0])})
         else:
             regions = {self.phys.task_region[t.task_id] for t in victims}
-            until = self.t + fo.detect_s + fo.region_restart_s
+            base = fo.detect_s + fo.region_restart_s
             n_restart = 0
-            for t in self.phys.tasks:
+            for i, t in enumerate(self.phys.tasks):
                 if self.phys.task_region[t.task_id] in regions:
-                    self.down_until[t.op][t.index] = until
+                    self.down_until[t.op][t.index] = (
+                        self.t + (base + extra[i]))
                     self.queue[t.op][t.index] = 0.0
                     n_restart += 1
             self.metrics.recoveries.append(
                 {"t": self.t, "mode": "region", "tasks": n_restart,
-                 "downtime": fo.detect_s + fo.region_restart_s})
+                 "downtime": float(base + extra[0])})
         self.chaos.revive(host)  # replacement host
 
     # ------------------------------------------------------------------
@@ -260,10 +304,14 @@ class ReferenceStreamEngine:
         m = self.metrics
         m.ckpt_attempts += 1
         timeout = cfg.interval_s
+        # deterministic brownout ramp stretches every upload of this
+        # attempt (computed BEFORE any rng draw — same order as
+        # core.chaos.run_checkpoint_attempt)
+        bf = self.chaos.brownout_factor(self.t)
         # per-task upload durations with chaos slow factors
         task_fail: dict[int, bool] = {}
         for t in self.phys.tasks:
-            dur = cfg.upload_s * self.chaos.storage_latency_factor()
+            dur = cfg.upload_s * self.chaos.storage_latency_factor() * bf
             task_fail[t.task_id] = dur > timeout or not self._alive(t.op)[t.index]
         if cfg.mode == "global":
             ok = not any(task_fail.values())
@@ -273,10 +321,13 @@ class ReferenceStreamEngine:
                 bad = any(task_fail[tid] for tid in region)
                 if bad and cfg.retry_failed_region:
                     # one in-attempt retry of the region's uploads
-                    bad = any(cfg.upload_s * self.chaos.storage_latency_factor()
+                    bad = any(cfg.upload_s
+                              * self.chaos.storage_latency_factor() * bf
                               > timeout for _ in region)
                 if bad:
                     ok = False  # region keeps previous snapshot; attempt
                     break       # counted failed, job continues (no abort)
         m.ckpt_success += int(ok)
         m.ckpt_failed += int(not ok)
+        if ok:
+            self._last_ckpt_t = self.t

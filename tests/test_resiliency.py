@@ -193,6 +193,39 @@ def test_lazyload_priority_order_ready_first(small_model, tmp_path):
     lazy.wait_all()
 
 
+def test_lazyload_fetch_error_surfaces(small_model, tmp_path):
+    # regression: a failed storage.get inside the ThreadPoolExecutor used
+    # to leave the region's event unset forever, so wait_region raised a
+    # misleading TimeoutError instead of the storage error.
+    from repro.ckpt.storage import StorageUnavailable
+
+    model, params = small_model
+    clock = VirtualClock()
+    ck = _checkpointer(tmp_path / "l3", model, clock)
+    ck.save(1, params)
+
+    def dead_get(key):
+        raise StorageUnavailable("datanode gone")
+
+    ck.storage.get = dead_get
+    lazy = LazyRestorer(ck, params, gamma="full")
+    with pytest.raises(StorageUnavailable):
+        lazy.wait_region(0, timeout=1.0)
+    with pytest.raises(StorageUnavailable):
+        lazy.wait_all(timeout=1.0)
+
+
+def test_lazyload_shuts_executor_down(small_model, tmp_path):
+    # regression: the restore executor used to leak per LazyRestorer.
+    model, params = small_model
+    clock = VirtualClock()
+    ck = _checkpointer(tmp_path / "l4", model, clock)
+    ck.save(1, params)
+    lazy = LazyRestorer(ck, params, gamma="full")
+    lazy.wait_all()
+    assert lazy._pool._shutdown, "executor must not leak per restore"
+
+
 # ----------------------------------------------------------------------
 # hotupdate
 # ----------------------------------------------------------------------

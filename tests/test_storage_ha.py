@@ -125,6 +125,53 @@ def test_leader_inconsistency_terminates(tmp_path):
         svc.get_leader()
 
 
+def test_missing_leader_on_healthy_zk_is_not_an_outage(tmp_path):
+    # regression: a missing leader key on a HEALTHY ZK used to be caught
+    # together with ZKUnavailable and silently served from the HDFS copy,
+    # inflating fallback_reads.
+    from repro.core.ha import LeaderRecord, NoLeader
+
+    clock = VirtualClock()
+    zk = ZooKeeperSim(clock=clock, chaos=ChaosEngine())
+    hdfs = LocalFS(tmp_path)
+    hdfs.put("ha/leader", LeaderRecord("stale-jm", 7).to_bytes())
+    svc = LeaderService(zk, hdfs, clock=clock)
+    with pytest.raises(NoLeader):
+        svc.get_leader()
+    assert svc.fallback_reads == 0, ("no-leader on healthy ZK must not be "
+                                     "served from the HDFS copy")
+
+
+def test_programming_error_in_fallback_is_not_a_double_outage(tmp_path):
+    # regression: the bare `except Exception` around the HDFS fallback
+    # turned programming errors into JobTerminated "double outages".
+    clock = VirtualClock()
+    chaos = ChaosEngine(ChaosSpec(zk_down=((0.0, 100.0),)))
+    zk = ZooKeeperSim(clock=clock, chaos=chaos)
+
+    class BuggyStore:
+        def get(self, k):
+            raise ZeroDivisionError("bug in the fallback path")
+
+    svc = LeaderService(zk, BuggyStore(), clock=clock)
+    with pytest.raises(ZeroDivisionError):
+        svc.get_leader()
+    assert svc.terminations == 0
+
+
+def test_simhdfs_slow_reads_not_counted_as_slow_puts(tmp_path):
+    # regression: _charge incremented slow_puts from get() too.
+    clock = VirtualClock()
+    chaos = ChaosEngine(ChaosSpec(seed=0, storage_slow_prob=1.0,
+                                  storage_slow_factor=10.0))
+    s = SimHDFS(tmp_path, clock=clock, chaos=chaos, bandwidth_bps=1e6,
+                base_latency_s=0.0)
+    s.put("k", b"x" * 1000)
+    s.get("k")
+    assert s.slow_puts == 1, "a slow GET must not count as a slow upload"
+    assert s.slow_gets == 1
+
+
 def test_simhdfs_charges_time(tmp_path):
     clock = VirtualClock()
     chaos = ChaosEngine(ChaosSpec(seed=0, storage_slow_prob=1.0,
