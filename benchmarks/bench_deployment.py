@@ -1,0 +1,128 @@
+"""Deployment-drill cube (release-gate drills): rollback rate / SLO
+violation / lost work over upgrade-policy × canary-fraction ×
+rollback-threshold, produced by ONE `sweep_configs` device call
+(`streams.chaos_sweep.deployment_drill`), plus the hot-vs-cold per-wave
+restart latency the drill lowers from the `core.hotupdate` deploy model.
+
+Emits the usual CSV rows through benchmarks/run.py and writes
+``results/bench_deployment.json`` for the perf trajectory. Quick mode
+(REPRO_BENCH_QUICK=1) shrinks the cube and horizon so the module runs in
+a few seconds on CPU — and, per the harness contract, skips the JSON
+write.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import pathlib
+import time
+
+import numpy as np
+
+try:
+    from benchmarks.run import quick_mode
+except ImportError:      # standalone: sys.path[0] is benchmarks/
+    from run import quick_mode
+from repro.core.chaos import ChaosSpec, timeline_build_count
+from repro.core.hotupdate import deploy_downtime
+from repro.core.startup import StartupConfig
+from repro.streams import nexmark
+from repro.streams.chaos_sweep import deployment_drill
+from repro.streams.engine import FailoverConfig, UpgradeConfig
+
+# ambient kills plus a ZK/HDFS leader-loss overlap mid-drill: the cube
+# measures canary rollback behaviour *under* coordinator-gate chaos, not
+# on a quiet fleet
+BASE_SPEC = ChaosSpec(host_kill_prob_per_s=0.001,
+                      zk_down=((30.0, 34.0),), hdfs_down=((32.0, 38.0),))
+FO = FailoverConfig(mode="single_task", detect_s=1.0, single_restart_s=2.0)
+
+
+def _policies() -> dict[str, UpgradeConfig]:
+    # the induced regression every gated cell must catch: canary
+    # selectivity 1.5 > the fleet's 1.2 sink headroom, so upgraded
+    # slices overload their sinks until the controller rolls them back
+    drill = UpgradeConfig(t_upgrade_s=10.0, wave_stagger_s=1.0,
+                          canary_sel_scale=1.5, rollback_window_s=4.0)
+    return {
+        "hot": dataclasses.replace(drill, hot=True),
+        "cold": dataclasses.replace(drill, hot=False),
+        "cold+accel": dataclasses.replace(drill, hot=False,
+                                          startup=StartupConfig()),
+    }
+
+
+def run():
+    quick = quick_mode()
+    n_seeds = 4 if quick else 32
+    duration = 60.0 if quick else 120.0
+    fleet = nexmark.drill_fleet(n_jobs=2 if quick else 8, queue_cap=1e9)
+    policies = _policies()
+    fracs = (0.5,) if quick else (0.25, 0.5, 1.0)
+    thresholds = (math.inf, 100.0)
+
+    c0 = timeline_build_count()
+    cold_t0 = time.perf_counter()
+    deployment_drill(fleet, range(n_seeds), base_spec=BASE_SPEC,
+                     duration_s=duration, policies=policies,
+                     canary_fracs=fracs, rollback_thresholds=thresholds,
+                     failover=FO, n_hosts=16)
+    cold_wall = time.perf_counter() - cold_t0
+    cube = deployment_drill(fleet, range(n_seeds), base_spec=BASE_SPEC,
+                            duration_s=duration, policies=policies,
+                            canary_fracs=fracs,
+                            rollback_thresholds=thresholds,
+                            failover=FO, n_hosts=16)
+    builds = timeline_build_count() - c0
+
+    n_cells = cube.rollback_t.size
+
+    # headline: the per-wave restart latency the drill pays per slice —
+    # hot redeploys reuse the compile cache and skip the cold first-step
+    # mitigations, cold redeploys pay the full §III startup pipeline
+    # (accelerated grid point = best StartupConfig over the policy grid)
+    hot_s = deploy_downtime(None, hot=True)
+    grid_s = [deploy_downtime(sc, hot=False)
+              for sc in StartupConfig.policy_grid()]
+    cold_s, accel_s = max(grid_s), min(grid_s)
+    rb = np.asarray(cube.rollback_t)
+    gated = rb[:, :, 1]                      # finite-threshold slot
+    t_rb = {pol: float(gated[p][np.isfinite(gated[p])].mean())
+            for p, pol in enumerate(cube.policies)}
+    rows = [(f"deployment/drill_fleet/{n_cells}cells",
+             1e6 * cube.grid.wall_s / n_cells,
+             f"cells={n_cells};cells_s={n_cells / cube.grid.wall_s:.0f};"
+             f"hot_deploy_s={hot_s:.1f};cold_deploy_s={cold_s:.1f};"
+             f"accel_cold_s={accel_s:.1f};"
+             f"hot_rollback_s={t_rb['hot']:.1f};"
+             f"cold_rollback_s={t_rb['cold']:.1f};"
+             f"timeline_builds={builds}")]
+    if not quick:   # quick smoke must not overwrite the tracked record
+        record = {
+            "n_seeds": n_seeds, "duration_s": duration,
+            "policies": list(cube.policies),
+            "canary_fracs": list(cube.canary_fracs),
+            "rollback_thresholds": [
+                None if math.isinf(t) else t
+                for t in cube.rollback_thresholds],
+            "cold_wall_s": cold_wall, "warm_wall_s": cube.grid.wall_s,
+            "cells_per_s": n_cells / cube.grid.wall_s,
+            "timeline_builds": builds,
+            "hot_deploy_s": hot_s, "cold_deploy_s": cold_s,
+            "accel_cold_deploy_s": accel_s,
+            "rollback_t_mean": {pol: t_rb[pol] for pol in cube.policies},
+            "rollback_frac": np.asarray(cube.rollback_frac).tolist(),
+            "slo_mean": np.asarray(cube.slo).mean(-1).tolist(),
+            "lost_mean": np.asarray(cube.lost).mean(-1).tolist(),
+        }
+        out = pathlib.Path("results")
+        out.mkdir(parents=True, exist_ok=True)
+        (out / "bench_deployment.json").write_text(
+            json.dumps(record, indent=1))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

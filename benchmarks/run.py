@@ -37,6 +37,7 @@ MODULES = [
     "benchmarks.bench_sweep_scale",         # sparse-phase + sharded grids
     "benchmarks.bench_tick_kernel",         # fused Pallas tick phases
     "benchmarks.bench_replication",         # §IV-A hybrid replication cube
+    "benchmarks.bench_deployment",          # canary/rolling deployment drills
     "benchmarks.bench_kernels",             # §V-C micro benchmarking
 ]
 
@@ -48,6 +49,7 @@ QUICK_MODULES = [
     "benchmarks.bench_sweep_scale",         # sparse-phase + sharded grids
     "benchmarks.bench_tick_kernel",         # fused Pallas tick phases
     "benchmarks.bench_replication",         # hybrid replication cube
+    "benchmarks.bench_deployment",          # canary/rolling deployment drills
     "benchmarks.bench_weakhash",            # WeakHash assignment path
     "benchmarks.bench_hotupdate",           # pure-python, fast
 ]

@@ -1,0 +1,115 @@
+"""Deployment-drill release gate: the upgrade-policy × canary-fraction ×
+rollback-threshold cube from ONE `sweep_configs` device call
+(`streams.chaos_sweep.deployment_drill`), over a heterogeneous fleet of
+join-shaped (Q3) and session-window-shaped (Q11) jobs.
+
+Each cube cell runs a traced canary/rolling upgrade: region-sized waves
+restart on a stagger paying hot-vs-cold restart costs lowered from the
+`core.hotupdate` deploy model, the canaried slice runs a regressed
+config (selectivity scale above the fleet's sink headroom), and the
+in-trace controller auto-rolls the canary back when its backlog diverges
+from the stable slice. Upgrades are in-trace only, so every cell shares
+the drill-free rows' pregenerated chaos timelines.
+
+    PYTHONPATH=src python examples/deployment_drill.py          # 2x2x2 cube
+    PYTHONPATH=src python examples/deployment_drill.py --seeds 16 \\
+        --jobs 8 --duration 120
+
+The script FAILS (non-zero exit) if the drill grid falls back to
+per-(config, seed) host timeline rebuilds, or if the induced-regression
+cells fail to fire the auto-rollback — scripts/ci.sh --drill-smoke
+additionally exports ``REPRO_REQUIRE_PHASE_MODE=compact`` so a
+dense-lowering fallback trips inside the engine itself.
+"""
+import argparse
+import dataclasses
+import math
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--seeds", type=int, default=8,
+                    help="chaos seeds per cube cell")
+    ap.add_argument("--jobs", type=int, default=4,
+                    help="fleet size (alternating Q3/Q11 jobs)")
+    ap.add_argument("--fracs", type=int, default=2,
+                    help="canary-fraction grid points")
+    ap.add_argument("--duration", type=float, default=60.0,
+                    help="simulated horizon per scenario (seconds)")
+    args = ap.parse_args()
+
+    import numpy as np
+
+    from repro.core.chaos import ChaosSpec, timeline_build_count
+    from repro.core.startup import StartupConfig
+    from repro.streams import nexmark
+    from repro.streams.chaos_sweep import deployment_drill
+    from repro.streams.engine import FailoverConfig, UpgradeConfig
+
+    fleet = nexmark.drill_fleet(n_jobs=args.jobs, queue_cap=1e9)
+    base = ChaosSpec(host_kill_prob_per_s=0.001,
+                     zk_down=((30.0, 34.0),), hdfs_down=((32.0, 38.0),))
+    fo = FailoverConfig(mode="single_task", detect_s=1.0,
+                        single_restart_s=2.0)
+    # the induced regression: canary selectivity 1.5 > fleet sink
+    # headroom 1.2, so upgraded slices overload their sinks
+    drill = UpgradeConfig(t_upgrade_s=10.0, wave_stagger_s=1.0,
+                          canary_sel_scale=1.5,
+                          rollback_window_s=4.0)
+    policies = {
+        "hot": dataclasses.replace(drill, hot=True),
+        "cold+accel": dataclasses.replace(drill, hot=False,
+                                          startup=StartupConfig()),
+    }
+    fracs = (0.5, 1.0)[:max(1, args.fracs)]
+    thresholds = (math.inf, 100.0)
+
+    builds0 = timeline_build_count()
+    cube = deployment_drill(fleet, range(args.seeds), base_spec=base,
+                            duration_s=args.duration, policies=policies,
+                            canary_fracs=fracs,
+                            rollback_thresholds=thresholds,
+                            failover=fo, n_hosts=16)
+    builds = timeline_build_count() - builds0
+
+    n = cube.rollback_t.size
+    print(f"== drill cube {len(policies)} policies x {len(fracs)} fracs "
+          f"x {len(thresholds)} thresholds x {args.seeds} seeds = "
+          f"{n} cells in {cube.grid.wall_s:.2f}s "
+          f"({cube.grid.scenarios_per_s:.1f} cells/s, ONE device call) ==")
+    print(f"   host timeline builds during the cube: {builds} "
+          f"(one per seed — flat across "
+          f"{len(policies) * len(fracs) * len(thresholds)} drill rows)")
+    rb = np.asarray(cube.rollback_t)
+    for p, pol in enumerate(cube.policies):
+        for f, frac in enumerate(cube.canary_fracs):
+            for th, thr in enumerate(cube.rollback_thresholds):
+                cell = rb[p, f, th]
+                fired = np.isfinite(cell)
+                t_txt = (f"t_rb={cell[fired].mean():5.1f}s"
+                         if fired.any() else "held    ")
+                print(f"   {pol:>10s} canary={frac:g} thr="
+                      f"{'off' if math.isinf(thr) else f'{thr:g}':>4s}"
+                      f"  rollback {int(fired.sum())}/{len(cell)}  "
+                      f"{t_txt}  slo_frac="
+                      f"{np.asarray(cube.slo)[p, f, th].mean():.3f}")
+
+    if builds > args.seeds:
+        raise SystemExit(
+            "drill smoke FAILED: the cube fell back to per-(config, "
+            f"seed) timeline rebuilds ({builds} builds for "
+            f"{args.seeds} seeds)")
+    fired_frac = cube.rollback_frac[:, :, 1]   # finite-threshold slot
+    if not (fired_frac == 1.0).all():
+        raise SystemExit(
+            "drill smoke FAILED: the induced regression did not fire "
+            f"the auto-rollback in every gated cell ({fired_frac})")
+    held = cube.rollback_t[:, :, 0]
+    if not np.isinf(held).all():
+        raise SystemExit(
+            "drill smoke FAILED: a threshold=inf control row rolled "
+            "back")
+
+
+if __name__ == "__main__":
+    main()

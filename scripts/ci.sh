@@ -13,6 +13,10 @@
 #   scripts/ci.sh --ha-smoke          # also run the hybrid-replication-vs-checkpoint cube
 #                                     # (brownouts + MQ outage + region burst, compact tick,
 #                                     # non-zero exit on any timeline-rebuild fallback)
+#   scripts/ci.sh --drill-smoke       # also run the deployment-drill cube (canary/rolling
+#                                     # upgrades + in-trace auto-rollback, compact tick;
+#                                     # non-zero exit on timeline-rebuild fallback OR on the
+#                                     # induced regression failing to fire the rollback)
 #
 # Smoke targets fail LOUDLY on silent lowering fallbacks: the sparse
 # smoke exports REPRO_REQUIRE_PHASE_MODE=compact (the engine refuses to
@@ -66,6 +70,12 @@ if [[ "${1:-}" == "--ha-smoke" ]]; then
   REPRO_REQUIRE_PHASE_MODE=compact \
     python examples/replication_sweep.py --seeds 8 --intervals 2 \
       --brownouts 2 --duration 60
+fi
+
+if [[ "${1:-}" == "--drill-smoke" ]]; then
+  echo "== drill smoke: deployment cube (canary upgrades + auto-rollback), compact tick =="
+  REPRO_REQUIRE_PHASE_MODE=compact \
+    python examples/deployment_drill.py --seeds 8 --jobs 4 --duration 60
 fi
 
 echo "CI OK"

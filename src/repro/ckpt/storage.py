@@ -92,35 +92,52 @@ class SimHDFS:
         self.put_count = 0
         self.slow_puts = 0
         self.slow_gets = 0
+        # single-pipeline queueing: an op whose arrival lands while a
+        # previous op's (brownout-stretched) service is still draining
+        # waits for it, so queue delay scales with `brownout_factor_at`
+        # through the service times it inherits (paper §IV: brownouts
+        # back up the upload pipeline, they don't just stretch ops
+        # independently). Concurrent issuers pass `arrival_s` (e.g. all
+        # regions of one snapshot arrive at the snapshot instant).
+        self._busy_until = 0.0
+        self.queue_wait_s = 0.0
 
-    def _charge(self, nbytes: int, kind: str = "put") -> float:
+    def _charge(self, nbytes: int, kind: str = "put",
+                arrival_s: float | None = None) -> float:
+        now = self.clock.now()
+        arrival = now if arrival_s is None else min(float(arrival_s), now)
+        start = max(now, self._busy_until)
+        wait = start - arrival
         # rng slow-factor draw × deterministic brownout ramp at wall time
         # (brownout-stretched ops count as slow: factor > 1 either way)
         factor = (self.chaos.storage_latency_factor()
-                  * self.chaos.brownout_factor(self.clock.now()))
+                  * self.chaos.brownout_factor(start))
         dur = (self.base_latency_s + nbytes / self.bandwidth_bps) * factor
         if factor > 1.0:
             if kind == "put":
                 self.slow_puts += 1
             else:
                 self.slow_gets += 1
-        self.clock.sleep(dur)
-        return dur
+        self.queue_wait_s += wait
+        self._busy_until = start + dur
+        self.clock.sleep(start + dur - now)
+        return wait + dur
 
-    def put(self, key: str, data: bytes) -> str:
+    def put(self, key: str, data: bytes, *,
+            arrival_s: float | None = None) -> str:
         if not self.available:
             raise StorageUnavailable("namenode down")
         self.put_count += 1
-        self._charge(len(data), kind="put")
+        self._charge(len(data), kind="put", arrival_s=arrival_s)
         if self.chaos.storage_fails():
             raise StorageUnavailable("datanode write failed")
         return self.fs.put(key, data)
 
-    def get(self, key: str) -> bytes:
+    def get(self, key: str, *, arrival_s: float | None = None) -> bytes:
         if not self.available:
             raise StorageUnavailable("namenode down")
         data = self.fs.get(key)
-        self._charge(len(data), kind="get")
+        self._charge(len(data), kind="get", arrival_s=arrival_s)
         return data
 
     def exists(self, key: str) -> bool:

@@ -39,6 +39,13 @@ class ChaosSpec:
     brownout_at: tuple[tuple[float, float, float], ...] = ()
     mq_down: tuple[tuple[float, float], ...] = ()
     burst_at: tuple[tuple[float, int], ...] = ()
+    # deployment drills (paper §V): scheduled rolling-upgrade start times.
+    # Like the family above these are deterministic and consume NO rng
+    # draws — upgrade waves never touch the pregenerated kill/checkpoint
+    # timelines, they are pure time arithmetic inside the engines' ticks
+    # (streams.engine.UpgradeConfig carries the HOW: canary fraction,
+    # wave stagger, hot-vs-cold restart costs, rollback policy).
+    upgrade_at: tuple[float, ...] = ()
 
 
 class ChaosEngine:
@@ -135,6 +142,14 @@ class ChaosEngine:
         """MQ/coordinator availability — gates source operators."""
         return not any(a <= t < b for a, b in self.spec.mq_down)
 
+    def leader_available(self, t: float) -> bool:
+        """JobManager leader reachability at time t, lowered from the
+        `cluster.coordinator.Coordinator` ZK → HDFS fallback chain: the
+        leader address stays discoverable while EITHER service is up, so
+        sources are throttled only where a `zk_down` window overlaps an
+        `hdfs_down` window (both legs of the HA chain dark)."""
+        return self.zk_available(t) or self.hdfs_available(t)
+
 
 def brownout_factor_at(ramps, t: float) -> float:
     """Storage-brownout multiplier at time `t`: each (t0, t1, peak) ramp
@@ -168,6 +183,24 @@ def mq_gate_curve(windows, ts) -> np.ndarray:
     gate = np.ones(ts.shape)
     for (a, b) in windows:
         gate[(ts >= a) & (ts < b)] = 0.0
+    return gate
+
+
+def coordinator_gate_curve(zk_down, hdfs_down, ts) -> np.ndarray:
+    """1.0/0.0 source gate per time for coordinator leader loss: 0 only
+    where a `zk_down` window overlaps an `hdfs_down` window (leader lost
+    AND the HDFS fallback leg unreachable — the
+    `cluster.coordinator.LeaderService` chain has no one to answer).
+    Composes multiplicatively with `mq_gate_curve`."""
+    ts = np.asarray(ts, dtype=float)
+    zk_out = np.zeros(ts.shape, dtype=bool)
+    for (a, b) in zk_down:
+        zk_out |= (ts >= a) & (ts < b)
+    hdfs_out = np.zeros(ts.shape, dtype=bool)
+    for (a, b) in hdfs_down:
+        hdfs_out |= (ts >= a) & (ts < b)
+    gate = np.ones(ts.shape)
+    gate[zk_out & hdfs_out] = 0.0
     return gate
 
 

@@ -28,6 +28,15 @@ class StartupConfig:
         return StartupConfig(object_reuse=False, batched_deploy=False,
                              straggler_mitigation=False)
 
+    @staticmethod
+    def policy_grid() -> list["StartupConfig"]:
+        """All 8 on/off combinations of the three acceleration flags —
+        the startup-policy axis that deployment drills sweep when
+        lowering per-wave downtimes (`core.hotupdate.deploy_downtime`)."""
+        return [StartupConfig(object_reuse=bool(o), batched_deploy=bool(b),
+                              straggler_mitigation=bool(s))
+                for o in (0, 1) for b in (0, 1) for s in (0, 1)]
+
 
 # ----------------------------------------------------------------------
 # Execution-plan interning (memory object reuse): identical edge descriptors

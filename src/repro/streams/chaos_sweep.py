@@ -38,7 +38,7 @@ import numpy as np
 
 from repro.core.chaos import ChaosSpec
 from repro.streams.engine import (CheckpointConfig, FailoverConfig,
-                                  PackedArena)
+                                  PackedArena, UpgradeConfig)
 from repro.streams.graph import LogicalGraph
 from repro.streams.jax_engine import (JaxBatchMetrics, normalize_config,
                                       run_batch, run_config_batch)
@@ -288,6 +288,9 @@ class ConfigSweepResult:
     backlog_surface: np.ndarray    # (C, S) max_backlog
     lost_surface: np.ndarray       # (C, S) dropped records (lost work)
     wall_s: float
+    # (C, S) deployment-drill auto-rollback fire times (+inf = canary
+    # held / no drill on that config row); None for pre-drill callers
+    rollback_surface: np.ndarray | None = None
 
     @property
     def scenarios_per_s(self) -> float:
@@ -329,6 +332,11 @@ def _config_label(i: int, cfg: dict) -> str:
     bro = tuple(cfg.get("brownout", ()))
     if bro:
         bits.append("brownout×" + "/".join(f"{r[2]:g}" for r in bro))
+    upg = cfg.get("upgrade")
+    if isinstance(upg, UpgradeConfig):
+        bits.append(f"drill:{'hot' if upg.hot else 'cold'}"
+                    f" canary={upg.canary_frac:g}"
+                    f" thr={upg.rollback_threshold:g}")
     return " ".join(bits) if bits else f"cfg{i}"
 
 
@@ -383,9 +391,13 @@ def sweep_configs(graph: LogicalGraph | PackedArena, configs, seeds, *,
                     for r in results])
     lost = np.array([[s.dropped for s in r.summaries]
                      for r in results])
+    rbs = np.array([(bm.rollback_t if bm.rollback_t is not None
+                     else np.full(len(seeds), np.inf))
+                    for bm in batches])
     labels = [_config_label(i, c) for i, c in enumerate(norm)]
     return ConfigSweepResult(logical.name, duration_s, norm, labels,
-                             results, rec, slo, bkl, lost, wall)
+                             results, rec, slo, bkl, lost, wall,
+                             rollback_surface=rbs)
 
 
 # ----------------------------------------------------------------------
@@ -452,3 +464,79 @@ def replication_tradeoff(graph, seeds, *, base_spec: ChaosSpec,
         grid.recovery_surface.reshape(shape),
         grid.slo_surface.reshape(shape),
         grid.lost_surface.reshape(shape), grid)
+
+
+# ----------------------------------------------------------------------
+# deployment-drill cube (canary/rolling upgrades + auto-rollback)
+# ----------------------------------------------------------------------
+@dataclasses.dataclass
+class DeploymentDrill:
+    """The deployment-drill tuning cube: every surface is shaped
+    ``(n_policies, n_fracs, n_thresholds, S)`` — recovery time, SLO
+    violation, lost work and auto-rollback fire time over
+    upgrade-policy × canary-fraction × rollback-threshold, all from ONE
+    `sweep_configs` device call (upgrades are in-trace only, so the
+    whole cube shares the drill-free rows' pregenerated timelines and
+    `timeline_build_count` stays flat)."""
+    policies: list[str]
+    canary_fracs: list[float]
+    rollback_thresholds: list[float]
+    recovery: np.ndarray
+    slo: np.ndarray
+    lost: np.ndarray
+    rollback_t: np.ndarray          # +inf = canary held (no rollback)
+    grid: ConfigSweepResult
+
+    @property
+    def rollback_frac(self) -> np.ndarray:
+        """Fraction of seeds whose drill auto-rolled back, per
+        (policy, frac, threshold) cell."""
+        return np.isfinite(self.rollback_t).mean(axis=-1)
+
+    def rows(self) -> list[dict]:
+        return self.grid.rows()
+
+
+def deployment_drill(graph, seeds, *, base_spec: ChaosSpec,
+                     duration_s: float,
+                     policies: dict[str, UpgradeConfig],
+                     canary_fracs=(0.25, 0.5),
+                     rollback_thresholds=(math.inf, 200.0),
+                     failover=None, ckpt=None,
+                     **sweep_kw) -> DeploymentDrill:
+    """Sweep the full deployment-drill cube in ONE `sweep_configs` call.
+
+    `policies` maps labels (e.g. ``"hot"`` / ``"cold"`` / ``"hot+accel"``)
+    to base `UpgradeConfig`s — typically differing in ``hot`` /
+    ``startup`` / ``wave_stagger_s`` / canary config deltas; each cube
+    cell replaces that policy's ``canary_frac`` and
+    ``rollback_threshold`` (``math.inf`` = canary never rolls back — the
+    drill-as-control row). `failover` / `ckpt` are the base resiliency
+    configs every row shares (per-job lists allowed on packed arenas).
+
+    The cube axes are ordered (policy, canary_frac, threshold, seed);
+    `DeploymentDrill.rollback_t` is the per-cell auto-rollback fire-time
+    surface and `rollback_frac` the per-cell trigger rate a release
+    pipeline gates on."""
+    pol_names = list(policies)
+    fracs = [float(f) for f in canary_fracs]
+    thrs = [float(t) for t in rollback_thresholds]
+    configs = []
+    for p in pol_names:
+        for f in fracs:
+            for thr in thrs:
+                up = dataclasses.replace(policies[p], canary_frac=f,
+                                         rollback_threshold=thr)
+                configs.append({
+                    "failover": failover, "ckpt": ckpt, "upgrade": up,
+                    "label": (f"{p} canary={f:g} thr="
+                              f"{'off' if math.isinf(thr) else f'{thr:g}'}")})
+    grid = sweep_configs(graph, configs, seeds, base_spec=base_spec,
+                         duration_s=duration_s, **sweep_kw)
+    shape = (len(pol_names), len(fracs), len(thrs), -1)
+    return DeploymentDrill(
+        pol_names, fracs, thrs,
+        grid.recovery_surface.reshape(shape),
+        grid.slo_surface.reshape(shape),
+        grid.lost_surface.reshape(shape),
+        grid.rollback_surface.reshape(shape), grid)

@@ -121,6 +121,181 @@ class CheckpointConfig:
     retry_failed_region: bool = True
 
 
+@dataclasses.dataclass
+class UpgradeConfig:
+    """Deployment-drill policy (paper §V): the HOW of a canaried rolling
+    upgrade. The WHEN comes from ``ChaosSpec.upgrade_at`` (first entry;
+    per-job chaos lists schedule per job), falling back to
+    ``t_upgrade_s``. Upgrades are deterministic in-trace events: they
+    consume NO rng draws and never touch the pregenerated chaos
+    timelines — both engines implement waves, canary config divergence
+    and auto-rollback as pure time arithmetic inside the tick.
+
+    A drill canaries the first ``round(canary_frac * n_jobs)`` jobs of a
+    packed arena (or the explicit ``canary_jobs`` indices). Canaried
+    jobs restart region-sized task slices on a ``wave_stagger_s``
+    cadence, each wave paying ``wave_down_s`` of downtime — by default
+    the hot-vs-cold `core.hotupdate.deploy_downtime` cost lowered from
+    ``startup`` (a `core.startup.StartupConfig`; None = its defaults).
+    Once a task's wave completes, the task runs ``canary_failover`` /
+    ``canary_ckpt`` / ``canary_sel_scale`` instead of the base configs
+    (None = unchanged; canary lazyload staggers are ignored). A drill
+    controller EWMAs the canary-vs-stable mean-queue delta over
+    ``rollback_window_s`` and, once it exceeds ``rollback_threshold``
+    (default inf = never), schedules a rollback: the canary slice
+    reverts to the base config and pays a second restart wave. Upgrade
+    and rollback waves are *graceful* — queues persist, unlike crash
+    failover — so an upgrade to an identical config with
+    ``wave_down_s=0`` is an exact no-op."""
+    t_upgrade_s: float = 30.0
+    wave_stagger_s: float = 2.0
+    hot: bool = True
+    startup: object | None = None    # core.startup.StartupConfig
+    wave_down_s: float | None = None  # override deploy_downtime lowering
+    canary_frac: float = 0.5
+    canary_jobs: tuple | None = None  # explicit job indices (overrides frac)
+    rollback_threshold: float = math.inf
+    rollback_window_s: float = 5.0
+    canary_failover: FailoverConfig | None = None
+    canary_ckpt: CheckpointConfig | None = None
+    canary_sel_scale: float = 1.0
+
+
+def inert_upgrade_leaves(n_tasks: int) -> dict:
+    """Drill parameter leaves of a drill-free run: the traced arithmetic
+    stays structurally present (stable pytree → one trace for drill and
+    non-drill configs) but is an exact arithmetic no-op — act masks are
+    identically zero, wave starts are +inf, the controller never arms."""
+    z = lambda: np.zeros(n_tasks)                      # noqa: E731
+    return {
+        "up_cmask": z(), "up_start": np.full(n_tasks, np.inf),
+        "up_rstag": np.full(n_tasks, np.inf), "up_wdelta": z(),
+        "d_down_s": z(), "d_down_r": z(), "d_down_h": z(),
+        "d_mode_s": z(), "d_mode_r": z(), "d_mode_h": z(),
+        "d_restore": z(), "d_replay": z(), "d_sel": z(), "d_ck": z(),
+        "up_t0": np.float64(np.inf), "up_down": np.float64(0.0),
+        "up_thresh": np.float64(np.inf), "up_alpha": np.float64(0.0),
+    }
+
+
+def lower_upgrade(upgrade: UpgradeConfig | None, spec, *, n_tasks: int,
+                  job_of_task, task_region, dt: float, base_failover,
+                  base_ckpt, sel_task) -> dict:
+    """Lower an `UpgradeConfig` into the traced drill parameter leaves
+    shared by the numpy and JAX engines (identical float arithmetic —
+    the parity contract):
+
+    * ``up_cmask`` — 1.0 on tasks of canaried jobs;
+    * ``up_start`` — absolute upgrade-wave start per task
+      (``t_up(job) + region_rank * wave_stagger_s``; +inf off-canary);
+    * ``up_rstag`` — rollback-wave stagger per task (+inf off-canary so
+      a fired rollback never restarts stable tasks);
+    * ``up_wdelta`` — controller weights: mean-canary minus mean-stable
+      queue in one dot product;
+    * ``d_down_*`` / ``d_mode_*`` / ``d_restore`` / ``d_replay`` —
+      canary-minus-base failover deltas, applied as ``base + act * d``
+      with the traced 0/1 activation mask;
+    * ``d_sel`` — canary selectivity delta (``sel * (scale - 1)``);
+    * ``d_ck`` — canary checkpoint-interval ratio minus one, scaling the
+      replay-age term (the shared attempt/draw stream is untouched —
+      jobs whose base config never checkpoints ignore ``canary_ckpt``);
+    * scalars ``up_t0`` (controller arming time: first canary wave end),
+      ``up_down`` (per-wave downtime), ``up_thresh``, ``up_alpha``
+      (EWMA coefficient ``dt / rollback_window_s``).
+
+    `spec` is a `ChaosSpec` or per-job list; `base_failover` is the
+    `per_task_failover` tuple of the base config; `sel_task` the per-task
+    base selectivity vector. ``upgrade=None`` returns the inert leaves."""
+    if upgrade is None:
+        return inert_upgrade_leaves(n_tasks)
+    from repro.core.chaos import ChaosSpec
+    from repro.core.hotupdate import deploy_downtime
+
+    jot = (np.zeros(n_tasks, dtype=int) if job_of_task is None
+           else np.asarray(job_of_task))
+    n_jobs = int(jot.max()) + 1 if n_tasks else 1
+    if upgrade.canary_jobs is not None:
+        cjob = np.zeros(n_jobs, dtype=bool)
+        cjob[np.asarray(list(upgrade.canary_jobs), dtype=int)] = True
+    else:
+        k = max(0, min(n_jobs,
+                       int(round(upgrade.canary_frac * n_jobs + 1e-9))))
+        cjob = np.arange(n_jobs) < k
+    cmask = cjob[jot].astype(float)
+
+    if isinstance(spec, (list, tuple)):
+        specs = list(spec)
+        if len(specs) != n_jobs:
+            raise ValueError(f"per-job chaos list must have one entry "
+                             f"per job ({len(specs)} != {n_jobs})")
+    else:
+        specs = [spec] * n_jobs
+
+    def _t_up(sp):
+        sp = sp.spec if isinstance(sp, ChaosEngine) else (sp or ChaosSpec())
+        ups = tuple(sp.upgrade_at)
+        return float(ups[0]) if ups else float(upgrade.t_upgrade_s)
+
+    t_up_j = np.array([_t_up(sp) for sp in specs])
+    rank = region_rank(task_region, job_of_task)
+    stag = float(upgrade.wave_stagger_s)
+    up_down = (float(upgrade.wave_down_s)
+               if upgrade.wave_down_s is not None
+               else deploy_downtime(upgrade.startup, hot=upgrade.hot))
+    canary = cmask > 0
+    up_start = np.where(canary, t_up_j[jot] + rank * stag, np.inf)
+    up_rstag = np.where(canary, rank * stag, np.inf)
+    n_can = float(cmask.sum())
+    n_st = float(n_tasks) - n_can
+    up_wdelta = (cmask / max(n_can, 1.0)
+                 - (1.0 - cmask) / max(n_st, 1.0))
+    up_t0 = (float(t_up_j[cjob].min()) + up_down if cjob.any()
+             else np.inf)
+
+    b_codes, b_det, b_rs, b_rr, b_fx = base_failover
+    if upgrade.canary_failover is not None:
+        c_codes, c_det, c_rs, c_rr, c_fx = per_task_failover(
+            upgrade.canary_failover, n_tasks, job_of_task)
+    else:
+        c_codes, c_det, c_rs, c_rr, c_fx = (b_codes, b_det, b_rs, b_rr,
+                                            b_fx)
+    fcode = lambda codes, v: (np.asarray(codes) == v).astype(float)  # noqa: E731
+    d_ck = np.zeros(n_tasks)
+    if upgrade.canary_ckpt is not None and base_ckpt is not None:
+        if isinstance(base_ckpt, CheckpointConfig):
+            b_int = np.full(n_tasks, float(base_ckpt.interval_s))
+        else:
+            b_int = np.array([float(c.interval_s) if c is not None
+                              else np.inf for c in base_ckpt])[jot]
+        ok = np.isfinite(b_int) & (b_int > 0)
+        d_ck = np.where(
+            ok, cmask * (float(upgrade.canary_ckpt.interval_s)
+                         / np.where(ok, b_int, 1.0) - 1.0), 0.0)
+    return {
+        "up_cmask": cmask,
+        "up_start": up_start,
+        "up_rstag": up_rstag,
+        "up_wdelta": up_wdelta,
+        "d_down_s": cmask * ((c_det + c_rs) - (b_det + b_rs)),
+        "d_down_r": cmask * ((c_det + c_rr) - (b_det + b_rr)),
+        "d_down_h": cmask * ((c_det + c_fx["switch"] + c_fx["stale"])
+                             - (b_det + b_fx["switch"] + b_fx["stale"])),
+        "d_mode_s": cmask * (fcode(c_codes, 2) - fcode(b_codes, 2)),
+        "d_mode_r": cmask * (fcode(c_codes, 1) - fcode(b_codes, 1)),
+        "d_mode_h": cmask * (fcode(c_codes, 3) - fcode(b_codes, 3)),
+        "d_restore": cmask * (c_fx["restore_base"] - b_fx["restore_base"]),
+        "d_replay": cmask * (c_fx["replay_rate"] - b_fx["replay_rate"]),
+        "d_sel": cmask * np.asarray(sel_task, float)
+        * (float(upgrade.canary_sel_scale) - 1.0),
+        "d_ck": d_ck,
+        "up_t0": np.float64(up_t0),
+        "up_down": np.float64(up_down),
+        "up_thresh": np.float64(upgrade.rollback_threshold),
+        "up_alpha": np.float64(min(1.0, dt / max(
+            float(upgrade.rollback_window_s), dt))),
+    }
+
+
 class _Series(dict):
     """Read-mostly mapping op name → metric column view."""
 
@@ -159,6 +334,11 @@ class EngineMetrics:
         self.ckpt_by_job = (np.zeros((n_jobs, 3), int)
                             if n_jobs is not None else None)
         self.recoveries: list[dict] = []
+        # deployment drills: wall time the auto-rollback fired (inf =
+        # never). Upgrade/rollback waves are NOT recovery entries — the
+        # chaos timelines only know crash failovers, and the jax engines
+        # reconstruct `recoveries` from those timelines.
+        self.rollback_t = math.inf
 
     @property
     def emitted_by_job(self) -> np.ndarray:
@@ -449,6 +629,25 @@ _EXTRA_FIELDS = (("switch", "standby_switch_s"),
                  ("stagger", "lazyload_stagger_s"))
 
 
+def region_rank(task_region: np.ndarray,
+                job_of_task: np.ndarray | None) -> np.ndarray:
+    """Per-task rank of its failure region *within its job* (the job's
+    first region is rank 0). This is the deterministic ordering shared by
+    lazy-load ready-time schedules (`lazy_ready_extra`) and
+    deployment-drill rolling-upgrade waves (`lower_upgrade`): wave /
+    ready slot ``i`` covers the job's rank-``i`` region."""
+    task_region = np.asarray(task_region)
+    if job_of_task is None:
+        first = task_region.min() if len(task_region) else 0
+    else:
+        job_of_task = np.asarray(job_of_task)
+        n_jobs = int(job_of_task.max()) + 1
+        first_of_job = np.full(n_jobs, np.iinfo(np.int64).max)
+        np.minimum.at(first_of_job, job_of_task, task_region)
+        first = first_of_job[job_of_task]
+    return (task_region - first).astype(float)
+
+
 def lazy_ready_extra(stagger: np.ndarray, task_region: np.ndarray | None,
                      job_of_task: np.ndarray | None) -> np.ndarray:
     """Per-task lazy-load restore penalty: region ``rank`` within its job
@@ -459,16 +658,7 @@ def lazy_ready_extra(stagger: np.ndarray, task_region: np.ndarray | None,
     stagger = np.asarray(stagger, dtype=float)
     if task_region is None or not np.any(stagger):
         return np.zeros_like(stagger)
-    task_region = np.asarray(task_region)
-    if job_of_task is None:
-        first = task_region.min()
-    else:
-        job_of_task = np.asarray(job_of_task)
-        n_jobs = int(job_of_task.max()) + 1
-        first_of_job = np.full(n_jobs, np.iinfo(np.int64).max)
-        np.minimum.at(first_of_job, job_of_task, task_region)
-        first = first_of_job[job_of_task]
-    return (task_region - first).astype(float) * stagger
+    return region_rank(task_region, job_of_task) * stagger
 
 
 # ----------------------------------------------------------------------
@@ -1174,6 +1364,7 @@ class StreamEngine:
                  chaos: ChaosEngine | None = None,
                  failover: FailoverConfig | None = None,
                  ckpt: CheckpointConfig | None = None,
+                 upgrade: UpgradeConfig | None = None,
                  task_speed_override: dict[int, float] | None = None,
                  seed: int = 0):
         self.arena = graph if isinstance(graph, PackedArena) else None
@@ -1334,7 +1525,9 @@ class StreamEngine:
                      or e.spec.burst_at)
                 for e in self._chaos_list)
             self._gates_possible = any(
-                bool(e.spec.mq_down) for e in self._chaos_list)
+                bool(e.spec.mq_down)
+                or (bool(e.spec.zk_down) and bool(e.spec.hdfs_down))
+                for e in self._chaos_list)
             # region-correlated bursts: lower each job's burst events
             # into scheduled host kills in the job's LOCAL host domain
             for job, eng in zip(self.arena.jobs, self._chaos_list):
@@ -1348,10 +1541,45 @@ class StreamEngine:
             self._chaos_kills_possible = bool(
                 spec.host_kill_at or spec.host_kill_prob_per_s
                 or spec.burst_at)
-            self._gates_possible = bool(spec.mq_down)
+            self._gates_possible = bool(spec.mq_down) or (
+                bool(spec.zk_down) and bool(spec.hdfs_down))
             if spec.burst_at:
                 self.chaos.schedule_kills(burst_kill_schedule(
                     spec.burst_at, self._task_host, self._task_region))
+
+        # ---- deployment drill (canaried rolling upgrade) ---------------
+        # lowered ONCE into traced per-task leaves; everything below is
+        # deterministic time arithmetic — no rng draws, no timeline work
+        self.upgrade = upgrade
+        if upgrade is not None:
+            sel_task = np.zeros(n_tasks)
+            for p in self._ops:
+                if not p.is_source:
+                    sel_task[p.lo:p.hi] = p.selectivity
+            dr = lower_upgrade(
+                upgrade,
+                (self._chaos_list if self._chaos_list is not None
+                 else self.chaos.spec),
+                n_tasks=n_tasks, job_of_task=self._job_of_task,
+                task_region=self._task_region, dt=dt,
+                base_failover=(codes, det, rst_s, rst_r, fx),
+                base_ckpt=ckpt, sel_task=sel_task)
+            self._dr = dr
+            self._mode_single_f = self._mode_single.astype(float)
+            self._mode_region_f = self._mode_region.astype(float)
+            self._mode_hot_f = self._mode_hot.astype(float)
+            self._any_single_eff = (self._any_single
+                                    or bool((dr["d_mode_s"] > 0).any()))
+            self._has_extra_eff = (self._has_extra
+                                   or bool(dr["d_restore"].any()
+                                           or dr["d_replay"].any()
+                                           or dr["d_ck"].any()))
+        else:
+            self._dr = None
+        self._up_until = np.zeros(n_tasks)   # graceful waves: ≠ down_until
+        self._rb_t = math.inf                # rollback fire time
+        self._dacc = 0.0                     # controller EWMA accumulator
+        self._act = np.zeros(n_tasks)        # canary-config activation
 
         self.metrics = EngineMetrics(
             [p.name for p in self._ops],
@@ -1446,6 +1674,7 @@ class StreamEngine:
         dt = self.dt
         t = self.t
         q = self._queue
+        dr = self._dr
         all_alive = t >= self._max_down
         if all_alive:
             alive_all = self._true_buf
@@ -1453,28 +1682,48 @@ class StreamEngine:
         else:
             alive_all = np.less_equal(self._down_until, t,
                                       out=self._alive_buf)
+            if dr is not None:
+                # upgrade/rollback waves down tasks gracefully (queues
+                # persist) on a separate leaf so checkpoint alive masks
+                # — and thus the shared rng draw stream — never see them
+                np.logical_and(alive_all, self._up_until <= t,
+                               out=alive_all)
             np.copyto(self._alive_f_buf, alive_all)   # bool → float cast
             alive_f = self._alive_f_buf
             all_alive = bool(alive_all.all())
+        if dr is not None:
+            # canary-config activation: 1.0 once a task's upgrade wave
+            # completed and its rollback wave (if any) has not yet begun
+            np.multiply(
+                dr["up_cmask"],
+                (t >= dr["up_start"] + dr["up_down"])
+                & (t < self._rb_t + dr["up_rstag"]),
+                out=self._act)
+        act = self._act
         free = np.subtract(self._qcap, q, out=self._free_buf)
         np.maximum(free, 0.0, out=free)
         qps_row = self._qps_buf
         qps_row.fill(0.0)
         drop_tick = 0.0
-        any_single = self._any_single
+        any_single = self._any_single if dr is None else self._any_single_eff
         emitted = 0.0
 
         # MQ/coordinator outage windows gate sources (deterministic, no
-        # rng): a down message queue means sources emit nothing this tick
+        # rng): a down message queue — or a leaderless control plane
+        # (ZK quorum AND HDFS metadata both out, paper §IV-B) — means
+        # sources emit nothing this tick
         if self._gates_possible:
             if self._chaos_list is not None:
                 gate_by_job = np.array(
-                    [1.0 if e.mq_available(t) else 0.0
+                    [1.0 if (e.mq_available(t) and e.leader_available(t))
+                     else 0.0
                      for e in self._chaos_list])
                 gate0 = 1.0
             else:
                 gate_by_job = None
-                gate0 = 1.0 if self.chaos.mq_available(t) else 0.0
+                gate0 = (1.0 if (self.chaos.mq_available(t)
+                                 and self.chaos.leader_available(t))
+                         else 0.0)
         else:
             gate_by_job = None
             gate0 = 1.0
@@ -1501,7 +1750,12 @@ class StreamEngine:
                 cap = op.cap_row if all_alive else op.cap_row * alive_f[sl]
                 take = np.minimum(q[sl], cap)
                 q[sl] -= take
-                produced = take * op.selectivity
+                if dr is None:
+                    produced = take * op.selectivity
+                else:
+                    # canary slices run their own selectivity vector
+                    produced = take * (op.selectivity
+                                       + act[sl] * dr["d_sel"][sl])
                 qps_row[oi] = take.sum() / dt
 
             for ep in op.out_edges:
@@ -1509,8 +1763,14 @@ class StreamEngine:
                 arriving = self._route(ep, produced, free[dsl], alive_f[dsl])
                 if any_single and not all_alive:
                     # records routed to a dead single_task-mode task drop
-                    # (γ=partial); per-job configs scope the mode per dst
-                    dead = ~alive_all[dsl] & self._mode_single[dsl]
+                    # (γ=partial); per-job configs scope the mode per dst;
+                    # canary slices may flip the mode mask mid-run
+                    if dr is None:
+                        dead = ~alive_all[dsl] & self._mode_single[dsl]
+                    else:
+                        ms_eff = (self._mode_single_f[dsl]
+                                  + act[dsl] * dr["d_mode_s"][dsl]) > 0.5
+                        dead = ~alive_all[dsl] & ms_eff
                     if dead.any():
                         d_edge = arriving[dead].sum()
                         drop_tick += d_edge
@@ -1565,6 +1825,33 @@ class StreamEngine:
                 self._run_checkpoint_job(int(j))
                 self._next_ckpt_j[j] += self._ckpt_list[j].interval_s
 
+        # drill controller + wave scheduler (end-of-tick, mirrors the
+        # traced order in jax_engine._finish_tick exactly): the EWMA of
+        # the canary-vs-stable mean-queue delta updates first, then the
+        # rollback decision reads the UPDATED accumulator, then the
+        # wave triggers read the UPDATED rollback time
+        if dr is not None:
+            delta = float(q @ dr["up_wdelta"])
+            if t >= dr["up_t0"]:
+                self._dacc += dr["up_alpha"] * (delta - self._dacc)
+                if self._dacc > dr["up_thresh"] and math.isinf(self._rb_t):
+                    self._rb_t = t + dt
+                    self.metrics.rollback_t = self._rb_t
+            trig = (t <= dr["up_start"]) & (dr["up_start"] < t + dt)
+            if trig.any():
+                self._up_until[trig] = np.maximum(
+                    self._up_until[trig], dr["up_start"][trig]
+                    + dr["up_down"])
+                self._max_down = max(self._max_down,
+                                     float(self._up_until.max()))
+            rb_start = self._rb_t + dr["up_rstag"]
+            trig = (t <= rb_start) & (rb_start < t + dt)
+            if trig.any():
+                self._up_until[trig] = np.maximum(
+                    self._up_until[trig], rb_start[trig] + dr["up_down"])
+                self._max_down = max(self._max_down,
+                                     float(self._up_until.max()))
+
         backlog_row = np.add.reduceat(q, self._arena_starts)[
             self._backlog_perm]
         lag = float(backlog_row[self._src_cols].sum())
@@ -1589,10 +1876,17 @@ class StreamEngine:
         replays)."""
         t = self.t
         victims = self._task_host == host
+        dr = self._dr
+        act = self._act
         # passive-restore surcharge: brownout-inflated restore bandwidth
         # + replay of work since the last successful checkpoint + lazy-
-        # load region ready-time (zero vectors → identical old downtimes)
-        if self._has_extra:
+        # load region ready-time (zero vectors → identical old downtimes).
+        # Active canary slices pay it under their own config: restore /
+        # replay deltas plus the canary-vs-base ckpt-interval ratio
+        # scaling the replay-age term (same float arithmetic as the jax
+        # engines' _finish_tick — the parity contract).
+        has_extra = self._has_extra if dr is None else self._has_extra_eff
+        if has_extra:
             if self._chaos_list is not None:
                 bfj = np.array([e.brownout_factor(t)
                                 for e in self._chaos_list])
@@ -1602,26 +1896,43 @@ class StreamEngine:
             age = t - (self._last_ckpt_vec[self._job_of_task]
                        if self._last_ckpt_vec is not None
                        else self._last_ckpt_t)
-            extra = (self._restore_base * bf_t + age * self._replay_rate
-                     + self._lazy_extra)
+            if dr is None:
+                extra = (self._restore_base * bf_t
+                         + age * self._replay_rate + self._lazy_extra)
+            else:
+                extra = ((self._restore_base + act * dr["d_restore"])
+                         * bf_t
+                         + age * (1.0 + act * dr["d_ck"])
+                         * (self._replay_rate + act * dr["d_replay"])
+                         + self._lazy_extra)
         else:
             extra = None
-        vr = victims & self._mode_region
+        if dr is None:
+            mr, ms, mh = (self._mode_region, self._mode_single,
+                          self._mode_hot)
+            dt_r, dt_s, dt_h = (self._downtime_region,
+                                self._downtime_single, self._downtime_hot)
+        else:
+            mr = (self._mode_region_f + act * dr["d_mode_r"]) > 0.5
+            ms = (self._mode_single_f + act * dr["d_mode_s"]) > 0.5
+            mh = (self._mode_hot_f + act * dr["d_mode_h"]) > 0.5
+            dt_r = self._downtime_region + act * dr["d_down_r"]
+            dt_s = self._downtime_single + act * dr["d_down_s"]
+            dt_h = self._downtime_hot + act * dr["d_down_h"]
+        vr = victims & mr
         if vr.any():
             hit = np.isin(self._task_region, self._task_region[vr])
-            d = (self._downtime_region if extra is None
-                 else self._downtime_region + extra)
+            d = dt_r if extra is None else dt_r + extra
             self._apply_failover(t, "region", hit, d)
-        vs = victims & self._mode_single
+        vs = victims & ms
         if vs.any():
-            d = (self._downtime_single if extra is None
-                 else self._downtime_single + extra)
+            d = dt_s if extra is None else dt_s + extra
             self._apply_failover(t, "single_task", vs, d)
         # hot standby: switch + staleness replay only — no restore, no
         # checkpoint-age replay, no drops (the standby keeps consuming)
-        vh = victims & self._mode_hot
+        vh = victims & mh
         if vh.any():
-            self._apply_failover(t, "hot_standby", vh, self._downtime_hot)
+            self._apply_failover(t, "hot_standby", vh, dt_h)
         if revive:
             self.chaos.revive(host)  # replacement host
 

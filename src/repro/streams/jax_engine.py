@@ -106,6 +106,13 @@ State-pytree layout (`EngineState`, one leaf per arena variable; under
     ckpt_epoch ()         i32  checkpoint attempts so far
     emitted    (n_jobs,)  f64  source records emitted, per job segment
     dropped    (n_jobs,)  f64  single_task failover drops, per job segment
+    up_until   (n_tasks,) f64  upgrade/rollback-wave downtime horizon
+                               (separate from down_until so checkpoint
+                               alive masks — which must match the
+                               pregenerated timelines draw-for-draw —
+                               never see deployment downtime)
+    rb_t       ()         f64  auto-rollback fire time (+inf = not fired)
+    dacc       ()         f64  controller EWMA of canary−stable backlog
 
 Chaos pregeneration semantics (the one intentional delta vs the numpy
 engine's *mechanism*, not its numbers): a `jit`-ted scan cannot consume
@@ -131,10 +138,15 @@ pytree structure — and hence the trace — is stable:
                                  plus any config-axis ramps, composed
                                  by tuple concatenation so grid rows
                                  stay bit-identical to rebuilds)
-    gate  (n_ticks, n_jobs) f64  MQ/coordinator availability in {0,1}
-                                 (`mq_gate_curve` over
-                                 `ChaosSpec.mq_down` windows); source
-                                 emission is multiplied by the gate
+    gate  (n_ticks, n_jobs) f64  MQ/coordinator availability in {0,1}:
+                                 `mq_gate_curve` over
+                                 `ChaosSpec.mq_down` windows ×
+                                 `coordinator_gate_curve` over the
+                                 ZK∩HDFS leader-loss overlap (`zk_down`
+                                 / `hdfs_down` — leadership survives on
+                                 either store, so only overlapping
+                                 windows gate); source emission is
+                                 multiplied by the gate
     ckage (n_ticks, n_jobs) f64  checkpoint age at tick start
                                  (`ckpt_age_curve`, tick-exclusive:
                                  a success at tick i lowers the age
@@ -158,6 +170,47 @@ the timeline build) and passive restores (in the tick), which is what
 makes the replication-vs-checkpoint tradeoff surface
 (`streams.chaos_sweep.replication_tradeoff`) come out of ONE
 `sweep_configs` device pass.
+
+Deployment-event + canary-mask lowering contract (drills)
+---------------------------------------------------------
+`UpgradeConfig` deployment drills (traced canary/rolling upgrades with
+in-trace auto-rollback) lower through `streams.engine.lower_upgrade`
+into 18 always-present params leaves (`_DRILL_KEYS`; inert zeros/infs
+when no drill is configured, so drill and drill-free runs share one
+trace). The contract:
+
+* **Upgrades are in-trace only.** `ChaosSpec.upgrade_at` / the
+  `UpgradeConfig` never reach the timeline builders: the kill,
+  checkpoint and straggler draw streams are upgrade-free, so the
+  draw-for-draw replay contract and a flat ``timeline_build_count``
+  hold trivially across the drill axis.
+* **Wave downtimes ride a separate state leaf** (``up_until``).
+  Routing aliveness is ``(down_until <= t) & (up_until <= t)`` while
+  checkpoint alive masks keep reading ``down_until`` alone — matching
+  the host-side timelines. Upgrade/rollback restarts are *graceful*:
+  queues are NOT zeroed (unlike crash failover), so an
+  identical-config upgrade with zero wave downtime is a bit-exact
+  no-op.
+* **Canary config is a delta, not a branch.** Per-task activation
+  ``act = up_cmask · (t >= up_start + up_down) · (t < rb_t +
+  up_rstag)`` (a traced float mask) applies every canary override as
+  ``base + act · d_*``: failover downtimes/modes, restore/replay
+  surcharges, checkpoint-interval age scaling and selectivity. With
+  ``act = 0`` each formula reduces to the exact base arithmetic
+  (``×1.0`` / ``+0.0``), which is the drill-free parity guarantee.
+* **Rollback is a traced scan-carried controller.** Per tick the
+  controller EWMAs the mean-canary-minus-mean-stable backlog through
+  one dot product (``queue @ up_wdelta``), arms at ``up_t0`` (first
+  canary wave's end) and latches ``rb_t`` when the EWMA crosses
+  ``up_thresh``; rollback waves then restart only canary tasks
+  (``up_rstag`` is +inf off-canary) and ``act`` reverts — no rng, no
+  host round-trip, vmappable across (mixes × configs × seeds).
+* **Pallas caveat:** the fused kernel packs ``mode_single`` into its
+  static phase tables once per lowering, so a canary
+  ``d_mode_s``/``d_mode_r``/``d_mode_h`` delta cannot reach the
+  kernel's in-phase drop mask; keep canary mode deltas zero under
+  ``phase_mode="pallas"`` (selectivity/downtime/ckpt deltas and the
+  controller live outside the kernel and are fully supported).
 
 Compiled `run` functions are cached per *plan shape* (the `TensorPlan`
 digest + region count — never float parameters, which are traced), so
@@ -208,13 +261,15 @@ from repro.core.chaos import (ChaosEngine, ChaosSpec, ChaosTimeline,
                               brownout_curve, build_chaos_timeline,
                               build_grid_timelines,
                               build_perjob_chaos_timeline, ckpt_age_curve,
-                              mq_gate_curve, refit_failover)
+                              coordinator_gate_curve, mq_gate_curve,
+                              refit_failover)
 from repro.dist.sharding import (local_shard_count, sharded_grid_fn,
                                  sharded_seed_fn)
 from repro.streams.engine import (CheckpointConfig, FailoverConfig,
                                   JobSlice, PackedArena, TensorPlan,
-                                  build_plan, lazy_ready_extra,
-                                  lower_tensor_plan, per_task_failover)
+                                  UpgradeConfig, build_plan,
+                                  lazy_ready_extra, lower_tensor_plan,
+                                  lower_upgrade, per_task_failover)
 from repro.streams.graph import LogicalGraph, PhysicalGraph, expand
 
 try:  # scoped x64 — keeps the rest of the process on default f32
@@ -234,13 +289,23 @@ class EngineState(NamedTuple):
     ``emitted`` / ``dropped`` are per-job segment totals of shape
     ``(n_jobs,)`` — single-job engines carry ``(1,)`` vectors (same adds,
     same numerics as the former scalars); packed mega-arenas get the
-    per-job breakdown for free from a static segment index per op."""
+    per-job breakdown for free from a static segment index per op.
+
+    Deployment-drill leaves (inert zeros/infs without an upgrade):
+    ``up_until`` is the graceful-wave downtime per task — kept SEPARATE
+    from ``down_until`` so the pregenerated checkpoint draw streams
+    (which only know crash failovers) replay draw-for-draw; ``rb_t`` is
+    the scalar auto-rollback fire time (+inf = not fired); ``dacc`` the
+    drill controller's EWMA of the canary-vs-stable queue delta."""
     queue: jax.Array
     down_until: jax.Array
     speed: jax.Array
     ckpt_epoch: jax.Array
     emitted: jax.Array
     dropped: jax.Array
+    up_until: jax.Array
+    rb_t: jax.Array
+    dacc: jax.Array
 
 
 class TickDesc(NamedTuple):
@@ -277,9 +342,16 @@ def _build_compact_run(desc: TickDesc):
     def tick(pa, state: EngineState, x):
         t = x["t"]
         q = state.queue
-        alive_f = (state.down_until <= t).astype(q.dtype)
+        alive_f = ((state.down_until <= t)
+                   & (state.up_until <= t)).astype(q.dtype)
+        # canary-config activation: upgrade wave done, rollback wave (if
+        # fired) not yet begun — inert leaves make this identically zero
+        act = pa["up_cmask"] * ((t >= pa["up_start"] + pa["up_down"])
+                                & (t < state.rb_t + pa["up_rstag"])
+                                ).astype(q.dtype)
         free = jnp.maximum(pa["qcap"] - q, 0.0)
-        sel_t = pa["sel"][pa["op_of_task"]]
+        sel_t = pa["sel"][pa["op_of_task"]] + act * pa["d_sel"]
+        ms_eff = pa["mode_single"] + act * pa["d_mode_s"]
         cap_t = pa["cap_base"] * state.speed * alive_f
         emitted, dropped = state.emitted, state.dropped
         produced = jnp.zeros_like(q)
@@ -356,7 +428,7 @@ def _build_compact_run(desc: TickDesc):
                 jnp.where(eph["m_blk"] > 0.5, arr_blk,
                           jnp.where(eph["m_hash"] > 0.5,
                                     tot_d * eph["share"], arr_nrm)))
-            dead_s = (alive_d <= 0.0) & (pa["mode_single"][dst] > 0.0)
+            dead_s = (alive_d <= 0.0) & (ms_eff[dst] > 0.5)
             dropped = dropped.at[eph["dj_jobs"]].add(
                 rsum(jnp.where(dead_s, arriving, 0.0), eph["dj_idx"],
                      eph["dj_mask"]))
@@ -391,7 +463,7 @@ def _build_compact_run(desc: TickDesc):
             free = jnp.maximum(free.at[dst].add(-accepted), 0.0)
 
         return _finish_tick(pa, state, x, q, emitted, dropped,
-                            qps_acc, n_regions, n_ops)
+                            qps_acc, n_regions, n_ops, act)
 
     def run(pa, state, xs):
         return lax.scan(lambda st, x: tick(pa, st, x), state, xs)
@@ -400,7 +472,7 @@ def _build_compact_run(desc: TickDesc):
 
 
 def _finish_tick(pa, state, x, q, emitted, dropped, qps_acc,
-                 n_regions, n_ops):
+                 n_regions, n_ops, act):
     """Shared end-of-tick block of the dense and compact ticks: chaos
     host kills → failover (per-task mode masks + passive-restore
     surcharge from the external-event tensors), checkpoint attempt
@@ -414,19 +486,29 @@ def _finish_tick(pa, state, x, q, emitted, dropped, qps_acc,
     region/single downtimes bit-for-bit."""
     t = x["t"]
     vict = x["kills"][pa["task_host"]]
-    hit_s = (vict > 0.0).astype(q.dtype) * pa["mode_single"]
-    reg_hit = jax.ops.segment_max(vict * pa["mode_region"],
+    # active canary slices crash under the canary config: mode masks and
+    # downtimes apply their ``act``-gated deltas (exact no-ops when
+    # inert — adding act * 0.0 and comparing 0/1 masks against 0.5)
+    ms_eff = pa["mode_single"] + act * pa["d_mode_s"]
+    mr_eff = pa["mode_region"] + act * pa["d_mode_r"]
+    mh_eff = pa["mode_hot"] + act * pa["d_mode_h"]
+    hit_s = (vict > 0.0).astype(q.dtype) * (ms_eff > 0.5)
+    reg_hit = jax.ops.segment_max(vict * (mr_eff > 0.5),
                                   pa["task_region"],
                                   num_segments=n_regions)
     hit_r = (reg_hit[pa["task_region"]] > 0.0).astype(q.dtype)
-    hit_h = (vict > 0.0).astype(q.dtype) * pa["mode_hot"]
-    extra = (pa["restore_base"] * x["bfac"][pa["job_of_task"]]
-             + x["ckage"][pa["job_of_task"]] * pa["replay_rate"]
+    hit_h = (vict > 0.0).astype(q.dtype) * (mh_eff > 0.5)
+    extra = ((pa["restore_base"] + act * pa["d_restore"])
+             * x["bfac"][pa["job_of_task"]]
+             + x["ckage"][pa["job_of_task"]] * (1.0 + act * pa["d_ck"])
+             * (pa["replay_rate"] + act * pa["d_replay"])
              + pa["lazy_extra"])
-    until_s = t + (pa["detect"] + pa["restart_single"] + extra)
-    until_r = t + (pa["detect"] + pa["restart_region"] + extra)
+    until_s = t + (pa["detect"] + pa["restart_single"]
+                   + act * pa["d_down_s"] + extra)
+    until_r = t + (pa["detect"] + pa["restart_region"]
+                   + act * pa["d_down_r"] + extra)
     until_h = t + (pa["detect"] + pa["standby_switch"]
-                   + pa["standby_stale"])
+                   + pa["standby_stale"] + act * pa["d_down_h"])
     down_until = jnp.where(hit_r > 0.0, until_r,
                            jnp.where(hit_s > 0.0, until_s,
                                      jnp.where(hit_h > 0.0, until_h,
@@ -435,37 +517,66 @@ def _finish_tick(pa, state, x, q, emitted, dropped, qps_acc,
     q = jnp.where(hit_any > 0.0, 0.0, q)
 
     ckpt_epoch = state.ckpt_epoch + x["ckpt"].astype(jnp.int32)
+
+    # drill controller + wave scheduler (same order as the numpy tick:
+    # EWMA update → rollback decision on the UPDATED accumulator → wave
+    # triggers on the UPDATED rollback time). up_rstag is +inf off the
+    # canary slice, so a fired rollback never restarts stable tasks.
+    delta = q @ pa["up_wdelta"]
+    g = (t >= pa["up_t0"]).astype(q.dtype)
+    dacc = state.dacc + g * pa["up_alpha"] * (delta - state.dacc)
+    fire = ((t >= pa["up_t0"]) & (dacc > pa["up_thresh"])
+            & jnp.isinf(state.rb_t))
+    rb_t = jnp.where(fire, t + pa["dt"], state.rb_t)
+    trig_up = ((t <= pa["up_start"])
+               & (pa["up_start"] < t + pa["dt"]))
+    up_until = jnp.maximum(
+        state.up_until,
+        jnp.where(trig_up, pa["up_start"] + pa["up_down"], 0.0))
+    rb_start = rb_t + pa["up_rstag"]
+    trig_rb = (t <= rb_start) & (rb_start < t + pa["dt"])
+    up_until = jnp.maximum(
+        up_until, jnp.where(trig_rb, rb_start + pa["up_down"], 0.0))
 
     backlog_row = jax.ops.segment_sum(q, pa["op_of_task"],
                                       num_segments=n_ops)
     qps_row = qps_acc / pa["dt"]
     lag = jnp.dot(backlog_row, pa["src_mask_ops"])
     new_state = EngineState(q, down_until, state.speed, ckpt_epoch,
-                            emitted, dropped)
+                            emitted, dropped, up_until, rb_t, dacc)
     return new_state, {"qps": qps_row, "backlog": backlog_row,
                        "lag": lag}
 
 
 def _finish_tick_batched(pa, state, x, q, emitted, dropped, qps_acc,
-                         n_regions, n_ops):
+                         n_regions, n_ops, act):
     """Seed-batched twin of `_finish_tick` for the native ``(S, ...)``
     pallas run: same math, with the task axis transposed to leading for
-    the segment reductions (segment ops reduce over axis 0)."""
+    the segment reductions (segment ops reduce over axis 0) and the
+    drill scalars (``rb_t`` / ``dacc``) carrying the ``(S,)`` axis."""
     t = x["t"]
     vict = x["kills"][:, pa["task_host"]]
-    hit_s = (vict > 0.0).astype(q.dtype) * pa["mode_single"]
-    reg_hit = jax.ops.segment_max((vict * pa["mode_region"]).T,
+    ms_eff = pa["mode_single"] + act * pa["d_mode_s"]
+    mr_eff = pa["mode_region"] + act * pa["d_mode_r"]
+    mh_eff = pa["mode_hot"] + act * pa["d_mode_h"]
+    hit_s = (vict > 0.0).astype(q.dtype) * (ms_eff > 0.5)
+    reg_hit = jax.ops.segment_max((vict * (mr_eff > 0.5)).T,
                                   pa["task_region"],
                                   num_segments=n_regions)
     hit_r = (reg_hit[pa["task_region"]].T > 0.0).astype(q.dtype)
-    hit_h = (vict > 0.0).astype(q.dtype) * pa["mode_hot"]
-    extra = (pa["restore_base"] * x["bfac"][:, pa["job_of_task"]]
-             + x["ckage"][:, pa["job_of_task"]] * pa["replay_rate"]
+    hit_h = (vict > 0.0).astype(q.dtype) * (mh_eff > 0.5)
+    extra = ((pa["restore_base"] + act * pa["d_restore"])
+             * x["bfac"][:, pa["job_of_task"]]
+             + x["ckage"][:, pa["job_of_task"]]
+             * (1.0 + act * pa["d_ck"])
+             * (pa["replay_rate"] + act * pa["d_replay"])
              + pa["lazy_extra"])
-    until_s = t + (pa["detect"] + pa["restart_single"] + extra)
-    until_r = t + (pa["detect"] + pa["restart_region"] + extra)
+    until_s = t + (pa["detect"] + pa["restart_single"]
+                   + act * pa["d_down_s"] + extra)
+    until_r = t + (pa["detect"] + pa["restart_region"]
+                   + act * pa["d_down_r"] + extra)
     until_h = t + (pa["detect"] + pa["standby_switch"]
-                   + pa["standby_stale"])
+                   + pa["standby_stale"] + act * pa["d_down_h"])
     down_until = jnp.where(hit_r > 0.0, until_r,
                            jnp.where(hit_s > 0.0, until_s,
                                      jnp.where(hit_h > 0.0, until_h,
@@ -475,12 +586,28 @@ def _finish_tick_batched(pa, state, x, q, emitted, dropped, qps_acc,
 
     ckpt_epoch = state.ckpt_epoch + x["ckpt"].astype(jnp.int32)
 
+    delta = q @ pa["up_wdelta"]                      # (S,)
+    g = (t >= pa["up_t0"]).astype(q.dtype)
+    dacc = state.dacc + g * pa["up_alpha"] * (delta - state.dacc)
+    fire = ((t >= pa["up_t0"]) & (dacc > pa["up_thresh"])
+            & jnp.isinf(state.rb_t))
+    rb_t = jnp.where(fire, t + pa["dt"], state.rb_t)
+    trig_up = ((t <= pa["up_start"])
+               & (pa["up_start"] < t + pa["dt"]))
+    up_until = jnp.maximum(
+        state.up_until,
+        jnp.where(trig_up, pa["up_start"] + pa["up_down"], 0.0))
+    rb_start = rb_t[:, None] + pa["up_rstag"]        # (S, T)
+    trig_rb = (t <= rb_start) & (rb_start < t + pa["dt"])
+    up_until = jnp.maximum(
+        up_until, jnp.where(trig_rb, rb_start + pa["up_down"], 0.0))
+
     backlog_row = jax.ops.segment_sum(q.T, pa["op_of_task"],
                                       num_segments=n_ops).T
     qps_row = qps_acc / pa["dt"]
     lag = backlog_row @ pa["src_mask_ops"]
     new_state = EngineState(q, down_until, state.speed, ckpt_epoch,
-                            emitted, dropped)
+                            emitted, dropped, up_until, rb_t, dacc)
     return new_state, {"qps": qps_row, "backlog": backlog_row,
                        "lag": lag}
 
@@ -517,9 +644,19 @@ def _build_pallas_run(desc: TickDesc, impl: str | None = None):
     def tick(pa, aux, state: EngineState, x):
         t = x["t"]
         q = state.queue
-        alive_f = (state.down_until <= t).astype(q.dtype)
+        alive_f = ((state.down_until <= t)
+                   & (state.up_until <= t)).astype(q.dtype)
+        # drill activation / selectivity computed OUTSIDE the kernel —
+        # the fused phase core only sees alive_f/free/produced. The one
+        # pallas drill limitation: the kernel's drop mask reads the
+        # mode_single row PACKED once outside the scan, so a canary
+        # d_mode_s flip cannot reach it — keep canary failover modes
+        # equal to base modes (d_mode_s == 0) under the pallas path.
+        act = pa["up_cmask"] * ((t >= pa["up_start"] + pa["up_down"])
+                                & (t < state.rb_t[:, None]
+                                   + pa["up_rstag"])).astype(q.dtype)
         free = jnp.maximum(pa["qcap"] - q, 0.0)
-        sel_t = pa["sel"][pa["op_of_task"]]
+        sel_t = pa["sel"][pa["op_of_task"]] + act * pa["d_sel"]
         cap_t = pa["cap_base"] * state.speed * alive_f
         emitted, dropped = state.emitted, state.dropped
         produced = jnp.zeros_like(q)
@@ -559,7 +696,7 @@ def _build_pallas_run(desc: TickDesc, impl: str | None = None):
             free = jnp.maximum(free.at[:, dst].add(-accepted), 0.0)
 
         return _finish_tick_batched(pa, state, x, q, emitted, dropped,
-                                    qps_acc, n_regions, n_ops)
+                                    qps_acc, n_regions, n_ops, act)
 
     def run(pa, state, xs):
         aux = [pack_phase_tables(pa["edges"][fi], pa["qcap"],
@@ -590,9 +727,14 @@ def _build_run(desc: TickDesc):
     def tick(pa, state: EngineState, x):
         t = x["t"]
         q = state.queue
-        alive_f = (state.down_until <= t).astype(q.dtype)
+        alive_f = ((state.down_until <= t)
+                   & (state.up_until <= t)).astype(q.dtype)
+        act = pa["up_cmask"] * ((t >= pa["up_start"] + pa["up_down"])
+                                & (t < state.rb_t + pa["up_rstag"])
+                                ).astype(q.dtype)
         free = jnp.maximum(pa["qcap"] - q, 0.0)
-        sel_t = pa["sel"][op_of_task]
+        sel_t = pa["sel"][op_of_task] + act * pa["d_sel"]
+        ms_eff = pa["mode_single"] + act * pa["d_mode_s"]
         cap_t = pa["cap_base"] * state.speed * alive_f
         emitted, dropped = state.emitted, state.dropped
         produced = jnp.zeros_like(q)
@@ -665,7 +807,7 @@ def _build_run(desc: TickDesc):
             # records routed to a dead single_task-mode task drop
             # (γ=partial); edges never cross jobs, so the dst job segment
             # owns the drop
-            dead_s = (alive_d <= 0.0) & (pa["mode_single"][dst] > 0.0)
+            dead_s = (alive_d <= 0.0) & (ms_eff[dst] > 0.5)
             dropped = dropped + seg(jnp.where(dead_s, arriving, 0.0),
                                     ph.job_of_entry, num_segments=n_jobs)
             arriving = jnp.where(dead_s, 0.0, arriving)
@@ -696,7 +838,7 @@ def _build_run(desc: TickDesc):
         # pregenerated chaos host kills → failover, ckpt counter, metric
         # rows (shared with the compact tick)
         return _finish_tick(pa, state, x, q, emitted, dropped,
-                            qps_acc, n_regions, n_ops)
+                            qps_acc, n_regions, n_ops, act)
 
     def run(pa, state, xs):
         return lax.scan(lambda st, x: tick(pa, st, x), state, xs)
@@ -852,8 +994,11 @@ def build_unrolled_run(legacy_desc):
         backlog_row = jnp.stack([q[od.lo:od.hi].sum() for od in op_descs])
         qps_row = jnp.stack(qps_cols)
         lag = jnp.stack([backlog_row[j] for j in src_cols]).sum()
+        # legacy baseline predates deployment drills: pass the drill
+        # leaves through untouched
         new_state = EngineState(q, down_until, state.speed, ckpt_epoch,
-                                emitted, dropped)
+                                emitted, dropped, state.up_until,
+                                state.rb_t, state.dacc)
         return new_state, {"qps": qps_row, "backlog": backlog_row,
                            "lag": lag}
 
@@ -876,6 +1021,15 @@ _CFG_MIX_CACHE: dict = {}
 _XS_AXES = {"t": None, "kills": 0, "ckpt": None,
             "bfac": 0, "gate": 0, "ckage": 0}
 
+#: the 18 traced deployment-drill leaves (see `engine.lower_upgrade`):
+#: per-task canary mask / wave starts / rollback staggers / controller
+#: weights / canary-minus-base config deltas, plus four drill scalars
+_DRILL_KEYS = ("up_cmask", "up_start", "up_rstag", "up_wdelta",
+               "d_down_s", "d_down_r", "d_down_h",
+               "d_mode_s", "d_mode_r", "d_mode_h",
+               "d_restore", "d_replay", "d_sel", "d_ck",
+               "up_t0", "up_down", "up_thresh", "up_alpha")
+
 # job-mix vmap axis: only the per-task source emission row varies with a
 # job mix (service capacity / selectivity are per-job constants the mix
 # leaves alone); everything else is broadcast
@@ -888,10 +1042,13 @@ _PA_MIX_AXES = {"qcap": None, "src_row": 0, "cap_base": None, "sel": None,
                 "restore_base": None, "replay_rate": None,
                 "lazy_extra": None, "job_of_task": None,
                 "op_of_task": None,
-                "par_of_op": None, "src_mask_ops": None, "edges": None}
+                "par_of_op": None, "src_mask_ops": None, "edges": None,
+                **dict.fromkeys(_DRILL_KEYS, None)}
 
 # resiliency-config vmap axis: the traced failover/queue/selectivity
-# leaves vary per grid row; placement and routing constants are broadcast
+# leaves vary per grid row (deployment-drill leaves included — upgrade
+# policy is part of the config); placement and routing constants are
+# broadcast
 _PA_CFG_AXES = {"qcap": 0, "src_row": None, "cap_base": None, "sel": 0,
                 "dt": None, "task_host": None, "task_region": None,
                 "detect": 0, "restart_region": 0, "restart_single": 0,
@@ -899,7 +1056,8 @@ _PA_CFG_AXES = {"qcap": 0, "src_row": None, "cap_base": None, "sel": 0,
                 "standby_switch": 0, "standby_stale": 0,
                 "restore_base": 0, "replay_rate": 0, "lazy_extra": 0,
                 "job_of_task": None, "op_of_task": None,
-                "par_of_op": None, "src_mask_ops": None, "edges": None}
+                "par_of_op": None, "src_mask_ops": None, "edges": None,
+                **dict.fromkeys(_DRILL_KEYS, 0)}
 
 
 def _tick_impl() -> str:
@@ -1094,7 +1252,9 @@ class _Lowered:
     def __init__(self, graph: LogicalGraph | PackedArena, *, n_hosts: int,
                  dt: float,
                  queue_cap: float, failover, ckpt, seed: int,
-                 phase_mode: str = "auto", seed_width: int = 1):
+                 phase_mode: str = "auto", seed_width: int = 1,
+                 upgrade: UpgradeConfig | None = None,
+                 upgrade_spec=None):
         self.arena = graph if isinstance(graph, PackedArena) else None
         if self.arena is not None:
             graph = self.arena.graph
@@ -1159,15 +1319,30 @@ class _Lowered:
                 f"selected the {self.tensor.mode} path (phase_mode="
                 f"{phase_mode!r}) — refusing to fall back silently")
         self.desc = TickDesc(self.tensor, self.n_regions)
+        # deployment drill: lowered ONCE into traced per-task leaves
+        # (inert zeros/infs without an upgrade — exact arithmetic no-ops
+        # in the tick, so drill-free runs are numerically untouched)
+        sel_task = np.zeros(n_tasks)
+        for p in plan.ops:
+            if not p.is_source:
+                sel_task[p.lo:p.hi] = p.selectivity
+        self._sel_task = sel_task
+        self._drill = lower_upgrade(
+            upgrade, upgrade_spec, n_tasks=n_tasks,
+            job_of_task=self.job_of_task, task_region=self.task_region,
+            dt=self.dt, base_failover=(codes, det, rst_s, rst_r, fx),
+            base_ckpt=ckpt, sel_task=sel_task)
         self.arrays = self._params(plan.qcap, sel, det, rst_s, rst_r,
                                    codes, src_row, cap_base)
         self.op_names = [p.name for p in plan.ops]
         self._src_row, self._cap_base, self._sel = src_row, cap_base, sel
 
     def _params(self, qcap, sel, det, rst_s, rst_r, codes, src_row=None,
-                cap_base=None, fx=None) -> dict:
+                cap_base=None, fx=None, drill=None) -> dict:
         """Traced-parameter pytree for one resiliency configuration —
-        `run_config_batch` stacks one of these per grid row."""
+        `run_config_batch` stacks one of these per grid row. `drill`
+        overrides the lowered deployment-drill leaves (per-config
+        `UpgradeConfig` rows); default is this lowering's own."""
         if fx is None:
             fx = self.fo_extras
             lazy = self.fo_lazy
@@ -1209,6 +1384,7 @@ class _Lowered:
                       if self.tensor.mode in ("compact", "pallas")
                       else {"share": ph.share, "mass": ph.mass}
                       for ph in self.tensor.phases],
+            **(drill if drill is not None else self._drill),
         }
 
     # ------------------------------------------------------------------
@@ -1303,15 +1479,20 @@ class _Lowered:
         return EngineState(
             queue=np.zeros(n_tasks), down_until=np.zeros(n_tasks),
             speed=speed, ckpt_epoch=np.int32(0),
-            emitted=np.zeros(self.n_jobs), dropped=np.zeros(self.n_jobs))
+            emitted=np.zeros(self.n_jobs), dropped=np.zeros(self.n_jobs),
+            up_until=np.zeros(n_tasks), rb_t=np.float64(np.inf),
+            dacc=np.float64(0.0))
 
     def event_curves(self, spec, tl: ChaosTimeline,
                      cfg_ramps=()) -> tuple:
         """Deterministic per-tick external-event tensors for one seed:
-        ``bfac`` storage-brownout factor, ``gate`` MQ source gate and
-        ``ckage`` checkpoint age — each (n_ticks, n_jobs), gathered per
-        task through ``pa["job_of_task"]`` inside the tick. Config-level
-        brownout ramps compose by tuple concatenation (so the factor is
+        ``bfac`` storage-brownout factor, ``gate`` source gate (MQ
+        outages × coordinator leader-loss windows — the gate is 0 where
+        the MQ is down OR a ZK and an HDFS outage overlap, matching
+        `ChaosEngine.leader_available`) and ``ckage`` checkpoint age —
+        each (n_ticks, n_jobs), gathered per task through
+        ``pa["job_of_task"]`` inside the tick. Config-level brownout
+        ramps compose by tuple concatenation (so the factor is
         op-identical to the numpy engines')."""
         ts = tl.ts
         if isinstance(spec, (list, tuple)):
@@ -1320,12 +1501,16 @@ class _Lowered:
             bfac = np.stack(
                 [brownout_curve(tuple(sp.brownout_at) + tuple(cfg_ramps),
                                 ts) for sp in specs], axis=1)
-            gate = np.stack([mq_gate_curve(sp.mq_down, ts)
-                             for sp in specs], axis=1)
+            gate = np.stack(
+                [mq_gate_curve(sp.mq_down, ts)
+                 * coordinator_gate_curve(sp.zk_down, sp.hdfs_down, ts)
+                 for sp in specs], axis=1)
         else:
             bf = brownout_curve(tuple(spec.brownout_at)
                                 + tuple(cfg_ramps), ts)
-            gt = mq_gate_curve(spec.mq_down, ts)
+            gt = (mq_gate_curve(spec.mq_down, ts)
+                  * coordinator_gate_curve(spec.zk_down, spec.hdfs_down,
+                                           ts))
             bfac = np.repeat(bf[:, None], self.n_jobs, axis=1)
             gate = np.repeat(gt[:, None], self.n_jobs, axis=1)
         ok = (tl.ckpt_ok_by_job if tl.ckpt_ok_by_job is not None
@@ -1401,7 +1586,8 @@ class _Lowered:
 # ----------------------------------------------------------------------
 class JaxEngineMetrics:
     def __init__(self, op_names, t, lag, qps, backlog, emitted, dropped,
-                 timeline: ChaosTimeline, ckpt_epoch: int | None = None):
+                 timeline: ChaosTimeline, ckpt_epoch: int | None = None,
+                 rollback_t: float = np.inf):
         self.t = t
         self.source_lag = lag
         self.qps = {n: qps[:, j] for j, n in enumerate(op_names)}
@@ -1421,6 +1607,9 @@ class JaxEngineMetrics:
                            else int(ckpt_epoch))
         self.recoveries = timeline.recoveries
         self.timeline = timeline
+        # deployment drill: tick time the in-trace auto-rollback fired
+        # (+inf when no drill ran or the canary held)
+        self.rollback_t = float(rollback_t)
 
 
 class JaxBatchMetrics:
@@ -1428,7 +1617,7 @@ class JaxBatchMetrics:
     a standalone single-seed run (pinned in tests/test_jax_engine.py)."""
 
     def __init__(self, op_names, t, lag, qps, backlog, emitted, dropped,
-                 timelines, ckpt_epoch=None, jobs=None):
+                 timelines, ckpt_epoch=None, jobs=None, rollback_t=None):
         self.op_names = list(op_names)
         self.t = t                     # (n_ticks,)
         self.source_lag = lag          # (S, n_ticks)
@@ -1443,6 +1632,9 @@ class JaxBatchMetrics:
         self.emitted = emitted.sum(axis=-1)   # (S,)
         self.dropped = dropped.sum(axis=-1)   # (S,)
         self.ckpt_epoch = ckpt_epoch   # (S,) device-side attempt counter
+        # (S,) drill auto-rollback fire times (+inf = never fired)
+        self.rollback_t = (np.asarray(rollback_t, float)
+                           if rollback_t is not None else None)
         self.timelines = list(timelines)
         self.jobs = list(jobs) if jobs is not None else None
         self.ckpt_attempts = np.array([tl.ckpt_attempts for tl in timelines])
@@ -1461,7 +1653,10 @@ class JaxBatchMetrics:
                                 self.timelines[i],
                                 ckpt_epoch=(self.ckpt_epoch[i]
                                             if self.ckpt_epoch is not None
-                                            else None))
+                                            else None),
+                                rollback_t=(self.rollback_t[i]
+                                            if self.rollback_t is not None
+                                            else np.inf))
 
     def job_view(self, job: JobSlice) -> "JaxBatchMetrics":
         """Per-job slice of a packed-arena batch: the job's metric columns
@@ -1481,7 +1676,7 @@ class JaxBatchMetrics:
             self.backlog[:, :, cols],
             self.emitted_by_job[:, j:j + 1],
             self.dropped_by_job[:, j:j + 1], tls,
-            ckpt_epoch=self.ckpt_epoch)
+            ckpt_epoch=self.ckpt_epoch, rollback_t=self.rollback_t)
 
 
 # ----------------------------------------------------------------------
@@ -1501,7 +1696,8 @@ class JaxStreamEngine:
                  failover=None,
                  ckpt=None,
                  task_speed_override: dict[int, float] | None = None,
-                 seed: int = 0, phase_mode: str = "auto"):
+                 seed: int = 0, phase_mode: str = "auto",
+                 upgrade: UpgradeConfig | None = None):
         if isinstance(chaos, ChaosEngine):
             chaos = chaos.spec
         elif isinstance(chaos, (list, tuple)):
@@ -1515,7 +1711,8 @@ class JaxStreamEngine:
         self._override = task_speed_override
         self._low = _Lowered(graph, n_hosts=n_hosts, dt=dt,
                              queue_cap=queue_cap, failover=failover,
-                             ckpt=ckpt, seed=seed, phase_mode=phase_mode)
+                             ckpt=ckpt, seed=seed, phase_mode=phase_mode,
+                             upgrade=upgrade, upgrade_spec=self.spec)
         self.metrics: JaxEngineMetrics | None = None
 
     @property
@@ -1535,9 +1732,11 @@ class JaxStreamEngine:
             emitted = np.asarray(final.emitted)
             dropped = np.asarray(final.dropped)
             ckpt_epoch = int(final.ckpt_epoch)
+            rollback_t = float(final.rb_t)
         self.metrics = JaxEngineMetrics(low.op_names, tl.ts, lag, qps,
                                         backlog, emitted, dropped, tl,
-                                        ckpt_epoch=ckpt_epoch)
+                                        ckpt_epoch=ckpt_epoch,
+                                        rollback_t=rollback_t)
         return self.metrics
 
 
@@ -1632,7 +1831,8 @@ def run_batch(graph: LogicalGraph | PackedArena, seeds, *,
               task_speed_override: dict[int, float] | None = None,
               seed: int = 0, pad_seeds: bool = True,
               devices: int | str | None = None,
-              phase_mode: str = "auto") -> JaxBatchMetrics:
+              phase_mode: str = "auto",
+              upgrade: UpgradeConfig | None = None) -> JaxBatchMetrics:
     """Run a ``(S,)`` batch of chaos scenarios as ONE vmapped `jit` call
     (one call *per device shard* when `devices` is set).
 
@@ -1656,7 +1856,8 @@ def run_batch(graph: LogicalGraph | PackedArena, seeds, *,
         raise ValueError("run_batch requires at least one seed/spec")
     low = _Lowered(graph, n_hosts=n_hosts, dt=dt, queue_cap=queue_cap,
                    failover=failover, ckpt=ckpt, seed=seed,
-                   phase_mode=phase_mode, seed_width=len(specs))
+                   phase_mode=phase_mode, seed_width=len(specs),
+                   upgrade=upgrade, upgrade_spec=specs[0])
     n_ticks = int(round(duration_s / low.dt))
     batch_state, xs, tls = _prep_batch(low, specs, n_ticks,
                                        task_speed_override)
@@ -1676,10 +1877,12 @@ def run_batch(graph: LogicalGraph | PackedArena, seeds, *,
         emitted = np.asarray(final.emitted)[:n_seeds]
         dropped = np.asarray(final.dropped)[:n_seeds]
         ckpt_epoch = np.asarray(final.ckpt_epoch)[:n_seeds]
+        rollback_t = np.asarray(final.rb_t)[:n_seeds]
     return JaxBatchMetrics(low.op_names, tls[0].ts, lag, qps, backlog,
                            emitted, dropped, tls, ckpt_epoch=ckpt_epoch,
                            jobs=(low.arena.jobs if low.arena is not None
-                                 else None))
+                                 else None),
+                           rollback_t=rollback_t)
 
 
 def run_mix_batch(graph: LogicalGraph | PackedArena, mixes, seeds, *,
@@ -1730,10 +1933,12 @@ def run_mix_batch(graph: LogicalGraph | PackedArena, mixes, seeds, *,
         emitted = np.asarray(final.emitted)[:, :n_seeds]
         dropped = np.asarray(final.dropped)[:, :n_seeds]
         ckpt_epoch = np.asarray(final.ckpt_epoch)[:, :n_seeds]
+        rollback_t = np.asarray(final.rb_t)[:, :n_seeds]
     jobs = low.arena.jobs if low.arena is not None else None
     return [JaxBatchMetrics(low.op_names, tls[0].ts, lag[m], qps[m],
                             backlog[m], emitted[m], dropped[m], tls,
-                            ckpt_epoch=ckpt_epoch[m], jobs=jobs)
+                            ckpt_epoch=ckpt_epoch[m], jobs=jobs,
+                            rollback_t=rollback_t[m])
             for m in range(len(mixes))]
 
 
@@ -1753,9 +1958,14 @@ def normalize_config(c) -> dict:
     ckpt/scales). The dict form also accepts ``brownout``: config-level
     storage-brownout ramps ``((t0, t1, peak), ...)`` APPENDED to each
     seed spec's own ramps, so brownout severity rides the config axis
-    deterministically (no extra draws)."""
+    deterministically (no extra draws). ``upgrade`` puts an
+    `UpgradeConfig` deployment drill on the config axis — its lowered
+    leaves are all traced floats, so drill rows share the drill-free
+    rows' compiled trace AND their pregenerated chaos timelines
+    (upgrades are in-trace only; `timeline_build_count` stays flat)."""
     out = {"failover": None, "ckpt": None, "qcap_scale": 1.0,
-           "sel_scale": 1.0, "brownout": (), "label": None}
+           "sel_scale": 1.0, "brownout": (), "upgrade": None,
+           "label": None}
     if c is None:
         return out
     if isinstance(c, dict):
@@ -1769,6 +1979,9 @@ def normalize_config(c) -> dict:
         return out
     if isinstance(c, CheckpointConfig):
         out["ckpt"] = c
+        return out
+    if isinstance(c, UpgradeConfig):
+        out["upgrade"] = c
         return out
     if isinstance(c, tuple):
         if len(c) != 2:
@@ -1831,15 +2044,23 @@ def run_config_batch(graph: LogicalGraph | PackedArena, configs, seeds, *,
         lazy = lazy_ready_extra(fx["stagger"], low.task_region,
                                 low.job_of_task)
         fo_vecs.append((codes, det, rst_s, rst_r, fx, lazy))
+        # per-config deployment drill (inert leaves when cfg has none) —
+        # lowered against the config's OWN failover/ckpt as the base
+        drill = lower_upgrade(
+            cfg["upgrade"], specs[0], n_tasks=low.plan.n_tasks,
+            job_of_task=low.job_of_task, task_region=low.task_region,
+            dt=low.dt, base_failover=(codes, det, rst_s, rst_r, fx),
+            base_ckpt=cfg["ckpt"],
+            sel_task=low._sel_task * float(cfg["sel_scale"]))
         pa_rows.append(low._params(
             low.plan.qcap * float(cfg["qcap_scale"]),
             low._sel * float(cfg["sel_scale"]), det, rst_s, rst_r, codes,
-            fx=fx))
+            fx=fx, drill=drill))
     pa = dict(pa_rows[0])
     for k in ("qcap", "sel", "detect", "restart_region", "restart_single",
               "mode_single", "mode_region", "mode_hot", "standby_switch",
               "standby_stale", "restore_base", "replay_rate",
-              "lazy_extra"):
+              "lazy_extra") + _DRILL_KEYS:
         pa[k] = np.stack([row[k] for row in pa_rows])
     cfg_bros = [tuple(cfg["brownout"]) for cfg in norm]
 
@@ -1996,13 +2217,15 @@ def run_config_batch(graph: LogicalGraph | PackedArena, configs, seeds, *,
         dropped = np.asarray(final.dropped)[sl + (slice(None, n_seeds),)]
         ckpt_ep = np.asarray(final.ckpt_epoch)[sl + (slice(None,
                                                           n_seeds),)]
+        rb = np.asarray(final.rb_t)[sl + (slice(None, n_seeds),)]
 
     def _metrics(c, pre=()):
         ix = pre + (c,)
         return JaxBatchMetrics(low.op_names, tls[0][0].ts,
                                lag[ix], qps[ix], backlog[ix],
                                emitted[ix], dropped[ix], tls[c],
-                               ckpt_epoch=ckpt_ep[ix], jobs=jobs)
+                               ckpt_epoch=ckpt_ep[ix], jobs=jobs,
+                               rollback_t=rb[ix])
 
     if mixes is None:
         return [_metrics(c) for c in range(n_cfg)]

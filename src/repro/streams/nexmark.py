@@ -66,6 +66,70 @@ def q12(parallelism: int = 8, source_rate: float = 0.8e6,
                LogicalEdge("window_count", "sink", "forward")))
 
 
+def q3(parallelism: int = 4, person_rate: float = 12e3,
+       auction_rate: float = 12e3, service_rate: float = 5e3,
+       sink_headroom: float = 1.2) -> LogicalGraph:
+    """Incremental join of persons and auctions ("who is selling in
+    particular states?"): two sources → filter/parse → keyed hash-join →
+    sink, five nodes.
+
+    The shape is deliberately *downstream-bottlenecked*: the sink's
+    capacity is only ``sink_headroom``× the steady-state join output
+    (person_rate·0.25 + auction_rate), so a canary selectivity scale
+    above ``sink_headroom`` on the join overloads the canary slice's
+    sink while the stable slice keeps draining — the divergence a
+    deployment drill's auto-rollback controller detects. (A
+    source-bottlenecked graph saturates both slices equally and a
+    fully-drained one never builds backlog; neither can regress.)"""
+    out_rate = person_rate * 0.25 + auction_rate
+    sink_sr = sink_headroom * out_rate / parallelism
+    return LogicalGraph(
+        "nexmark_q3",
+        ops=(LogicalOp("persons", parallelism, service_rate,
+                       is_source=True, source_rate=person_rate),
+             LogicalOp("auctions", parallelism, service_rate,
+                       is_source=True, source_rate=auction_rate),
+             LogicalOp("filter_p", parallelism, service_rate,
+                       selectivity=0.25),
+             LogicalOp("parse_a", parallelism, service_rate,
+                       selectivity=1.0),
+             LogicalOp("join", parallelism, service_rate,
+                       selectivity=1.0,
+                       state_bytes_per_task=128 << 20),
+             LogicalOp("sink", parallelism, sink_sr)),
+        edges=(LogicalEdge("persons", "filter_p", "forward"),
+               LogicalEdge("auctions", "parse_a", "forward"),
+               LogicalEdge("filter_p", "join", "hash",
+                           key_skew_zipf=0.5),
+               LogicalEdge("parse_a", "join", "hash", key_skew_zipf=0.5),
+               LogicalEdge("join", "sink", "rebalance")))
+
+
+def q11(parallelism: int = 4, source_rate: float = 16e3,
+        service_rate: float = 10e3, session_sel: float = 0.3,
+        sink_headroom: float = 1.2) -> LogicalGraph:
+    """Bids per user per session window: source → keyed sessionizer →
+    sink, three nodes with session state on the middle op.
+
+    Downstream-bottlenecked like `q3` (the sink runs at
+    ``sink_headroom``× the sessionizer's steady output), so canary
+    configs that emit more windows — a shorter session gap lowered as a
+    selectivity scale — regress the canary slice's backlog and exercise
+    the drill auto-rollback path."""
+    sink_sr = sink_headroom * source_rate * session_sel / parallelism
+    return LogicalGraph(
+        "nexmark_q11",
+        ops=(LogicalOp("source", parallelism, service_rate,
+                       is_source=True, source_rate=source_rate),
+             LogicalOp("sessionize", parallelism, service_rate,
+                       selectivity=session_sel,
+                       state_bytes_per_task=96 << 20),
+             LogicalOp("sink", parallelism, sink_sr)),
+        edges=(LogicalEdge("source", "sessionize", "hash",
+                           key_skew_zipf=0.7),
+               LogicalEdge("sessionize", "sink", "forward")))
+
+
 def ds(parallelism: int = 6, source_rate: float = 1e6,
        service_rate: float = 2.5e5) -> LogicalGraph:
     """Data synchronization: MQ → Hive, two nodes, forward chains (the
@@ -151,6 +215,32 @@ def ss_arena(n_tasks: int = 10_000, parallelism: int = 8,
     per_job = 7 * parallelism
     n_jobs = max(1, n_tasks // per_job)
     jobs = [ss(parallelism=parallelism) for _ in range(n_jobs)]
+    return pack_arena(jobs, host_map, n_hosts=n_hosts, dt=dt,
+                      queue_cap=queue_cap)
+
+
+def drill_fleet(n_jobs: int = 8, parallelism: int = 4,
+                n_hosts: int = 16, dt: float = 0.5,
+                queue_cap: float = 256.0, host_map: str = "shared",
+                sink_headroom: float = 1.2):
+    """Heterogeneous deployment-drill fleet: alternating `q3` (join-
+    shaped, 6 ops) and `q11` (session-window-shaped, 3 ops) jobs packed
+    into ONE arena over a shared host pool.
+
+    Every job is downstream-bottlenecked with ``sink_headroom``
+    capacity slack, so a drill whose canary selectivity scale exceeds
+    the headroom regresses exactly the canaried jobs — across two
+    different graph shapes — while stable jobs keep draining. This is
+    the fleet `chaos_sweep.deployment_drill` cubes sweep and the
+    induced-regression fixture of tests/test_deployment_drill.py.
+    Returns a `PackedArena`."""
+    from repro.streams.engine import pack_arena
+
+    jobs = [q3(parallelism=parallelism, sink_headroom=sink_headroom)
+            if i % 2 == 0
+            else q11(parallelism=parallelism,
+                     sink_headroom=sink_headroom)
+            for i in range(n_jobs)]
     return pack_arena(jobs, host_map, n_hosts=n_hosts, dt=dt,
                       queue_cap=queue_cap)
 

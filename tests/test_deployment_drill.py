@@ -1,0 +1,264 @@
+"""Deployment-drill chaos: traced canary/rolling upgrades with in-trace
+auto-rollback.
+
+Pins the drill contract across all engine lowerings:
+
+* an upgrade to an *identical* config with zero wave downtime is a
+  bit-exact no-op (graceful waves never touch queues or draw streams);
+* an induced canary regression fires the auto-rollback while the STABLE
+  slice stays in parity with a never-upgraded run — checked against the
+  pre-vectorization `ReferenceStreamEngine` oracle at 1e-5;
+* dense == compact at 1e-12 under a full drill (waves + canary config
+  deltas + rollback + external-system chaos);
+* hot deploys are strictly cheaper than cold across the whole
+  `StartupConfig.policy_grid()`;
+* the `deployment_drill` cube comes out of ONE `sweep_configs` call
+  with `timeline_build_count` flat (upgrades are in-trace only).
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.chaos import (ChaosEngine, ChaosSpec,
+                              timeline_build_count)
+from repro.core.hotupdate import deploy_downtime
+from repro.core.startup import StartupConfig
+from repro.streams import nexmark
+from repro.streams.chaos_sweep import deployment_drill
+from repro.streams.engine import (FailoverConfig, StreamEngine,
+                                  UpgradeConfig)
+from repro.streams.jax_engine import JaxStreamEngine, run_batch
+from repro.streams.reference_engine import ReferenceStreamEngine
+
+FO = FailoverConfig(mode="single_task", detect_s=1.0, single_restart_s=2.0)
+# induced-regression drill: canary selectivity scale (1.5) exceeds the
+# fleet's downstream sink headroom (1.2), so the canary slice's sinks
+# overload while the stable slice keeps draining
+REGRESSION = UpgradeConfig(t_upgrade_s=10.0, wave_stagger_s=1.0, hot=True,
+                           canary_sel_scale=1.5,
+                           rollback_threshold=100.0,
+                           rollback_window_s=4.0)
+
+
+# ----------------------------------------------------------------------
+# (a) identical-config upgrade == no-op (graceful waves, bit-exact)
+# ----------------------------------------------------------------------
+def test_identical_config_upgrade_is_noop():
+    g = nexmark.q3()
+    spec = ChaosSpec(seed=3, host_kill_prob_per_s=0.002)
+    noop = UpgradeConfig(t_upgrade_s=10.0, wave_stagger_s=1.0,
+                         wave_down_s=0.0)   # same config, free waves
+    base = StreamEngine(g, chaos=ChaosEngine(spec), failover=FO,
+                        queue_cap=1e9).run(60.0)
+    drill = StreamEngine(g, chaos=ChaosEngine(spec), failover=FO,
+                         queue_cap=1e9, upgrade=noop).run(60.0)
+    assert np.array_equal(np.asarray(base.source_lag),
+                          np.asarray(drill.source_lag))
+    assert drill.emitted == base.emitted
+    assert drill.dropped == base.dropped
+    assert math.isinf(drill.rollback_t)
+    for n in base.backlog:
+        assert np.array_equal(np.asarray(base.backlog[n]),
+                              np.asarray(drill.backlog[n]))
+
+
+def test_upgrade_waves_pay_restart_downtime_then_recover():
+    """Hot waves with real downtime pause each region-sized slice (a
+    wave takes down a whole failover region, sources included, so the
+    cost surfaces as paused emission), then the fleet returns to the
+    drill-free steady state."""
+    g = nexmark.q3()
+    spec = ChaosSpec(seed=3)
+    up = UpgradeConfig(t_upgrade_s=10.0, wave_stagger_s=2.0, hot=True)
+    base = StreamEngine(g, chaos=ChaosEngine(spec), failover=FO,
+                        queue_cap=1e9).run(120.0)
+    drill = StreamEngine(g, chaos=ChaosEngine(spec), failover=FO,
+                         queue_cap=1e9, upgrade=up).run(120.0)
+    assert drill.emitted < base.emitted, \
+        "sources pause during their own waves"
+    # the pause is the wave downtime: emission deficit ≈ rate × down_s
+    rate = sum(o.source_rate for o in g.ops if o.is_source)
+    deficit = base.emitted - drill.emitted
+    down = deploy_downtime(None, hot=True)
+    assert deficit == pytest.approx(rate * down, rel=0.25)
+    bk_b = sum(np.asarray(base.backlog[n]) for n in base.backlog)
+    bk_d = sum(np.asarray(drill.backlog[n]) for n in drill.backlog)
+    assert bk_d[-1] == pytest.approx(bk_b[-1], abs=1e-6), \
+        "fleet must drain back to drill-free steady state"
+
+
+# ----------------------------------------------------------------------
+# (b) induced regression: rollback fires, stable slice stays in parity
+#     with a never-upgraded run (vs the reference-engine oracle, 1e-5)
+# ----------------------------------------------------------------------
+def test_rollback_fires_and_stable_slice_matches_reference():
+    arena = nexmark.drill_fleet(n_jobs=2, host_map="disjoint",
+                                queue_cap=1e9)
+    spec = ChaosSpec(seed=0)          # chaos-free: the drill IS the event
+    up = dataclasses.replace(REGRESSION, canary_jobs=(0,))
+    batch = run_batch(arena, [spec], duration_s=60.0, failover=FO,
+                      n_hosts=16, upgrade=up, phase_mode="compact")
+
+    # the induced regression must trip the in-trace controller
+    assert np.isfinite(batch.rollback_t[0]), \
+        "auto-rollback must fire on the canary slice"
+    t_rb = float(batch.rollback_t[0])
+    assert t_rb > up.t_upgrade_s
+
+    # job 1 (q11) never upgraded: its SLO metrics match a standalone
+    # never-upgraded run on the pre-vectorization oracle
+    stable = batch.job_view(arena.jobs[1])
+    ref = ReferenceStreamEngine(nexmark.q11(), n_hosts=16, dt=0.5,
+                                queue_cap=1e9,
+                                chaos=ChaosEngine(spec), failover=FO)
+    ref_m = ref.run(60.0)
+    lag_ref = np.asarray(ref_m.source_lag)
+    np.testing.assert_allclose(stable.source_lag[0], lag_ref, atol=1e-5)
+    for n in stable.op_names:
+        col = stable.op_names.index(n)
+        np.testing.assert_allclose(stable.backlog[0][:, col],
+                                   np.asarray(ref_m.backlog[n]),
+                                   atol=1e-5)
+
+    # ... while the canary job (q3) visibly regressed vs its own
+    # never-upgraded reference during the canary window
+    canary = batch.job_view(arena.jobs[0])
+    ref_c = ReferenceStreamEngine(nexmark.q3(), n_hosts=16, dt=0.5,
+                                  queue_cap=1e9,
+                                  chaos=ChaosEngine(spec), failover=FO)
+    ref_cm = ref_c.run(60.0)
+    sink = canary.op_names.index("sink")
+    dev = np.abs(canary.backlog[0][:, sink]
+                 - np.asarray(ref_cm.backlog["sink"])).max()
+    assert dev > 100.0, "canary slice's sink must actually regress"
+
+
+def test_rollback_reverts_canary_config():
+    """After the rollback wave the canary slice runs base config again:
+    its backlog drains instead of growing without bound."""
+    g = nexmark.q3()
+    spec = ChaosSpec(seed=0)
+    up = dataclasses.replace(REGRESSION, canary_frac=1.0)
+    m = StreamEngine(g, chaos=ChaosEngine(spec), failover=FO,
+                     queue_cap=1e9, upgrade=up).run(120.0)
+    assert math.isfinite(m.rollback_t)
+    held = StreamEngine(
+        g, chaos=ChaosEngine(spec), failover=FO, queue_cap=1e9,
+        upgrade=dataclasses.replace(up, rollback_threshold=math.inf),
+    ).run(120.0)
+    assert math.isinf(held.rollback_t)
+    sink_rb = np.asarray(m.backlog["sink"])
+    sink_held = np.asarray(held.backlog["sink"])
+    assert sink_held[-1] > 10.0 * max(sink_rb[-1], 1e-9), \
+        "without rollback the regressed sink keeps diverging"
+    assert sink_rb[-1] < sink_rb.max() / 2.0, \
+        "after rollback the canary backlog must drain"
+
+
+# ----------------------------------------------------------------------
+# (c) dense == compact at 1e-12 under a full drill
+# ----------------------------------------------------------------------
+def test_dense_equals_compact_under_full_drill():
+    arena = nexmark.drill_fleet(n_jobs=4, queue_cap=1e9)
+    spec = ChaosSpec(seed=11, host_kill_prob_per_s=0.002,
+                     zk_down=((12.0, 18.0),), hdfs_down=((15.0, 22.0),),
+                     brownout_at=((5.0, 40.0, 3.0),))
+    up = dataclasses.replace(
+        REGRESSION, canary_frac=0.5,
+        canary_failover=FailoverConfig(mode="single_task", detect_s=2.0,
+                                       single_restart_s=4.0))
+    runs = {}
+    for mode in ("dense", "compact"):
+        m = JaxStreamEngine(arena, chaos=spec, failover=FO,
+                            upgrade=up, phase_mode=mode).run(60.0)
+        runs[mode] = m
+    d, c = runs["dense"], runs["compact"]
+    assert d.rollback_t == c.rollback_t
+    np.testing.assert_allclose(np.asarray(d.source_lag),
+                               np.asarray(c.source_lag),
+                               rtol=0, atol=1e-12)
+    for n in d.backlog:
+        np.testing.assert_allclose(np.asarray(d.backlog[n]),
+                                   np.asarray(c.backlog[n]),
+                                   rtol=0, atol=1e-12)
+    assert d.emitted == pytest.approx(c.emitted, abs=1e-12)
+    assert d.dropped == pytest.approx(c.dropped, abs=1e-12)
+
+
+def test_numpy_matches_jax_under_full_drill():
+    arena = nexmark.drill_fleet(n_jobs=4, queue_cap=1e9)
+    spec = ChaosSpec(seed=11, host_kill_prob_per_s=0.002,
+                     zk_down=((12.0, 18.0),), hdfs_down=((15.0, 22.0),))
+    up = dataclasses.replace(REGRESSION, canary_frac=0.5)
+    m_np = StreamEngine(arena, chaos=ChaosEngine(spec), failover=FO,
+                        upgrade=up).run(60.0)
+    m_j = JaxStreamEngine(arena, chaos=spec, failover=FO,
+                          upgrade=up, phase_mode="compact").run(60.0)
+    assert m_j.rollback_t == pytest.approx(m_np.rollback_t)
+    np.testing.assert_allclose(np.asarray(m_j.source_lag),
+                               np.asarray(m_np.source_lag), atol=1e-5)
+
+
+# ----------------------------------------------------------------------
+# (d) hot restarts strictly cheaper than cold across the startup grid
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("cfg", StartupConfig.policy_grid(),
+                         ids=lambda c: f"reuse={int(c.object_reuse)}"
+                                       f",batch={int(c.batched_deploy)}"
+                                       f",strag="
+                                       f"{int(c.straggler_mitigation)}")
+def test_hot_deploy_strictly_cheaper_than_cold(cfg):
+    hot = deploy_downtime(cfg, hot=True)
+    cold = deploy_downtime(cfg, hot=False)
+    assert 0.0 < hot < cold
+
+
+def test_wave_downtime_lowered_from_startup_policy():
+    """An accelerated startup config lowers the per-wave downtime, and
+    that downtime lands in the traced wave arithmetic."""
+    fast = StartupConfig()            # all accelerations on
+    slow = StartupConfig.baseline()
+    assert deploy_downtime(fast, hot=False) < deploy_downtime(slow,
+                                                              hot=False)
+    g = nexmark.q3()
+    spec = ChaosSpec(seed=0)
+    emitted = {}
+    for name, st_cfg in (("fast", fast), ("slow", slow)):
+        up = UpgradeConfig(t_upgrade_s=10.0, hot=False, startup=st_cfg)
+        m = StreamEngine(g, chaos=ChaosEngine(spec), failover=FO,
+                         queue_cap=1e9, upgrade=up).run(90.0)
+        emitted[name] = m.emitted
+    assert emitted["fast"] > emitted["slow"], \
+        "shorter cold waves pause the sources for less total time"
+
+
+# ----------------------------------------------------------------------
+# (e) the drill cube: ONE sweep_configs call, flat timeline builds
+# ----------------------------------------------------------------------
+def test_deployment_drill_cube_flat_builds():
+    arena = nexmark.drill_fleet(n_jobs=2, queue_cap=1e9)
+    seeds = [1, 2]
+    before = timeline_build_count()
+    cube = deployment_drill(
+        arena, seeds, base_spec=ChaosSpec(seed=0),
+        duration_s=40.0,
+        policies={"hot": dataclasses.replace(REGRESSION, hot=True),
+                  "cold": dataclasses.replace(REGRESSION, hot=False)},
+        canary_fracs=(0.5, 1.0),
+        rollback_thresholds=(math.inf, 100.0),
+        failover=FO, n_hosts=16, phase_mode="compact")
+    builds = timeline_build_count() - before
+    assert builds == len(seeds), \
+        "upgrades are in-trace only: one timeline per seed, flat " \
+        "across all 8 drill config rows"
+    assert cube.rollback_t.shape == (2, 2, 2, len(seeds))
+    # threshold=inf rows never roll back; the induced regression with a
+    # finite threshold always does
+    assert np.isinf(cube.rollback_t[:, :, 0]).all()
+    assert np.isfinite(cube.rollback_t[:, :, 1]).all()
+    assert cube.rollback_frac[:, :, 1].min() == 1.0
+    # labels carry the drill axes for release-gate tables
+    assert any("drill" in lbl or "canary" in lbl
+               for lbl in cube.grid.labels)

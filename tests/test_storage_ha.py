@@ -181,3 +181,36 @@ def test_simhdfs_charges_time(tmp_path):
     s.put("k", b"x" * 1_000_000)
     assert clock.now() == pytest.approx(10.0), "slow factor must apply"
     assert s.slow_puts == 1
+
+
+def test_simhdfs_brownout_scales_upload_queueing(tmp_path):
+    """Concurrent uploads queue on the single upload pipeline, and the
+    queueing delay scales with `brownout_factor_at`: a brownout does not
+    just stretch each op independently, it backs up the whole queue
+    (regression: arrival-time queueing was not modeled — the virtual
+    clock's blocking sleeps made sequential callers never wait, so
+    brownouts left `queue_wait_s` at zero)."""
+    peak = 6.0
+
+    def run(ramps, tag):
+        clock = VirtualClock()
+        clock.sleep(100.0)      # mid-ramp, where the factor is `peak`
+        s = SimHDFS(tmp_path / tag, clock=clock,
+                    chaos=ChaosEngine(ChaosSpec(seed=1,
+                                                brownout_at=ramps)),
+                    bandwidth_bps=1e8, base_latency_s=0.02)
+        t0 = clock.now()
+        # both region uploads of one snapshot arrive at the snapshot
+        # instant — the second queues behind the first
+        s.put("a", b"x" * (1 << 20), arrival_s=t0)
+        dur_first = clock.now() - t0
+        s.put("b", b"x" * (1 << 20), arrival_s=t0)
+        return dur_first, s.queue_wait_s
+
+    dur_calm, wait_calm = run((), "calm")
+    dur_brown, wait_brown = run(((0.0, 200.0, peak),), "brown")
+    # the queued op waits exactly as long as its predecessor's service
+    assert wait_calm == pytest.approx(dur_calm)
+    assert wait_brown == pytest.approx(dur_brown)
+    # brownout stretches service → the queue backs up with the factor
+    assert wait_brown == pytest.approx(peak * wait_calm, rel=0.02)
