@@ -1,0 +1,145 @@
+"""Traffic-dynamics cube (capacity-planning drills): SLO violation /
+lost work / resource-seconds over scaler-config × traffic-pattern ×
+failover-mode, produced by ONE `sweep_configs` device call
+(`streams.chaos_sweep.traffic_sweep`), plus the flash-crowd recovery
+headline — how much faster the in-trace DS2 controller drains a 3x
+surge than a frozen-parallelism fleet, and at what resource bill (the
+elasticity-vs-cost framing of arXiv:2404.06203).
+
+Emits the usual CSV rows through benchmarks/run.py and writes
+``results/bench_traffic.json`` for the perf trajectory. Quick mode
+(REPRO_BENCH_QUICK=1) shrinks the cube and horizon so the module runs in
+a few seconds on CPU — and, per the harness contract, skips the JSON
+write.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+try:
+    from benchmarks.run import quick_mode
+except ImportError:      # standalone: sys.path[0] is benchmarks/
+    from run import quick_mode
+from repro.core.chaos import ChaosSpec, timeline_build_count
+from repro.streams import nexmark
+from repro.streams.chaos_sweep import traffic_sweep
+from repro.streams.engine import AutoscaleConfig, FailoverConfig
+from repro.streams.jax_engine import JaxStreamEngine
+
+FO = FailoverConfig(mode="region", detect_s=1.0)
+DS2 = AutoscaleConfig(interval_s=5.0, cooldown_s=10.0)
+
+
+def _scalers() -> dict[str, AutoscaleConfig | None]:
+    return {
+        "frozen": None,                       # fixed-provisioning control
+        "ds2": DS2,
+        # an eager tuning point: shorter windows, tighter hysteresis —
+        # tracks the surge faster but risks the thrash guard
+        "ds2-eager": AutoscaleConfig(interval_s=3.0, cooldown_s=5.0,
+                                     hysteresis=0.08, ewma_alpha=0.6),
+    }
+
+
+def _drain_s(backlog: np.ndarray, dt: float, t_flash: float) -> float:
+    """Time from flash onset until the downstream backlog last drains
+    under 1 record — the flash-crowd recovery time. Sources never
+    rescale (their ingest capacity is the offered-load boundary), so
+    elasticity shows up downstream of them."""
+    idx = np.nonzero(backlog > 1.0)[0]
+    if idx.size == 0:
+        return 0.0
+    return max(0.0, (idx[-1] + 1) * dt - t_flash)
+
+
+def run():
+    quick = quick_mode()
+    n_seeds = 4 if quick else 24
+    duration = 90.0 if quick else 200.0
+    g = nexmark.q3()
+
+    # headline: a clean 3x flash crowd (no failure burst — a region
+    # restart wipes the source queues and would zero the lag-based
+    # recovery metric), frozen vs DS2
+    t_flash = 30.0 if quick else 90.0
+    spec = nexmark.traffic_drill_spec(
+        seed=5, flash=((t_flash, 10.0, 30.0, 3.0),), burst_t=None)
+    eng = {name: JaxStreamEngine(g, chaos=spec, failover=FO,
+                                 autoscale=cfg, phase_mode="compact")
+           for name, cfg in (("frozen", None), ("ds2", DS2))}
+    res = {name: e.run(duration) for name, e in eng.items()}
+    dt = 0.5
+    srcs = {o.name for o in g.ops if o.is_source}
+    down = {name: sum(np.asarray(m.backlog[n]) for n in m.backlog
+                      if n not in srcs)
+            for name, m in res.items()}
+    rec = {name: _drain_s(bk, dt, t_flash) for name, bk in down.items()}
+    # backlog area = record-seconds of queueing delay, the lost-work
+    # proxy the surge costs a frozen fleet
+    area = {name: float(bk.sum()) * dt for name, bk in down.items()}
+    cost = {name: float(m.resource_s) for name, m in res.items()}
+
+    # the cube: scaler × traffic × failover × seed from ONE device call
+    traffics = {
+        "diurnal": {"diurnal": ((0.35, 240.0, 0.0),)},
+        "flash": {"flash": ((t_flash, 10.0, 30.0, 3.0),)},
+        "both": (((0.35, 240.0, 0.0),), ((t_flash, 10.0, 30.0, 3.0),)),
+    }
+    failovers = {"region": FO}
+    if not quick:
+        failovers["single"] = FailoverConfig(mode="single_task",
+                                             detect_s=1.0,
+                                             single_restart_s=2.0)
+    base = ChaosSpec(seed=0, host_kill_prob_per_s=0.001)
+    c0 = timeline_build_count()
+    cold_t0 = time.perf_counter()
+    traffic_sweep(g, range(n_seeds), base_spec=base, duration_s=duration,
+                  scalers=_scalers(), traffics=traffics,
+                  failovers=failovers)
+    cold_wall = time.perf_counter() - cold_t0
+    cube = traffic_sweep(g, range(n_seeds), base_spec=base,
+                         duration_s=duration, scalers=_scalers(),
+                         traffics=traffics, failovers=failovers)
+    builds = timeline_build_count() - c0
+    n_cells = cube.recovery.size
+
+    rows = [(f"traffic/q3/{n_cells}cells",
+             1e6 * cube.grid.wall_s / n_cells,
+             f"cells={n_cells};cells_s={n_cells / cube.grid.wall_s:.0f};"
+             f"flash_recovery_frozen_s={rec['frozen']:.1f};"
+             f"flash_recovery_ds2_s={rec['ds2']:.1f};"
+             f"lost_work_x={area['frozen'] / max(area['ds2'], 1e-9):.2f};"
+             f"ds2_cost_x={cost['ds2'] / cost['frozen']:.2f};"
+             f"thrash_frac_eager="
+             f"{float(cube.thrash_frac[2].mean()):.2f};"
+             f"timeline_builds={builds}")]
+    if not quick:   # quick smoke must not overwrite the tracked record
+        record = {
+            "n_seeds": n_seeds, "duration_s": duration,
+            "scalers": cube.scalers, "traffics": cube.traffics,
+            "failovers": cube.failovers,
+            "cold_wall_s": cold_wall, "warm_wall_s": cube.grid.wall_s,
+            "cells_per_s": n_cells / cube.grid.wall_s,
+            "timeline_builds": builds,
+            "flash_recovery_s": rec, "backlog_area_rec_s": area,
+            "resource_s": cost,
+            "slo_mean": np.asarray(cube.slo).mean(-1).tolist(),
+            "lost_mean": np.asarray(cube.lost).mean(-1).tolist(),
+            "cost_mean": np.asarray(cube.cost).mean(-1).tolist(),
+            "rescales_mean": np.asarray(cube.rescales).mean(-1).tolist(),
+            "thrash_frac": np.asarray(cube.thrash_frac).tolist(),
+        }
+        out = pathlib.Path("results")
+        out.mkdir(parents=True, exist_ok=True)
+        (out / "bench_traffic.json").write_text(
+            json.dumps(record, indent=1))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

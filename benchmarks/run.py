@@ -38,6 +38,7 @@ MODULES = [
     "benchmarks.bench_tick_kernel",         # fused Pallas tick phases
     "benchmarks.bench_replication",         # §IV-A hybrid replication cube
     "benchmarks.bench_deployment",          # canary/rolling deployment drills
+    "benchmarks.bench_traffic",             # traffic dynamics + DS2 autoscaling
     "benchmarks.bench_kernels",             # §V-C micro benchmarking
 ]
 
@@ -50,6 +51,7 @@ QUICK_MODULES = [
     "benchmarks.bench_tick_kernel",         # fused Pallas tick phases
     "benchmarks.bench_replication",         # hybrid replication cube
     "benchmarks.bench_deployment",          # canary/rolling deployment drills
+    "benchmarks.bench_traffic",             # traffic dynamics + DS2 autoscaling
     "benchmarks.bench_weakhash",            # WeakHash assignment path
     "benchmarks.bench_hotupdate",           # pure-python, fast
 ]

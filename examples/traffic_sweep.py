@@ -1,0 +1,107 @@
+"""Traffic-dynamics capacity gate: the scaler-config × traffic-pattern ×
+failover-mode cube from ONE `sweep_configs` device call
+(`streams.chaos_sweep.traffic_sweep`), over production load dynamics —
+a diurnal curve, a 3x flash crowd, and a fast swing that drives an
+eager autoscaler into oscillation.
+
+Each cube cell runs the in-trace DS2 controller against a traced rate
+schedule: utilization EWMAs, hysteresis, cooldown, the failover-aware
+breaker and the thrash guard are all lowered into the tick, rescales
+pay graceful hot-update downtime plus state-move seconds, and rate
+schedules ride the pregenerated event tensors — so every cell shares
+the schedule-free rows' chaos timelines.
+
+    PYTHONPATH=src python examples/traffic_sweep.py             # 4x3x1 cube
+    PYTHONPATH=src python examples/traffic_sweep.py --seeds 16 \\
+        --duration 180
+
+The script FAILS (non-zero exit) if the cube falls back to
+per-(config, seed) host timeline rebuilds, if a no-scaler control row
+rescales, or if the oscillation drill fails to latch the thrash guard —
+scripts/ci.sh --traffic-smoke additionally exports
+``REPRO_REQUIRE_PHASE_MODE=compact`` so a dense-lowering fallback trips
+inside the engine itself.
+"""
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--seeds", type=int, default=8,
+                    help="chaos seeds per cube cell")
+    ap.add_argument("--duration", type=float, default=120.0,
+                    help="simulated horizon per scenario (seconds)")
+    args = ap.parse_args()
+
+    import numpy as np
+
+    from repro.core.chaos import ChaosSpec, timeline_build_count
+    from repro.streams import nexmark
+    from repro.streams.chaos_sweep import traffic_sweep
+    from repro.streams.engine import AutoscaleConfig, FailoverConfig
+
+    g = nexmark.q3()
+    base = ChaosSpec(host_kill_prob_per_s=0.002)
+    fo = FailoverConfig(mode="region", detect_s=1.0)
+    scalers = {
+        "frozen": None,                      # fixed-provisioning control
+        "ds2": AutoscaleConfig(interval_s=5.0, cooldown_s=10.0),
+        # the oscillation drill: an eager controller with the thrash
+        # guard armed — the fast swing below MUST latch it
+        "eager": AutoscaleConfig(interval_s=3.0, cooldown_s=0.0,
+                                 hysteresis=0.02, ewma_alpha=0.9,
+                                 max_actions=1e18, thrash_flips=4.0,
+                                 thrash_window_s=60.0),
+    }
+    t_flash = min(90.0, args.duration * 0.5)
+    traffics = {
+        "diurnal": {"diurnal": ((0.35, 240.0, 0.0),)},
+        "flash": {"flash": ((t_flash, 10.0, 30.0, 3.0),)},
+        "swing": {"diurnal": ((0.9, 12.0, 0.0),)},
+    }
+
+    builds0 = timeline_build_count()
+    cube = traffic_sweep(g, range(args.seeds), base_spec=base,
+                         duration_s=args.duration, scalers=scalers,
+                         traffics=traffics, failovers={"region": fo})
+    builds = timeline_build_count() - builds0
+
+    n = cube.recovery.size
+    print(f"== traffic cube {len(scalers)} scalers x {len(traffics)} "
+          f"patterns x {args.seeds} seeds = {n} cells in "
+          f"{cube.grid.wall_s:.2f}s "
+          f"({cube.grid.scenarios_per_s:.1f} cells/s, ONE device call) ==")
+    print(f"   host timeline builds during the cube: {builds} "
+          f"(one per seed — rate schedules and scale events are "
+          f"in-trace only)")
+    cost0 = np.asarray(cube.cost)[0, :, 0].mean(-1)  # frozen bill/pattern
+    for s, sc in enumerate(cube.scalers):
+        for tr, tname in enumerate(cube.traffics):
+            cell = lambda a: np.asarray(a)[s, tr, 0]
+            thr = np.isfinite(cell(cube.thrash_t)).mean()
+            print(f"   {sc:>7s} {tname:>8s}  "
+                  f"rescales={cell(cube.rescales).mean():6.1f}  "
+                  f"cost_x={cell(cube.cost).mean() / cost0[tr]:.3f}  "
+                  f"slo_frac={cell(cube.slo).mean():.3f}  "
+                  f"thrash_frac={thr:.2f}")
+
+    if builds > args.seeds:
+        raise SystemExit(
+            "traffic smoke FAILED: the cube fell back to per-(config, "
+            f"seed) timeline rebuilds ({builds} builds for "
+            f"{args.seeds} seeds)")
+    if (np.asarray(cube.rescales)[0] != 0).any():
+        raise SystemExit(
+            "traffic smoke FAILED: a no-scaler control row rescaled")
+    eager = list(cube.scalers).index("eager")
+    swing = list(cube.traffics).index("swing")
+    latched = np.isfinite(np.asarray(cube.thrash_t)[eager, swing, 0])
+    if not latched.all():
+        raise SystemExit(
+            "traffic smoke FAILED: the oscillation drill did not latch "
+            f"the thrash guard in every seed "
+            f"({int(latched.sum())}/{latched.size})")
+
+
+if __name__ == "__main__":
+    main()

@@ -17,6 +17,11 @@
 #                                     # upgrades + in-trace auto-rollback, compact tick;
 #                                     # non-zero exit on timeline-rebuild fallback OR on the
 #                                     # induced regression failing to fire the rollback)
+#   scripts/ci.sh --traffic-smoke     # also run the traffic-dynamics cube (diurnal/flash
+#                                     # rate schedules + in-trace DS2 autoscaling, compact
+#                                     # tick; non-zero exit on timeline-rebuild fallback OR
+#                                     # on the oscillation drill failing to latch the
+#                                     # thrash guard)
 #
 # Smoke targets fail LOUDLY on silent lowering fallbacks: the sparse
 # smoke exports REPRO_REQUIRE_PHASE_MODE=compact (the engine refuses to
@@ -76,6 +81,12 @@ if [[ "${1:-}" == "--drill-smoke" ]]; then
   echo "== drill smoke: deployment cube (canary upgrades + auto-rollback), compact tick =="
   REPRO_REQUIRE_PHASE_MODE=compact \
     python examples/deployment_drill.py --seeds 8 --jobs 4 --duration 60
+fi
+
+if [[ "${1:-}" == "--traffic-smoke" ]]; then
+  echo "== traffic smoke: rate-schedule cube (DS2 autoscaling + thrash drill), compact tick =="
+  REPRO_REQUIRE_PHASE_MODE=compact \
+    python examples/traffic_sweep.py --seeds 8 --duration 90
 fi
 
 echo "CI OK"

@@ -64,7 +64,10 @@ class DS2Scaler:
         self._actions: deque[float] = deque()
         self._pending_rollback: dict[str, tuple[int, float]] = {}
         self._breaker_until = -1e18
-        self._failures = 0
+        # per-op consecutive-failure counts: a flapping op must trip the
+        # breaker even while every OTHER op resizes cleanly (a global
+        # counter would be reset by any healthy op's success)
+        self._failures: dict[str, int] = defaultdict(int)
         self.history: list[ScaleDecision] = []
 
     # ------------------------------------------------------------------
@@ -86,6 +89,7 @@ class DS2Scaler:
     def observe(self, t: float, metrics: list[OpMetrics],
                 ) -> list[ScaleDecision]:
         cfg = self.cfg
+        self._expire_pending(t)
         if t < self._breaker_until:
             return []
         # rate limiting window
@@ -125,16 +129,32 @@ class DS2Scaler:
         return decisions
 
     # -- safety rails -----------------------------------------------------
+    def _expire_pending(self, t: float) -> None:
+        """Drop rollback anchors older than the cooldown: a resize that
+        aged past ``cooldown_s`` without a reported failure is settled,
+        and a later unrelated failure must not roll back to it. With no
+        cooldown configured there is no settling window — anchors stay
+        live until their outcome is reported."""
+        if self.cfg.cooldown_s <= 0:
+            return
+        stale = [op for op, (_, t0) in self._pending_rollback.items()
+                 if t - t0 > self.cfg.cooldown_s]
+        for op in stale:
+            del self._pending_rollback[op]
+
     def notify_result(self, op: str, t: float, *, success: bool
                       ) -> ScaleDecision | None:
         """Report the outcome of applying a decision. On failure: roll back
-        to the previous parallelism; repeated failures trip the breaker."""
+        to the previous parallelism; repeated failures of the SAME op trip
+        the breaker (counts are per-op — a healthy op's success must not
+        mask a flapping one)."""
+        self._expire_pending(t)
         prev = self._pending_rollback.pop(op, None)
         if success:
-            self._failures = 0
+            self._failures[op] = 0
             return None
-        self._failures += 1
-        if self._failures >= self.cfg.breaker_failures:
+        self._failures[op] += 1
+        if self._failures[op] >= self.cfg.breaker_failures:
             self._breaker_until = t + self.cfg.breaker_reset_s
         if prev is None:
             return None

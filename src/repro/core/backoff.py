@@ -6,6 +6,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import threading
 from typing import Any, Callable
 
 import numpy as np
@@ -62,7 +63,8 @@ def retry(fn: Callable[[], Any], policy: RetryPolicy, clock,
             d = policy.delay(attempt, rng)
             stats.total_delay_s += d
             clock.sleep(d)
-    raise PermanentError(f"gave up after {stats.attempts} attempts: {last}")
+    raise PermanentError(
+        f"gave up after {stats.attempts} attempts: {last}") from last
 
 
 class IdempotencyRegistry:
@@ -72,7 +74,8 @@ class IdempotencyRegistry:
 
     def __init__(self):
         self._done: dict[str, Any] = {}
-        self._inflight: set[str] = set()
+        self._inflight: dict[str, threading.Event] = {}
+        self._lock = threading.Lock()
 
     @staticmethod
     def token(*parts: Any) -> str:
@@ -80,13 +83,32 @@ class IdempotencyRegistry:
         return h.hexdigest()[:24]
 
     def run(self, token: str, fn: Callable[[], Any]) -> tuple[Any, bool]:
-        """Returns (result, was_duplicate)."""
-        if token in self._done:
-            return self._done[token], True
-        self._inflight.add(token)
+        """Returns (result, was_duplicate).
+
+        A token already executing (in flight) is NOT executed again: the
+        duplicate caller awaits the first execution and returns its
+        result with ``was_duplicate=True``. If the first execution
+        raises, the token is released and a waiter takes over the retry
+        (the failed attempt produced no effect to deduplicate against).
+        """
+        while True:
+            with self._lock:
+                if token in self._done:
+                    return self._done[token], True
+                ev = self._inflight.get(token)
+                if ev is None:
+                    ev = self._inflight[token] = threading.Event()
+                    break
+            ev.wait()  # first execution finished (or failed) — re-check
         try:
             out = fn()
-        finally:
-            self._inflight.discard(token)
-        self._done[token] = out
+        except BaseException:
+            with self._lock:
+                del self._inflight[token]
+            ev.set()
+            raise
+        with self._lock:
+            self._done[token] = out
+            del self._inflight[token]
+        ev.set()
         return out, False

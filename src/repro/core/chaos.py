@@ -46,6 +46,21 @@ class ChaosSpec:
     # (streams.engine.UpgradeConfig carries the HOW: canary fraction,
     # wave stagger, hot-vs-cold restart costs, rollback policy).
     upgrade_at: tuple[float, ...] = ()
+    # traffic dynamics (paper §III-A): deterministic source-rate
+    # schedules. `diurnal` sinusoids (amp, period_s, phase_s) multiply
+    # the source rate by 1 + amp*sin(2π(t + phase_s)/period_s); an
+    # amp=0.0 entry is the exactly-1.0 identity (the constant-schedule
+    # no-op guarantee is bit-exact). `flash_at` flash-crowd spikes
+    # (t0, ramp_s, hold_s, peak) ramp 1→peak over ramp_s, hold at peak
+    # for hold_s, then ramp back down over ramp_s; overlapping entries
+    # multiply. `rate_phase_s` shifts every diurnal entry of THIS spec —
+    # per-job spec lists de-synchronize co-located jobs' peaks across a
+    # packed arena with otherwise identical schedules. All deterministic:
+    # they consume NO rng draws (same contract as the family above), so
+    # rate schedules never touch the pregenerated kill/ckpt timelines.
+    diurnal: tuple[tuple[float, float, float], ...] = ()
+    flash_at: tuple[tuple[float, float, float, float], ...] = ()
+    rate_phase_s: float = 0.0
 
 
 class ChaosEngine:
@@ -142,6 +157,13 @@ class ChaosEngine:
         """MQ/coordinator availability — gates source operators."""
         return not any(a <= t < b for a, b in self.spec.mq_down)
 
+    def traffic_factor(self, t: float) -> float:
+        """Deterministic source-rate multiplier at time t (diurnal
+        sinusoids × flash-crowd ramps, phase-shifted by the spec's
+        ``rate_phase_s``)."""
+        return traffic_factor_at(self.spec.diurnal, self.spec.flash_at, t,
+                                 phase_s=self.spec.rate_phase_s)
+
     def leader_available(self, t: float) -> bool:
         """JobManager leader reachability at time t, lowered from the
         `cluster.coordinator.Coordinator` ZK → HDFS fallback chain: the
@@ -175,6 +197,53 @@ def brownout_curve(ramps, ts) -> np.ndarray:
         frac = 1.0 - np.abs(2.0 * (ts - a) / (b - a) - 1.0)
         out = np.where(inside, out * (1.0 + (peak - 1.0) * frac), out)
     return out
+
+
+def traffic_factor_at(diurnal, flash_at, t: float, *,
+                      phase_s: float = 0.0) -> float:
+    """Source-rate multiplier at time `t`: diurnal sinusoids
+    ``1 + amp*sin(2π(t + phase_s + phase)/period)`` × flash-crowd
+    trapezoids ``(t0, ramp_s, hold_s, peak)`` (1→peak over ramp_s, held
+    for hold_s, back down over ramp_s). Entries multiply; the result is
+    floored at 0 (a deep diurnal trough cannot emit negative records).
+    ``amp=0`` / ``peak=1`` entries are the exact 1.0 identity."""
+    f = 1.0
+    for (amp, period, phase) in diurnal:
+        f *= 1.0 + amp * math.sin(
+            2.0 * math.pi * (t + phase_s + phase) / period)
+    for (t0, ramp, hold, peak) in flash_at:
+        if t0 <= t < t0 + 2.0 * ramp + hold:
+            u = t - t0
+            if u < ramp:
+                frac = u / ramp
+            elif u < ramp + hold:
+                frac = 1.0
+            else:
+                frac = 1.0 - (u - ramp - hold) / ramp
+            f *= 1.0 + (peak - 1.0) * frac
+    return max(f, 0.0)
+
+
+def traffic_curve(diurnal, flash_at, ts, *, phase_s: float = 0.0
+                  ) -> np.ndarray:
+    """Vectorized `traffic_factor_at` over an array of times. The
+    schedule-free call returns EXACT ones (multiplying source emission
+    by it is a bit-exact no-op)."""
+    ts = np.asarray(ts, dtype=float)
+    out = np.ones(ts.shape)
+    for (amp, period, phase) in diurnal:
+        out = out * (1.0 + amp * np.sin(
+            2.0 * np.pi * (ts + phase_s + phase) / period))
+    for (t0, ramp, hold, peak) in flash_at:
+        inside = (ts >= t0) & (ts < t0 + 2.0 * ramp + hold)
+        if not inside.any():
+            continue
+        u = ts - t0
+        frac = np.where(u < ramp, u / ramp,
+                        np.where(u < ramp + hold, 1.0,
+                                 1.0 - (u - ramp - hold) / ramp))
+        out = np.where(inside, out * (1.0 + (peak - 1.0) * frac), out)
+    return np.maximum(out, 0.0)
 
 
 def mq_gate_curve(windows, ts) -> np.ndarray:

@@ -37,8 +37,9 @@ import time
 import numpy as np
 
 from repro.core.chaos import ChaosSpec
-from repro.streams.engine import (CheckpointConfig, FailoverConfig,
-                                  PackedArena, UpgradeConfig)
+from repro.streams.engine import (AutoscaleConfig, CheckpointConfig,
+                                  FailoverConfig, PackedArena,
+                                  UpgradeConfig)
 from repro.streams.graph import LogicalGraph
 from repro.streams.jax_engine import (JaxBatchMetrics, normalize_config,
                                       run_batch, run_config_batch)
@@ -291,6 +292,12 @@ class ConfigSweepResult:
     # (C, S) deployment-drill auto-rollback fire times (+inf = canary
     # held / no drill on that config row); None for pre-drill callers
     rollback_surface: np.ndarray | None = None
+    # (C, S) autoscaler surfaces (None for pre-autoscaler callers):
+    # thrash-guard latch times (+inf = never thrashed), rescale action
+    # counts, and integrated resource-seconds (the SLO-vs-cost axis)
+    thrash_surface: np.ndarray | None = None
+    rescale_surface: np.ndarray | None = None
+    cost_surface: np.ndarray | None = None
 
     @property
     def scenarios_per_s(self) -> float:
@@ -337,6 +344,19 @@ def _config_label(i: int, cfg: dict) -> str:
         bits.append(f"drill:{'hot' if upg.hot else 'cold'}"
                     f" canary={upg.canary_frac:g}"
                     f" thr={upg.rollback_threshold:g}")
+    sc = cfg.get("scaler")
+    if isinstance(sc, AutoscaleConfig):
+        bits.append(f"ds2:int={sc.interval_s:g}s"
+                    f" tgt={sc.target_utilization:g}"
+                    f" hyst={sc.hysteresis:g}")
+    tr = cfg.get("traffic", ((), ()))
+    if tr and (tr[0] or tr[1]):
+        tb = []
+        if tr[0]:
+            tb.append("diurnal×" + "/".join(f"{d[0]:g}" for d in tr[0]))
+        if tr[1]:
+            tb.append("flash×" + "/".join(f"{f[3]:g}" for f in tr[1]))
+        bits.append(" ".join(tb))
     return " ".join(bits) if bits else f"cfg{i}"
 
 
@@ -394,10 +414,20 @@ def sweep_configs(graph: LogicalGraph | PackedArena, configs, seeds, *,
     rbs = np.array([(bm.rollback_t if bm.rollback_t is not None
                      else np.full(len(seeds), np.inf))
                     for bm in batches])
+    thr = np.array([(bm.thrash_t if bm.thrash_t is not None
+                     else np.full(len(seeds), np.inf))
+                    for bm in batches])
+    nre = np.array([(bm.n_rescale if bm.n_rescale is not None
+                     else np.zeros(len(seeds)))
+                    for bm in batches])
+    cost = np.array([(bm.resource_s if bm.resource_s is not None
+                      else np.zeros(len(seeds)))
+                     for bm in batches])
     labels = [_config_label(i, c) for i, c in enumerate(norm)]
     return ConfigSweepResult(logical.name, duration_s, norm, labels,
                              results, rec, slo, bkl, lost, wall,
-                             rollback_surface=rbs)
+                             rollback_surface=rbs, thrash_surface=thr,
+                             rescale_surface=nre, cost_surface=cost)
 
 
 # ----------------------------------------------------------------------
@@ -540,3 +570,86 @@ def deployment_drill(graph, seeds, *, base_spec: ChaosSpec,
         grid.slo_surface.reshape(shape),
         grid.lost_surface.reshape(shape),
         grid.rollback_surface.reshape(shape), grid)
+
+
+# ----------------------------------------------------------------------
+# traffic-dynamics cube (diurnal/flash load × DS2 autoscaling × failover)
+# ----------------------------------------------------------------------
+@dataclasses.dataclass
+class TrafficSweep:
+    """The traffic-dynamics tuning cube: every surface is shaped
+    ``(n_scalers, n_traffics, n_failovers, S)`` — recovery time, SLO
+    violation, lost work, rescale actions, thrash latch times and
+    resource-seconds cost over scaler-config × traffic-pattern ×
+    failover-mode, all from ONE `sweep_configs` device call (rate
+    schedules are rng-free ``rfac`` curves and scalers are traced
+    leaves, so the whole cube shares pregenerated timelines and
+    `timeline_build_count` stays flat)."""
+    scalers: list[str]
+    traffics: list[str]
+    failovers: list[str]
+    recovery: np.ndarray
+    slo: np.ndarray
+    lost: np.ndarray
+    rescales: np.ndarray
+    thrash_t: np.ndarray            # +inf = the thrash guard never fired
+    cost: np.ndarray                # Σ speed·dt resource-seconds
+    grid: ConfigSweepResult
+
+    @property
+    def thrash_frac(self) -> np.ndarray:
+        """Fraction of seeds whose autoscaler thrash guard latched, per
+        (scaler, traffic, failover) cell — the oscillation rate a
+        release pipeline gates on."""
+        return np.isfinite(self.thrash_t).mean(axis=-1)
+
+    def rows(self) -> list[dict]:
+        return self.grid.rows()
+
+
+def traffic_sweep(graph, seeds, *, base_spec: ChaosSpec,
+                  duration_s: float,
+                  scalers: dict[str, AutoscaleConfig | None],
+                  traffics: dict[str, tuple] | None = None,
+                  failovers: dict[str, FailoverConfig | None] | None = None,
+                  ckpt=None, **sweep_kw) -> TrafficSweep:
+    """Sweep the full traffic-dynamics cube — scaler-config ×
+    traffic-pattern × failover-mode × seeds — in ONE `sweep_configs`
+    call, the SLO-vs-cost frontier of in-trace DS2 autoscaling under
+    production load dynamics.
+
+    `scalers` maps labels to `AutoscaleConfig`s (None = no autoscaler —
+    the fixed-provisioning control rows); `traffics` maps labels to
+    config-level traffic patterns (`normalize_config`'s ``traffic``
+    forms: a ``(diurnal, flash)`` pair, a ``{"diurnal": ..., "flash":
+    ...}`` dict, or a bare flash-event tuple — composed on top of
+    `base_spec`'s own schedule); `failovers` maps labels to the base
+    `FailoverConfig` per row (rescale-during-recovery and
+    autoscaler-vs-failover interactions come from crossing these two
+    axes). The cube axes are ordered (scaler, traffic, failover, seed);
+    `TrafficSweep.cost` is the resource-seconds surface against which
+    `slo` trades, and `thrash_frac` the per-cell oscillation rate."""
+    sc_names = list(scalers)
+    traffics = dict(traffics) if traffics else {"base": ((), ())}
+    fo_names_map = dict(failovers) if failovers else {"base": None}
+    tr_names = list(traffics)
+    fo_names = list(fo_names_map)
+    configs = []
+    for s in sc_names:
+        for tname in tr_names:
+            for fname in fo_names:
+                configs.append({
+                    "failover": fo_names_map[fname], "ckpt": ckpt,
+                    "scaler": scalers[s], "traffic": traffics[tname],
+                    "label": f"{s} {tname} {fname}"})
+    grid = sweep_configs(graph, configs, seeds, base_spec=base_spec,
+                         duration_s=duration_s, **sweep_kw)
+    shape = (len(sc_names), len(tr_names), len(fo_names), -1)
+    return TrafficSweep(
+        sc_names, tr_names, fo_names,
+        grid.recovery_surface.reshape(shape),
+        grid.slo_surface.reshape(shape),
+        grid.lost_surface.reshape(shape),
+        grid.rescale_surface.reshape(shape),
+        grid.thrash_surface.reshape(shape),
+        grid.cost_surface.reshape(shape), grid)

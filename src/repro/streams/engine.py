@@ -296,6 +296,156 @@ def lower_upgrade(upgrade: UpgradeConfig | None, spec, *, n_tasks: int,
     }
 
 
+@dataclasses.dataclass
+class AutoscaleConfig:
+    """In-trace DS2 autoscaler policy (paper §III-A), lowered into both
+    engines' ticks as a traced windowed controller: per decision
+    interval it EWMAs each task's utilization (records consumed plus a
+    backlog-drain term over current capacity — the DS2 true-rate ratio),
+    targets ``speed * need / target_utilization``, and fires a per-task
+    speed rescale guarded by hysteresis, cooldown, a leaky
+    actions-per-window rate limit, a failover-aware circuit breaker and
+    a thrash latch. Like deployment drills, autoscale events are
+    deterministic in-trace time arithmetic: they consume NO rng draws
+    and never touch the pregenerated chaos timelines.
+
+    * Rescales are *graceful* (queues persist) but pay downtime on the
+      ``up_until`` leaf: ``rescale_down_s`` (default: the hot-vs-cold
+      `core.hotupdate.deploy_downtime` lowering) plus
+      ``move_cost_s * |delta|`` state-move seconds (default: the
+      `repro.train.elastic.resize_move_seconds` reshard model at
+      ``state_bytes_per_task`` / ``move_bandwidth_Bps``).
+    * The breaker counts, per task, kills landing within
+      ``fail_window_s`` of that task's last rescale (a crash right
+      after a resize = a failed adjustment); ``breaker_failures`` such
+      events open the breaker for ``breaker_reset_s``, during which the
+      controller holds and the task gracefully load-sheds: its
+      selectivity is scaled by ``shed_factor``.
+    * The thrash latch freezes the controller for the rest of the run
+      once the leaky direction-flip counter (decaying over
+      ``thrash_window_s``) reaches ``thrash_flips`` — the
+      autoscaler-vs-failover oscillation guard. The latch time lands in
+      ``EngineMetrics.thrash_t``.
+    * Source tasks never rescale (and never pay rescale downtime):
+      source emission is governed by the traffic curves, not capacity.
+
+    Defaults are sized for tick-scale drills (dt ~0.5 s, minutes-long
+    horizons); production-scale values (paper: 120 s cooldowns, 12
+    actions/hour, 1800 s breaker) live in `core.autoscaler.ScalerConfig`
+    — the host-side decision loop this controller is lowered from. NOT
+    lowered: in-trace rollback of a failed resize to the previous
+    parallelism (`DS2Scaler.notify_result` keeps that host-side); the
+    breaker + load-shed path is the traced graceful-degradation story.
+    Queue capacities stay on the config axis (``qcap_scale``): the
+    pallas lowering packs qcap into static per-run kernel tables, so an
+    in-trace qcap mutation cannot reach the fused kernel."""
+    t0_s: float = 0.0
+    interval_s: float = 5.0
+    ewma_alpha: float = 0.35
+    target_utilization: float = 0.8
+    backlog_drain_s: float = 60.0
+    hysteresis: float = 0.15
+    cooldown_s: float = 20.0
+    min_scale: float = 0.25
+    max_scale: float = 8.0
+    max_actions: float = 12.0        # leaky bucket over rate_window_s
+    rate_window_s: float = 3600.0
+    breaker_failures: float = 3.0
+    breaker_reset_s: float = 300.0
+    fail_window_s: float = 10.0
+    shed_factor: float = 0.5         # breaker-open selectivity scale
+    thrash_flips: float = 6.0
+    thrash_window_s: float = 60.0
+    hot: bool = True
+    startup: object | None = None    # core.startup.StartupConfig
+    rescale_down_s: float | None = None   # override deploy_downtime
+    move_cost_s: float | None = None      # s per |delta| scale unit
+    state_bytes_per_task: float = 64e6
+    move_bandwidth_Bps: float = 1e9
+
+
+#: the 21 traced autoscale leaves (see `lower_autoscale`); ordering is
+#: shared with jax_engine's axis dicts and run_config_batch's stacker
+AUTOSCALE_KEYS = (
+    "as_mask", "as_on", "as_t0", "as_int", "as_alpha", "as_tgt",
+    "as_drain", "as_hyst", "as_cool", "as_lo", "as_hi", "as_amax",
+    "as_adec", "as_bfail", "as_brs", "as_fw", "as_shed", "as_tflip",
+    "as_tdec", "as_down", "as_move")
+
+
+def inert_autoscale_leaves(n_tasks: int) -> dict:
+    """Autoscale leaves of an autoscaler-free run: structurally present
+    (stable pytree → one trace for scaled and unscaled configs) but an
+    exact arithmetic no-op — ``as_on`` gates every action to False, the
+    EWMA coefficient is 0.0, the shed factor multiplies by exactly 1.0.
+    Large finite sentinels (1e18) stand in for +inf where the traced
+    arithmetic divides or subtracts (inf/inf → nan hazards)."""
+    big = np.float64(1e18)
+    return {
+        "as_mask": np.zeros(n_tasks),
+        "as_on": np.float64(0.0), "as_t0": np.float64(0.0),
+        "as_int": big, "as_alpha": np.float64(0.0),
+        "as_tgt": np.float64(1.0), "as_drain": big,
+        "as_hyst": big, "as_cool": np.float64(0.0),
+        "as_lo": np.float64(0.0), "as_hi": big,
+        "as_amax": big, "as_adec": np.float64(0.0),
+        "as_bfail": big, "as_brs": np.float64(0.0),
+        "as_fw": np.float64(0.0), "as_shed": np.float64(1.0),
+        "as_tflip": big, "as_tdec": np.float64(0.0),
+        "as_down": np.float64(0.0), "as_move": np.float64(0.0),
+    }
+
+
+def lower_autoscale(auto: AutoscaleConfig | None, *, n_tasks: int,
+                    dt: float, is_src_task=None) -> dict:
+    """Lower an `AutoscaleConfig` into the traced controller leaves
+    shared by the numpy and JAX engines (identical float arithmetic —
+    the parity contract). ``is_src_task`` masks source tasks out of
+    ``as_mask`` (sources never rescale). ``auto=None`` returns the
+    inert leaves."""
+    if auto is None:
+        return inert_autoscale_leaves(n_tasks)
+    from repro.core.hotupdate import deploy_downtime
+    from repro.train.elastic import resize_move_seconds
+
+    if is_src_task is not None:
+        mask = 1.0 - np.asarray(is_src_task, float)
+    else:
+        mask = np.ones(n_tasks)
+    down = (float(auto.rescale_down_s)
+            if auto.rescale_down_s is not None
+            else deploy_downtime(auto.startup, hot=auto.hot))
+    move = (float(auto.move_cost_s) if auto.move_cost_s is not None
+            else resize_move_seconds(
+                1.0, state_bytes_per_unit=auto.state_bytes_per_task,
+                bandwidth_Bps=auto.move_bandwidth_Bps))
+    return {
+        "as_mask": mask,
+        "as_on": np.float64(1.0),
+        "as_t0": np.float64(auto.t0_s),
+        "as_int": np.float64(max(float(auto.interval_s), dt)),
+        "as_alpha": np.float64(auto.ewma_alpha),
+        "as_tgt": np.float64(auto.target_utilization),
+        "as_drain": np.float64(max(float(auto.backlog_drain_s), dt)),
+        "as_hyst": np.float64(auto.hysteresis),
+        "as_cool": np.float64(auto.cooldown_s),
+        "as_lo": np.float64(auto.min_scale),
+        "as_hi": np.float64(auto.max_scale),
+        "as_amax": np.float64(auto.max_actions),
+        "as_adec": np.float64(
+            math.exp(-dt / max(float(auto.rate_window_s), dt))),
+        "as_bfail": np.float64(auto.breaker_failures),
+        "as_brs": np.float64(auto.breaker_reset_s),
+        "as_fw": np.float64(auto.fail_window_s),
+        "as_shed": np.float64(auto.shed_factor),
+        "as_tflip": np.float64(auto.thrash_flips),
+        "as_tdec": np.float64(
+            math.exp(-dt / max(float(auto.thrash_window_s), dt))),
+        "as_down": np.float64(down),
+        "as_move": np.float64(move),
+    }
+
+
 class _Series(dict):
     """Read-mostly mapping op name → metric column view."""
 
@@ -339,6 +489,14 @@ class EngineMetrics:
         # chaos timelines only know crash failovers, and the jax engines
         # reconstruct `recoveries` from those timelines.
         self.rollback_t = math.inf
+        # in-trace autoscaler: wall time the thrash latch froze the
+        # controller (inf = never), number of rescale actions fired, and
+        # integrated resource-seconds (sum of task speeds × dt — the
+        # cost axis of the SLO-vs-cost cube; accumulated whether or not
+        # an autoscaler is configured so cube rows stay comparable).
+        self.thrash_t = math.inf
+        self.n_rescale = 0.0
+        self.resource_s = 0.0
 
     @property
     def emitted_by_job(self) -> np.ndarray:
@@ -1365,6 +1523,7 @@ class StreamEngine:
                  failover: FailoverConfig | None = None,
                  ckpt: CheckpointConfig | None = None,
                  upgrade: UpgradeConfig | None = None,
+                 autoscale: AutoscaleConfig | None = None,
                  task_speed_override: dict[int, float] | None = None,
                  seed: int = 0):
         self.arena = graph if isinstance(graph, PackedArena) else None
@@ -1528,6 +1687,9 @@ class StreamEngine:
                 bool(e.spec.mq_down)
                 or (bool(e.spec.zk_down) and bool(e.spec.hdfs_down))
                 for e in self._chaos_list)
+            self._traffic_possible = any(
+                bool(e.spec.diurnal or e.spec.flash_at)
+                for e in self._chaos_list)
             # region-correlated bursts: lower each job's burst events
             # into scheduled host kills in the job's LOCAL host domain
             for job, eng in zip(self.arena.jobs, self._chaos_list):
@@ -1543,6 +1705,7 @@ class StreamEngine:
                 or spec.burst_at)
             self._gates_possible = bool(spec.mq_down) or (
                 bool(spec.zk_down) and bool(spec.hdfs_down))
+            self._traffic_possible = bool(spec.diurnal or spec.flash_at)
             if spec.burst_at:
                 self.chaos.schedule_kills(burst_kill_schedule(
                     spec.burst_at, self._task_host, self._task_region))
@@ -1580,6 +1743,37 @@ class StreamEngine:
         self._rb_t = math.inf                # rollback fire time
         self._dacc = 0.0                     # controller EWMA accumulator
         self._act = np.zeros(n_tasks)        # canary-config activation
+
+        # ---- in-trace DS2 autoscaler (lowered controller leaves) -------
+        # mirrors jax_engine's `_finish_tick` controller EXACTLY (same
+        # step order, same `where`-gated updates) — the parity contract
+        self.autoscale = autoscale
+        if autoscale is not None:
+            is_src = np.zeros(n_tasks)
+            for p in self._ops:
+                if p.is_source:
+                    is_src[p.lo:p.hi] = 1.0
+            self._as = lower_autoscale(autoscale, n_tasks=n_tasks, dt=dt,
+                                       is_src_task=is_src)
+        else:
+            self._as = None
+        # capacity base (service_rate·dt on non-source tasks, 0 on
+        # sources) — recomputed·speed per tick when the autoscaler
+        # mutates speeds (cap_row above is baked with the INITIAL speed)
+        self._cap_base = np.zeros(n_tasks)
+        for p in self._ops:
+            if not p.is_source:
+                self._cap_base[p.lo:p.hi] = p.service_rate * dt
+        self._rew = np.zeros(n_tasks)        # EWMA'd utilization (need)
+        self._lact = np.full(n_tasks, -1e18)  # last rescale time
+        self._dirp = np.zeros(n_tasks)       # last rescale direction
+        self._failcnt = np.zeros(n_tasks)    # breaker failure counter
+        self._brk_until = np.zeros(n_tasks)  # breaker-open-until
+        self._used = 0.0                     # leaky action-rate bucket
+        self._flip_acc = 0.0                 # leaky direction-flip count
+        self._thrash_t = math.inf            # thrash-latch fire time
+        self._take_buf = np.zeros(n_tasks)   # records consumed this tick
+        self._hit_buf = np.zeros(n_tasks)    # failover-hit this tick
 
         self.metrics = EngineMetrics(
             [p.name for p in self._ops],
@@ -1675,6 +1869,13 @@ class StreamEngine:
         t = self.t
         q = self._queue
         dr = self._dr
+        a = self._as
+        if a is not None:
+            self._take_buf.fill(0.0)
+            self._hit_buf.fill(0.0)
+            # breaker-open load shed only multiplies selectivities when
+            # some breaker IS open (×1.0 otherwise — exact no-op)
+            self._brk_any = bool((self._brk_until > t).any())
         all_alive = t >= self._max_down
         if all_alive:
             alive_all = self._true_buf
@@ -1682,10 +1883,11 @@ class StreamEngine:
         else:
             alive_all = np.less_equal(self._down_until, t,
                                       out=self._alive_buf)
-            if dr is not None:
-                # upgrade/rollback waves down tasks gracefully (queues
-                # persist) on a separate leaf so checkpoint alive masks
-                # — and thus the shared rng draw stream — never see them
+            if dr is not None or a is not None:
+                # upgrade/rollback waves (and autoscaler rescales) down
+                # tasks gracefully (queues persist) on a separate leaf
+                # so checkpoint alive masks — and thus the shared rng
+                # draw stream — never see them
                 np.logical_and(alive_all, self._up_until <= t,
                                out=alive_all)
             np.copyto(self._alive_f_buf, alive_all)   # bool → float cast
@@ -1728,6 +1930,20 @@ class StreamEngine:
             gate_by_job = None
             gate0 = 1.0
 
+        # traffic dynamics (diurnal curves + flash-crowd ramps) scale
+        # source emission — deterministic closed-form curves, NO rng
+        if self._traffic_possible:
+            if self._chaos_list is not None:
+                tf_by_job = np.array(
+                    [e.traffic_factor(t) for e in self._chaos_list])
+                tf0 = 1.0
+            else:
+                tf_by_job = None
+                tf0 = self.chaos.traffic_factor(t)
+        else:
+            tf_by_job = None
+            tf0 = 1.0
+
         jobs = self._job_of_op          # per-job segments (packed arenas)
         for oi, op in enumerate(self._ops):
             sl = slice(op.lo, op.hi)
@@ -1743,19 +1959,40 @@ class StreamEngine:
                 if gate != 1.0:
                     produced = produced * gate
                     e_op = e_op * gate
+                tf = (tf0 if tf_by_job is None
+                      else float(tf_by_job[jobs[oi]]))
+                if tf != 1.0:
+                    produced = produced * tf
+                    e_op = e_op * tf
                 emitted += e_op
                 if jobs is not None:
                     self.metrics._emitted_by_job[jobs[oi]] += e_op
             else:
-                cap = op.cap_row if all_alive else op.cap_row * alive_f[sl]
+                if a is None:
+                    cap = (op.cap_row if all_alive
+                           else op.cap_row * alive_f[sl])
+                else:
+                    # cap_row bakes the INITIAL speed — recompute once
+                    # the autoscaler may have rescaled this op's tasks
+                    cap = self._cap_base[sl] * self._speed[sl]
+                    if not all_alive:
+                        cap = cap * alive_f[sl]
                 take = np.minimum(q[sl], cap)
                 q[sl] -= take
                 if dr is None:
-                    produced = take * op.selectivity
+                    sel_eff = op.selectivity
                 else:
                     # canary slices run their own selectivity vector
-                    produced = take * (op.selectivity
-                                       + act[sl] * dr["d_sel"][sl])
+                    sel_eff = op.selectivity + act[sl] * dr["d_sel"][sl]
+                if a is not None:
+                    self._take_buf[sl] = take
+                    if self._brk_any:
+                        # breaker-open graceful degradation: load-shed
+                        # by scaling selectivity (same multiply grouping
+                        # as jax's `sel_t * shed_t` — parity contract)
+                        sel_eff = sel_eff * np.where(
+                            t < self._brk_until[sl], a["as_shed"], 1.0)
+                produced = take * sel_eff
                 qps_row[oi] = take.sum() / dt
 
             for ep in op.out_edges:
@@ -1852,6 +2089,70 @@ class StreamEngine:
                 self._max_down = max(self._max_down,
                                      float(self._up_until.max()))
 
+        # autoscale controller (end-of-tick, AFTER kills/ckpt/drill —
+        # mirrors jax_engine._finish_tick's traced order exactly): the
+        # utilization EWMA updates first, the breaker update reads this
+        # tick's failover hits, then the decision reads the UPDATED
+        # accumulator and UPDATED breaker state
+        if a is not None:
+            cap_now = self._cap_base * self._speed
+            need = ((self._take_buf + q * (dt / a["as_drain"]))
+                    / np.maximum(cap_now, 1e-9))
+            self._rew += a["as_alpha"] * (need - self._rew)
+            hit = self._hit_buf
+            recent = (t - self._lact) <= a["as_fw"]
+            failev = (hit > 0.0) & recent
+            crossed = (((t - self._lact) > a["as_fw"])
+                       & ((t - dt - self._lact) <= a["as_fw"]))
+            failcnt = np.where(
+                failev, self._failcnt + 1.0,
+                np.where(crossed & (hit <= 0.0), 0.0, self._failcnt))
+            brk_fire = failcnt >= a["as_bfail"]
+            self._brk_until = np.where(brk_fire, t + a["as_brs"],
+                                       self._brk_until)
+            self._failcnt = np.where(brk_fire, 0.0, failcnt)
+            boundary = (math.floor((t + dt - a["as_t0"]) / a["as_int"])
+                        > math.floor((t - a["as_t0"]) / a["as_int"]))
+            want = np.clip(self._speed * self._rew / a["as_tgt"],
+                           a["as_lo"], a["as_hi"])
+            rel = (np.abs(want - self._speed)
+                   / np.maximum(self._speed, 1e-9))
+            fire = (boundary & (a["as_on"] > 0.0) & (a["as_mask"] > 0.0)
+                    & (rel >= a["as_hyst"])
+                    & ((t - self._lact) >= a["as_cool"])
+                    & (t >= self._brk_until)
+                    & (self._used < a["as_amax"])
+                    & math.isinf(self._thrash_t))
+            new_speed = np.where(fire, want, self._speed)
+            self._lact = np.where(fire, t, self._lact)
+            dirn = np.sign(want - self._speed)
+            if fire.any():
+                # graceful rescale: queues persist, the task pays
+                # deploy downtime + state-move seconds on `up_until`
+                downt = (a["as_down"]
+                         + a["as_move"] * np.abs(want - self._speed))
+                np.maximum(self._up_until, np.where(fire, t + downt, 0.0),
+                           out=self._up_until)
+                self._max_down = max(self._max_down,
+                                     float(self._up_until.max()))
+                any_fire = 1.0
+            else:
+                any_fire = 0.0
+            self._used = self._used * a["as_adec"] + any_fire
+            flip = fire & (dirn * self._dirp < 0.0)
+            self._dirp = np.where(fire, dirn, self._dirp)
+            self._flip_acc = (self._flip_acc * a["as_tdec"]
+                              + float(flip.sum()))
+            if (self._flip_acc >= a["as_tflip"]
+                    and math.isinf(self._thrash_t)):
+                # thrash latch: freeze the controller for the rest of
+                # the run (fire above reads the PRE-latch thrash_t)
+                self._thrash_t = t + dt
+                self.metrics.thrash_t = self._thrash_t
+            np.copyto(self._speed, new_speed)  # keep dict views aliased
+            self.metrics.n_rescale += float(fire.sum())
+        self.metrics.resource_s += float(self._speed.sum()) * dt
+
         backlog_row = np.add.reduceat(q, self._arena_starts)[
             self._backlog_perm]
         lag = float(backlog_row[self._src_cols].sum())
@@ -1941,6 +2242,9 @@ class StreamEngine:
         self._max_down = max(self._max_down, float(until.max()))
         self._down_until[hit] = until
         self._queue[hit] = 0.0   # incomplete output / state discarded
+        if self._as is not None:
+            # autoscaler breaker input: tasks failover-hit this tick
+            self._hit_buf[hit] = 1.0
         # packed arenas attribute the event per co-located job hit
         self.metrics.recoveries.extend(failover_recovery_entries(
             t, mode, hit, downtime, self._job_of_task))

@@ -128,7 +128,7 @@ metadata because they never feed back into queue dynamics.
 
 External-system event tensors + replication recovery modes
 ----------------------------------------------------------
-The per-tick ``xs`` stream carries three deterministic (rng-free)
+The per-tick ``xs`` stream carries four deterministic (rng-free)
 external-system curves next to the kill masks, always present so the
 pytree structure — and hence the trace — is stable:
 
@@ -151,8 +151,21 @@ pytree structure — and hence the trace — is stable:
                                  (`ckpt_age_curve`, tick-exclusive:
                                  a success at tick i lowers the age
                                  from tick i+1 on)
+    rfac  (n_ticks, n_jobs) f64  traffic-rate factor
+                                 (`core.chaos.traffic_curve`: per-job
+                                 diurnal sinusoids from
+                                 `ChaosSpec.diurnal` — phase-shifted
+                                 by `rate_phase_s` — × flash-crowd
+                                 trapezoids from `ChaosSpec.flash_at`,
+                                 plus config-axis patterns composed by
+                                 tuple concatenation exactly like
+                                 brownout ramps); source emission is
+                                 multiplied by the factor, so a
+                                 constant-rate spec yields an exact
+                                 all-ones curve and the ``×1.0`` path
+                                 is bit-identical to traffic-free runs
 
-All three gather per task through ``pa["job_of_task"]`` inside the
+All four gather per task through ``pa["job_of_task"]`` inside the
 tick. Region-correlated failure bursts (`ChaosSpec.burst_at`) lower as
 scheduled kills merged into the same kill scan — none of these events
 consume rng draws, preserving the draw-for-draw replay contract.
@@ -212,6 +225,49 @@ trace). The contract:
   ``phase_mode="pallas"`` (selectivity/downtime/ckpt deltas and the
   controller live outside the kernel and are fully supported).
 
+Rate-schedule + scale-event lowering contract (autoscaling)
+-----------------------------------------------------------
+`engine.AutoscaleConfig` in-trace DS2 autoscalers lower through
+`streams.engine.lower_autoscale` into 21 always-present params leaves
+(`AUTOSCALE_KEYS`; `engine.inert_autoscale_leaves` no-op values —
+finite ``1e18`` sentinels instead of +inf wherever traced arithmetic
+divides or subtracts — when no scaler is configured, so scaled and
+unscaled runs share one trace). The contract:
+
+* **Rate schedules ride ``xs``, scale events ride the state.** The
+  diurnal/flash-crowd curves are pure per-tick tensors (``rfac``
+  above, zero rng draws, timeline builders untouched —
+  ``timeline_build_count`` stays flat across the traffic axis), while
+  the controller's decisions mutate the ``speed`` state leaf inside
+  the scan: per decision window (``as_int`` boundaries off ``as_t0``)
+  it EWMAs per-task utilization from this tick's consumed records +
+  backlog drain demand (DS2's true-rate estimate), proposes
+  ``speed · rew / target`` clipped to ``[as_lo, as_hi]``, and fires
+  only past hysteresis / cooldown / action-rate / breaker / thrash
+  gates. Sources never rescale (``as_mask`` = 0 on source tasks).
+* **Rescales are graceful and costed.** A firing task keeps its
+  queue and pays ``as_down + as_move · |Δspeed|`` on the ``up_until``
+  leaf — deploy downtime from `core.hotupdate.deploy_downtime` plus
+  the `train/elastic.resize_move_seconds` state-move model — so
+  rescale-during-recovery interactions (both horizons racing) are
+  traced, not emulated.
+* **Degradation is the breaker path.** ``failcnt`` counts failover
+  hits within ``as_fw`` of a rescale; at ``as_bfail`` the breaker
+  opens for ``as_brs`` seconds, freezing decisions and load-shedding
+  via the ``as_shed`` selectivity factor (the `DS2Scaler` host
+  breaker's traced twin). The thrash guard latches ``thrash_t`` when
+  the leaky direction-flip counter crosses ``as_tflip``, freezing the
+  controller for the rest of the run (autoscaler-vs-failover
+  oscillation surfaces as a finite ``thrash_t`` metric).
+* **Pallas caveat:** queue capacities (``qcap``) are packed into the
+  fused kernel's static phase tables once per lowering, so in-trace
+  rescales deliberately do NOT scale qcap in any mode (parity over
+  convenience); ``rfac``, the shed factor and the whole controller
+  live outside the kernel, so the pallas path needs no kernel-table
+  changes. Host-side rollback of failed resizes stays in
+  `core.autoscaler.DS2Scaler` — the traced twin models breaker +
+  shed instead.
+
 Compiled `run` functions are cached per *plan shape* (the `TensorPlan`
 digest + region count — never float parameters, which are traced), so
 two engines over same-shaped graphs share one trace; `get_cached_run_fns`
@@ -262,14 +318,16 @@ from repro.core.chaos import (ChaosEngine, ChaosSpec, ChaosTimeline,
                               build_grid_timelines,
                               build_perjob_chaos_timeline, ckpt_age_curve,
                               coordinator_gate_curve, mq_gate_curve,
-                              refit_failover)
+                              refit_failover, traffic_curve)
 from repro.dist.sharding import (local_shard_count, sharded_grid_fn,
                                  sharded_seed_fn)
-from repro.streams.engine import (CheckpointConfig, FailoverConfig,
+from repro.streams.engine import (AUTOSCALE_KEYS, AutoscaleConfig,
+                                  CheckpointConfig, FailoverConfig,
                                   JobSlice, PackedArena, TensorPlan,
                                   UpgradeConfig, build_plan,
-                                  lazy_ready_extra, lower_tensor_plan,
-                                  lower_upgrade, per_task_failover)
+                                  lazy_ready_extra, lower_autoscale,
+                                  lower_tensor_plan, lower_upgrade,
+                                  per_task_failover)
 from repro.streams.graph import LogicalGraph, PhysicalGraph, expand
 
 try:  # scoped x64 — keeps the rest of the process on default f32
@@ -296,7 +354,17 @@ class EngineState(NamedTuple):
     from ``down_until`` so the pregenerated checkpoint draw streams
     (which only know crash failovers) replay draw-for-draw; ``rb_t`` is
     the scalar auto-rollback fire time (+inf = not fired); ``dacc`` the
-    drill controller's EWMA of the canary-vs-stable queue delta."""
+    drill controller's EWMA of the canary-vs-stable queue delta.
+
+    Autoscaler leaves (config-independent inits; the inert
+    `engine.inert_autoscale_leaves` params freeze them exactly):
+    ``rew`` per-task EWMA'd utilization, ``lact`` last-rescale time
+    (-1e18 = never), ``dirp`` last rescale direction, ``failcnt`` /
+    ``brk_until`` circuit-breaker state, ``used`` the leaky
+    action-rate bucket, ``flip_acc`` the leaky direction-flip counter,
+    ``thrash_t`` the thrash-latch fire time (+inf = not latched),
+    ``nact`` rescale actions fired, ``rsec`` integrated
+    resource-seconds (Σ speed · dt, the cube's cost axis)."""
     queue: jax.Array
     down_until: jax.Array
     speed: jax.Array
@@ -306,6 +374,16 @@ class EngineState(NamedTuple):
     up_until: jax.Array
     rb_t: jax.Array
     dacc: jax.Array
+    rew: jax.Array
+    lact: jax.Array
+    dirp: jax.Array
+    failcnt: jax.Array
+    brk_until: jax.Array
+    used: jax.Array
+    flip_acc: jax.Array
+    thrash_t: jax.Array
+    nact: jax.Array
+    rsec: jax.Array
 
 
 class TickDesc(NamedTuple):
@@ -350,21 +428,27 @@ def _build_compact_run(desc: TickDesc):
                                 & (t < state.rb_t + pa["up_rstag"])
                                 ).astype(q.dtype)
         free = jnp.maximum(pa["qcap"] - q, 0.0)
-        sel_t = pa["sel"][pa["op_of_task"]] + act * pa["d_sel"]
+        # breaker-open load shed (graceful degradation): ×1.0 exactly
+        # while every breaker is closed — the autoscale-free no-op
+        shed_t = jnp.where(t < state.brk_until, pa["as_shed"], 1.0)
+        sel_t = (pa["sel"][pa["op_of_task"]] + act * pa["d_sel"]) * shed_t
         ms_eff = pa["mode_single"] + act * pa["d_mode_s"]
         cap_t = pa["cap_base"] * state.speed * alive_f
         emitted, dropped = state.emitted, state.dropped
         produced = jnp.zeros_like(q)
         qps_acc = jnp.zeros((n_ops,), q.dtype)
+        take_all = jnp.zeros_like(q)
 
         gate_t = x["gate"][pa["job_of_task"]]  # MQ source gate (0/1)
+        rfac_t = x["rfac"][pa["job_of_task"]]  # traffic-rate factor
         for fi, ph in enumerate(tp.phases):
             eph = pa["edges"][fi]
             if ph.consumes:
                 take = jnp.minimum(q, cap_t * eph["cons_mask"])
                 q = q - take
+                take_all = take_all + take
                 src_emit = (pa["src_row"] * alive_f * eph["cons_mask"]
-                            * gate_t)
+                            * gate_t * rfac_t)
                 produced = produced + (src_emit + take * sel_t)
                 if len(ph.e_jobs):
                     emitted = emitted.at[eph["e_jobs"]].add(
@@ -463,7 +547,7 @@ def _build_compact_run(desc: TickDesc):
             free = jnp.maximum(free.at[dst].add(-accepted), 0.0)
 
         return _finish_tick(pa, state, x, q, emitted, dropped,
-                            qps_acc, n_regions, n_ops, act)
+                            qps_acc, n_regions, n_ops, act, take_all)
 
     def run(pa, state, xs):
         return lax.scan(lambda st, x: tick(pa, st, x), state, xs)
@@ -472,7 +556,7 @@ def _build_compact_run(desc: TickDesc):
 
 
 def _finish_tick(pa, state, x, q, emitted, dropped, qps_acc,
-                 n_regions, n_ops, act):
+                 n_regions, n_ops, act, take_all):
     """Shared end-of-tick block of the dense and compact ticks: chaos
     host kills → failover (per-task mode masks + passive-restore
     surcharge from the external-event tensors), checkpoint attempt
@@ -538,18 +622,73 @@ def _finish_tick(pa, state, x, q, emitted, dropped, qps_acc,
     up_until = jnp.maximum(
         up_until, jnp.where(trig_rb, rb_start + pa["up_down"], 0.0))
 
+    # in-trace DS2 autoscaler (end-of-tick, AFTER kills/ckpt/drill —
+    # same order as the numpy tick): utilization EWMA first, breaker
+    # update on this tick's failover hits, then the decision reads the
+    # UPDATED accumulator and UPDATED breaker. Inert autoscale leaves
+    # make every update an exact arithmetic no-op.
+    dt_ = pa["dt"]
+    cap_now = pa["cap_base"] * state.speed
+    need = ((take_all + q * (dt_ / pa["as_drain"]))
+            / jnp.maximum(cap_now, 1e-9))
+    rew = state.rew + pa["as_alpha"] * (need - state.rew)
+    recent = (t - state.lact) <= pa["as_fw"]
+    failev = (hit_any > 0.0) & recent
+    crossed = (((t - state.lact) > pa["as_fw"])
+               & ((t - dt_ - state.lact) <= pa["as_fw"]))
+    failcnt = jnp.where(
+        failev, state.failcnt + 1.0,
+        jnp.where(crossed & (hit_any <= 0.0), 0.0, state.failcnt))
+    brk_fire = failcnt >= pa["as_bfail"]
+    brk_until = jnp.where(brk_fire, t + pa["as_brs"], state.brk_until)
+    failcnt = jnp.where(brk_fire, 0.0, failcnt)
+    boundary = (jnp.floor((t + dt_ - pa["as_t0"]) / pa["as_int"])
+                > jnp.floor((t - pa["as_t0"]) / pa["as_int"]))
+    want = jnp.clip(state.speed * rew / pa["as_tgt"],
+                    pa["as_lo"], pa["as_hi"])
+    rel = jnp.abs(want - state.speed) / jnp.maximum(state.speed, 1e-9)
+    as_fire = (boundary & (pa["as_on"] > 0.0) & (pa["as_mask"] > 0.0)
+               & (rel >= pa["as_hyst"])
+               & ((t - state.lact) >= pa["as_cool"])
+               & (t >= brk_until) & (state.used < pa["as_amax"])
+               & jnp.isinf(state.thrash_t))
+    fire_f = as_fire.astype(q.dtype)
+    speed = jnp.where(as_fire, want, state.speed)
+    lact = jnp.where(as_fire, t, state.lact)
+    # graceful rescale: queues persist, the task pays deploy downtime +
+    # state-move seconds on the up_until leaf
+    downt = pa["as_down"] + pa["as_move"] * jnp.abs(want - state.speed)
+    up_until = jnp.maximum(up_until,
+                           jnp.where(as_fire, t + downt, 0.0))
+    any_fire = (fire_f.sum() > 0.0).astype(q.dtype)
+    used = state.used * pa["as_adec"] + any_fire
+    dirn = jnp.sign(want - state.speed)
+    flip = as_fire & (dirn * state.dirp < 0.0)
+    dirp = jnp.where(as_fire, dirn, state.dirp)
+    flip_acc = (state.flip_acc * pa["as_tdec"]
+                + flip.astype(q.dtype).sum())
+    # thrash latch: freezes the controller from the NEXT tick on (the
+    # fire gate above read the PRE-latch thrash_t)
+    thrash_t = jnp.where((flip_acc >= pa["as_tflip"])
+                         & jnp.isinf(state.thrash_t),
+                         t + dt_, state.thrash_t)
+    nact = state.nact + fire_f.sum()
+    rsec = state.rsec + speed.sum() * dt_
+
     backlog_row = jax.ops.segment_sum(q, pa["op_of_task"],
                                       num_segments=n_ops)
     qps_row = qps_acc / pa["dt"]
     lag = jnp.dot(backlog_row, pa["src_mask_ops"])
-    new_state = EngineState(q, down_until, state.speed, ckpt_epoch,
-                            emitted, dropped, up_until, rb_t, dacc)
+    new_state = EngineState(q, down_until, speed, ckpt_epoch,
+                            emitted, dropped, up_until, rb_t, dacc,
+                            rew, lact, dirp, failcnt, brk_until, used,
+                            flip_acc, thrash_t, nact, rsec)
     return new_state, {"qps": qps_row, "backlog": backlog_row,
                        "lag": lag}
 
 
 def _finish_tick_batched(pa, state, x, q, emitted, dropped, qps_acc,
-                         n_regions, n_ops, act):
+                         n_regions, n_ops, act, take_all):
     """Seed-batched twin of `_finish_tick` for the native ``(S, ...)``
     pallas run: same math, with the task axis transposed to leading for
     the segment reductions (segment ops reduce over axis 0) and the
@@ -602,12 +741,62 @@ def _finish_tick_batched(pa, state, x, q, emitted, dropped, qps_acc,
     up_until = jnp.maximum(
         up_until, jnp.where(trig_rb, rb_start + pa["up_down"], 0.0))
 
+    # in-trace DS2 autoscaler — `_finish_tick`'s controller with the
+    # scalars (`used` / `flip_acc` / `thrash_t` / `nact` / `rsec`)
+    # carrying the (S,) axis and task reductions over axis -1
+    dt_ = pa["dt"]
+    cap_now = pa["cap_base"] * state.speed
+    need = ((take_all + q * (dt_ / pa["as_drain"]))
+            / jnp.maximum(cap_now, 1e-9))
+    rew = state.rew + pa["as_alpha"] * (need - state.rew)
+    recent = (t - state.lact) <= pa["as_fw"]
+    failev = (hit_any > 0.0) & recent
+    crossed = (((t - state.lact) > pa["as_fw"])
+               & ((t - dt_ - state.lact) <= pa["as_fw"]))
+    failcnt = jnp.where(
+        failev, state.failcnt + 1.0,
+        jnp.where(crossed & (hit_any <= 0.0), 0.0, state.failcnt))
+    brk_fire = failcnt >= pa["as_bfail"]
+    brk_until = jnp.where(brk_fire, t + pa["as_brs"], state.brk_until)
+    failcnt = jnp.where(brk_fire, 0.0, failcnt)
+    boundary = (jnp.floor((t + dt_ - pa["as_t0"]) / pa["as_int"])
+                > jnp.floor((t - pa["as_t0"]) / pa["as_int"]))
+    want = jnp.clip(state.speed * rew / pa["as_tgt"],
+                    pa["as_lo"], pa["as_hi"])
+    rel = jnp.abs(want - state.speed) / jnp.maximum(state.speed, 1e-9)
+    as_fire = (boundary & (pa["as_on"] > 0.0) & (pa["as_mask"] > 0.0)
+               & (rel >= pa["as_hyst"])
+               & ((t - state.lact) >= pa["as_cool"])
+               & (t >= brk_until)
+               & (state.used[:, None] < pa["as_amax"])
+               & jnp.isinf(state.thrash_t)[:, None])
+    fire_f = as_fire.astype(q.dtype)
+    speed = jnp.where(as_fire, want, state.speed)
+    lact = jnp.where(as_fire, t, state.lact)
+    downt = pa["as_down"] + pa["as_move"] * jnp.abs(want - state.speed)
+    up_until = jnp.maximum(up_until,
+                           jnp.where(as_fire, t + downt, 0.0))
+    any_fire = (fire_f.sum(-1) > 0.0).astype(q.dtype)
+    used = state.used * pa["as_adec"] + any_fire
+    dirn = jnp.sign(want - state.speed)
+    flip = as_fire & (dirn * state.dirp < 0.0)
+    dirp = jnp.where(as_fire, dirn, state.dirp)
+    flip_acc = (state.flip_acc * pa["as_tdec"]
+                + flip.astype(q.dtype).sum(-1))
+    thrash_t = jnp.where((flip_acc >= pa["as_tflip"])
+                         & jnp.isinf(state.thrash_t),
+                         t + dt_, state.thrash_t)
+    nact = state.nact + fire_f.sum(-1)
+    rsec = state.rsec + speed.sum(-1) * dt_
+
     backlog_row = jax.ops.segment_sum(q.T, pa["op_of_task"],
                                       num_segments=n_ops).T
     qps_row = qps_acc / pa["dt"]
     lag = backlog_row @ pa["src_mask_ops"]
-    new_state = EngineState(q, down_until, state.speed, ckpt_epoch,
-                            emitted, dropped, up_until, rb_t, dacc)
+    new_state = EngineState(q, down_until, speed, ckpt_epoch,
+                            emitted, dropped, up_until, rb_t, dacc,
+                            rew, lact, dirp, failcnt, brk_until, used,
+                            flip_acc, thrash_t, nact, rsec)
     return new_state, {"qps": qps_row, "backlog": backlog_row,
                        "lag": lag}
 
@@ -656,20 +845,24 @@ def _build_pallas_run(desc: TickDesc, impl: str | None = None):
                                 & (t < state.rb_t[:, None]
                                    + pa["up_rstag"])).astype(q.dtype)
         free = jnp.maximum(pa["qcap"] - q, 0.0)
-        sel_t = pa["sel"][pa["op_of_task"]] + act * pa["d_sel"]
+        shed_t = jnp.where(t < state.brk_until, pa["as_shed"], 1.0)
+        sel_t = (pa["sel"][pa["op_of_task"]] + act * pa["d_sel"]) * shed_t
         cap_t = pa["cap_base"] * state.speed * alive_f
         emitted, dropped = state.emitted, state.dropped
         produced = jnp.zeros_like(q)
         qps_acc = jnp.zeros((q.shape[0], n_ops), q.dtype)
+        take_all = jnp.zeros_like(q)
 
         gate_t = x["gate"][:, pa["job_of_task"]]  # MQ source gate (0/1)
+        rfac_t = x["rfac"][:, pa["job_of_task"]]  # traffic-rate factor
         for fi, ph in enumerate(tp.phases):
             eph = pa["edges"][fi]
             if ph.consumes:
                 take = jnp.minimum(q, cap_t * eph["cons_mask"])
                 q = q - take
+                take_all = take_all + take
                 src_emit = (pa["src_row"] * alive_f * eph["cons_mask"]
-                            * gate_t)
+                            * gate_t * rfac_t)
                 produced = produced + (src_emit + take * sel_t)
                 if len(ph.e_jobs):
                     emitted = emitted.at[:, eph["e_jobs"]].add(
@@ -696,14 +889,16 @@ def _build_pallas_run(desc: TickDesc, impl: str | None = None):
             free = jnp.maximum(free.at[:, dst].add(-accepted), 0.0)
 
         return _finish_tick_batched(pa, state, x, q, emitted, dropped,
-                                    qps_acc, n_regions, n_ops, act)
+                                    qps_acc, n_regions, n_ops, act,
+                                    take_all)
 
     def run(pa, state, xs):
         aux = [pack_phase_tables(pa["edges"][fi], pa["qcap"],
                                  pa["mode_single"]) if ph.D else None
                for fi, ph in enumerate(tp.phases)]
         xs_t = dict(xs, **{k: jnp.swapaxes(xs[k], 0, 1)
-                           for k in ("kills", "bfac", "gate", "ckage")})
+                           for k in ("kills", "bfac", "gate", "ckage",
+                                     "rfac")})
         final, ys = lax.scan(lambda st, x: tick(pa, aux, st, x), state,
                              xs_t)
         return final, {k: jnp.swapaxes(v, 0, 1) for k, v in ys.items()}
@@ -733,20 +928,24 @@ def _build_run(desc: TickDesc):
                                 & (t < state.rb_t + pa["up_rstag"])
                                 ).astype(q.dtype)
         free = jnp.maximum(pa["qcap"] - q, 0.0)
-        sel_t = pa["sel"][op_of_task] + act * pa["d_sel"]
+        shed_t = jnp.where(t < state.brk_until, pa["as_shed"], 1.0)
+        sel_t = (pa["sel"][op_of_task] + act * pa["d_sel"]) * shed_t
         ms_eff = pa["mode_single"] + act * pa["d_mode_s"]
         cap_t = pa["cap_base"] * state.speed * alive_f
         emitted, dropped = state.emitted, state.dropped
         produced = jnp.zeros_like(q)
         qps_acc = jnp.zeros((n_ops,), q.dtype)
+        take_all = jnp.zeros_like(q)
 
         gate_t = x["gate"][job_of_task]  # MQ source gate (0/1)
+        rfac_t = x["rfac"][job_of_task]  # traffic-rate factor
         for fi, ph in enumerate(tp.phases):
             if ph.consumes:
                 take = jnp.minimum(q, cap_t * ph.cons_mask)
                 q = q - take
+                take_all = take_all + take
                 src_emit = (pa["src_row"] * alive_f * ph.cons_mask * is_src
-                            * gate_t)
+                            * gate_t * rfac_t)
                 produced = produced + (src_emit + take * sel_t)
                 emitted = emitted + seg(src_emit, job_of_task,
                                         num_segments=n_jobs)
@@ -838,7 +1037,7 @@ def _build_run(desc: TickDesc):
         # pregenerated chaos host kills → failover, ckpt counter, metric
         # rows (shared with the compact tick)
         return _finish_tick(pa, state, x, q, emitted, dropped,
-                            qps_acc, n_regions, n_ops, act)
+                            qps_acc, n_regions, n_ops, act, take_all)
 
     def run(pa, state, xs):
         return lax.scan(lambda st, x: tick(pa, st, x), state, xs)
@@ -994,11 +1193,15 @@ def build_unrolled_run(legacy_desc):
         backlog_row = jnp.stack([q[od.lo:od.hi].sum() for od in op_descs])
         qps_row = jnp.stack(qps_cols)
         lag = jnp.stack([backlog_row[j] for j in src_cols]).sum()
-        # legacy baseline predates deployment drills: pass the drill
-        # leaves through untouched
+        # legacy baseline predates deployment drills and the in-trace
+        # autoscaler: pass those leaves through untouched
         new_state = EngineState(q, down_until, state.speed, ckpt_epoch,
                                 emitted, dropped, state.up_until,
-                                state.rb_t, state.dacc)
+                                state.rb_t, state.dacc, state.rew,
+                                state.lact, state.dirp, state.failcnt,
+                                state.brk_until, state.used,
+                                state.flip_acc, state.thrash_t,
+                                state.nact, state.rsec)
         return new_state, {"qps": qps_row, "backlog": backlog_row,
                            "lag": lag}
 
@@ -1019,7 +1222,7 @@ _CFG_CACHE: dict = {}
 _CFG_MIX_CACHE: dict = {}
 
 _XS_AXES = {"t": None, "kills": 0, "ckpt": None,
-            "bfac": 0, "gate": 0, "ckage": 0}
+            "bfac": 0, "gate": 0, "ckage": 0, "rfac": 0}
 
 #: the 18 traced deployment-drill leaves (see `engine.lower_upgrade`):
 #: per-task canary mask / wave starts / rollback staggers / controller
@@ -1043,7 +1246,8 @@ _PA_MIX_AXES = {"qcap": None, "src_row": 0, "cap_base": None, "sel": None,
                 "lazy_extra": None, "job_of_task": None,
                 "op_of_task": None,
                 "par_of_op": None, "src_mask_ops": None, "edges": None,
-                **dict.fromkeys(_DRILL_KEYS, None)}
+                **dict.fromkeys(_DRILL_KEYS, None),
+                **dict.fromkeys(AUTOSCALE_KEYS, None)}
 
 # resiliency-config vmap axis: the traced failover/queue/selectivity
 # leaves vary per grid row (deployment-drill leaves included — upgrade
@@ -1057,7 +1261,8 @@ _PA_CFG_AXES = {"qcap": 0, "src_row": None, "cap_base": None, "sel": 0,
                 "restore_base": 0, "replay_rate": 0, "lazy_extra": 0,
                 "job_of_task": None, "op_of_task": None,
                 "par_of_op": None, "src_mask_ops": None, "edges": None,
-                **dict.fromkeys(_DRILL_KEYS, 0)}
+                **dict.fromkeys(_DRILL_KEYS, 0),
+                **dict.fromkeys(AUTOSCALE_KEYS, 0)}
 
 
 def _tick_impl() -> str:
@@ -1078,7 +1283,8 @@ def _lift_single(run_batched):
         st = EngineState(*(jnp.asarray(l)[None]
                            for l in state))
         xs1 = dict(xs, **{k: jnp.asarray(xs[k])[None]
-                          for k in ("kills", "bfac", "gate", "ckage")})
+                          for k in ("kills", "bfac", "gate", "ckage",
+                                    "rfac")})
         final, ys = run_batched(pa, st, xs1)
         return (EngineState(*(l[0] for l in final)),
                 {k: v[0] for k, v in ys.items()})
@@ -1160,9 +1366,10 @@ def _cfg_xs_axes(shared_kills: bool) -> dict:
     # ckpt-bearing grids carry genuinely per-config kills (axis 0).
     # bfac/ckage always carry the config axis (config brownout ramps
     # compose into the factor; ckpt cadence sets the age curve); the MQ
-    # gate is seed-only and broadcasts across configs.
+    # gate is seed-only and broadcasts across configs; rfac carries the
+    # config axis (config traffic patterns compose into the rate curve).
     return {"t": None, "kills": None if shared_kills else 0, "ckpt": 0,
-            "bfac": 0, "gate": None, "ckage": 0}
+            "bfac": 0, "gate": None, "ckage": 0, "rfac": 0}
 
 
 def get_cached_config_fn(desc: TickDesc, shared_kills: bool = False):
@@ -1209,7 +1416,8 @@ def get_sharded_config_fn(desc: TickDesc, n_shards: int,
     key = (desc, n_shards, shared_kills)
     if key not in _CFG_SHARD_CACHE:
         seed_axes = {"t": None, "kills": 0 if shared_kills else 1,
-                     "ckpt": None, "bfac": 1, "gate": 0, "ckage": 1}
+                     "ckpt": None, "bfac": 1, "gate": 0, "ckage": 1,
+                     "rfac": 1}
         _CFG_SHARD_CACHE[key] = sharded_grid_fn(
             _build_run(desc), pa_axes=_PA_CFG_AXES, xs_axes=_XS_AXES,
             cfg_xs_axes=_cfg_xs_axes(shared_kills),
@@ -1254,7 +1462,8 @@ class _Lowered:
                  queue_cap: float, failover, ckpt, seed: int,
                  phase_mode: str = "auto", seed_width: int = 1,
                  upgrade: UpgradeConfig | None = None,
-                 upgrade_spec=None):
+                 upgrade_spec=None,
+                 autoscale: AutoscaleConfig | None = None):
         self.arena = graph if isinstance(graph, PackedArena) else None
         if self.arena is not None:
             graph = self.arena.graph
@@ -1332,17 +1541,25 @@ class _Lowered:
             job_of_task=self.job_of_task, task_region=self.task_region,
             dt=self.dt, base_failover=(codes, det, rst_s, rst_r, fx),
             base_ckpt=ckpt, sel_task=sel_task)
+        # in-trace autoscaler: lowered ONCE into traced per-task leaves
+        # (inert no-op values without a config — see AUTOSCALE_KEYS)
+        self._auto = lower_autoscale(
+            autoscale, n_tasks=n_tasks, dt=self.dt,
+            is_src_task=self.tensor.is_src_task)
         self.arrays = self._params(plan.qcap, sel, det, rst_s, rst_r,
                                    codes, src_row, cap_base)
         self.op_names = [p.name for p in plan.ops]
         self._src_row, self._cap_base, self._sel = src_row, cap_base, sel
 
     def _params(self, qcap, sel, det, rst_s, rst_r, codes, src_row=None,
-                cap_base=None, fx=None, drill=None) -> dict:
+                cap_base=None, fx=None, drill=None,
+                autoscale=None) -> dict:
         """Traced-parameter pytree for one resiliency configuration —
         `run_config_batch` stacks one of these per grid row. `drill`
         overrides the lowered deployment-drill leaves (per-config
-        `UpgradeConfig` rows); default is this lowering's own."""
+        `UpgradeConfig` rows), `autoscale` the lowered autoscaler
+        leaves (per-config `AutoscaleConfig` rows); default is this
+        lowering's own."""
         if fx is None:
             fx = self.fo_extras
             lazy = self.fo_lazy
@@ -1385,6 +1602,7 @@ class _Lowered:
                       else {"share": ph.share, "mass": ph.mass}
                       for ph in self.tensor.phases],
             **(drill if drill is not None else self._drill),
+            **(autoscale if autoscale is not None else self._auto),
         }
 
     # ------------------------------------------------------------------
@@ -1481,20 +1699,29 @@ class _Lowered:
             speed=speed, ckpt_epoch=np.int32(0),
             emitted=np.zeros(self.n_jobs), dropped=np.zeros(self.n_jobs),
             up_until=np.zeros(n_tasks), rb_t=np.float64(np.inf),
-            dacc=np.float64(0.0))
+            dacc=np.float64(0.0),
+            rew=np.zeros(n_tasks), lact=np.full(n_tasks, -1e18),
+            dirp=np.zeros(n_tasks), failcnt=np.zeros(n_tasks),
+            brk_until=np.zeros(n_tasks), used=np.float64(0.0),
+            flip_acc=np.float64(0.0), thrash_t=np.float64(np.inf),
+            nact=np.float64(0.0), rsec=np.float64(0.0))
 
     def event_curves(self, spec, tl: ChaosTimeline,
-                     cfg_ramps=()) -> tuple:
+                     cfg_ramps=(), cfg_traffic=((), ())) -> tuple:
         """Deterministic per-tick external-event tensors for one seed:
         ``bfac`` storage-brownout factor, ``gate`` source gate (MQ
         outages × coordinator leader-loss windows — the gate is 0 where
         the MQ is down OR a ZK and an HDFS outage overlap, matching
-        `ChaosEngine.leader_available`) and ``ckage`` checkpoint age —
-        each (n_ticks, n_jobs), gathered per task through
-        ``pa["job_of_task"]`` inside the tick. Config-level brownout
-        ramps compose by tuple concatenation (so the factor is
-        op-identical to the numpy engines')."""
+        `ChaosEngine.leader_available`), ``ckage`` checkpoint age and
+        ``rfac`` traffic-rate factor (diurnal curves × flash-crowd
+        ramps, `core.chaos.traffic_curve`) — each (n_ticks, n_jobs),
+        gathered per task through ``pa["job_of_task"]`` inside the
+        tick. Config-level brownout ramps / traffic patterns compose
+        by tuple concatenation (so the factors are op-identical to the
+        numpy engines')."""
         ts = tl.ts
+        cfg_diurnal, cfg_flash = (tuple(cfg_traffic[0]),
+                                  tuple(cfg_traffic[1]))
         if isinstance(spec, (list, tuple)):
             specs = [sp.spec if isinstance(sp, ChaosEngine)
                      else (sp or ChaosSpec()) for sp in spec]
@@ -1505,18 +1732,27 @@ class _Lowered:
                 [mq_gate_curve(sp.mq_down, ts)
                  * coordinator_gate_curve(sp.zk_down, sp.hdfs_down, ts)
                  for sp in specs], axis=1)
+            rfac = np.stack(
+                [traffic_curve(tuple(sp.diurnal) + cfg_diurnal,
+                               tuple(sp.flash_at) + cfg_flash, ts,
+                               phase_s=sp.rate_phase_s)
+                 for sp in specs], axis=1)
         else:
             bf = brownout_curve(tuple(spec.brownout_at)
                                 + tuple(cfg_ramps), ts)
             gt = (mq_gate_curve(spec.mq_down, ts)
                   * coordinator_gate_curve(spec.zk_down, spec.hdfs_down,
                                            ts))
+            rf = traffic_curve(tuple(spec.diurnal) + cfg_diurnal,
+                               tuple(spec.flash_at) + cfg_flash, ts,
+                               phase_s=spec.rate_phase_s)
             bfac = np.repeat(bf[:, None], self.n_jobs, axis=1)
             gate = np.repeat(gt[:, None], self.n_jobs, axis=1)
+            rfac = np.repeat(rf[:, None], self.n_jobs, axis=1)
         ok = (tl.ckpt_ok_by_job if tl.ckpt_ok_by_job is not None
               else tl.ckpt_ok)
         ckage = ckpt_age_curve(ts, ok, self.n_jobs)
-        return bfac, gate, ckage
+        return bfac, gate, ckage, rfac
 
     def prepare(self, spec: ChaosSpec, n_ticks: int,
                 task_speed_override: dict[int, float] | None = None
@@ -1524,10 +1760,10 @@ class _Lowered:
         """Pregenerate one seed's chaos timeline → (state0, scan xs)."""
         tl = self.timeline(spec, n_ticks)
         state = self.state0(tl, task_speed_override)
-        bfac, gate, ckage = self.event_curves(spec, tl)
+        bfac, gate, ckage, rfac = self.event_curves(spec, tl)
         xs = {"t": tl.ts, "kills": tl.kills.astype(np.float64),
               "ckpt": tl.ckpt_at, "bfac": bfac, "gate": gate,
-              "ckage": ckage}
+              "ckage": ckage, "rfac": rfac}
         return state, xs, tl
 
     # ------------------------------------------------------------------
@@ -1587,7 +1823,8 @@ class _Lowered:
 class JaxEngineMetrics:
     def __init__(self, op_names, t, lag, qps, backlog, emitted, dropped,
                  timeline: ChaosTimeline, ckpt_epoch: int | None = None,
-                 rollback_t: float = np.inf):
+                 rollback_t: float = np.inf, thrash_t: float = np.inf,
+                 n_rescale: float = 0.0, resource_s: float = 0.0):
         self.t = t
         self.source_lag = lag
         self.qps = {n: qps[:, j] for j, n in enumerate(op_names)}
@@ -1610,6 +1847,11 @@ class JaxEngineMetrics:
         # deployment drill: tick time the in-trace auto-rollback fired
         # (+inf when no drill ran or the canary held)
         self.rollback_t = float(rollback_t)
+        # in-trace autoscaler: thrash-guard latch time (+inf = never
+        # fired), scale-action count, resource-seconds integral
+        self.thrash_t = float(thrash_t)
+        self.n_rescale = float(n_rescale)
+        self.resource_s = float(resource_s)
 
 
 class JaxBatchMetrics:
@@ -1617,7 +1859,8 @@ class JaxBatchMetrics:
     a standalone single-seed run (pinned in tests/test_jax_engine.py)."""
 
     def __init__(self, op_names, t, lag, qps, backlog, emitted, dropped,
-                 timelines, ckpt_epoch=None, jobs=None, rollback_t=None):
+                 timelines, ckpt_epoch=None, jobs=None, rollback_t=None,
+                 thrash_t=None, n_rescale=None, resource_s=None):
         self.op_names = list(op_names)
         self.t = t                     # (n_ticks,)
         self.source_lag = lag          # (S, n_ticks)
@@ -1635,6 +1878,14 @@ class JaxBatchMetrics:
         # (S,) drill auto-rollback fire times (+inf = never fired)
         self.rollback_t = (np.asarray(rollback_t, float)
                            if rollback_t is not None else None)
+        # (S,) autoscaler surfaces: thrash-guard latch times, scale
+        # action counts, resource-seconds integrals
+        self.thrash_t = (np.asarray(thrash_t, float)
+                         if thrash_t is not None else None)
+        self.n_rescale = (np.asarray(n_rescale, float)
+                          if n_rescale is not None else None)
+        self.resource_s = (np.asarray(resource_s, float)
+                           if resource_s is not None else None)
         self.timelines = list(timelines)
         self.jobs = list(jobs) if jobs is not None else None
         self.ckpt_attempts = np.array([tl.ckpt_attempts for tl in timelines])
@@ -1656,7 +1907,16 @@ class JaxBatchMetrics:
                                             else None),
                                 rollback_t=(self.rollback_t[i]
                                             if self.rollback_t is not None
-                                            else np.inf))
+                                            else np.inf),
+                                thrash_t=(self.thrash_t[i]
+                                          if self.thrash_t is not None
+                                          else np.inf),
+                                n_rescale=(self.n_rescale[i]
+                                           if self.n_rescale is not None
+                                           else 0.0),
+                                resource_s=(self.resource_s[i]
+                                            if self.resource_s is not None
+                                            else 0.0))
 
     def job_view(self, job: JobSlice) -> "JaxBatchMetrics":
         """Per-job slice of a packed-arena batch: the job's metric columns
@@ -1676,7 +1936,9 @@ class JaxBatchMetrics:
             self.backlog[:, :, cols],
             self.emitted_by_job[:, j:j + 1],
             self.dropped_by_job[:, j:j + 1], tls,
-            ckpt_epoch=self.ckpt_epoch, rollback_t=self.rollback_t)
+            ckpt_epoch=self.ckpt_epoch, rollback_t=self.rollback_t,
+            thrash_t=self.thrash_t, n_rescale=self.n_rescale,
+            resource_s=self.resource_s)
 
 
 # ----------------------------------------------------------------------
@@ -1697,7 +1959,8 @@ class JaxStreamEngine:
                  ckpt=None,
                  task_speed_override: dict[int, float] | None = None,
                  seed: int = 0, phase_mode: str = "auto",
-                 upgrade: UpgradeConfig | None = None):
+                 upgrade: UpgradeConfig | None = None,
+                 autoscale: AutoscaleConfig | None = None):
         if isinstance(chaos, ChaosEngine):
             chaos = chaos.spec
         elif isinstance(chaos, (list, tuple)):
@@ -1712,7 +1975,8 @@ class JaxStreamEngine:
         self._low = _Lowered(graph, n_hosts=n_hosts, dt=dt,
                              queue_cap=queue_cap, failover=failover,
                              ckpt=ckpt, seed=seed, phase_mode=phase_mode,
-                             upgrade=upgrade, upgrade_spec=self.spec)
+                             upgrade=upgrade, upgrade_spec=self.spec,
+                             autoscale=autoscale)
         self.metrics: JaxEngineMetrics | None = None
 
     @property
@@ -1733,10 +1997,16 @@ class JaxStreamEngine:
             dropped = np.asarray(final.dropped)
             ckpt_epoch = int(final.ckpt_epoch)
             rollback_t = float(final.rb_t)
+            thrash_t = float(final.thrash_t)
+            n_rescale = float(final.nact)
+            resource_s = float(final.rsec)
         self.metrics = JaxEngineMetrics(low.op_names, tl.ts, lag, qps,
                                         backlog, emitted, dropped, tl,
                                         ckpt_epoch=ckpt_epoch,
-                                        rollback_t=rollback_t)
+                                        rollback_t=rollback_t,
+                                        thrash_t=thrash_t,
+                                        n_rescale=n_rescale,
+                                        resource_s=resource_s)
         return self.metrics
 
 
@@ -1764,7 +2034,8 @@ def _pad_batch(batch_state: EngineState, xs: dict, n_seeds: int,
     `run_batch`, `run_mix_batch` and `run_config_batch`. `seed_axes`
     names the xs leaves carrying a seed axis (and which axis it is)."""
     if seed_axes is None:
-        seed_axes = {"kills": 0, "bfac": 0, "gate": 0, "ckage": 0}
+        seed_axes = {"kills": 0, "bfac": 0, "gate": 0, "ckage": 0,
+                     "rfac": 0}
     target = _next_pow2(n_seeds) if pad_seeds else n_seeds
     if target % n_shards:
         target = n_shards * -(-target // n_shards)
@@ -1791,7 +2062,8 @@ def _prep_batch(low: "_Lowered", specs, n_ticks: int, task_speed_override):
           # seed's success draws even under a static attempt schedule)
           "bfac": np.stack([p[1]["bfac"] for p in prepped]),
           "gate": np.stack([p[1]["gate"] for p in prepped]),
-          "ckage": np.stack([p[1]["ckage"] for p in prepped])}
+          "ckage": np.stack([p[1]["ckage"] for p in prepped]),
+          "rfac": np.stack([p[1]["rfac"] for p in prepped])}
     return batch_state, xs, tls
 
 
@@ -1832,7 +2104,9 @@ def run_batch(graph: LogicalGraph | PackedArena, seeds, *,
               seed: int = 0, pad_seeds: bool = True,
               devices: int | str | None = None,
               phase_mode: str = "auto",
-              upgrade: UpgradeConfig | None = None) -> JaxBatchMetrics:
+              upgrade: UpgradeConfig | None = None,
+              autoscale: AutoscaleConfig | None = None
+              ) -> JaxBatchMetrics:
     """Run a ``(S,)`` batch of chaos scenarios as ONE vmapped `jit` call
     (one call *per device shard* when `devices` is set).
 
@@ -1857,7 +2131,8 @@ def run_batch(graph: LogicalGraph | PackedArena, seeds, *,
     low = _Lowered(graph, n_hosts=n_hosts, dt=dt, queue_cap=queue_cap,
                    failover=failover, ckpt=ckpt, seed=seed,
                    phase_mode=phase_mode, seed_width=len(specs),
-                   upgrade=upgrade, upgrade_spec=specs[0])
+                   upgrade=upgrade, upgrade_spec=specs[0],
+                   autoscale=autoscale)
     n_ticks = int(round(duration_s / low.dt))
     batch_state, xs, tls = _prep_batch(low, specs, n_ticks,
                                        task_speed_override)
@@ -1878,11 +2153,15 @@ def run_batch(graph: LogicalGraph | PackedArena, seeds, *,
         dropped = np.asarray(final.dropped)[:n_seeds]
         ckpt_epoch = np.asarray(final.ckpt_epoch)[:n_seeds]
         rollback_t = np.asarray(final.rb_t)[:n_seeds]
+        thrash_t = np.asarray(final.thrash_t)[:n_seeds]
+        n_rescale = np.asarray(final.nact)[:n_seeds]
+        resource_s = np.asarray(final.rsec)[:n_seeds]
     return JaxBatchMetrics(low.op_names, tls[0].ts, lag, qps, backlog,
                            emitted, dropped, tls, ckpt_epoch=ckpt_epoch,
                            jobs=(low.arena.jobs if low.arena is not None
                                  else None),
-                           rollback_t=rollback_t)
+                           rollback_t=rollback_t, thrash_t=thrash_t,
+                           n_rescale=n_rescale, resource_s=resource_s)
 
 
 def run_mix_batch(graph: LogicalGraph | PackedArena, mixes, seeds, *,
@@ -1893,7 +2172,9 @@ def run_mix_batch(graph: LogicalGraph | PackedArena, mixes, seeds, *,
                   ckpt=None,
                   task_speed_override: dict[int, float] | None = None,
                   seed: int = 0, pad_seeds: bool = True,
-                  phase_mode: str = "auto") -> list[JaxBatchMetrics]:
+                  phase_mode: str = "auto",
+                  autoscale: AutoscaleConfig | None = None
+                  ) -> list[JaxBatchMetrics]:
     """Sweep an ``(M, S)`` grid of job-mix × chaos-seed scenarios in ONE
     doubly-vmapped `jit` call (the second vmap axis over job-mix configs).
 
@@ -1909,7 +2190,8 @@ def run_mix_batch(graph: LogicalGraph | PackedArena, mixes, seeds, *,
         raise ValueError("run_mix_batch requires at least one seed/spec")
     low = _Lowered(graph, n_hosts=n_hosts, dt=dt, queue_cap=queue_cap,
                    failover=failover, ckpt=ckpt, seed=seed,
-                   phase_mode=phase_mode, seed_width=len(specs))
+                   phase_mode=phase_mode, seed_width=len(specs),
+                   autoscale=autoscale)
     mixes = np.atleast_2d(np.asarray(mixes, dtype=np.float64))
     if mixes.shape[1] != low.n_jobs:
         raise ValueError(
@@ -1934,17 +2216,45 @@ def run_mix_batch(graph: LogicalGraph | PackedArena, mixes, seeds, *,
         dropped = np.asarray(final.dropped)[:, :n_seeds]
         ckpt_epoch = np.asarray(final.ckpt_epoch)[:, :n_seeds]
         rollback_t = np.asarray(final.rb_t)[:, :n_seeds]
+        thrash_t = np.asarray(final.thrash_t)[:, :n_seeds]
+        n_rescale = np.asarray(final.nact)[:, :n_seeds]
+        resource_s = np.asarray(final.rsec)[:, :n_seeds]
     jobs = low.arena.jobs if low.arena is not None else None
     return [JaxBatchMetrics(low.op_names, tls[0].ts, lag[m], qps[m],
                             backlog[m], emitted[m], dropped[m], tls,
                             ckpt_epoch=ckpt_epoch[m], jobs=jobs,
-                            rollback_t=rollback_t[m])
+                            rollback_t=rollback_t[m],
+                            thrash_t=thrash_t[m],
+                            n_rescale=n_rescale[m],
+                            resource_s=resource_s[m])
             for m in range(len(mixes))]
 
 
 # ----------------------------------------------------------------------
 # resiliency-config grid axis
 # ----------------------------------------------------------------------
+def _normalize_traffic(v) -> tuple:
+    """Normalize a config-level traffic pattern into the canonical
+    ``(diurnal_events, flash_events)`` pair of tuples. Accepts the pair
+    itself, a ``{"diurnal": ..., "flash": ...}`` dict, or a bare tuple
+    of ``(t0, ramp_s, hold_s, peak)`` flash-crowd events."""
+    if not v:
+        return ((), ())
+    if isinstance(v, dict):
+        unknown = set(v) - {"diurnal", "flash"}
+        if unknown:
+            raise ValueError(f"unknown traffic keys: {sorted(unknown)}")
+        return (tuple(tuple(e) for e in v.get("diurnal", ())),
+                tuple(tuple(e) for e in v.get("flash", ())))
+    v = tuple(v)
+    if (len(v) == 2
+            and all(isinstance(x, (list, tuple)) for x in v)
+            and all(isinstance(e, (list, tuple)) for x in v for e in x)):
+        return (tuple(tuple(e) for e in v[0]),
+                tuple(tuple(e) for e in v[1]))
+    return ((), tuple(tuple(e) for e in v))
+
+
 def normalize_config(c) -> dict:
     """Normalize one resiliency-config grid entry into
     ``{"failover", "ckpt", "qcap_scale", "sel_scale", "label"}``.
@@ -1962,10 +2272,18 @@ def normalize_config(c) -> dict:
     `UpgradeConfig` deployment drill on the config axis — its lowered
     leaves are all traced floats, so drill rows share the drill-free
     rows' compiled trace AND their pregenerated chaos timelines
-    (upgrades are in-trace only; `timeline_build_count` stays flat)."""
+    (upgrades are in-trace only; `timeline_build_count` stays flat).
+    ``traffic`` puts a traffic pattern on the config axis — canonically
+    a ``(diurnal_events, flash_events)`` pair (a dict with
+    ``diurnal``/``flash`` keys, or a bare tuple of flash-crowd events,
+    also accepted), composed into each seed spec's own pattern by tuple
+    concatenation exactly like ``brownout``; ``scaler`` puts an
+    `AutoscaleConfig` in-trace autoscaler on the config axis — like
+    upgrades, both lower to traced curves/floats, so timelines and the
+    compiled trace are untouched."""
     out = {"failover": None, "ckpt": None, "qcap_scale": 1.0,
            "sel_scale": 1.0, "brownout": (), "upgrade": None,
-           "label": None}
+           "traffic": ((), ()), "scaler": None, "label": None}
     if c is None:
         return out
     if isinstance(c, dict):
@@ -1973,6 +2291,7 @@ def normalize_config(c) -> dict:
         if unknown:
             raise ValueError(f"unknown config keys: {sorted(unknown)}")
         out.update(c)
+        out["traffic"] = _normalize_traffic(out["traffic"])
         return out
     if isinstance(c, FailoverConfig):
         out["failover"] = c
@@ -1982,6 +2301,9 @@ def normalize_config(c) -> dict:
         return out
     if isinstance(c, UpgradeConfig):
         out["upgrade"] = c
+        return out
+    if isinstance(c, AutoscaleConfig):
+        out["scaler"] = c
         return out
     if isinstance(c, tuple):
         if len(c) != 2:
@@ -2052,17 +2374,22 @@ def run_config_batch(graph: LogicalGraph | PackedArena, configs, seeds, *,
             dt=low.dt, base_failover=(codes, det, rst_s, rst_r, fx),
             base_ckpt=cfg["ckpt"],
             sel_task=low._sel_task * float(cfg["sel_scale"]))
+        # per-config in-trace autoscaler (inert leaves when cfg has none)
+        auto = lower_autoscale(
+            cfg["scaler"], n_tasks=low.plan.n_tasks, dt=low.dt,
+            is_src_task=low.tensor.is_src_task)
         pa_rows.append(low._params(
             low.plan.qcap * float(cfg["qcap_scale"]),
             low._sel * float(cfg["sel_scale"]), det, rst_s, rst_r, codes,
-            fx=fx, drill=drill))
+            fx=fx, drill=drill, autoscale=auto))
     pa = dict(pa_rows[0])
     for k in ("qcap", "sel", "detect", "restart_region", "restart_single",
               "mode_single", "mode_region", "mode_hot", "standby_switch",
               "standby_stale", "restore_base", "replay_rate",
-              "lazy_extra") + _DRILL_KEYS:
+              "lazy_extra") + _DRILL_KEYS + AUTOSCALE_KEYS:
         pa[k] = np.stack([row[k] for row in pa_rows])
     cfg_bros = [tuple(cfg["brownout"]) for cfg in norm]
+    cfg_traffics = [cfg["traffic"] for cfg in norm]
 
     def _merge_bro(sp, bro):
         """Compose config-level brownout ramps into a seed spec by tuple
@@ -2176,12 +2503,14 @@ def run_config_batch(graph: LogicalGraph | PackedArena, configs, seeds, *,
     # external-event tensors: brownout factor and ckpt age ride the
     # config axis (config ramps / per-config success histories), the MQ
     # gate is seed-only and broadcasts across configs in-trace
-    ev = [[low.event_curves(sp, tls[c][s], cfg_ramps=cfg_bros[c])
+    ev = [[low.event_curves(sp, tls[c][s], cfg_ramps=cfg_bros[c],
+                            cfg_traffic=cfg_traffics[c])
            for s, sp in enumerate(specs)] for c in range(n_cfg)]
     xs = {"t": tls[0][0].ts, "kills": kills, "ckpt": ckpt_xs,
           "bfac": np.stack([[e[0] for e in row] for row in ev]),
           "gate": np.stack([e[1] for e in ev[0]]),
-          "ckage": np.stack([[e[2] for e in row] for row in ev])}
+          "ckage": np.stack([[e[2] for e in row] for row in ev]),
+          "rfac": np.stack([[e[3] for e in row] for row in ev])}
     if devices is not None and mixes is not None:
         raise ValueError("devices= does not compose with mixes= "
                          "(shard the config grid without a mix axis)")
@@ -2190,7 +2519,7 @@ def run_config_batch(graph: LogicalGraph | PackedArena, configs, seeds, *,
                                  n_shards,
                                  seed_axes={"kills": 0 if no_ckpt else 1,
                                             "bfac": 1, "gate": 0,
-                                            "ckage": 1})
+                                            "ckage": 1, "rfac": 1})
     jobs = low.arena.jobs if low.arena is not None else None
 
     if mixes is None:
@@ -2218,6 +2547,9 @@ def run_config_batch(graph: LogicalGraph | PackedArena, configs, seeds, *,
         ckpt_ep = np.asarray(final.ckpt_epoch)[sl + (slice(None,
                                                           n_seeds),)]
         rb = np.asarray(final.rb_t)[sl + (slice(None, n_seeds),)]
+        thr = np.asarray(final.thrash_t)[sl + (slice(None, n_seeds),)]
+        nre = np.asarray(final.nact)[sl + (slice(None, n_seeds),)]
+        rsc = np.asarray(final.rsec)[sl + (slice(None, n_seeds),)]
 
     def _metrics(c, pre=()):
         ix = pre + (c,)
@@ -2225,7 +2557,8 @@ def run_config_batch(graph: LogicalGraph | PackedArena, configs, seeds, *,
                                lag[ix], qps[ix], backlog[ix],
                                emitted[ix], dropped[ix], tls[c],
                                ckpt_epoch=ckpt_ep[ix], jobs=jobs,
-                               rollback_t=rb[ix])
+                               rollback_t=rb[ix], thrash_t=thr[ix],
+                               n_rescale=nre[ix], resource_s=rsc[ix])
 
     if mixes is None:
         return [_metrics(c) for c in range(n_cfg)]

@@ -35,6 +35,32 @@ def ha_drill_spec(seed: int = 0, *, burst_t: float = 60.0,
                      mq_down=(tuple(mq_outage),))
 
 
+def traffic_drill_spec(seed: int = 0, *,
+                       diurnal=((0.35, 240.0, 0.0),),
+                       flash=((90.0, 10.0, 30.0, 3.0),),
+                       phase_s: float = 0.0,
+                       burst_t: float | None = 110.0,
+                       burst_region: int = 0,
+                       host_kill_prob_per_s: float = 0.0) -> ChaosSpec:
+    """The production traffic-dynamics drill: a diurnal load curve (an
+    ``(amp, period_s, phase_s)`` sinusoid family, scaled down from the
+    paper's 24h cycle to a sweepable horizon), a flash-crowd spike
+    ``(t0, ramp_s, hold_s, peak)`` landing mid-run, and — by default —
+    a region-correlated failure burst INSIDE the flash-crowd hold
+    window, so rescale-during-recovery and autoscaler-vs-failover
+    interactions actually exercise. All rate dynamics are deterministic
+    curves (zero extra rng draws): the same seed replays identically
+    across the numpy, dense, compact and pallas engines."""
+    burst = ((float(burst_t), burst_region),) if burst_t is not None \
+        else ()
+    return ChaosSpec(seed=seed,
+                     host_kill_prob_per_s=host_kill_prob_per_s,
+                     burst_at=burst,
+                     diurnal=tuple(tuple(d) for d in diurnal),
+                     flash_at=tuple(tuple(f) for f in flash),
+                     rate_phase_s=phase_s)
+
+
 
 def q2(parallelism: int = 8, source_rate: float = 0.8e6,
        service_rate: float = 1.2e5, partitioner: str = "rebalance",

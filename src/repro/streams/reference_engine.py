@@ -154,6 +154,10 @@ class ReferenceStreamEngine:
         # message queue is down (multiplying by 1.0 is exact, so the
         # no-outage path keeps the historical numbers bit-for-bit)
         gate = 1.0 if self.chaos.mq_available(self.t) else 0.0
+        # traffic dynamics: deterministic diurnal/flash-crowd source-rate
+        # multiplier (empty schedules → exactly 1.0, so the multiply is
+        # skipped and historical numbers stay bit-for-bit)
+        tf = self.chaos.traffic_factor(self.t)
 
         for name in order:
             op = g.op(name)
@@ -164,6 +168,8 @@ class ReferenceStreamEngine:
                 produced *= alive
                 if gate != 1.0:
                     produced = produced * gate
+                if tf != 1.0:
+                    produced = produced * tf
                 self.metrics.emitted += produced.sum()
             else:
                 cap = op.service_rate * dt * self.speed[name] * alive

@@ -53,6 +53,22 @@ def elastic_resize(params, opt_state, pspec_params, pspec_opt,
         old_n, new_mesh.size, moved, time.perf_counter() - t0)
 
 
+def resize_move_seconds(delta_units: float, *,
+                        state_bytes_per_unit: float = 64e6,
+                        bandwidth_Bps: float = 1e9,
+                        overhead_s: float = 0.0) -> float:
+    """Deterministic reshard move-cost model: seconds to move the state
+    behind a resize of ``|delta_units|`` parallelism units.
+
+    Mirrors `elastic_resize`'s ``moved_bytes`` accounting (bytes follow
+    the resized capacity share; transfer is bandwidth-bound over DCN) as
+    a pure closed form, so traced lowerings (the stream engines'
+    in-trace autoscaler) can charge rescale downtime without a device
+    round-trip. Consumes NO rng draws."""
+    moved = abs(float(delta_units)) * float(state_bytes_per_unit)
+    return float(overhead_s) + moved / max(float(bandwidth_Bps), 1e-9)
+
+
 # ----------------------------------------------------------------------
 # int8 compression with error feedback
 # ----------------------------------------------------------------------
