@@ -1,0 +1,166 @@
+"""Sweep-as-a-service serving benchmark: time-to-first-result vs the
+monolithic `sweep_configs` wall on a (C=16, S=64) deployment-drill
+cube, sustained request throughput through `SweepService`, the shared
+jit-cache hit rate across concurrent requests, and the host-prep /
+device-compute overlap efficiency of the double-buffered chunk
+pipeline.
+
+Emits the usual CSV rows through benchmarks/run.py and writes
+``results/bench_serve.json`` for the perf trajectory. Quick mode
+(REPRO_BENCH_QUICK=1) shrinks the cube and horizon so the module runs
+in a few seconds on CPU — and, per the harness contract, skips the
+JSON write.
+
+The full run enforces the serving acceptance bars loudly: TTFR must be
+<= 0.5x the warm monolithic wall, the concurrent requests must share a
+compiled trace (cache hits > 0), and the chunked cube must be
+bit-identical to the monolithic one.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import pathlib
+import time
+
+import numpy as np
+
+try:
+    from benchmarks.run import quick_mode
+except ImportError:      # standalone: sys.path[0] is benchmarks/
+    from run import quick_mode
+from repro.core.chaos import ChaosSpec
+from repro.core.startup import StartupConfig
+from repro.launch.serve import SweepService
+from repro.streams import nexmark
+from repro.streams.chaos_sweep import deployment_drill
+from repro.streams.engine import FailoverConfig, UpgradeConfig
+
+BASE_SPEC = ChaosSpec(host_kill_prob_per_s=0.001,
+                      zk_down=((30.0, 34.0),), hdfs_down=((32.0, 38.0),))
+FO = FailoverConfig(mode="single_task", detect_s=1.0, single_restart_s=2.0)
+
+SURFACES = ("recovery", "slo", "lost", "rollback_t")
+
+
+def _policies(quick: bool) -> dict[str, UpgradeConfig]:
+    drill = UpgradeConfig(t_upgrade_s=10.0, wave_stagger_s=1.0,
+                          canary_sel_scale=1.5, rollback_window_s=4.0)
+    if quick:
+        return {"hot": drill}
+    # 4 policies x 2 fracs x 2 thresholds = the C=16 acceptance cube
+    return {
+        "hot": dataclasses.replace(drill, hot=True),
+        "hot+fast": dataclasses.replace(drill, hot=True,
+                                        rollback_window_s=2.0),
+        "cold": dataclasses.replace(drill, hot=False),
+        "cold+accel": dataclasses.replace(drill, hot=False,
+                                          startup=StartupConfig()),
+    }
+
+
+def run():
+    quick = quick_mode()
+    n_seeds = 8 if quick else 64
+    chunk = 2 if quick else 8
+    duration = 60.0 if quick else 90.0
+    fleet = nexmark.drill_fleet(n_jobs=2 if quick else 4, queue_cap=1e9)
+    kw = dict(base_spec=BASE_SPEC, duration_s=duration,
+              policies=_policies(quick), canary_fracs=(0.25, 0.5),
+              rollback_thresholds=(math.inf, 100.0), failover=FO,
+              n_hosts=16)
+
+    # -- monolithic baseline: cold (compile) then warm ---------------
+    cold_t0 = time.perf_counter()
+    deployment_drill(fleet, range(n_seeds), **kw)
+    cold_wall = time.perf_counter() - cold_t0
+    mono = deployment_drill(fleet, range(n_seeds), **kw)
+    mono_wall = mono.grid.wall_s
+    n_cells = mono.rollback_t.size
+    n_cfg = n_cells // n_seeds
+    # warm the chunk-sized seed bucket too: chunks pad to their own pow2
+    # bucket, a different trace than the full-width monolithic pass —
+    # TTFR is a serving-latency bar, measured on warm traces like the
+    # monolithic wall it is compared against
+    deployment_drill(fleet, range(n_seeds), seed_chunk=chunk, **kw)
+
+    # -- chunked service request: TTFR + overlap + parity ------------
+    with SweepService(workers=2, default_seed_chunk=chunk) as svc:
+        job = svc.submit("deployment_drill", fleet, range(n_seeds),
+                         label="ttfr", **kw)
+        cube = job.result(timeout=3600)
+        ttfr, chunked_wall = job.stats["ttfr_s"], job.stats["wall_s"]
+        prep_s, device_s = job.stats["prep_s"], job.stats["device_s"]
+
+        # -- concurrent pair: one compiled trace, sustained rate -----
+        t0 = time.perf_counter()
+        pair = [svc.submit("deployment_drill", fleet, range(n_seeds),
+                           label=f"pair-{i}", **kw) for i in range(2)]
+        for j in pair:
+            j.result(timeout=3600)
+        pair_wall = time.perf_counter() - t0
+        stats = svc.stats()
+
+    parity = all(np.array_equal(getattr(mono, s), getattr(cube, s))
+                 for s in SURFACES)
+    hits = stats["cache_hits"]
+    ttfr_ratio = ttfr / mono_wall
+    overlap = device_s / chunked_wall     # device-busy fraction
+    req_per_s = len(pair) / pair_wall
+
+    if not parity:
+        raise AssertionError("chunked service cube drifted from the "
+                             "monolithic deployment_drill")
+    if hits < 1:
+        raise AssertionError("concurrent requests failed to share a "
+                             f"compiled trace (hits={hits})")
+    if not quick and ttfr_ratio > 0.5:
+        raise AssertionError(f"TTFR {ttfr:.2f}s is {ttfr_ratio:.2f}x "
+                             f"the monolithic wall {mono_wall:.2f}s "
+                             "(bar: <= 0.5x)")
+
+    rows = [
+        (f"serve/ttfr/{n_cfg}x{n_seeds}cube", 1e6 * ttfr,
+         f"ttfr_s={ttfr:.2f};mono_wall_s={mono_wall:.2f};"
+         f"ttfr_ratio={ttfr_ratio:.2f};chunk={chunk};"
+         f"overlap={overlap:.2f};parity={int(parity)}"),
+        (f"serve/sustained/{n_cfg}x{n_seeds}cube",
+         1e6 * pair_wall / len(pair),
+         f"req_s={req_per_s:.2f};cells_s={n_cells * len(pair) / pair_wall:.0f};"
+         f"cache_hits={hits};cache_misses={stats['cache_misses']}"),
+    ]
+    if not quick:   # quick smoke must not overwrite the tracked record
+        record = {
+            "n_configs": n_cfg, "n_seeds": n_seeds,
+            "seed_chunk": chunk, "duration_s": duration,
+            "cold_wall_s": cold_wall, "mono_wall_s": mono_wall,
+            "chunked_wall_s": chunked_wall,
+            "ttfr_s": ttfr, "ttfr_ratio": round(ttfr_ratio, 3),
+            "ttfr_speedup": round(mono_wall / ttfr, 2),
+            "prep_s": prep_s, "device_s": device_s,
+            "overlap_efficiency": round(overlap, 3),
+            "concurrent_requests": len(pair),
+            "cache_hits": hits, "cache_misses": stats["cache_misses"],
+            "shared_trace": hits >= 1,
+            "requests_per_s": round(req_per_s, 3),
+            "cells_per_s": round(n_cells / mono_wall, 1),
+            "parity_ok": parity,
+            "note": ("ttfr = first (C, S_chunk) partial surface out of "
+                     "SweepService vs the warm one-pass sweep_configs "
+                     "wall; overlap = device_s / chunked wall (double-"
+                     "buffered host-prep/device-compute pipeline); "
+                     "pair = 2 concurrent requests sharing one "
+                     "compiled trace via the process-global fn cache"),
+        }
+        out = pathlib.Path("results")
+        out.mkdir(parents=True, exist_ok=True)
+        (out / "bench_serve.json").write_text(json.dumps(record, indent=1))
+        from benchmarks.bench_sweep_scale import write_summary
+        write_summary()
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

@@ -256,6 +256,12 @@ def write_summary() -> dict:
     if tk.get("mega"):
         heads["mega_job_scenarios_per_pass"] = tk["mega"].get(
             "job_scenarios")
+    sv = summary.get("bench_serve", {})
+    if isinstance(sv, dict) and "ttfr_speedup" in sv:
+        heads["serve_ttfr_speedup"] = sv["ttfr_speedup"]
+        heads["serve_overlap_efficiency"] = sv.get("overlap_efficiency")
+        heads["serve_requests_per_s"] = sv.get("requests_per_s")
+        heads["serve_shared_trace"] = sv.get("shared_trace")
     payload = {"headlines": heads, "sources": sorted(summary)}
     (RESULTS / "bench_summary.json").write_text(
         json.dumps(payload, indent=2))

@@ -39,6 +39,7 @@ MODULES = [
     "benchmarks.bench_replication",         # §IV-A hybrid replication cube
     "benchmarks.bench_deployment",          # canary/rolling deployment drills
     "benchmarks.bench_traffic",             # traffic dynamics + DS2 autoscaling
+    "benchmarks.bench_serve",               # sweep-as-a-service TTFR + throughput
     "benchmarks.bench_kernels",             # §V-C micro benchmarking
 ]
 
@@ -52,6 +53,7 @@ QUICK_MODULES = [
     "benchmarks.bench_replication",         # hybrid replication cube
     "benchmarks.bench_deployment",          # canary/rolling deployment drills
     "benchmarks.bench_traffic",             # traffic dynamics + DS2 autoscaling
+    "benchmarks.bench_serve",               # sweep-as-a-service TTFR + throughput
     "benchmarks.bench_weakhash",            # WeakHash assignment path
     "benchmarks.bench_hotupdate",           # pure-python, fast
 ]

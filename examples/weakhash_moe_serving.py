@@ -12,7 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 
 subprocess.run(
-    [sys.executable, "-m", "repro.launch.serve", "--arch", "arctic-480b",
+    [sys.executable, "-m", "repro.launch.model_serve", "--arch", "arctic-480b",
      "--requests", "4", "--prompt-len", "32", "--decode-steps", "8",
      "--lazyload"],
     check=True)

@@ -22,6 +22,13 @@
 #                                     # tick; non-zero exit on timeline-rebuild fallback OR
 #                                     # on the oscillation drill failing to latch the
 #                                     # thrash guard)
+#   scripts/ci.sh --serve-smoke       # also boot the in-process SweepService: two
+#                                     # concurrent deployment-drill requests + a traffic
+#                                     # sweep with incremental chunk results; non-zero exit
+#                                     # if the first chunk fails to land before the slowest
+#                                     # request completes, if the requests fail to share a
+#                                     # compiled trace (zero cache hits), or on any
+#                                     # chunked-vs-monolithic parity drift
 #
 # Smoke targets fail LOUDLY on silent lowering fallbacks: the sparse
 # smoke exports REPRO_REQUIRE_PHASE_MODE=compact (the engine refuses to
@@ -87,6 +94,11 @@ if [[ "${1:-}" == "--traffic-smoke" ]]; then
   echo "== traffic smoke: rate-schedule cube (DS2 autoscaling + thrash drill), compact tick =="
   REPRO_REQUIRE_PHASE_MODE=compact \
     python examples/traffic_sweep.py --seeds 8 --duration 90
+fi
+
+if [[ "${1:-}" == "--serve-smoke" ]]; then
+  echo "== serve smoke: SweepService, 2 concurrent drills + traffic sweep, chunked =="
+  python examples/serve_sweep.py --seeds 8 --chunk 4 --duration 60
 fi
 
 echo "CI OK"

@@ -845,73 +845,99 @@ def _grid_kill_segment(st: _SeedStream, off: int, lo: int, hi: int,
     return off, {i: sorted(set(hs)) for i, hs in sorted(events.items())}
 
 
-def build_grid_timelines(specs, configs, *, n_ticks: int, dt: float,
-                         n_hosts: int, task_host: np.ndarray,
-                         task_region: np.ndarray | None = None,
-                         regions: list | None = None,
-                         job_of_task: np.ndarray | None = None) -> list:
-    """Timelines for a (config × seed) grid WITHOUT per-(config, seed)
-    host replays: the chaos draw streams are materialized once per seed
-    (`_SeedStream`), then each config's checkpoint attempt schedule is
-    refitted onto them with vectorized offset indexing — kill blocks
-    between attempts land as one reshape+compare, storage draws as one
-    batched gather per attempt, and only the rare kill events and bad
-    checkpoint regions walk host loops.
+class GridTimelineBuilder:
+    """Chunk-capable (config × seed) timeline refit — the host-prep half
+    of seed-chunked grid sweeps.
 
-    `specs` is one `ChaosSpec` per seed. `configs` is one dict per grid
-    row with keys ``failover_mode`` (name or per-task code vector),
-    ``detect_s`` / ``region_restart_s`` / ``single_restart_s`` /
-    ``standby_switch_s`` / ``standby_staleness_s`` / ``restore_base_s``
-    / ``replay_rate`` / ``lazy_extra_s`` (scalars or per-task vectors),
-    ``ckpt_interval_s`` / ``ckpt_mode`` / ``ckpt_upload_s`` /
-    ``ckpt_retry`` (single-coordinator checkpoint parameters; a None
-    interval disables checkpointing for that row — per-job coordinator
-    sequences are NOT supported here, callers fall back to per-config
-    `build_chaos_timeline`), and ``brownout_at`` (config-level brownout
-    ramps APPENDED to each seed spec's own ramps — deterministic, so
-    brownout severity rides the config axis without any extra draws).
+    Construction materializes only the *seed-static* state: per-seed
+    `_SeedStream` draw buffers (created lazily, on first touch of each
+    seed), scheduled-kill buckets and storage-draw parameters. Any seed
+    slice of the grid is then built on demand via `chunk(lo, hi)` —
+    per-seed stream offsets restart from each stream's own base, so a
+    chunk's timelines are bit-identical to the same rows of a one-shot
+    `build_grid_timelines` call (every per-seed quantity — draw offsets,
+    downtime horizons, last-success times — is seed-independent). This
+    is what lets `jax_engine` overlap chunk ``k+1``'s host prep with
+    chunk ``k``'s device pass without any per-chunk host replays:
+    `timeline_build_count()` stays flat no matter how the seed axis is
+    chunked."""
 
-    Returns ``[C][S]`` `ChaosTimeline`s bit-identical to
-    ``build_chaos_timeline(replace(specs[s], brownout_at=specs[s]
-    .brownout_at + configs[c]["brownout_at"]), **rest_of_row)`` — pinned
-    by tests/test_sparse_sweep.py — while `timeline_build_count()` stays
-    flat."""
-    task_host = np.asarray(task_host)
-    n_tasks = len(task_host)
-    streams = [_SeedStream(sp, task_host) for sp in specs]
-    _TIMELINE_STATS["grid_replays"] += len(configs)
+    def __init__(self, specs, configs, *, n_ticks: int, dt: float,
+                 n_hosts: int, task_host: np.ndarray,
+                 task_region: np.ndarray | None = None,
+                 regions: list | None = None,
+                 job_of_task: np.ndarray | None = None):
+        self.specs = list(specs)
+        self.configs = list(configs)
+        self.task_host = np.asarray(task_host)
+        self.task_region = task_region
+        self.job_of_task = job_of_task
+        self.n_ticks = n_ticks
+        self.dt = dt
+        self.n_hosts = n_hosts
+        self.n_tasks = len(self.task_host)
+        self._streams: list[_SeedStream | None] = [None] * len(self.specs)
+        self._counted = False
 
-    # tick-start times via the same float accumulation as the replay
-    ts = np.zeros(n_ticks)
-    t = 0.0
-    for i in range(n_ticks):
-        ts[i] = t
-        t = t + dt
+        # tick-start times via the same float accumulation as the replay
+        ts = np.zeros(n_ticks)
+        t = 0.0
+        for i in range(n_ticks):
+            ts[i] = t
+            t = t + dt
+        self.ts = ts
 
-    # per-seed scheduled kills, bucketed by tick (window t0 < t <= t1) —
-    # region-correlated bursts expand to host kills and merge right here,
-    # exactly like ChaosEngine.schedule_kills feeds step_kills
-    scheds = []
-    for sp in specs:
-        sched: dict[int, list] = {}
-        for (tk, h) in (tuple(sp.host_kill_at)
-                        + burst_kill_schedule(sp.burst_at, task_host,
-                                              task_region)):
-            w = np.nonzero((ts < tk) & (tk <= ts + dt))[0]
-            if len(w):
-                sched.setdefault(int(w[0]), []).append(int(h))
-        scheds.append(sched)
+        # per-seed scheduled kills, bucketed by tick (window t0 < t <=
+        # t1) — region-correlated bursts expand to host kills and merge
+        # right here, exactly like ChaosEngine.schedule_kills feeds
+        # step_kills
+        self.scheds = []
+        for sp in self.specs:
+            sched: dict[int, list] = {}
+            for (tk, h) in (tuple(sp.host_kill_at)
+                            + burst_kill_schedule(sp.burst_at,
+                                                  self.task_host,
+                                                  task_region)):
+                w = np.nonzero((ts < tk) & (tk <= ts + dt))[0]
+                if len(w):
+                    sched.setdefault(int(w[0]), []).append(int(h))
+            self.scheds.append(sched)
 
-    # region row-tables for the vectorized bad-region test
-    regions = list(regions or ())
-    reg_arrs = [np.fromiter(sorted(r), int, len(r)) for r in regions]
+        # region row-tables for the vectorized bad-region test
+        regions = list(regions or ())
+        self.reg_arrs = [np.fromiter(sorted(r), int, len(r))
+                         for r in regions]
 
-    # seed-static storage-draw parameters (shared by every config row)
-    probs = np.array([st.spec.storage_slow_prob for st in streams])
-    facs = np.array([st.spec.storage_slow_factor for st in streams])
+        # seed-static storage-draw parameters (shared by every config)
+        self.probs = np.array([sp.storage_slow_prob for sp in self.specs])
+        self.facs = np.array([sp.storage_slow_factor
+                              for sp in self.specs])
 
-    out = []
-    for cfg in configs:
+    def _stream(self, s: int) -> _SeedStream:
+        if self._streams[s] is None:
+            self._streams[s] = _SeedStream(self.specs[s], self.task_host)
+        return self._streams[s]
+
+    def chunk(self, seed_lo: int, seed_hi: int) -> list:
+        """``[C][seed_hi - seed_lo]`` timelines for the seed slice —
+        bit-identical to the same columns of the full grid."""
+        if not self._counted:
+            # one grid replay per config regardless of chunking — the
+            # accounting a one-shot build_grid_timelines call records
+            _TIMELINE_STATS["grid_replays"] += len(self.configs)
+            self._counted = True
+        return [self._chunk_row(cfg, seed_lo, seed_hi)
+                for cfg in self.configs]
+
+    def _chunk_row(self, cfg: dict, seed_lo: int, seed_hi: int) -> list:
+        n_tasks, n_ticks = self.n_tasks, self.n_ticks
+        ts, dt, n_hosts = self.ts, self.dt, self.n_hosts
+        task_host, task_region = self.task_host, self.task_region
+        job_of_task, reg_arrs = self.job_of_task, self.reg_arrs
+        streams = [self._stream(s) for s in range(seed_lo, seed_hi)]
+        scheds = self.scheds[seed_lo:seed_hi]
+        probs = self.probs[seed_lo:seed_hi]
+        facs = self.facs[seed_lo:seed_hi]
         mode_codes = failover_mode_codes(cfg.get("failover_mode",
                                                  "region"), n_tasks)
         down_s = (_per_task(cfg.get("detect_s", 1.0), n_tasks)
@@ -1032,8 +1058,45 @@ def build_grid_timelines(specs, configs, *, n_ticks: int, dt: float,
                 dt, n_ticks, ts, streams[s].task_speed, kills[s],
                 ckpt_at.copy(), ok_by_seed[s], n_att, succ,
                 n_att - succ, recs[s], ckpt_by_job=None))
-        out.append(row)
-    return out
+        return row
+
+
+def build_grid_timelines(specs, configs, *, n_ticks: int, dt: float,
+                         n_hosts: int, task_host: np.ndarray,
+                         task_region: np.ndarray | None = None,
+                         regions: list | None = None,
+                         job_of_task: np.ndarray | None = None) -> list:
+    """Timelines for a (config × seed) grid WITHOUT per-(config, seed)
+    host replays: the chaos draw streams are materialized once per seed
+    (`_SeedStream`), then each config's checkpoint attempt schedule is
+    refitted onto them with vectorized offset indexing — kill blocks
+    between attempts land as one reshape+compare, storage draws as one
+    batched gather per attempt, and only the rare kill events and bad
+    checkpoint regions walk host loops.
+
+    `specs` is one `ChaosSpec` per seed. `configs` is one dict per grid
+    row with keys ``failover_mode`` (name or per-task code vector),
+    ``detect_s`` / ``region_restart_s`` / ``single_restart_s`` /
+    ``standby_switch_s`` / ``standby_staleness_s`` / ``restore_base_s``
+    / ``replay_rate`` / ``lazy_extra_s`` (scalars or per-task vectors),
+    ``ckpt_interval_s`` / ``ckpt_mode`` / ``ckpt_upload_s`` /
+    ``ckpt_retry`` (single-coordinator checkpoint parameters; a None
+    interval disables checkpointing for that row — per-job coordinator
+    sequences are NOT supported here, callers fall back to per-config
+    `build_chaos_timeline`), and ``brownout_at`` (config-level brownout
+    ramps APPENDED to each seed spec's own ramps — deterministic, so
+    brownout severity rides the config axis without any extra draws).
+
+    Returns ``[C][S]`` `ChaosTimeline`s bit-identical to
+    ``build_chaos_timeline(replace(specs[s], brownout_at=specs[s]
+    .brownout_at + configs[c]["brownout_at"]), **rest_of_row)`` — pinned
+    by tests/test_sparse_sweep.py — while `timeline_build_count()` stays
+    flat. Seed-chunked callers use `GridTimelineBuilder` directly; this
+    is its full-range spelling."""
+    return GridTimelineBuilder(
+        specs, configs, n_ticks=n_ticks, dt=dt, n_hosts=n_hosts,
+        task_host=task_host, task_region=task_region, regions=regions,
+        job_of_task=job_of_task).chunk(0, len(list(specs)))
 
 
 # ----------------------------------------------------------------------

@@ -1,113 +1,388 @@
-"""End-to-end serving driver: prefill a batch of requests, decode with the
-KV/SSM caches, with State-LazyLoad restore and hybrid replication wired in.
+"""Sweep-as-a-service: a thread-backed job queue over the chaos-sweep
+drivers with incremental per-chunk results and a shared jit cache.
 
-Example:
-  PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x22b --smoke \
-      --requests 8 --prompt-len 64 --decode-steps 32 --lazyload
+StreamShield's deployment pipeline treats resiliency sweeps as a release
+gate — "can this config ship?" — which needs a *service*, not a batch
+script: requests arrive concurrently, callers want the first partial
+surface now (not the full cube later), and same-shaped requests must
+not re-trace. `SweepService` provides exactly that on top of
+`streams.chaos_sweep`:
+
+* **Job queue.** `submit(kind, graph, seeds, **kwargs)` enqueues one of
+  the five request kinds — ``"sweep"``, ``"sweep_configs"``,
+  ``"replication_tradeoff"``, ``"deployment_drill"`` (the flagship
+  release-gate cube), ``"traffic_sweep"`` — and returns a `SweepJob`
+  immediately; a small worker pool drains the queue.
+* **Incremental results.** Each request executes in seed-chunked device
+  passes (`seed_chunk=`, driver-side `on_chunk=`): as every ``(C,
+  S_chunk)`` chunk lands it is published to the job's replayable chunk
+  buffer, so ANY number of subscribers can iterate `SweepJob.chunks()`
+  — late subscribers replay the history first (the Ray buffered-
+  publisher idiom), early ones block until the next chunk or the final
+  result. Time-to-first-result is one chunk's wall time instead of the
+  whole cube's; the concatenated final cube is bit-identical to the
+  monolithic call (`jax_engine` chunking contract).
+* **Shared trace cache.** Compiled traces key on (plan digest / bucket
+  signature, grid shape, phase mode) — never on request identity — so
+  concurrent requests over same-shaped plans share ONE process-global
+  jit cache (`jax_engine._cache_get` under one lock). Per-request
+  hit/miss counters land in `SweepJob.stats` via the thread-local
+  `scoped_cache_stats`; one-trace-across-requests is pinned by
+  tests/test_sweep_service.py.
+* **Pipelined prep.** Host-side timeline prep for chunk k+1 overlaps
+  device compute for chunk k (`jax_engine.run_chunks`' double-buffered
+  lane); the measured split rides each job's ``prep_s`` / ``device_s``.
+* **Pallas downgrade.** ``phase_mode="pallas"`` + ``devices=`` has no
+  sharded lowering; instead of surfacing the boundary error the service
+  routes the request to a single-device *chunked* plan up front and
+  records the downgrade reason in ``stats["downgrade"]``.
+
+Example::
+
+    with SweepService(workers=2) as svc:
+        job = svc.submit("deployment_drill", graph, range(64),
+                         seed_chunk=8, base_spec=spec, duration_s=120.0,
+                         policies=policies, failover=fo)
+        for chunk in job.chunks():       # partial (C, S_chunk) surfaces
+            gate.update(chunk.recovery_surface)
+        cube = job.result()              # == the monolithic cube
+
+CLI smoke (one drill request, incremental chunk lines)::
+
+    PYTHONPATH=src python -m repro.launch.serve --seeds 16 --chunk 4
+
+The old model-serving driver that seeded this module lives on as
+`repro.launch.model_serve`.
 """
 from __future__ import annotations
 
-import argparse
-import json
-import pathlib
+import dataclasses
+import itertools
+import queue
+import threading
 import time
 
-import jax
-import jax.numpy as jnp
+from repro.streams import chaos_sweep
+from repro.streams.jax_engine import scoped_cache_stats, trace_cache_stats
 
-from repro.configs import base as cfg_base
-from repro.configs import registry
-from repro.ckpt.storage import SimHDFS
-from repro.core import regions as R
-from repro.core.chaos import ChaosEngine
-from repro.core.clock import WallClock
-from repro.core.lazyload import LazyRestorer
-from repro.core.region_checkpoint import RegionCheckpointer
-from repro.dist.sharding import NO_SHARDING
-from repro.models import build
+#: request kind → driver. Every driver has signature
+#: ``fn(graph, seeds, *, ..., seed_chunk=None, on_chunk=None)`` (the
+#: cube wrappers forward both through ``**sweep_kw``).
+KINDS = {
+    "sweep": chaos_sweep.sweep,
+    "sweep_configs": chaos_sweep.sweep_configs,
+    "replication_tradeoff": chaos_sweep.replication_tradeoff,
+    "deployment_drill": chaos_sweep.deployment_drill,
+    "traffic_sweep": chaos_sweep.traffic_sweep,
+}
 
 
-def main():
+@dataclasses.dataclass
+class SweepRequest:
+    """One queued sweep request: a driver kind, its (graph, seeds)
+    positional payload and the driver kwargs. ``seed_chunk`` selects the
+    chunked pipeline (None = monolithic single pass — still one
+    published "chunk"); ``label`` names the job in stats."""
+    kind: str
+    graph: object
+    seeds: object
+    kwargs: dict = dataclasses.field(default_factory=dict)
+    seed_chunk: int | None = None
+    label: str | None = None
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown request kind {self.kind!r} "
+                             f"(one of {sorted(KINDS)})")
+
+
+class SweepJob:
+    """Handle for a submitted request: a replayable chunk buffer plus
+    the final result.
+
+    `chunks()` yields `chaos_sweep.SweepChunk`s in landing order and is
+    safe for ANY number of concurrent consumers — each iterator keeps
+    its own cursor over the buffered history (late subscribers replay
+    from chunk 0) and blocks on the job's condition for chunks that
+    have not landed yet. `result()` blocks until the driver returns and
+    re-raises the driver's exception on failure. `stats` carries the
+    service-side telemetry: state, queue/run/total wall, time-to-first-
+    result, prep/device split, per-request trace-cache hits/misses and
+    any pallas downgrade reason."""
+
+    def __init__(self, job_id: int, request: SweepRequest):
+        self.id = job_id
+        self.request = request
+        self._cond = threading.Condition()
+        self._chunks: list = []
+        self._done = False
+        self._error: BaseException | None = None
+        self._result = None
+        self.stats: dict = {"state": "queued", "chunks": 0,
+                            "ttfr_s": None, "wall_s": None,
+                            "downgrade": None}
+
+    # -- producer side (service worker) --------------------------------
+    def _publish(self, chunk) -> None:
+        with self._cond:
+            self._chunks.append(chunk)
+            self.stats["chunks"] = len(self._chunks)
+            self._cond.notify_all()
+
+    def _finish(self, result=None, error: BaseException | None = None
+                ) -> None:
+        with self._cond:
+            self._result = result
+            self._error = error
+            self._done = True
+            self.stats["state"] = "failed" if error else "done"
+            self._cond.notify_all()
+
+    # -- consumer side --------------------------------------------------
+    def chunks(self, timeout: float | None = None):
+        """Yield every `SweepChunk` in landing order; returns when the
+        job finishes (raises its error if it failed). `timeout` bounds
+        each wait, raising TimeoutError on expiry."""
+        i = 0
+        while True:
+            with self._cond:
+                while i >= len(self._chunks) and not self._done:
+                    if not self._cond.wait(timeout):
+                        raise TimeoutError(
+                            f"job {self.id}: no chunk within {timeout}s")
+                if i < len(self._chunks):
+                    chunk = self._chunks[i]
+                    i += 1
+                else:
+                    if self._error is not None:
+                        raise self._error
+                    return
+            yield chunk
+
+    def first_chunk(self, timeout: float | None = None):
+        """Block until the first chunk lands and return it."""
+        return next(iter(self.chunks(timeout)))
+
+    def result(self, timeout: float | None = None):
+        """Block until the driver returns; the full sweep/cube result
+        (bit-identical to the monolithic call)."""
+        with self._cond:
+            if not self._cond.wait_for(lambda: self._done, timeout):
+                raise TimeoutError(f"job {self.id}: not done "
+                                   f"within {timeout}s")
+            if self._error is not None:
+                raise self._error
+            return self._result
+
+    def done(self) -> bool:
+        with self._cond:
+            return self._done
+
+
+def _grid_of(result):
+    """The underlying `SweepResult`/`ConfigSweepResult` of any driver's
+    return (cube wrappers carry it as ``.grid``)."""
+    return getattr(result, "grid", result)
+
+
+class SweepService:
+    """Thread-backed sweep service: a FIFO request queue drained by
+    `workers` daemon threads, every job chunk-published as it executes.
+
+    All workers share the process-global jit caches, so concurrent
+    same-shaped requests compile once and hit thereafter; per-request
+    attribution comes from `scoped_cache_stats` (thread-local counters
+    around each driver call). Use as a context manager or call
+    `shutdown()`; `stats()` aggregates job telemetry plus the
+    process-wide `trace_cache_stats()`."""
+
+    def __init__(self, workers: int = 2,
+                 default_seed_chunk: int | None = None):
+        self.default_seed_chunk = default_seed_chunk
+        self._queue: queue.Queue = queue.Queue()
+        self._jobs: dict[int, SweepJob] = {}
+        self._ids = itertools.count()
+        self._lock = threading.Lock()
+        self._workers = [threading.Thread(target=self._worker,
+                                          name=f"sweep-worker-{i}",
+                                          daemon=True)
+                         for i in range(max(1, int(workers)))]
+        for t in self._workers:
+            t.start()
+
+    # -- submission ------------------------------------------------------
+    def submit(self, kind: str, graph, seeds, *,
+               seed_chunk: int | None = None, label: str | None = None,
+               **kwargs) -> SweepJob:
+        """Enqueue a sweep request and return its `SweepJob` handle
+        immediately. `kind` is one of `KINDS`; `kwargs` go to the
+        driver verbatim (``base_spec``, ``duration_s``, ``policies``,
+        ...). ``seed_chunk`` falls back to the service default."""
+        return self.submit_request(SweepRequest(
+            kind, graph, seeds, kwargs=kwargs,
+            seed_chunk=(seed_chunk if seed_chunk is not None
+                        else self.default_seed_chunk),
+            label=label))
+
+    def submit_request(self, request: SweepRequest) -> SweepJob:
+        with self._lock:
+            job = SweepJob(next(self._ids), request)
+            self._jobs[job.id] = job
+        job.stats["submitted_s"] = time.perf_counter()
+        self._queue.put(job)
+        return job
+
+    def job(self, job_id: int) -> SweepJob:
+        with self._lock:
+            return self._jobs[job_id]
+
+    def jobs(self) -> list[SweepJob]:
+        with self._lock:
+            return list(self._jobs.values())
+
+    # -- execution -------------------------------------------------------
+    def _worker(self) -> None:
+        while True:
+            job = self._queue.get()
+            if job is None:
+                return
+            try:
+                self._run(job)
+            finally:
+                self._queue.task_done()
+
+    def _run(self, job: SweepJob) -> None:
+        req = job.request
+        kwargs = dict(req.kwargs)
+        seed_chunk = req.seed_chunk
+        seeds = list(req.seeds)
+
+        # pallas + devices has no sharded lowering: downgrade to a
+        # single-device chunked plan up front (instead of surfacing
+        # `jax_engine._check_pallas_devices`'s boundary error) and
+        # record why — the chunking bounds per-pass memory, which is
+        # what devices= was presumably for
+        if (kwargs.get("devices") is not None
+                and kwargs.get("phase_mode") == "pallas"):
+            if seed_chunk is None:
+                seed_chunk = max(1, min(16, len(seeds)))
+            job.stats["downgrade"] = (
+                f"pallas phase mode has no devices= sharding (native "
+                f"seed batching); rerouted devices="
+                f"{kwargs['devices']!r} -> single-device chunked plan "
+                f"(seed_chunk={seed_chunk})")
+            kwargs["devices"] = None
+
+        job.stats["state"] = "running"
+        t0 = time.perf_counter()
+        job.stats["queued_s"] = t0 - job.stats.pop("submitted_s", t0)
+
+        def publish(chunk):
+            if job.stats["ttfr_s"] is None:
+                job.stats["ttfr_s"] = time.perf_counter() - t0
+            job._publish(chunk)
+
+        try:
+            # sweep_configs is the one driver with a second positional
+            # (the config grid) — accept it as the `configs` kwarg
+            args = (req.graph, seeds)
+            if req.kind == "sweep_configs":
+                args = (req.graph, kwargs.pop("configs"), seeds)
+            with scoped_cache_stats() as counts:
+                result = KINDS[req.kind](*args, seed_chunk=seed_chunk,
+                                         on_chunk=publish, **kwargs)
+        except BaseException as exc:              # noqa: BLE001
+            job.stats["wall_s"] = time.perf_counter() - t0
+            job._finish(error=exc)
+            return
+        wall = time.perf_counter() - t0
+        grid = _grid_of(result)
+        job.stats.update(
+            wall_s=wall,
+            ttfr_s=(job.stats["ttfr_s"] if job.stats["ttfr_s"]
+                    is not None else wall),
+            prep_s=getattr(grid, "prep_s", 0.0),
+            device_s=getattr(grid, "device_s", 0.0),
+            cache_hits=counts["hits"], cache_misses=counts["misses"])
+        job._finish(result=result)
+
+    # -- lifecycle / telemetry ------------------------------------------
+    def shutdown(self, wait: bool = True) -> None:
+        for _ in self._workers:
+            self._queue.put(None)
+        if wait:
+            for t in self._workers:
+                t.join()
+
+    def stats(self) -> dict:
+        """Service-level telemetry: per-job stats plus the process-wide
+        trace-cache counters every request shares."""
+        jobs = self.jobs()
+        done = [j for j in jobs if j.stats["state"] == "done"]
+        return {
+            "jobs": {j.id: dict(j.stats, kind=j.request.kind,
+                                label=j.request.label) for j in jobs},
+            "completed": len(done),
+            "trace_cache": trace_cache_stats(),
+            "cache_hits": sum(j.stats.get("cache_hits", 0)
+                              for j in done),
+            "cache_misses": sum(j.stats.get("cache_misses", 0)
+                                for j in done),
+        }
+
+    def __enter__(self) -> "SweepService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()
+
+
+def main() -> None:
+    """CLI smoke: one deployment-drill request through the service,
+    chunk lines printed as they land."""
+    import argparse
+    import json
+    import math
+
+    from repro.core.chaos import ChaosSpec
+    from repro.streams import nexmark
+    from repro.streams.engine import FailoverConfig, UpgradeConfig
+
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="mixtral-8x22b",
-                    choices=sorted(registry.ARCHS))
-    ap.add_argument("--smoke", action="store_true", default=True)
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--decode-steps", type=int, default=32)
-    ap.add_argument("--lazyload", action="store_true")
-    ap.add_argument("--ckpt-dir", default="/tmp/repro-serve-ckpt")
-    ap.add_argument("--out", default="results/serve_run.json")
+    ap.add_argument("--seeds", type=int, default=16)
+    ap.add_argument("--chunk", type=int, default=4)
+    ap.add_argument("--duration", type=float, default=60.0)
+    ap.add_argument("--phase-mode", default="auto")
     args = ap.parse_args()
 
-    cfg = registry.get_smoke_arch(args.arch)
-    model = build(cfg)
-    s_max = args.prompt_len + args.decode_steps
-    print(f"serving {cfg.name}: {args.requests} requests, "
-          f"prompt {args.prompt_len}, {args.decode_steps} new tokens")
-
-    # --- weights come from a (possibly lazily restored) checkpoint --------
-    params = model.init(jax.random.PRNGKey(0))
-    clock = WallClock()
-    store = SimHDFS(pathlib.Path(args.ckpt_dir), clock=clock,
-                    chaos=ChaosEngine(), bandwidth_bps=5e7)
-    regions = R.partition_regions(model.param_specs(), 6)
-    ckpt = RegionCheckpointer(store, f"serve-{cfg.name}", regions, clock=clock)
-    ckpt.save(0, params)
-
-    t0 = time.perf_counter()
-    if args.lazyload:
-        lazy = LazyRestorer(ckpt, params, gamma="full",
-                            priority=list(range(len(regions))), max_workers=3)
-        lazy.wait_region(0)
-        ttfr = time.perf_counter() - t0
-        weights = jax.tree.map(jnp.asarray, lazy.wait_all())
-    else:
-        restored, _ = ckpt.restore(params, gamma="full")
-        weights = jax.tree.map(jnp.asarray, restored)
-        ttfr = time.perf_counter() - t0
-    restore_s = time.perf_counter() - t0
-
-    # --- batched prefill + decode -----------------------------------------
-    shape = cfg_base.ShapeConfig("serve", args.prompt_len, args.requests,
-                                 "prefill")
-    batch = model.demo_batch(shape, jax.random.PRNGKey(1))
-    moe_opts = {"mode": "weakhash", "rescue": False}
-
-    t0 = time.perf_counter()
-    prefill = jax.jit(lambda p, b: model.prefill(p, b, NO_SHARDING,
-                                                 s_max=s_max,
-                                                 moe_opts=moe_opts))
-    logits, cache, pos = prefill(weights, batch)
-    jax.block_until_ready(logits)
-    prefill_s = time.perf_counter() - t0
-
-    decode = jax.jit(lambda p, c, t, i: model.decode_step(
-        p, c, t, i, NO_SHARDING, moe_opts=moe_opts))
-    tokens = jnp.argmax(logits, -1).astype(jnp.int32)
-    t0 = time.perf_counter()
-    out_tokens = [tokens]
-    for i in range(args.decode_steps):
-        logits, cache = decode(weights, cache, tokens,
-                               jnp.asarray(pos + i, jnp.int32))
-        tokens = jnp.argmax(logits, -1).astype(jnp.int32)
-        out_tokens.append(tokens)
-    jax.block_until_ready(tokens)
-    decode_s = time.perf_counter() - t0
-
-    summary = {
-        "arch": cfg.name,
-        "restore_s": round(restore_s, 3),
-        "time_to_first_region_s": round(ttfr, 3),
-        "lazyload": args.lazyload,
-        "prefill_s": round(prefill_s, 3),
-        "decode_s": round(decode_s, 3),
-        "decode_tok_s": round(args.requests * args.decode_steps / decode_s, 1),
-        "generated": int(jnp.stack(out_tokens).size),
-    }
-    pathlib.Path(args.out).parent.mkdir(parents=True, exist_ok=True)
-    pathlib.Path(args.out).write_text(json.dumps(summary, indent=1))
-    print(json.dumps(summary, indent=1))
+    g = nexmark.q2(parallelism=4)
+    spec = ChaosSpec(host_kill_prob_per_s=0.002,
+                     zk_down=((20.0, 24.0),))
+    fo = FailoverConfig(mode="single_task", detect_s=1.0,
+                        single_restart_s=2.0)
+    policies = {"hot": UpgradeConfig(t_upgrade_s=10.0,
+                                     wave_stagger_s=1.0)}
+    with SweepService(workers=2) as svc:
+        job = svc.submit("deployment_drill", g, range(args.seeds),
+                         seed_chunk=args.chunk, base_spec=spec,
+                         duration_s=args.duration, policies=policies,
+                         canary_fracs=(0.25, 0.5),
+                         rollback_thresholds=(math.inf, 200.0),
+                         failover=fo, n_hosts=8,
+                         phase_mode=args.phase_mode,
+                         label="cli-drill")
+        for chunk in job.chunks():
+            print(f"chunk {chunk.index}: seeds "
+                  f"[{chunk.seed_lo},{chunk.seed_hi}) "
+                  f"prep={chunk.prep_s:.3f}s "
+                  f"device={chunk.device_s:.3f}s", flush=True)
+        cube = job.result()
+        print(json.dumps({"rollback_frac":
+                          cube.rollback_frac.mean(axis=-1).tolist(),
+                          **{k: v for k, v in job.stats.items()
+                             if isinstance(v, (int, float, str))
+                             or v is None}},
+                         indent=1, default=str))
 
 
 if __name__ == "__main__":

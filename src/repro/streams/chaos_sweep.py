@@ -27,6 +27,15 @@ on >= 0.6); seed batches are padded to the next power of two so varying
 S reuses one jit trace per bucket. The numpy-engine baseline replay is
 opt-in via ``compare_numpy=True`` — production-size sweeps never pay
 the single-core replay by default.
+
+Chunked sweeps: every driver (and the cube wrappers forwarding
+``**sweep_kw``) takes ``seed_chunk=`` / ``on_chunk=`` — the seed axis
+then streams through the engine's double-buffered prep/compute pipeline
+and `SweepChunk` partial surfaces are published as each chunk lands
+(the `launch.serve.SweepService` incremental-result path), with the
+concatenated result bit-identical to the monolithic call. Results carry
+the ``prep_s`` / ``device_s`` wall split and per-request trace-cache
+hit/miss counts next to the compat total-derived ``scenarios_per_s``.
 """
 from __future__ import annotations
 
@@ -75,9 +84,25 @@ class SweepResult:
     # opt-in numpy cross-check (see sweep(compare_numpy=...)); None unless
     # requested — production sweeps never pay the single-core replay
     numpy_check: dict | None = None
+    # wall-time split of the chunked pipeline: host-side timeline prep vs
+    # device compute (their sum can exceed `wall_s` when the
+    # double-buffered pipeline overlaps them — that gap IS the overlap
+    # win). Zero for legacy callers that bypass the timing plumb.
+    prep_s: float = 0.0
+    device_s: float = 0.0
+    # per-request trace-cache traffic of this sweep's jit-fn lookups
+    cache_hits: int = 0
+    cache_misses: int = 0
+
+    @property
+    def total_s(self) -> float:
+        """End-to-end wall time (alias of `wall_s` — the denominator of
+        the compat `scenarios_per_s`)."""
+        return self.wall_s
 
     @property
     def scenarios_per_s(self) -> float:
+        # compat: total-derived (wall_s == total_s), NOT device-only
         return len(self.summaries) / self.wall_s if self.wall_s else 0.0
 
     def aggregate(self) -> dict:
@@ -181,6 +206,89 @@ def summarize(batch: JaxBatchMetrics, seeds, *,
                        wall_s)
 
 
+@dataclasses.dataclass
+class SweepChunk:
+    """One landed seed chunk of a chunked sweep — the incremental unit
+    `sweep(on_chunk=...)` / `sweep_configs(on_chunk=...)` publish and
+    `launch.serve.SweepService` streams to subscribers. Carries the
+    partial ``(C, S_chunk)`` surfaces (C = 1 for plain `sweep`) computed
+    with exactly the final result's formulas, so concatenating every
+    chunk's columns reproduces the full-cube surfaces bit-for-bit."""
+    index: int                     # 0-based landing order == seed order
+    seed_lo: int
+    seed_hi: int                   # half-open [seed_lo, seed_hi)
+    seeds: list
+    prep_s: float                  # host timeline prep for this chunk
+    device_s: float                # device pass for this chunk
+    summaries: list[list[ScenarioSummary]]   # [C][S_chunk]
+    recovery_surface: np.ndarray   # (C, S_chunk)
+    slo_surface: np.ndarray
+    backlog_surface: np.ndarray
+    lost_surface: np.ndarray
+    rollback_surface: np.ndarray
+    thrash_surface: np.ndarray
+    rescale_surface: np.ndarray
+    cost_surface: np.ndarray
+
+    @property
+    def n_seeds(self) -> int:
+        return self.seed_hi - self.seed_lo
+
+    @property
+    def total_s(self) -> float:
+        return self.prep_s + self.device_s
+
+
+def _chunk_surfaces(batches, results) -> dict:
+    """The dense surfaces of a (partial or full) config × seed block,
+    computed from per-config `SweepResult`s + raw batches — ONE formula
+    set shared by `sweep_configs`' final assembly and the per-chunk
+    publisher, so partial surfaces are exact column slices of the final
+    ones."""
+    n = len(results[0].summaries)
+    return dict(
+        recovery_surface=np.array([[s.recovery_time_s for s in r.summaries]
+                                   for r in results]),
+        slo_surface=np.array([[s.slo_violation_frac for s in r.summaries]
+                              for r in results]),
+        backlog_surface=np.array([[s.max_backlog for s in r.summaries]
+                                  for r in results]),
+        lost_surface=np.array([[s.dropped for s in r.summaries]
+                               for r in results]),
+        rollback_surface=np.array([(bm.rollback_t
+                                    if bm.rollback_t is not None
+                                    else np.full(n, np.inf))
+                                   for bm in batches]),
+        thrash_surface=np.array([(bm.thrash_t if bm.thrash_t is not None
+                                  else np.full(n, np.inf))
+                                 for bm in batches]),
+        rescale_surface=np.array([(bm.n_rescale
+                                   if bm.n_rescale is not None
+                                   else np.zeros(n))
+                                  for bm in batches]),
+        cost_surface=np.array([(bm.resource_s
+                                if bm.resource_s is not None
+                                else np.zeros(n))
+                               for bm in batches]))
+
+
+def _publish_chunk(on_chunk, index: int, cr, seeds, *, graph, slo_lag,
+                   duration_s) -> None:
+    """Summarize one engine `ChunkResult` into a `SweepChunk` and hand
+    it to the caller's `on_chunk` subscriber."""
+    batches = (cr.batches if isinstance(cr.batches, list)
+               else [cr.batches])
+    chunk_seeds = seeds[cr.seed_lo:cr.seed_hi]
+    results = [summarize(bm, chunk_seeds, graph=graph, slo_lag=slo_lag,
+                         wall_s=cr.device_s, graph_name=graph.name,
+                         duration_s=duration_s) for bm in batches]
+    on_chunk(SweepChunk(index=index, seed_lo=cr.seed_lo,
+                        seed_hi=cr.seed_hi, seeds=chunk_seeds,
+                        prep_s=cr.prep_s, device_s=cr.device_s,
+                        summaries=[r.summaries for r in results],
+                        **_chunk_surfaces(batches, results)))
+
+
 def sweep(graph: LogicalGraph | PackedArena, seeds, *,
           base_spec: ChaosSpec,
           duration_s: float, n_hosts: int = 8, dt: float = 0.5,
@@ -192,6 +300,8 @@ def sweep(graph: LogicalGraph | PackedArena, seeds, *,
           seed: int = 0, pad_seeds: bool = True,
           devices: int | str | None = None,
           phase_mode: str = "auto",
+          seed_chunk: int | None = None,
+          on_chunk=None,
           compare_numpy: bool = False) -> SweepResult:
     """Sweep `seeds` chaos scenarios over `graph` in one vmapped jit call
     (one call per device shard when `devices` is set).
@@ -201,6 +311,12 @@ def sweep(graph: LogicalGraph | PackedArena, seeds, *,
     ``job_results`` (keyed by job name) next to the fleet-level combined
     summaries.
 
+    ``seed_chunk`` streams the seed axis through fixed-size chunks on
+    the engine's double-buffered pipeline (bit-identical result, see
+    `jax_engine.run_batch`); ``on_chunk`` receives a `SweepChunk` with
+    the partial surfaces as each chunk lands. The result's ``prep_s`` /
+    ``device_s`` carry the host-prep vs device wall split either way.
+
     ``compare_numpy`` is OPT-IN (default False): the numpy-engine
     baseline replay costs a single-core scenario per checked seed, which
     production-size sweeps must not pay on every call. When True, up to 3
@@ -209,17 +325,29 @@ def sweep(graph: LogicalGraph | PackedArena, seeds, *,
     """
     seeds = list(seeds)
     logical = graph.graph if isinstance(graph, PackedArena) else graph
+    timing: dict = {}
+    publish = None
+    if on_chunk is not None:
+        counter = iter(range(len(seeds) + 1))
+        publish = lambda cr: _publish_chunk(
+            on_chunk, next(counter), cr, seeds, graph=logical,
+            slo_lag=slo_lag, duration_s=duration_s)
     t0 = time.perf_counter()
     batch = run_batch(graph, seeds, base_spec=base_spec,
                       duration_s=duration_s, n_hosts=n_hosts, dt=dt,
                       queue_cap=queue_cap, failover=failover, ckpt=ckpt,
                       task_speed_override=task_speed_override, seed=seed,
                       pad_seeds=pad_seeds, devices=devices,
-                      phase_mode=phase_mode)
+                      phase_mode=phase_mode, seed_chunk=seed_chunk,
+                      on_chunk=publish, timing=timing)
     wall = time.perf_counter() - t0
     res = summarize(batch, seeds, graph=logical, slo_lag=slo_lag,
                     wall_s=wall, graph_name=logical.name,
                     duration_s=duration_s)
+    res.prep_s = timing.get("prep_s", 0.0)
+    res.device_s = timing.get("device_s", 0.0)
+    res.cache_hits = timing.get("cache_hits", 0)
+    res.cache_misses = timing.get("cache_misses", 0)
     if isinstance(graph, PackedArena) and batch.jobs:
         res.job_results = {
             job.name: summarize(batch.job_view(job), seeds,
@@ -298,9 +426,22 @@ class ConfigSweepResult:
     thrash_surface: np.ndarray | None = None
     rescale_surface: np.ndarray | None = None
     cost_surface: np.ndarray | None = None
+    # chunked-pipeline wall split (see SweepResult) + per-request
+    # trace-cache traffic; zero for legacy callers
+    prep_s: float = 0.0
+    device_s: float = 0.0
+    cache_hits: int = 0
+    cache_misses: int = 0
+
+    @property
+    def total_s(self) -> float:
+        """End-to-end wall time (alias of `wall_s` — the denominator of
+        the compat `scenarios_per_s`)."""
+        return self.wall_s
 
     @property
     def scenarios_per_s(self) -> float:
+        # compat: total-derived (wall_s == total_s), NOT device-only
         n = self.recovery_surface.size
         return n / self.wall_s if self.wall_s else 0.0
 
@@ -368,7 +509,9 @@ def sweep_configs(graph: LogicalGraph | PackedArena, configs, seeds, *,
                   task_speed_override: dict[int, float] | None = None,
                   seed: int = 0, pad_seeds: bool = True,
                   devices: int | str | None = None,
-                  phase_mode: str = "auto") -> ConfigSweepResult:
+                  phase_mode: str = "auto",
+                  seed_chunk: int | None = None,
+                  on_chunk=None) -> ConfigSweepResult:
     """Sweep a ``(C, S)`` grid of resiliency configs × chaos seeds over
     `graph` in ONE doubly-vmapped jit call (`jax_engine.run_config_batch`
     — the engine's third vmap axis) and summarize each config row.
@@ -385,17 +528,36 @@ def sweep_configs(graph: LogicalGraph | PackedArena, configs, seeds, *,
     ``devices=`` splits the flat seed axis of the (C, S) grid across
     local devices (`jax_engine.get_sharded_config_fn`; rows stay
     bit-identical to the single-device grid); ``phase_mode`` selects the
-    dense vs compact (sparse-phase) tick lowering, default auto."""
+    dense vs compact (sparse-phase) tick lowering, default auto.
+
+    ``seed_chunk`` streams the grid's seed axis through fixed-size
+    chunks on the engine's double-buffered pipeline — one ``(C,
+    S_chunk)`` device pass per chunk, host prep overlapping device
+    compute, final surfaces bit-identical to the one-pass grid (see
+    `jax_engine.run_config_batch`) — and ``on_chunk`` receives a
+    `SweepChunk` with each partial ``(C, S_chunk)`` surface as it lands
+    (the service layer's time-to-first-result path). The result's
+    ``prep_s`` / ``device_s`` / ``cache_hits`` / ``cache_misses`` carry
+    the wall split + per-request trace-cache traffic either way."""
     seeds = list(seeds)
     norm = [normalize_config(c) for c in configs]
     logical = graph.graph if isinstance(graph, PackedArena) else graph
+    timing: dict = {}
+    publish = None
+    if on_chunk is not None:
+        counter = iter(range(len(seeds) + 1))
+        publish = lambda cr: _publish_chunk(
+            on_chunk, next(counter), cr, seeds, graph=logical,
+            slo_lag=slo_lag, duration_s=duration_s)
     t0 = time.perf_counter()
     batches = run_config_batch(graph, norm, seeds, base_spec=base_spec,
                                duration_s=duration_s, n_hosts=n_hosts,
                                dt=dt, queue_cap=queue_cap,
                                task_speed_override=task_speed_override,
                                seed=seed, pad_seeds=pad_seeds,
-                               devices=devices, phase_mode=phase_mode)
+                               devices=devices, phase_mode=phase_mode,
+                               seed_chunk=seed_chunk, on_chunk=publish,
+                               timing=timing)
     wall = time.perf_counter() - t0
     # each config row gets its share of the one-call wall time, so a
     # row's scenarios_per_s stays comparable with a standalone sweep()
@@ -403,31 +565,21 @@ def sweep_configs(graph: LogicalGraph | PackedArena, configs, seeds, *,
                          wall_s=wall / len(norm),
                          graph_name=logical.name, duration_s=duration_s)
                for bm in batches]
-    rec = np.array([[s.recovery_time_s for s in r.summaries]
-                    for r in results])
-    slo = np.array([[s.slo_violation_frac for s in r.summaries]
-                    for r in results])
-    bkl = np.array([[s.max_backlog for s in r.summaries]
-                    for r in results])
-    lost = np.array([[s.dropped for s in r.summaries]
-                     for r in results])
-    rbs = np.array([(bm.rollback_t if bm.rollback_t is not None
-                     else np.full(len(seeds), np.inf))
-                    for bm in batches])
-    thr = np.array([(bm.thrash_t if bm.thrash_t is not None
-                     else np.full(len(seeds), np.inf))
-                    for bm in batches])
-    nre = np.array([(bm.n_rescale if bm.n_rescale is not None
-                     else np.zeros(len(seeds)))
-                    for bm in batches])
-    cost = np.array([(bm.resource_s if bm.resource_s is not None
-                      else np.zeros(len(seeds)))
-                     for bm in batches])
+    surf = _chunk_surfaces(batches, results)
     labels = [_config_label(i, c) for i, c in enumerate(norm)]
     return ConfigSweepResult(logical.name, duration_s, norm, labels,
-                             results, rec, slo, bkl, lost, wall,
-                             rollback_surface=rbs, thrash_surface=thr,
-                             rescale_surface=nre, cost_surface=cost)
+                             results, surf["recovery_surface"],
+                             surf["slo_surface"],
+                             surf["backlog_surface"],
+                             surf["lost_surface"], wall,
+                             rollback_surface=surf["rollback_surface"],
+                             thrash_surface=surf["thrash_surface"],
+                             rescale_surface=surf["rescale_surface"],
+                             cost_surface=surf["cost_surface"],
+                             prep_s=timing.get("prep_s", 0.0),
+                             device_s=timing.get("device_s", 0.0),
+                             cache_hits=timing.get("cache_hits", 0),
+                             cache_misses=timing.get("cache_misses", 0))
 
 
 # ----------------------------------------------------------------------

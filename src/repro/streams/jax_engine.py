@@ -299,6 +299,48 @@ per-job `ChaosSpec` lists for packed arenas (per-job kill rates /
 straggler intensities drawn in each job's local host domain and lifted
 onto the shared pool — `core.chaos.build_perjob_chaos_timeline`).
 
+Chunked execution + shared trace-cache keying (sweep-as-a-service)
+------------------------------------------------------------------
+Every batch entry point decomposes into a *plan* (`SeedBatchPlan` /
+`ConfigGridPlan`: lowering, per-config traced params, timeline-path
+selection, trace-cache lookup — all seed-count-independent) plus
+`prep_chunk(lo, hi)` / `run_chunk` over half-open seed slices, driven
+by `run_chunks`' double-buffered pipeline: host timeline prep for
+chunk k+1 runs on the caller thread while chunk k's device pass blocks
+on a one-slot executor lane (XLA releases the GIL, so prep and compute
+genuinely overlap). The chunking contract:
+
+* **Bit-parity.** All per-seed grid state is seed-separable (one
+  `_SeedStream` per seed, per-seed curves, no cross-seed reductions
+  device-side), so the `concat_batches` of any chunk partition is
+  bit-identical to the monolithic call — including ragged last chunks,
+  which pad to their own pow2 bucket before slicing. Pinned by
+  tests/test_sweep_service.py.
+* **Build-count flatness.** Each seed's timelines are built exactly
+  once across all chunks: the ckpt-grid path shares ONE
+  `core.chaos.GridTimelineBuilder` (lazy per-seed streams) across
+  chunks, and the no-ckpt/exotic paths touch each seed in exactly one
+  chunk. `timeline_build_count()` matches the monolithic call.
+* **Shared keying.** The six process-global caches (`_FN_CACHE`,
+  `_SHARD_CACHE`, `_CFG_SHARD_CACHE`, `_MIX_CACHE`, `_CFG_CACHE`,
+  `_CFG_MIX_CACHE`) key on ``(TickDesc, variant)`` where `TickDesc` =
+  (`TensorPlan` digest — the bucket signature under compact/pallas —
+  and region count) and the variant adds shard count /
+  ``shared_kills`` / the resolved pallas kernel impl. Chunk size,
+  seed count, request identity and every float are absent from the
+  key, so concurrent requests over same-shaped plans hit ONE compiled
+  trace; only the pow2 seed-bucket of the *padded* chunk retraces.
+  All lookups funnel through `_cache_get` under one lock:
+  `trace_cache_stats()` exposes process-wide hit/miss counters and
+  `scoped_cache_stats` thread-local per-request ones (each plan
+  records its own lookup in `cache_info`, surfaced per request by
+  `launch.serve.SweepService`).
+* **Boundary errors.** ``devices=`` + ``phase_mode="pallas"`` is
+  rejected up front by `_check_pallas_devices` with the actionable
+  rewrite (devices=None + seed_chunk=, or compact mode) instead of a
+  deep `NotImplementedError`; `SweepService` performs that downgrade
+  automatically and records the reason.
+
 Everything runs in float64 (scoped `jax.experimental.enable_x64`, no
 global config flip) to hold parity with the float64 numpy engine.
 """
@@ -306,6 +348,9 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
 from typing import NamedTuple
 
 import jax
@@ -314,8 +359,8 @@ import numpy as np
 from jax import lax
 
 from repro.core.chaos import (ChaosEngine, ChaosSpec, ChaosTimeline,
-                              brownout_curve, build_chaos_timeline,
-                              build_grid_timelines,
+                              GridTimelineBuilder, brownout_curve,
+                              build_chaos_timeline,
                               build_perjob_chaos_timeline, ckpt_age_curve,
                               coordinator_gate_curve, mq_gate_curve,
                               refit_failover, traffic_curve)
@@ -1221,6 +1266,55 @@ _MIX_CACHE: dict = {}
 _CFG_CACHE: dict = {}
 _CFG_MIX_CACHE: dict = {}
 
+# process-global trace-cache accounting: every cache getter goes through
+# `_cache_get` under one lock, so concurrent sweep requests (the
+# SweepService worker threads) share the compiled-fn caches race-free
+# and hit/miss counts are exact. A "hit" means a request reused a fn
+# another request (or an earlier call) already built — the
+# one-trace-across-requests property tests assert on top of these.
+_CACHE_LOCK = threading.RLock()
+_TRACE_STATS = {"hits": 0, "misses": 0}
+_TLS = threading.local()
+
+
+def _cache_get(cache: dict, key, build):
+    """Thread-safe get-or-build with hit/miss accounting (global plus
+    the calling thread's scoped counter — see `scoped_cache_stats`)."""
+    with _CACHE_LOCK:
+        hit = key in cache
+        _TRACE_STATS["hits" if hit else "misses"] += 1
+        scoped = getattr(_TLS, "counts", None)
+        if scoped is not None:
+            scoped["hits" if hit else "misses"] += 1
+        if not hit:
+            cache[key] = build()
+        return cache[key]
+
+
+def trace_cache_stats() -> dict:
+    """Process-global jit-fn cache hit/miss counters (cumulative)."""
+    with _CACHE_LOCK:
+        return dict(_TRACE_STATS)
+
+
+class scoped_cache_stats:
+    """Context manager capturing this thread's cache hits/misses —
+    per-request attribution for the sweep service (global deltas are
+    racy under concurrent workers)."""
+
+    def __enter__(self):
+        self.prev = getattr(_TLS, "counts", None)
+        _TLS.counts = {"hits": 0, "misses": 0}
+        return _TLS.counts
+
+    def __exit__(self, *exc):
+        self.counts = _TLS.counts
+        _TLS.counts = self.prev
+        if self.prev is not None:    # nested scopes roll up to parents
+            self.prev["hits"] += self.counts["hits"]
+            self.prev["misses"] += self.counts["misses"]
+        return False
+
 _XS_AXES = {"t": None, "kills": 0, "ckpt": None,
             "bfac": 0, "gate": 0, "ckage": 0, "rfac": 0}
 
@@ -1305,20 +1399,19 @@ def get_cached_run_fns(desc: TickDesc):
     the exact layout of the vmapped dense/compact one."""
     if desc.tensor.mode == "pallas":
         impl = _tick_impl()
-        key = (desc, impl)
-        if key not in _FN_CACHE:
+
+        def _build_pl():
             runb = _build_pallas_run(desc, impl)
-            _FN_CACHE[key] = (
-                jax.jit(_lift_single(runb)),
-                jax.jit(runb, donate_argnums=(1,)))
-        return _FN_CACHE[key]
-    if desc not in _FN_CACHE:
+            return (jax.jit(_lift_single(runb)),
+                    jax.jit(runb, donate_argnums=(1,)))
+        return _cache_get(_FN_CACHE, (desc, impl), _build_pl)
+
+    def _build():
         run = _build_run(desc)
-        _FN_CACHE[desc] = (
-            jax.jit(run, donate_argnums=(1,)),
-            jax.jit(jax.vmap(run, in_axes=(None, 0, _XS_AXES)),
-                    donate_argnums=(1,)))
-    return _FN_CACHE[desc]
+        return (jax.jit(run, donate_argnums=(1,)),
+                jax.jit(jax.vmap(run, in_axes=(None, 0, _XS_AXES)),
+                        donate_argnums=(1,)))
+    return _cache_get(_FN_CACHE, desc, _build)
 
 
 def get_sharded_run_fn(desc: TickDesc, n_shards: int):
@@ -1331,11 +1424,10 @@ def get_sharded_run_fn(desc: TickDesc, n_shards: int):
             "devices= sharding is not wired for the pallas phase mode "
             "(the native seed-batched run owns the seed axis); run "
             "unsharded or use phase_mode='compact'")
-    key = (desc, n_shards)
-    if key not in _SHARD_CACHE:
-        _SHARD_CACHE[key] = sharded_seed_fn(
-            _build_run(desc), xs_axes=_XS_AXES, n_shards=n_shards)
-    return _SHARD_CACHE[key]
+    return _cache_get(
+        _SHARD_CACHE, (desc, n_shards),
+        lambda: sharded_seed_fn(_build_run(desc), xs_axes=_XS_AXES,
+                                n_shards=n_shards))
 
 
 def get_cached_mix_fn(desc: TickDesc):
@@ -1345,18 +1437,17 @@ def get_cached_mix_fn(desc: TickDesc):
     if desc.tensor.mode == "pallas":
         # the native run already owns the seed axis: ONE vmap level
         # (over mixes) instead of two
-        key = (desc, _tick_impl())
-        if key not in _MIX_CACHE:
-            runb = _build_pallas_run(desc, key[1])
-            _MIX_CACHE[key] = jax.jit(
-                jax.vmap(runb, in_axes=(_PA_MIX_AXES, None, None)))
-        return _MIX_CACHE[key]
-    if desc not in _MIX_CACHE:
-        run = _build_run(desc)
-        _MIX_CACHE[desc] = jax.jit(
-            jax.vmap(jax.vmap(run, in_axes=(None, 0, _XS_AXES)),
-                     in_axes=(_PA_MIX_AXES, None, None)))
-    return _MIX_CACHE[desc]
+        impl = _tick_impl()
+        return _cache_get(
+            _MIX_CACHE, (desc, impl),
+            lambda: jax.jit(jax.vmap(_build_pallas_run(desc, impl),
+                                     in_axes=(_PA_MIX_AXES, None, None))))
+    return _cache_get(
+        _MIX_CACHE, desc,
+        lambda: jax.jit(
+            jax.vmap(jax.vmap(_build_run(desc),
+                              in_axes=(None, 0, _XS_AXES)),
+                     in_axes=(_PA_MIX_AXES, None, None))))
 
 
 def _cfg_xs_axes(shared_kills: bool) -> dict:
@@ -1380,25 +1471,26 @@ def get_cached_config_fn(desc: TickDesc, shared_kills: bool = False):
     `shared_kills` selects the broadcast-kills variant (see
     `_cfg_xs_axes`)."""
     if desc.tensor.mode == "pallas":
-        key = (desc, shared_kills, _tick_impl())
-        if key not in _CFG_CACHE:
-            runb = _build_pallas_run(desc, key[2])
+        impl = _tick_impl()
+
+        def _build_pl():
             # seed axis is native; the config vmap broadcasts the
             # (S, ...) state and rides the same xs layout (the pallas
             # run reads kills as (S, T, H), so the per-config kills
             # axis is the same axis 0 the vmapped path uses)
-            _CFG_CACHE[key] = jax.jit(
-                jax.vmap(runb, in_axes=(_PA_CFG_AXES, None,
-                                        _cfg_xs_axes(shared_kills))))
-        return _CFG_CACHE[key]
-    key = (desc, shared_kills)
-    if key not in _CFG_CACHE:
-        run = _build_run(desc)
-        _CFG_CACHE[key] = jax.jit(
-            jax.vmap(jax.vmap(run, in_axes=(None, 0, _XS_AXES)),
+            return jax.jit(
+                jax.vmap(_build_pallas_run(desc, impl),
+                         in_axes=(_PA_CFG_AXES, None,
+                                  _cfg_xs_axes(shared_kills))))
+        return _cache_get(_CFG_CACHE, (desc, shared_kills, impl),
+                          _build_pl)
+    return _cache_get(
+        _CFG_CACHE, (desc, shared_kills),
+        lambda: jax.jit(
+            jax.vmap(jax.vmap(_build_run(desc),
+                              in_axes=(None, 0, _XS_AXES)),
                      in_axes=(_PA_CFG_AXES, None,
-                              _cfg_xs_axes(shared_kills))))
-    return _CFG_CACHE[key]
+                              _cfg_xs_axes(shared_kills)))))
 
 
 def get_sharded_config_fn(desc: TickDesc, n_shards: int,
@@ -1413,16 +1505,16 @@ def get_sharded_config_fn(desc: TickDesc, n_shards: int,
             "devices= sharding is not wired for the pallas phase mode "
             "(the native seed-batched run owns the seed axis); run "
             "unsharded or use phase_mode='compact'")
-    key = (desc, n_shards, shared_kills)
-    if key not in _CFG_SHARD_CACHE:
+    def _build():
         seed_axes = {"t": None, "kills": 0 if shared_kills else 1,
                      "ckpt": None, "bfac": 1, "gate": 0, "ckage": 1,
                      "rfac": 1}
-        _CFG_SHARD_CACHE[key] = sharded_grid_fn(
+        return sharded_grid_fn(
             _build_run(desc), pa_axes=_PA_CFG_AXES, xs_axes=_XS_AXES,
             cfg_xs_axes=_cfg_xs_axes(shared_kills),
             seed_axes=seed_axes, n_shards=n_shards)
-    return _CFG_SHARD_CACHE[key]
+    return _cache_get(_CFG_SHARD_CACHE, (desc, n_shards, shared_kills),
+                      _build)
 
 
 def get_cached_config_mix_fn(desc: TickDesc, shared_kills: bool = False):
@@ -1432,25 +1524,27 @@ def get_cached_config_mix_fn(desc: TickDesc, shared_kills: bool = False):
     mix_top = dict.fromkeys(_PA_CFG_AXES, None)
     mix_top["src_row"] = 0
     if desc.tensor.mode == "pallas":
-        key = (desc, shared_kills, _tick_impl())
-        if key not in _CFG_MIX_CACHE:
-            runb = _build_pallas_run(desc, key[2])
-            _CFG_MIX_CACHE[key] = jax.jit(
+        impl = _tick_impl()
+
+        def _build_pl():
+            runb = _build_pallas_run(desc, impl)
+            return jax.jit(
                 jax.vmap(
                     jax.vmap(runb, in_axes=(_PA_CFG_AXES, None,
                                             _cfg_xs_axes(shared_kills))),
                     in_axes=(mix_top, None, None)))
-        return _CFG_MIX_CACHE[key]
-    key = (desc, shared_kills)
-    if key not in _CFG_MIX_CACHE:
+        return _cache_get(_CFG_MIX_CACHE, (desc, shared_kills, impl),
+                          _build_pl)
+
+    def _build():
         run = _build_run(desc)
-        _CFG_MIX_CACHE[key] = jax.jit(
+        return jax.jit(
             jax.vmap(
                 jax.vmap(jax.vmap(run, in_axes=(None, 0, _XS_AXES)),
                          in_axes=(_PA_CFG_AXES, None,
                                   _cfg_xs_axes(shared_kills))),
                 in_axes=(mix_top, None, None)))
-    return _CFG_MIX_CACHE[key]
+    return _cache_get(_CFG_MIX_CACHE, (desc, shared_kills), _build)
 
 
 # ----------------------------------------------------------------------
@@ -2094,6 +2188,186 @@ def _as_specs(seeds, base_spec) -> list:
             if isinstance(s, (int, np.integer)) else s for s in seeds]
 
 
+def _check_pallas_devices(low: "_Lowered", devices, entry: str) -> None:
+    """Boundary guard: pallas runs are natively seed-batched (the fused
+    kernel owns the seed axis as its grid dimension), so `devices=`
+    sharding has no lowering. Raise the actionable spelling here instead
+    of letting `get_sharded_*` NotImplementedError deep in the run."""
+    if devices is not None and low.tensor.mode == "pallas":
+        raise NotImplementedError(
+            f"{entry}: devices={devices!r} does not compose with "
+            "phase_mode='pallas' (the fused kernel natively owns the "
+            "seed axis; there is no sharded lowering). Rerun with "
+            "devices=None — pass seed_chunk= to bound per-pass device "
+            "memory instead — or use phase_mode='compact' for "
+            "device-sharded grids.")
+
+
+class ChunkResult:
+    """One seed-chunk's worth of a chunked run: the half-open seed range
+    ``[seed_lo, seed_hi)``, its metrics (`JaxBatchMetrics` for seed
+    plans; a per-config list — or mixes×configs nest — for grid plans),
+    and the host-prep / device wall split."""
+
+    __slots__ = ("seed_lo", "seed_hi", "batches", "prep_s", "device_s")
+
+    def __init__(self, seed_lo, seed_hi, batches, prep_s, device_s):
+        self.seed_lo = seed_lo
+        self.seed_hi = seed_hi
+        self.batches = batches
+        self.prep_s = prep_s
+        self.device_s = device_s
+
+
+def run_chunks(plan, chunk_size: int | None = None, on_chunk=None
+               ) -> list[ChunkResult]:
+    """Execute a `SeedBatchPlan`/`ConfigGridPlan` in seed chunks on a
+    double-buffered pipeline: host-side timeline prep for chunk k+1 runs
+    on the caller thread WHILE chunk k computes on a one-slot device
+    lane (XLA releases the GIL for the blocking device call, so the two
+    genuinely overlap). `on_chunk` fires with each `ChunkResult` as it
+    lands, in seed order — incremental consumers see partial surfaces
+    at time-to-first-chunk instead of time-to-last."""
+    n_seeds = plan.n_seeds
+    size = n_seeds if not chunk_size else max(1, int(chunk_size))
+    bounds = [(lo, min(lo + size, n_seeds))
+              for lo in range(0, n_seeds, size)]
+
+    def _run(prepped, prep_s):
+        t0 = time.perf_counter()
+        batches = plan.run_chunk(prepped)
+        return ChunkResult(prepped[0], prepped[1], batches, prep_s,
+                           time.perf_counter() - t0)
+
+    out: list[ChunkResult] = []
+
+    def _land(fut):
+        res = fut.result()
+        out.append(res)
+        if on_chunk is not None:
+            on_chunk(res)
+
+    with ThreadPoolExecutor(max_workers=1) as lane:
+        fut = None
+        for lo, hi in bounds:
+            t0 = time.perf_counter()
+            prepped = plan.prep_chunk(lo, hi)
+            prep_s = time.perf_counter() - t0
+            if fut is not None:
+                _land(fut)          # chunk k lands while k+1 is prepped
+            fut = lane.submit(_run, prepped, prep_s)
+        _land(fut)
+    return out
+
+
+def concat_batches(parts: list[JaxBatchMetrics]) -> JaxBatchMetrics:
+    """Concatenate per-chunk `JaxBatchMetrics` along the seed axis.
+
+    Every per-seed surface is a plain row stack (no cross-seed
+    reductions happen device-side), so the concatenation of chunked
+    results is bit-identical to the monolithic batch — pinned by
+    tests/test_sweep_service.py."""
+    if len(parts) == 1:
+        return parts[0]
+    first = parts[0]
+
+    def cat(name):
+        v = getattr(first, name)
+        if v is None:
+            return None
+        return np.concatenate([np.asarray(getattr(p, name))
+                               for p in parts], axis=0)
+
+    return JaxBatchMetrics(
+        first.op_names, first.t, cat("source_lag"), cat("qps"),
+        cat("backlog"), cat("emitted_by_job"), cat("dropped_by_job"),
+        [tl for p in parts for tl in p.timelines],
+        ckpt_epoch=cat("ckpt_epoch"), jobs=first.jobs,
+        rollback_t=cat("rollback_t"), thrash_t=cat("thrash_t"),
+        n_rescale=cat("n_rescale"), resource_s=cat("resource_s"))
+
+
+def _fill_timing(timing: dict, chunks: list[ChunkResult], plan) -> None:
+    """Record the prep/device wall split + per-request cache traffic of
+    a chunked run into the caller-supplied `timing` dict."""
+    timing["prep_s"] = sum(c.prep_s for c in chunks)
+    timing["device_s"] = sum(c.device_s for c in chunks)
+    timing["chunks"] = len(chunks)
+    timing["cache_hits"] = plan.cache_info["hits"]
+    timing["cache_misses"] = plan.cache_info["misses"]
+
+
+class SeedBatchPlan:
+    """Chunk-friendly decomposition of `run_batch`: `__init__` does all
+    seed-count-independent work (lowering, trace-cache lookup — cache
+    traffic lands in `cache_info`), `prep_chunk(lo, hi)` builds the
+    host-side tensors for a seed slice, `run_chunk` runs one device
+    pass. Driven by `run_chunks`."""
+
+    def __init__(self, graph: LogicalGraph | PackedArena, seeds, *,
+                 duration_s: float, base_spec: ChaosSpec | None = None,
+                 n_hosts: int = 8, dt: float = 0.5,
+                 queue_cap: float = 256.0, failover=None, ckpt=None,
+                 task_speed_override: dict[int, float] | None = None,
+                 seed: int = 0, pad_seeds: bool = True,
+                 devices: int | str | None = None,
+                 phase_mode: str = "auto",
+                 upgrade: UpgradeConfig | None = None,
+                 autoscale: AutoscaleConfig | None = None):
+        specs = _as_specs(seeds, base_spec)
+        if not specs:
+            raise ValueError("run_batch requires at least one seed/spec")
+        self.specs = specs
+        self.n_seeds = len(specs)
+        self.low = low = _Lowered(
+            graph, n_hosts=n_hosts, dt=dt, queue_cap=queue_cap,
+            failover=failover, ckpt=ckpt, seed=seed,
+            phase_mode=phase_mode, seed_width=len(specs),
+            upgrade=upgrade, upgrade_spec=specs[0], autoscale=autoscale)
+        _check_pallas_devices(low, devices, "run_batch")
+        self.n_ticks = int(round(duration_s / low.dt))
+        self._override = task_speed_override
+        self.pad_seeds = pad_seeds
+        self.n_shards = local_shard_count(devices)
+        with scoped_cache_stats() as counts:
+            if devices is not None:
+                self.fn = get_sharded_run_fn(low.desc, self.n_shards)
+            else:
+                _, self.fn = get_cached_run_fns(low.desc)
+        self.cache_info = dict(counts)
+
+    def prep_chunk(self, lo: int, hi: int):
+        batch_state, xs, tls = _prep_batch(self.low, self.specs[lo:hi],
+                                           self.n_ticks, self._override)
+        batch_state, xs = _pad_batch(batch_state, xs, hi - lo,
+                                     self.pad_seeds, self.n_shards)
+        return (lo, hi, batch_state, xs, tls)
+
+    def run_chunk(self, prepped) -> JaxBatchMetrics:
+        lo, hi, batch_state, xs, tls = prepped
+        n = hi - lo
+        low = self.low
+        with _enable_x64():
+            final, ys = self.fn(low.arrays, batch_state, xs)
+            qps = np.asarray(ys["qps"])[:n]
+            backlog = np.asarray(ys["backlog"])[:n]
+            lag = np.asarray(ys["lag"])[:n]
+            emitted = np.asarray(final.emitted)[:n]
+            dropped = np.asarray(final.dropped)[:n]
+            ckpt_epoch = np.asarray(final.ckpt_epoch)[:n]
+            rollback_t = np.asarray(final.rb_t)[:n]
+            thrash_t = np.asarray(final.thrash_t)[:n]
+            n_rescale = np.asarray(final.nact)[:n]
+            resource_s = np.asarray(final.rsec)[:n]
+        return JaxBatchMetrics(low.op_names, tls[0].ts, lag, qps, backlog,
+                               emitted, dropped, tls,
+                               ckpt_epoch=ckpt_epoch,
+                               jobs=(low.arena.jobs
+                                     if low.arena is not None else None),
+                               rollback_t=rollback_t, thrash_t=thrash_t,
+                               n_rescale=n_rescale, resource_s=resource_s)
+
+
 def run_batch(graph: LogicalGraph | PackedArena, seeds, *,
               duration_s: float,
               base_spec: ChaosSpec | None = None, n_hosts: int = 8,
@@ -2105,7 +2379,10 @@ def run_batch(graph: LogicalGraph | PackedArena, seeds, *,
               devices: int | str | None = None,
               phase_mode: str = "auto",
               upgrade: UpgradeConfig | None = None,
-              autoscale: AutoscaleConfig | None = None
+              autoscale: AutoscaleConfig | None = None,
+              seed_chunk: int | None = None,
+              on_chunk=None,
+              timing: dict | None = None
               ) -> JaxBatchMetrics:
     """Run a ``(S,)`` batch of chaos scenarios as ONE vmapped `jit` call
     (one call *per device shard* when `devices` is set).
@@ -2124,44 +2401,27 @@ def run_batch(graph: LogicalGraph | PackedArena, seeds, *,
     sees them. ``devices`` splits the padded batch across local devices
     through the version-gated `repro.dist.sharding` shim (``"auto"`` =
     all local devices).
+
+    ``seed_chunk`` streams the batch through fixed-size seed chunks on
+    the double-buffered `run_chunks` pipeline (host prep for chunk k+1
+    overlaps device compute for chunk k); the concatenated result is
+    bit-identical to the monolithic call. ``on_chunk`` fires with each
+    `ChunkResult` as it lands; ``timing``, if given a dict, receives the
+    ``prep_s`` / ``device_s`` wall split plus per-request trace-cache
+    ``cache_hits`` / ``cache_misses``.
     """
-    specs = _as_specs(seeds, base_spec)
-    if not specs:
-        raise ValueError("run_batch requires at least one seed/spec")
-    low = _Lowered(graph, n_hosts=n_hosts, dt=dt, queue_cap=queue_cap,
-                   failover=failover, ckpt=ckpt, seed=seed,
-                   phase_mode=phase_mode, seed_width=len(specs),
-                   upgrade=upgrade, upgrade_spec=specs[0],
-                   autoscale=autoscale)
-    n_ticks = int(round(duration_s / low.dt))
-    batch_state, xs, tls = _prep_batch(low, specs, n_ticks,
-                                       task_speed_override)
-    n_seeds = len(specs)
-    n_shards = local_shard_count(devices)
-    batch_state, xs = _pad_batch(batch_state, xs, n_seeds, pad_seeds,
-                                 n_shards)
-    if devices is not None:
-        batch_fn = get_sharded_run_fn(low.desc, n_shards)
-    else:
-        _, batch_fn = get_cached_run_fns(low.desc)
-    with _enable_x64():
-        final, ys = batch_fn(low.arrays, batch_state, xs)
-        qps = np.asarray(ys["qps"])[:n_seeds]
-        backlog = np.asarray(ys["backlog"])[:n_seeds]
-        lag = np.asarray(ys["lag"])[:n_seeds]
-        emitted = np.asarray(final.emitted)[:n_seeds]
-        dropped = np.asarray(final.dropped)[:n_seeds]
-        ckpt_epoch = np.asarray(final.ckpt_epoch)[:n_seeds]
-        rollback_t = np.asarray(final.rb_t)[:n_seeds]
-        thrash_t = np.asarray(final.thrash_t)[:n_seeds]
-        n_rescale = np.asarray(final.nact)[:n_seeds]
-        resource_s = np.asarray(final.rsec)[:n_seeds]
-    return JaxBatchMetrics(low.op_names, tls[0].ts, lag, qps, backlog,
-                           emitted, dropped, tls, ckpt_epoch=ckpt_epoch,
-                           jobs=(low.arena.jobs if low.arena is not None
-                                 else None),
-                           rollback_t=rollback_t, thrash_t=thrash_t,
-                           n_rescale=n_rescale, resource_s=resource_s)
+    plan = SeedBatchPlan(graph, seeds, duration_s=duration_s,
+                         base_spec=base_spec, n_hosts=n_hosts, dt=dt,
+                         queue_cap=queue_cap, failover=failover,
+                         ckpt=ckpt,
+                         task_speed_override=task_speed_override,
+                         seed=seed, pad_seeds=pad_seeds, devices=devices,
+                         phase_mode=phase_mode, upgrade=upgrade,
+                         autoscale=autoscale)
+    chunks = run_chunks(plan, seed_chunk, on_chunk)
+    if timing is not None:
+        _fill_timing(timing, chunks, plan)
+    return concat_batches([c.batches for c in chunks])
 
 
 def run_mix_batch(graph: LogicalGraph | PackedArena, mixes, seeds, *,
@@ -2317,6 +2577,319 @@ def normalize_config(c) -> dict:
     raise ValueError(f"unsupported config entry: {c!r}")
 
 
+def _merge_bro(sp, bro):
+    """Compose config-level brownout ramps into a seed spec by tuple
+    concatenation (op-identical to the numpy engines' factor)."""
+    if not bro:
+        return sp
+    if isinstance(sp, (list, tuple)):
+        return [_merge_bro(x.spec if isinstance(x, ChaosEngine)
+                           else (x or ChaosSpec()), bro) for x in sp]
+    return dataclasses.replace(
+        sp, brownout_at=tuple(sp.brownout_at) + tuple(bro))
+
+
+def _spec_has_ramps(sp):
+    if isinstance(sp, (list, tuple)):
+        return any(
+            bool(tuple((x.spec if isinstance(x, ChaosEngine)
+                        else (x or ChaosSpec())).brownout_at))
+            for x in sp)
+    return bool(tuple(sp.brownout_at))
+
+
+class ConfigGridPlan:
+    """Chunk-friendly decomposition of `run_config_batch`.
+
+    `__init__` does every seed-count-independent step ONCE per request:
+    config normalization, lowering, per-config traced params, timeline
+    path selection (the ckpt-bearing grid path keeps ONE
+    `GridTimelineBuilder` whose per-seed draw streams are shared by all
+    chunks), and the trace-cache lookup (hit/miss traffic lands in
+    `cache_info`). `prep_chunk(lo, hi)` builds the host tensors for the
+    seed slice ``[lo, hi)`` — each seed's timelines are built exactly
+    once across all chunks, so `timeline_build_count()` matches the
+    monolithic call — and `run_chunk` runs one device pass, returning
+    the per-config `JaxBatchMetrics` list for that slice. Driven by
+    `run_chunks`."""
+
+    def __init__(self, graph: LogicalGraph | PackedArena, configs,
+                 seeds, *, duration_s: float,
+                 base_spec: ChaosSpec | None = None,
+                 mixes=None, n_hosts: int = 8,
+                 dt: float = 0.5, queue_cap: float = 256.0,
+                 task_speed_override: dict[int, float] | None = None,
+                 seed: int = 0, pad_seeds: bool = True,
+                 devices: int | str | None = None,
+                 phase_mode: str = "auto"):
+        specs = _as_specs(seeds, base_spec)
+        if not specs:
+            raise ValueError(
+                "run_config_batch requires at least one seed")
+        norm = [normalize_config(c) for c in configs]
+        if not norm:
+            raise ValueError(
+                "run_config_batch requires at least one config")
+        self.specs, self.norm = specs, norm
+        self.low = low = _Lowered(
+            graph, n_hosts=n_hosts, dt=dt, queue_cap=queue_cap,
+            failover=norm[0]["failover"], ckpt=norm[0]["ckpt"],
+            seed=seed, phase_mode=phase_mode,
+            seed_width=len(specs) * len(norm))
+        _check_pallas_devices(low, devices, "run_config_batch")
+        self.n_ticks = n_ticks = int(round(duration_s / low.dt))
+        self.n_seeds, self.n_cfg = len(specs), len(norm)
+        self._override = task_speed_override
+        self.pad_seeds = pad_seeds
+        jot = (low.job_of_task if low.job_of_task is not None
+               else np.zeros(low.plan.n_tasks, dtype=int))
+
+        # per-config traced params
+        pa_rows, fo_vecs = [], []
+        for cfg in norm:
+            codes, det, rst_s, rst_r, fx = per_task_failover(
+                cfg["failover"], low.plan.n_tasks, low.job_of_task)
+            lazy = lazy_ready_extra(fx["stagger"], low.task_region,
+                                    low.job_of_task)
+            fo_vecs.append((codes, det, rst_s, rst_r, fx, lazy))
+            # per-config deployment drill (inert leaves when cfg has
+            # none) — lowered against the config's OWN failover/ckpt
+            drill = lower_upgrade(
+                cfg["upgrade"], specs[0], n_tasks=low.plan.n_tasks,
+                job_of_task=low.job_of_task,
+                task_region=low.task_region,
+                dt=low.dt, base_failover=(codes, det, rst_s, rst_r, fx),
+                base_ckpt=cfg["ckpt"],
+                sel_task=low._sel_task * float(cfg["sel_scale"]))
+            # per-config in-trace autoscaler (inert when cfg has none)
+            auto = lower_autoscale(
+                cfg["scaler"], n_tasks=low.plan.n_tasks, dt=low.dt,
+                is_src_task=low.tensor.is_src_task)
+            pa_rows.append(low._params(
+                low.plan.qcap * float(cfg["qcap_scale"]),
+                low._sel * float(cfg["sel_scale"]), det, rst_s, rst_r,
+                codes, fx=fx, drill=drill, autoscale=auto))
+        pa = dict(pa_rows[0])
+        for k in ("qcap", "sel", "detect", "restart_region",
+                  "restart_single", "mode_single", "mode_region",
+                  "mode_hot", "standby_switch", "standby_stale",
+                  "restore_base", "replay_rate",
+                  "lazy_extra") + _DRILL_KEYS + AUTOSCALE_KEYS:
+            pa[k] = np.stack([row[k] for row in pa_rows])
+        self.fo_vecs = fo_vecs
+        self.cfg_bros = cfg_bros = [tuple(cfg["brownout"])
+                                    for cfg in norm]
+        self.cfg_traffics = [cfg["traffic"] for cfg in norm]
+
+        # timelines: shared across configs when nothing checkpoints
+        # (kill/straggler draws are failover-independent); rebuilt per
+        # config otherwise (storage draws interleave with kill draws).
+        # per-job seed specs with restore surcharges AND brownout ramps
+        # need per-job brownout factors in the recovery metadata — only
+        # the per-(config, seed) rebuild path models that; everything
+        # else rides the shared-draws fast paths
+        perjob_specs = any(isinstance(sp, (list, tuple)) for sp in specs)
+        bf_varies_by_job = perjob_specs and (
+            any(cfg_bros)
+            or any(_spec_has_ramps(sp) for sp in specs)) and any(
+            np.any(v[4]["restore_base"]) for v in fo_vecs)
+        self.no_ckpt = no_ckpt = (
+            all(cfg["ckpt"] is None for cfg in norm)
+            and not bf_varies_by_job)
+        self.builder = None
+        if no_ckpt:
+            self.path = "refit"
+        elif all(cfg["ckpt"] is None or isinstance(cfg["ckpt"],
+                                                   CheckpointConfig)
+                 for cfg in norm) and all(isinstance(sp, ChaosSpec)
+                                          for sp in specs):
+            # ckpt-bearing grid, single coordinators: ONE chaos draw
+            # stream per seed, every config's checkpoint attempt
+            # schedule refitted onto it as vectorized offset indexing —
+            # zero per-(config, seed) host timeline replays
+            # (core.chaos.GridTimelineBuilder; timeline_build_count
+            # stays flat, pinned by tests/test_sparse_sweep.py). The
+            # builder's lazily-created per-seed streams are shared by
+            # every chunk, so a chunked run draws each seed exactly
+            # once — bit-identical to the monolithic grid.
+            self.path = "grid"
+            cfg_rows = []
+            for cfg, (codes, det, rst_s, rst_r, fx, lazy), bro in zip(
+                    norm, fo_vecs, cfg_bros):
+                ck = cfg["ckpt"]
+                cfg_rows.append(dict(
+                    failover_mode=codes, detect_s=det,
+                    region_restart_s=rst_r, single_restart_s=rst_s,
+                    standby_switch_s=fx["switch"],
+                    standby_staleness_s=fx["stale"],
+                    restore_base_s=fx["restore_base"],
+                    replay_rate=fx["replay_rate"],
+                    lazy_extra_s=lazy, brownout_at=bro,
+                    ckpt_interval_s=(ck.interval_s if ck else None),
+                    ckpt_mode=(ck.mode if ck else "region"),
+                    ckpt_upload_s=(ck.upload_s if ck else 4.0),
+                    ckpt_retry=(ck.retry_failed_region if ck else True)))
+            self.builder = GridTimelineBuilder(
+                specs, cfg_rows, n_ticks=n_ticks, dt=low.dt,
+                n_hosts=low.n_hosts, task_host=low.task_host,
+                task_region=low.task_region, regions=low.phys.regions,
+                job_of_task=low.job_of_task)
+        else:
+            # exotic rows (per-job coordinator lists / per-job chaos
+            # specs): config-specific draw interleavings force
+            # per-config rebuilds
+            self.path = "exotic"
+
+        if devices is not None and mixes is not None:
+            raise ValueError("devices= does not compose with mixes= "
+                             "(shard the config grid without a mix "
+                             "axis)")
+        self.n_shards = local_shard_count(devices)
+        self.jobs = low.arena.jobs if low.arena is not None else None
+        self.mixes = None
+        with scoped_cache_stats() as counts:
+            if mixes is None:
+                if devices is not None:
+                    fn = get_sharded_config_fn(low.desc, self.n_shards,
+                                               shared_kills=no_ckpt)
+                else:
+                    fn = get_cached_config_fn(low.desc,
+                                              shared_kills=no_ckpt)
+            else:
+                mixes = np.atleast_2d(np.asarray(mixes,
+                                                 dtype=np.float64))
+                if mixes.shape[1] != low.n_jobs:
+                    raise ValueError(
+                        f"mix rows must have one multiplier per job "
+                        f"({mixes.shape[1]} != {low.n_jobs})")
+                pa["src_row"] = pa["src_row"][None, :] * mixes[:, jot]
+                fn = get_cached_config_mix_fn(low.desc,
+                                              shared_kills=no_ckpt)
+                self.mixes = mixes
+        self.fn = fn
+        self.pa = pa
+        self.cache_info = dict(counts)
+
+    def prep_chunk(self, lo: int, hi: int):
+        low, norm = self.low, self.norm
+        specs = self.specs[lo:hi]
+        n_ticks, n_cfg = self.n_ticks, self.n_cfg
+        if self.path == "refit":
+            c0, d0, s0, r0 = self.fo_vecs[0][:4]
+            base_tls = [low.timeline(sp, n_ticks, fo_codes=c0,
+                                     detect=d0, rst_s=s0, rst_r=r0,
+                                     ckpt=None)
+                        for sp in specs]
+            tls = [[refit_failover(tl, task_host=low.task_host,
+                                   task_region=low.task_region,
+                                   failover_mode=codes, detect_s=det,
+                                   single_restart_s=rst_s,
+                                   region_restart_s=rst_r,
+                                   job_of_task=low.job_of_task,
+                                   standby_switch_s=fx["switch"],
+                                   standby_staleness_s=fx["stale"],
+                                   restore_base_s=fx["restore_base"],
+                                   replay_rate=fx["replay_rate"],
+                                   lazy_extra_s=lazy,
+                                   spec=(_merge_bro(sp, bro)
+                                         if isinstance(sp, ChaosSpec)
+                                         else None))
+                    for sp, tl in zip(specs, base_tls)]
+                   for (codes, det, rst_s, rst_r, fx, lazy), bro
+                   in zip(self.fo_vecs, self.cfg_bros)]
+            # one (S, T, H) tensor broadcast over the config axis
+            kills = np.stack([tl.kills
+                              for tl in base_tls]).astype(np.float64)
+            ckpt_xs = np.zeros((n_cfg, n_ticks), np.int16)
+        elif self.path == "grid":
+            tls = self.builder.chunk(lo, hi)
+            kills = np.stack([[tl.kills for tl in row]
+                              for row in tls]).astype(np.float64)
+            ckpt_xs = np.stack([row[0].ckpt_at for row in tls])
+        else:
+            tls = [[low.timeline(_merge_bro(sp, bro), n_ticks,
+                                 fo_codes=codes, detect=det,
+                                 rst_s=rst_s, rst_r=rst_r,
+                                 extras=fx, lazy=lazy, ckpt=cfg["ckpt"])
+                    for sp in specs]
+                   for cfg, (codes, det, rst_s, rst_r, fx, lazy), bro
+                   in zip(norm, self.fo_vecs, self.cfg_bros)]
+            kills = np.stack([[tl.kills for tl in row]
+                              for row in tls]).astype(np.float64)
+            ckpt_xs = np.stack([row[0].ckpt_at for row in tls])
+
+        states = [low.state0(tl, self._override) for tl in tls[0]]
+        batch_state = EngineState(
+            *(np.stack([getattr(s, f) for s in states])
+              for f in EngineState._fields))
+        # external-event tensors: brownout factor and ckpt age ride the
+        # config axis (config ramps / per-config success histories),
+        # the MQ gate is seed-only and broadcasts across configs
+        ev = [[low.event_curves(sp, tls[c][s],
+                                cfg_ramps=self.cfg_bros[c],
+                                cfg_traffic=self.cfg_traffics[c])
+               for s, sp in enumerate(specs)] for c in range(n_cfg)]
+        xs = {"t": tls[0][0].ts, "kills": kills, "ckpt": ckpt_xs,
+              "bfac": np.stack([[e[0] for e in row] for row in ev]),
+              "gate": np.stack([e[1] for e in ev[0]]),
+              "ckage": np.stack([[e[2] for e in row] for row in ev]),
+              "rfac": np.stack([[e[3] for e in row] for row in ev])}
+        batch_state, xs = _pad_batch(
+            batch_state, xs, hi - lo, self.pad_seeds, self.n_shards,
+            seed_axes={"kills": 0 if self.no_ckpt else 1,
+                       "bfac": 1, "gate": 0, "ckage": 1, "rfac": 1})
+        return (lo, hi, batch_state, xs, tls)
+
+    def run_chunk(self, prepped):
+        lo, hi, batch_state, xs, tls = prepped
+        n = hi - lo
+        low, mixes = self.low, self.mixes
+        with _enable_x64():
+            final, ys = self.fn(self.pa, batch_state, xs)
+            sl = (slice(None),) * (1 if mixes is None else 2)
+            qps = np.asarray(ys["qps"])[sl + (slice(None, n),)]
+            backlog = np.asarray(ys["backlog"])[sl + (slice(None, n),)]
+            lag = np.asarray(ys["lag"])[sl + (slice(None, n),)]
+            emitted = np.asarray(final.emitted)[sl + (slice(None, n),)]
+            dropped = np.asarray(final.dropped)[sl + (slice(None, n),)]
+            ckpt_ep = np.asarray(
+                final.ckpt_epoch)[sl + (slice(None, n),)]
+            rb = np.asarray(final.rb_t)[sl + (slice(None, n),)]
+            thr = np.asarray(final.thrash_t)[sl + (slice(None, n),)]
+            nre = np.asarray(final.nact)[sl + (slice(None, n),)]
+            rsc = np.asarray(final.rsec)[sl + (slice(None, n),)]
+
+        def _metrics(c, pre=()):
+            ix = pre + (c,)
+            return JaxBatchMetrics(low.op_names, tls[0][0].ts,
+                                   lag[ix], qps[ix], backlog[ix],
+                                   emitted[ix], dropped[ix], tls[c],
+                                   ckpt_epoch=ckpt_ep[ix],
+                                   jobs=self.jobs,
+                                   rollback_t=rb[ix], thrash_t=thr[ix],
+                                   n_rescale=nre[ix],
+                                   resource_s=rsc[ix])
+
+        if mixes is None:
+            return [_metrics(c) for c in range(self.n_cfg)]
+        return [[_metrics(c, (m,)) for c in range(self.n_cfg)]
+                for m in range(len(mixes))]
+
+
+def concat_config_batches(parts):
+    """Concatenate per-chunk config-grid results (each a per-config
+    list, or a mixes × configs nest) along the seed axis — the grid
+    analogue of `concat_batches`."""
+    if len(parts) == 1:
+        return parts[0]
+    if parts[0] and isinstance(parts[0][0], list):      # mixes nest
+        return [[concat_batches([p[m][c] for p in parts])
+                 for c in range(len(parts[0][0]))]
+                for m in range(len(parts[0]))]
+    return [concat_batches([p[c] for p in parts])
+            for c in range(len(parts[0]))]
+
+
 def run_config_batch(graph: LogicalGraph | PackedArena, configs, seeds, *,
                      duration_s: float,
                      base_spec: ChaosSpec | None = None,
@@ -2325,7 +2898,10 @@ def run_config_batch(graph: LogicalGraph | PackedArena, configs, seeds, *,
                      task_speed_override: dict[int, float] | None = None,
                      seed: int = 0, pad_seeds: bool = True,
                      devices: int | str | None = None,
-                     phase_mode: str = "auto"):
+                     phase_mode: str = "auto",
+                     seed_chunk: int | None = None,
+                     on_chunk=None,
+                     timing: dict | None = None):
     """Sweep a ``(C, S)`` grid of resiliency-config × chaos-seed
     scenarios in ONE doubly-vmapped `jit` call — the third vmap axis of
     the engine, over `FailoverConfig`/`CheckpointConfig` grids.
@@ -2340,227 +2916,27 @@ def run_config_batch(graph: LogicalGraph | PackedArena, configs, seeds, *,
     `PackedArena`. With `mixes` (an ``(M, n_jobs)`` source-rate grid) the
     call becomes a triply-vmapped ``(M, C, S)`` cube on the same trace.
 
+    ``seed_chunk`` streams the seed axis through fixed-size chunks on
+    the double-buffered `run_chunks` pipeline — one device pass per
+    chunk, host timeline prep for chunk k+1 overlapping device compute
+    for chunk k, each seed's timelines built exactly once across all
+    chunks (`timeline_build_count` matches the monolithic call). The
+    concatenated grid is bit-identical to the one-pass grid, so
+    chunking is purely a memory-ceiling / time-to-first-result knob.
+    ``on_chunk`` fires with each `ChunkResult` as it lands; ``timing``,
+    if given a dict, receives the ``prep_s`` / ``device_s`` wall split
+    plus per-request trace-cache ``cache_hits`` / ``cache_misses``.
+
     Returns one `JaxBatchMetrics` per config row — or, with `mixes`, a
     list over mixes of lists over configs.
     """
-    specs = _as_specs(seeds, base_spec)
-    if not specs:
-        raise ValueError("run_config_batch requires at least one seed")
-    norm = [normalize_config(c) for c in configs]
-    if not norm:
-        raise ValueError("run_config_batch requires at least one config")
-    low = _Lowered(graph, n_hosts=n_hosts, dt=dt, queue_cap=queue_cap,
-                   failover=norm[0]["failover"], ckpt=norm[0]["ckpt"],
-                   seed=seed, phase_mode=phase_mode,
-                   seed_width=len(specs) * len(norm))
-    n_ticks = int(round(duration_s / low.dt))
-    n_seeds, n_cfg = len(specs), len(norm)
-    jot = (low.job_of_task if low.job_of_task is not None
-           else np.zeros(low.plan.n_tasks, dtype=int))
-
-    # per-config traced params
-    pa_rows, fo_vecs = [], []
-    for cfg in norm:
-        codes, det, rst_s, rst_r, fx = per_task_failover(
-            cfg["failover"], low.plan.n_tasks, low.job_of_task)
-        lazy = lazy_ready_extra(fx["stagger"], low.task_region,
-                                low.job_of_task)
-        fo_vecs.append((codes, det, rst_s, rst_r, fx, lazy))
-        # per-config deployment drill (inert leaves when cfg has none) —
-        # lowered against the config's OWN failover/ckpt as the base
-        drill = lower_upgrade(
-            cfg["upgrade"], specs[0], n_tasks=low.plan.n_tasks,
-            job_of_task=low.job_of_task, task_region=low.task_region,
-            dt=low.dt, base_failover=(codes, det, rst_s, rst_r, fx),
-            base_ckpt=cfg["ckpt"],
-            sel_task=low._sel_task * float(cfg["sel_scale"]))
-        # per-config in-trace autoscaler (inert leaves when cfg has none)
-        auto = lower_autoscale(
-            cfg["scaler"], n_tasks=low.plan.n_tasks, dt=low.dt,
-            is_src_task=low.tensor.is_src_task)
-        pa_rows.append(low._params(
-            low.plan.qcap * float(cfg["qcap_scale"]),
-            low._sel * float(cfg["sel_scale"]), det, rst_s, rst_r, codes,
-            fx=fx, drill=drill, autoscale=auto))
-    pa = dict(pa_rows[0])
-    for k in ("qcap", "sel", "detect", "restart_region", "restart_single",
-              "mode_single", "mode_region", "mode_hot", "standby_switch",
-              "standby_stale", "restore_base", "replay_rate",
-              "lazy_extra") + _DRILL_KEYS + AUTOSCALE_KEYS:
-        pa[k] = np.stack([row[k] for row in pa_rows])
-    cfg_bros = [tuple(cfg["brownout"]) for cfg in norm]
-    cfg_traffics = [cfg["traffic"] for cfg in norm]
-
-    def _merge_bro(sp, bro):
-        """Compose config-level brownout ramps into a seed spec by tuple
-        concatenation (op-identical to the numpy engines' factor)."""
-        if not bro:
-            return sp
-        if isinstance(sp, (list, tuple)):
-            return [_merge_bro(x.spec if isinstance(x, ChaosEngine)
-                               else (x or ChaosSpec()), bro) for x in sp]
-        return dataclasses.replace(
-            sp, brownout_at=tuple(sp.brownout_at) + tuple(bro))
-
-    # timelines: shared across configs when nothing checkpoints
-    # (kill/straggler draws are failover-independent); rebuilt per config
-    # otherwise (storage draws interleave with kill draws)
-    # per-job seed specs with restore surcharges AND brownout ramps need
-    # per-job brownout factors in the recovery metadata — only the
-    # per-(config, seed) rebuild path models that; everything else rides
-    # the shared-draws fast paths
-    perjob_specs = any(isinstance(sp, (list, tuple)) for sp in specs)
-
-    def _spec_has_ramps(sp):
-        if isinstance(sp, (list, tuple)):
-            return any(
-                bool(tuple((x.spec if isinstance(x, ChaosEngine)
-                            else (x or ChaosSpec())).brownout_at))
-                for x in sp)
-        return bool(tuple(sp.brownout_at))
-
-    bf_varies_by_job = perjob_specs and (
-        any(cfg_bros) or any(_spec_has_ramps(sp) for sp in specs)) and any(
-        np.any(v[4]["restore_base"]) for v in fo_vecs)
-    no_ckpt = (all(cfg["ckpt"] is None for cfg in norm)
-               and not bf_varies_by_job)
-    if no_ckpt:
-        c0, d0, s0, r0 = fo_vecs[0][:4]
-        base_tls = [low.timeline(sp, n_ticks, fo_codes=c0, detect=d0,
-                                 rst_s=s0, rst_r=r0, ckpt=None)
-                    for sp in specs]
-        tls = [[refit_failover(tl, task_host=low.task_host,
-                               task_region=low.task_region,
-                               failover_mode=codes, detect_s=det,
-                               single_restart_s=rst_s,
-                               region_restart_s=rst_r,
-                               job_of_task=low.job_of_task,
-                               standby_switch_s=fx["switch"],
-                               standby_staleness_s=fx["stale"],
-                               restore_base_s=fx["restore_base"],
-                               replay_rate=fx["replay_rate"],
-                               lazy_extra_s=lazy,
-                               spec=(_merge_bro(sp, bro)
-                                     if isinstance(sp, ChaosSpec)
-                                     else None))
-                for sp, tl in zip(specs, base_tls)]
-               for (codes, det, rst_s, rst_r, fx, lazy), bro
-               in zip(fo_vecs, cfg_bros)]
-        # one (S, T, H) tensor broadcast over the config axis in-trace
-        kills = np.stack([tl.kills for tl in base_tls]).astype(np.float64)
-        ckpt_xs = np.zeros((n_cfg, n_ticks), np.int16)
-    elif all(cfg["ckpt"] is None or isinstance(cfg["ckpt"],
-                                               CheckpointConfig)
-             for cfg in norm) and all(isinstance(sp, ChaosSpec)
-                                      for sp in specs):
-        # ckpt-bearing grid, single coordinators: the chaos draw streams
-        # are materialized ONCE per seed and every config's checkpoint
-        # attempt schedule is refitted onto them as vectorized offset
-        # indexing — zero per-(config, seed) host timeline replays
-        # (core.chaos.build_grid_timelines; timeline_build_count stays
-        # flat, pinned by tests/test_sparse_sweep.py)
-        cfg_rows = []
-        for cfg, (codes, det, rst_s, rst_r, fx, lazy), bro in zip(
-                norm, fo_vecs, cfg_bros):
-            ck = cfg["ckpt"]
-            cfg_rows.append(dict(
-                failover_mode=codes, detect_s=det,
-                region_restart_s=rst_r, single_restart_s=rst_s,
-                standby_switch_s=fx["switch"],
-                standby_staleness_s=fx["stale"],
-                restore_base_s=fx["restore_base"],
-                replay_rate=fx["replay_rate"],
-                lazy_extra_s=lazy, brownout_at=bro,
-                ckpt_interval_s=(ck.interval_s if ck else None),
-                ckpt_mode=(ck.mode if ck else "region"),
-                ckpt_upload_s=(ck.upload_s if ck else 4.0),
-                ckpt_retry=(ck.retry_failed_region if ck else True)))
-        tls = build_grid_timelines(
-            specs, cfg_rows, n_ticks=n_ticks, dt=low.dt,
-            n_hosts=low.n_hosts, task_host=low.task_host,
-            task_region=low.task_region, regions=low.phys.regions,
-            job_of_task=low.job_of_task)
-        kills = np.stack([[tl.kills for tl in row]
-                          for row in tls]).astype(np.float64)
-        ckpt_xs = np.stack([row[0].ckpt_at for row in tls])
-    else:
-        # exotic rows (per-job coordinator lists / per-job chaos specs):
-        # config-specific draw interleavings force per-config rebuilds
-        tls = [[low.timeline(_merge_bro(sp, bro), n_ticks,
-                             fo_codes=codes, detect=det,
-                             rst_s=rst_s, rst_r=rst_r,
-                             extras=fx, lazy=lazy, ckpt=cfg["ckpt"])
-                for sp in specs]
-               for cfg, (codes, det, rst_s, rst_r, fx, lazy), bro
-               in zip(norm, fo_vecs, cfg_bros)]
-        kills = np.stack([[tl.kills for tl in row]
-                          for row in tls]).astype(np.float64)
-        ckpt_xs = np.stack([row[0].ckpt_at for row in tls])
-
-    states = [low.state0(tl, task_speed_override) for tl in tls[0]]
-    batch_state = EngineState(*(np.stack([getattr(s, f) for s in states])
-                                for f in EngineState._fields))
-    # external-event tensors: brownout factor and ckpt age ride the
-    # config axis (config ramps / per-config success histories), the MQ
-    # gate is seed-only and broadcasts across configs in-trace
-    ev = [[low.event_curves(sp, tls[c][s], cfg_ramps=cfg_bros[c],
-                            cfg_traffic=cfg_traffics[c])
-           for s, sp in enumerate(specs)] for c in range(n_cfg)]
-    xs = {"t": tls[0][0].ts, "kills": kills, "ckpt": ckpt_xs,
-          "bfac": np.stack([[e[0] for e in row] for row in ev]),
-          "gate": np.stack([e[1] for e in ev[0]]),
-          "ckage": np.stack([[e[2] for e in row] for row in ev]),
-          "rfac": np.stack([[e[3] for e in row] for row in ev])}
-    if devices is not None and mixes is not None:
-        raise ValueError("devices= does not compose with mixes= "
-                         "(shard the config grid without a mix axis)")
-    n_shards = local_shard_count(devices)
-    batch_state, xs = _pad_batch(batch_state, xs, n_seeds, pad_seeds,
-                                 n_shards,
-                                 seed_axes={"kills": 0 if no_ckpt else 1,
-                                            "bfac": 1, "gate": 0,
-                                            "ckage": 1, "rfac": 1})
-    jobs = low.arena.jobs if low.arena is not None else None
-
-    if mixes is None:
-        if devices is not None:
-            fn = get_sharded_config_fn(low.desc, n_shards,
-                                       shared_kills=no_ckpt)
-        else:
-            fn = get_cached_config_fn(low.desc, shared_kills=no_ckpt)
-    else:
-        mixes = np.atleast_2d(np.asarray(mixes, dtype=np.float64))
-        if mixes.shape[1] != low.n_jobs:
-            raise ValueError(
-                f"mix rows must have one multiplier per job "
-                f"({mixes.shape[1]} != {low.n_jobs})")
-        pa["src_row"] = pa["src_row"][None, :] * mixes[:, jot]
-        fn = get_cached_config_mix_fn(low.desc, shared_kills=no_ckpt)
-    with _enable_x64():
-        final, ys = fn(pa, batch_state, xs)
-        sl = (slice(None),) * (1 if mixes is None else 2)
-        qps = np.asarray(ys["qps"])[sl + (slice(None, n_seeds),)]
-        backlog = np.asarray(ys["backlog"])[sl + (slice(None, n_seeds),)]
-        lag = np.asarray(ys["lag"])[sl + (slice(None, n_seeds),)]
-        emitted = np.asarray(final.emitted)[sl + (slice(None, n_seeds),)]
-        dropped = np.asarray(final.dropped)[sl + (slice(None, n_seeds),)]
-        ckpt_ep = np.asarray(final.ckpt_epoch)[sl + (slice(None,
-                                                          n_seeds),)]
-        rb = np.asarray(final.rb_t)[sl + (slice(None, n_seeds),)]
-        thr = np.asarray(final.thrash_t)[sl + (slice(None, n_seeds),)]
-        nre = np.asarray(final.nact)[sl + (slice(None, n_seeds),)]
-        rsc = np.asarray(final.rsec)[sl + (slice(None, n_seeds),)]
-
-    def _metrics(c, pre=()):
-        ix = pre + (c,)
-        return JaxBatchMetrics(low.op_names, tls[0][0].ts,
-                               lag[ix], qps[ix], backlog[ix],
-                               emitted[ix], dropped[ix], tls[c],
-                               ckpt_epoch=ckpt_ep[ix], jobs=jobs,
-                               rollback_t=rb[ix], thrash_t=thr[ix],
-                               n_rescale=nre[ix], resource_s=rsc[ix])
-
-    if mixes is None:
-        return [_metrics(c) for c in range(n_cfg)]
-    return [[_metrics(c, (m,)) for c in range(n_cfg)]
-            for m in range(len(mixes))]
+    plan = ConfigGridPlan(graph, configs, seeds, duration_s=duration_s,
+                          base_spec=base_spec, mixes=mixes,
+                          n_hosts=n_hosts, dt=dt, queue_cap=queue_cap,
+                          task_speed_override=task_speed_override,
+                          seed=seed, pad_seeds=pad_seeds,
+                          devices=devices, phase_mode=phase_mode)
+    chunks = run_chunks(plan, seed_chunk, on_chunk)
+    if timing is not None:
+        _fill_timing(timing, chunks, plan)
+    return concat_config_batches([c.batches for c in chunks])
